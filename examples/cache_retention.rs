@@ -1,0 +1,75 @@
+//! Cache-data retention demo + flush/reload comparison (the paper's
+//! architectural headline, §I contribution 4 and Table I's "Cache Data
+//! Retention" row).
+//!
+//! Scenario: an LLC slice is serving a working set while a PIM inference
+//! campaign runs in the same banks. In `Retained` mode (this paper) the
+//! working set survives and keeps hitting; in `FlushReload` mode (prior 6T
+//! SRAM PIM, refs [22]/[23]) every campaign evicts it — we quantify the
+//! hit-rate, latency, and energy cost of that difference.
+//!
+//! Run: `cargo run --release --example cache_retention`
+
+use nvm_in_cache::cache::addr::{Address, Geometry};
+use nvm_in_cache::cache::controller::{CacheController, PimIntegration};
+use nvm_in_cache::util::rng::Pcg64;
+
+fn run(mode: PimIntegration) -> (f64, f64, f64, u64) {
+    let geom = Geometry::tiny();
+    let mut ctl = CacheController::new(geom, mode);
+    let mut rng = Pcg64::seeded(11);
+
+    // Working set: 192 lines, zipf-ish re-reference pattern.
+    let working_set: Vec<Address> = (0..192u64).map(|i| Address::new(i * 64)).collect();
+    for a in &working_set {
+        ctl.read(*a);
+    }
+    // Program weights once (both modes pay this).
+    for bank in 0..geom.banks_per_slice {
+        ctl.program_campaign(bank, 0, vec![7u8; 128 * 128]);
+    }
+    ctl.slice.hits = 0;
+    ctl.slice.misses = 0;
+
+    // Interleave cache traffic with PIM campaigns.
+    let mut total_latency = 0.0;
+    let mut total_energy = 0.0;
+    let mut lines_moved = 0u64;
+    for round in 0..50 {
+        // A burst of cache traffic over the working set.
+        for _ in 0..64 {
+            let a = working_set[rng.below(working_set.len())];
+            ctl.read(a);
+        }
+        // A PIM campaign in a rotating bank.
+        let stats = ctl.pim_campaign(round % geom.banks_per_slice, 0, 16);
+        total_latency += stats.latency;
+        total_energy += stats.energy;
+        lines_moved += stats.lines_moved;
+    }
+    (ctl.slice.hit_rate(), total_latency, total_energy, lines_moved)
+}
+
+fn main() {
+    println!("PIM + cache coexistence: 50 campaigns × 16 MACs, 3200 cache reads\n");
+    let (hit_r, lat_r, en_r, moved_r) = run(PimIntegration::Retained);
+    let (hit_f, lat_f, en_f, moved_f) = run(PimIntegration::FlushReload);
+
+    println!("{:<26} {:>12} {:>14}", "", "Retained", "FlushReload");
+    println!("{:<26} {:>11.1}% {:>13.1}%", "cache hit rate", hit_r * 100.0, hit_f * 100.0);
+    println!("{:<26} {:>10.2} µs {:>12.2} µs", "PIM campaign latency", lat_r * 1e6, lat_f * 1e6);
+    println!("{:<26} {:>10.2} nJ {:>12.2} nJ", "PIM campaign energy", en_r * 1e9, en_f * 1e9);
+    println!("{:<26} {:>12} {:>14}", "cache lines moved", moved_r, moved_f);
+    println!(
+        "\nflush/reload costs {:.2}× latency and {:.2}× energy for the same MACs,",
+        lat_f / lat_r,
+        en_f / en_r
+    );
+    println!("and degrades the co-resident working set's hit rate by {:.1} points —",
+        (hit_r - hit_f) * 100.0);
+    println!("the overhead the 6T-2R compute-on-powerline scheme eliminates.");
+
+    assert!(moved_r == 0, "retained mode must move nothing");
+    assert!(hit_r > hit_f, "retention must preserve locality");
+    assert!(lat_f > lat_r && en_f > en_r);
+}

@@ -1,0 +1,108 @@
+//! Serving demo: the L3 coordinator end-to-end — router, dynamic batcher,
+//! bank scheduler, metrics — with the PJRT-compiled PIM model as backend.
+//!
+//! Simulates an open-loop arrival process of single-image inference
+//! requests, serves them through the batched PIM path, and reports latency
+//! percentiles, batching efficiency, and the simulated hardware
+//! throughput/energy of the underlying 6T-2R arrays.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example pim_serving [n_requests]
+
+use std::time::Duration;
+
+use nvm_in_cache::cache::addr::Geometry;
+use nvm_in_cache::cache::controller::PimIntegration;
+use nvm_in_cache::coordinator::server::{Executor, PjrtExecutor};
+use nvm_in_cache::coordinator::{
+    BankScheduler, BatcherConfig, InferenceRequest, Router, Server, ServerConfig,
+};
+use nvm_in_cache::nn::Dataset;
+use nvm_in_cache::runtime::{ArtifactDir, ModelVariant, Runtime};
+use nvm_in_cache::util::rng::Pcg64;
+
+fn main() -> nvm_in_cache::Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let dir = ArtifactDir::open("artifacts")?;
+    let ds = Dataset::load(&dir.path("dataset.bin")?)?;
+    let dims = (ds.h, ds.w, ds.c);
+    let batch = dir.eval_batch();
+
+    // Bank scheduler: the network placed on a full LLC slice, retained mode.
+    let scheduler = BankScheduler::new(
+        BankScheduler::resnet18_layers(16),
+        Geometry::default(),
+        PimIntegration::Retained,
+    )
+    .expect("placement fits");
+    println!(
+        "network placed on {} sub-array slots ({:.1}% of the slice), {} weight bits resident",
+        scheduler.layout.slots_used,
+        scheduler.layout.occupancy() * 100.0,
+        scheduler.weight_bits_resident()
+    );
+
+    // A router stands in front (single replica here; the structure is the
+    // multi-slice deployment's).
+    let mut router = Router::new(1);
+
+    let dir2 = ArtifactDir::open(dir.root.clone())?;
+    let server = Server::start(
+        Box::new(move || {
+            let mut rt = Runtime::new(dir2.eval_batch())?;
+            rt.load_variant(&dir2, ModelVariant::Pim)?;
+            Ok(Box::new(PjrtExecutor {
+                runtime: rt,
+                variant: ModelVariant::Pim,
+                dims,
+                n_classes: 10,
+                key_counter: 0,
+            }) as Box<dyn Executor>)
+        }),
+        Some(scheduler),
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: batch, max_wait: Duration::from_millis(4) },
+        },
+    );
+
+    println!("submitting {n_requests} requests (open loop)…");
+    let stride = ds.h * ds.w * ds.c;
+    let mut rng = Pcg64::seeded(99);
+    let replica = router.route();
+    for i in 0..n_requests {
+        let idx = rng.below(ds.n);
+        let img = ds.images.data[idx * stride..(idx + 1) * stride].to_vec();
+        let mut req = InferenceRequest::new(i as u64, img);
+        req.id = (i as u64) << 16 | idx as u64; // encode ground truth index
+        server.submit(req);
+        // Light pacing so the batcher sees an arrival process rather than
+        // one giant burst.
+        if i % 64 == 63 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let mut correct = 0usize;
+    let mut hw_lat = 0.0f64;
+    for _ in 0..n_requests {
+        let r = server
+            .responses
+            .recv_timeout(Duration::from_secs(600))
+            .map_err(|e| nvm_in_cache::Error::Runtime(e.to_string()))?;
+        let idx = (r.id & 0xFFFF) as usize;
+        correct += (r.predicted == ds.labels[idx]) as usize;
+        hw_lat += r.hw_latency_s;
+    }
+    router.complete(replica, hw_lat);
+    let m = server.shutdown();
+
+    println!("\naccuracy over served traffic: {:.2}%", 100.0 * correct as f64 / n_requests as f64);
+    println!("{}", m.report());
+    println!(
+        "simulated per-image hardware latency: {:.2} µs (ADC-bound bit-serial pipeline)",
+        hw_lat / n_requests as f64 * 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Quickstart: the 6T-2R bit-cell and sub-array in five minutes.
+//!
+//! Walks the paper's §III story at the API level: program a weight, verify
+//! SRAM mode still works, run the two-cycle PIM dot-product while holding
+//! cache data, then scale up to a full 128×512 sub-array MAC.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use nvm_in_cache::array::SubArray;
+use nvm_in_cache::cell::timing::EnergyLedger;
+use nvm_in_cache::cell::{BitCell, PimParams, Side};
+use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
+use nvm_in_cache::device::Corner;
+use nvm_in_cache::pim::transfer::TransferModel;
+use nvm_in_cache::util::rng::Pcg64;
+
+fn main() {
+    println!("=== 1. One 6T-2R bit-cell ===");
+    let mut cell = BitCell::new(Corner::TT);
+    let mut ledger = EnergyLedger::new();
+
+    // NVM programming (§III-A): two 4 ns LRS cycles, one per side.
+    let left = cell.program_lrs(Side::Left, &mut ledger);
+    let right = cell.program_lrs(Side::Right, &mut ledger);
+    println!(
+        "programmed weight bit = 1: left {:?} ({} pulse), right {:?} ({} pulse)",
+        left.state, left.pulses, right.state, right.pulses
+    );
+
+    // SRAM mode is unaffected (§III-B).
+    cell.sram_write(true, &mut ledger);
+    assert!(cell.sram_read(&mut ledger));
+    cell.sram_write(false, &mut ledger);
+    assert!(!cell.sram_read(&mut ledger));
+    println!("SRAM write/read still works with the RRAMs programmed ✓");
+
+    // PIM mode (§III-C): dot-product while the latch holds data.
+    cell.sram_write(true, &mut ledger);
+    let out = cell.pim_dot_product(true, &PimParams::default(), &mut ledger);
+    println!(
+        "PIM IA=1 × w=1: i_left = {:.1} µA, i_right = {:.2} µA, product = {}, retained = {}",
+        out.i_left * 1e6,
+        out.i_right * 1e6,
+        out.product,
+        out.retained
+    );
+    assert!(out.retained && cell.sram_read(&mut ledger));
+
+    println!("\n=== 2. A full 128×512 sub-array MAC (§IV) ===");
+    let mut rng = Pcg64::seeded(7);
+    let mut sa = SubArray::new(Corner::TT);
+    let weights: Vec<u8> = (0..ARRAY_ROWS * ARRAY_WORDS)
+        .map(|_| rng.below(16) as u8)
+        .collect();
+    sa.load_weights(&weights);
+    // Scatter cache data — it must survive.
+    for row in 0..ARRAY_ROWS {
+        let mut line = [0u8; 64];
+        for b in line.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        sa.sram_write_row(row, &line);
+    }
+    let snapshot = sa.sram_snapshot();
+    let ia: Vec<u8> = (0..ARRAY_ROWS).map(|_| rng.below(16) as u8).collect();
+    let estimates = sa.pim_mac_4b(&ia, None);
+    assert_eq!(sa.sram_snapshot(), snapshot, "cache data retained");
+    let exact = sa.exact_mac(&ia, 0);
+    println!(
+        "word 0: analog estimate {:.0} vs exact {} (ADC LSB = {:.1})",
+        estimates[0],
+        exact,
+        1920.0 / 63.0
+    );
+    println!("cache data retained across the whole MAC ✓");
+
+    println!("\n=== 3. The analog transfer curve (§V-C) ===");
+    let tm = TransferModel::tt();
+    for w in [0u32, 4, 8, 12, 15] {
+        let mac = (w * ARRAY_ROWS as u32) as f64;
+        let v = tm.sampled_voltage(mac);
+        let code = tm.adc_code(v, true);
+        println!("  weight {w:>2} → {:.1} mV → code {code}", v * 1e3);
+    }
+
+    println!("\nenergy so far: {:.2} pJ over {:.1} ns of op time",
+        ledger.total_energy() * 1e12, ledger.total_time() * 1e9);
+    println!("\nNext: `repro figures --all`, `repro table2`, `repro e2e`.");
+}

@@ -1,0 +1,220 @@
+"""AOT export: train, fine-tune, and lower everything to HLO text.
+
+Python runs ONLY here (``make artifacts``). Outputs (see DESIGN.md §5):
+
+    artifacts/
+      manifest.txt            key=value metadata + Table II accuracies
+      model_baseline.hlo.txt  fp32 fwd      f32[B,16,16,3] -> (f32[B,10],)
+      model_pim.hlo.txt       PIM fwd (pallas kernel inlined, fine-tuned w)
+      model_pim_noise.hlo.txt PIM fwd + ADC noise; extra input u32[2] key
+      pim_mac.hlo.txt         standalone L1 kernel tile (a,w f32[128,128])
+      weights.bin / weights_ft.bin
+      dataset.bin             test split for the Rust e2e driver
+      loss_curve.csv          training + fine-tune loss curves
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, hw_model, model, train
+from .kernels import pim_mac as pk
+
+EVAL_BATCH = 50
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # `{...}`, which silently drops the baked-in weights — the Rust side
+    # would compile a garbage model.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_fn(fn, example_args, path: str):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)", flush=True)
+
+
+# ---- checkpoint (so `make artifacts` never retrains unnecessarily) ----
+
+
+def save_checkpoint(path, params, params_ft, results, base_curve, ft_curve):
+    flat = {f"base::{n}": a for n, a in model.flatten_params(params)}
+    flat.update({f"ft::{n}": a for n, a in model.flatten_params(params_ft)})
+    flat["curve_base"] = np.asarray(base_curve, np.float64)
+    flat["curve_ft"] = np.asarray(ft_curve, np.float64)
+    flat["results_keys"] = np.array(
+        [k for k in results if k != "noise_sweep"], dtype=object
+    )
+    flat["results_vals"] = np.array(
+        [float(results[k]) for k in results if k != "noise_sweep"]
+    )
+    sweep = results.get("noise_sweep", {})
+    flat["sweep_sigmas"] = np.array(sorted(sweep))
+    flat["sweep_accs"] = np.array([sweep[s] for s in sorted(sweep)])
+    np.savez(path, **flat, allow_pickle=True)
+
+
+def load_checkpoint(path):
+    z = np.load(path, allow_pickle=True)
+
+    def unflatten(prefix):
+        params = {}
+        for key in z.files:
+            if not key.startswith(prefix):
+                continue
+            name = key[len(prefix):]
+            parts = name.split("/")
+            node = params
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jnp.asarray(z[key])
+        return params
+
+    results = dict(zip(list(z["results_keys"]), [float(v) for v in z["results_vals"]]))
+    results["noise_sweep"] = dict(
+        zip([float(s) for s in z["sweep_sigmas"]], [float(a) for a in z["sweep_accs"]])
+    )
+    base_curve = [(int(a), float(b)) for a, b in z["curve_base"]]
+    ft_curve = [(int(a), float(b)) for a, b in z["curve_ft"]]
+    return unflatten("base::"), unflatten("ft::"), results, base_curve, ft_curve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny run for smoke tests")
+    ap.add_argument("--retrain", action="store_true", help="ignore cached checkpoint")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.quick:
+        n_train, n_test, be, fe = 600, 200, 2, 1
+    else:
+        n_train, n_test, be, fe = 4000, 1000, 15, 6
+
+    t0 = time.time()
+    ckpt = os.path.join(args.out, "checkpoint.npz")
+    if os.path.exists(ckpt) and not args.retrain:
+        print(f"[aot] reusing cached training checkpoint {ckpt}", flush=True)
+        params, params_ft, results, base_curve, ft_curve = load_checkpoint(ckpt)
+        (_, _), (xte, yte) = data.train_test(n_train, n_test)
+    else:
+        print(f"[aot] training protocol (train={n_train} test={n_test})", flush=True)
+        results, params, params_ft, (base_curve, ft_curve), splits = train.run_full_protocol(
+            n_train=n_train, n_test=n_test, baseline_epochs=be, ft_epochs=fe, seed=args.seed
+        )
+        (_, _), (xte, yte) = splits
+        save_checkpoint(ckpt, params, params_ft, results, base_curve, ft_curve)
+
+    # ---- binary artifacts ----
+    model.write_weights_bin(os.path.join(args.out, "weights.bin"), params)
+    model.write_weights_bin(os.path.join(args.out, "weights_ft.bin"), params_ft)
+    data.write_dataset_bin(os.path.join(args.out, "dataset.bin"), xte, yte)
+    with open(os.path.join(args.out, "loss_curve.csv"), "w") as f:
+        f.write("phase,step,loss\n")
+        for it, l in base_curve:
+            f.write(f"baseline,{it},{l}\n")
+        for it, l in ft_curve:
+            f.write(f"finetune,{it},{l}\n")
+
+    # ---- HLO exports ----
+    b = min(EVAL_BATCH, n_test)
+    x_spec = jax.ShapeDtypeStruct((b, data.IMG, data.IMG, data.CHANNELS), jnp.float32)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    print("[aot] lowering model variants to HLO text", flush=True)
+    export_fn(
+        lambda x: (model.forward(params, x, "baseline"),),
+        (x_spec,),
+        os.path.join(args.out, "model_baseline.hlo.txt"),
+    )
+    # Table II emulation variant (§V-E methodology).
+    export_fn(
+        lambda x: (model.forward(params_ft, x, "pim"),),
+        (x_spec,),
+        os.path.join(args.out, "model_pim.hlo.txt"),
+    )
+    # Hardware-true variant: every conv/fc routed through the L1 pallas
+    # kernel so the kernel lowers into the same HLO (three-layer stack).
+    export_fn(
+        lambda x: (model.forward(params_ft, x, "pim_hw", use_pallas=True),),
+        (x_spec,),
+        os.path.join(args.out, "model_pim_hw.hlo.txt"),
+    )
+    sigma = float(results.get("sigma_codes", 0.1))
+    export_fn(
+        lambda x, key: (
+            model.forward(
+                params_ft,
+                x,
+                "pim_noise",
+                key=jax.random.wrap_key_data(key, impl="threefry2x32"),
+                sigma_codes=sigma,
+                use_pallas=True,
+            ),
+        ),
+        (x_spec, key_spec),
+        os.path.join(args.out, "model_pim_noise.hlo.txt"),
+    )
+    # Standalone L1 kernel tile for the Rust cross-check.
+    tile_spec = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    export_fn(
+        lambda a, w: (pk.pim_mac_pallas(a, w, "TT"),),
+        (tile_spec, tile_spec),
+        os.path.join(args.out, "pim_mac.hlo.txt"),
+    )
+
+    # ---- manifest ----
+    poly = hw_model.transfer_polynomial(3, "TT")
+    lines = {
+        "seed": args.seed,
+        "quick": int(args.quick),
+        "n_train": n_train,
+        "n_test": n_test,
+        "eval_batch": b,
+        "img": data.IMG,
+        "channels": data.CHANNELS,
+        "n_classes": data.N_CLASSES,
+        "param_count": model.param_count(params),
+        "acc_baseline": f"{results['baseline']:.4f}",
+        "acc_pim_no_finetune": f"{results['pim_no_finetune']:.4f}",
+        "acc_pim_noise_no_finetune": f"{results.get('pim_noise_no_finetune', -1):.4f}",
+        "acc_pim_finetuned": f"{results['pim_finetuned']:.4f}",
+        "acc_pim_finetuned_noise": f"{results['pim_finetuned_noise']:.4f}",
+        "acc_pim_hw_no_finetune": f"{results.get('pim_hw_no_finetune', -1):.4f}",
+        "acc_pim_hw_finetuned": f"{results.get('pim_hw_finetuned', -1):.4f}",
+        "sigma_codes": sigma,
+        "noise_sweep": ";".join(
+            f"{s}:{a:.4f}" for s, a in sorted(results.get("noise_sweep", {}).items())
+        ),
+        "adc_bits": hw_model.ADC_BITS,
+        "mac_fullscale": hw_model.MAC_FULLSCALE,
+        "transfer_poly_tt": ",".join(f"{c:.8e}" for c in poly),
+        "build_seconds": f"{time.time() - t0:.0f}",
+    }
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        for k, v in lines.items():
+            f.write(f"{k}={v}\n")
+    print(f"[aot] done in {time.time() - t0:.0f}s; results: {results}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: the 6T-2R analog PIM MAC hot-spot.
+
+Hardware adaptation (DESIGN.md §1): the 128×128 6T-2R sub-array maps onto a
+128×128 MXU-friendly tile. The grid iterates (M-tiles, N-tiles, K-blocks);
+each K-block of 128 rows corresponds to one physical sub-array whose
+partial sum is ADC-quantized *before* digital accumulation — the defining
+numerical property of the paper's pipeline. The 4-bit input activations are
+processed bit-serially inside the kernel (4 planes, shift-add recombined),
+matching §IV-B, and the 4-bit weight columns arrive pre-weighted 8:4:2:1 as
+the integer weight value (the WCC weighting).
+
+The kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); on a real TPU the same BlockSpec tiling feeds the MXU
+with one sub-array-shaped tile per step.
+
+VMEM budget per grid step (bf16/f32 on TPU, estimate recorded in
+EXPERIMENTS.md §Perf): a-tile 128×128×4 B + w-tile 128×128×4 B + acc
+128×128×4 B ≈ 192 KiB — comfortably inside the ~16 MiB VMEM, leaving room
+for double-buffering the HBM→VMEM pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import hw_model as hw
+from . import ref
+
+# Tile sizes: the sub-array geometry. K-tile MUST be 128 (one sub-array).
+TILE_M = 128
+TILE_K = hw.N_ROWS  # 128 rows per analog accumulation
+TILE_N = 128
+
+
+def _adc_transfer_inline(mac, corner: str):
+    """The analog transfer + 6-bit ADC, inlined for the kernel body.
+
+    Identical math to `ref.adc_transfer` (kept in one place there; repeated
+    here only because pallas kernels cannot call through module-level
+    closures that capture tracers — the constants are all Python floats, so
+    this stays exactly equal bit-for-bit)."""
+    return ref.adc_transfer(mac, corner)
+
+
+def _kernel(a_ref, w_ref, o_ref, *, corner: str, act_bits: int):
+    """One grid step: (m, n, k) tile of the bit-serial quantized MAC."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)  # [TILE_M, TILE_K] ints in [0, 15]
+    w = w_ref[...].astype(jnp.float32)  # [TILE_K, TILE_N] ints in [0, 15]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    # Bit-serial input: one analog MAC + ADC conversion per bit-plane
+    # (paper §IV-B: four cycles for 4-bit IA, LSB..MSB).
+    for b in range(act_bits):
+        a_bit = jnp.floor(a / (2.0**b)) % 2.0
+        mac = jnp.dot(a_bit, w)  # powerline current accumulation
+        est = _adc_transfer_inline(mac, corner)  # WCC + S&H + SAR ADC
+        acc += (2.0**b) * est  # digital shift-add
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("corner",))
+def pim_mac_pallas(a, w, corner: str = "TT"):
+    """Quantized PIM matmul via the Pallas kernel.
+
+    a: [M, K] float32 with integer values in [0, 15] (4-bit activations).
+    w: [K, N] float32 with integer values in [0, 15] (4-bit weights,
+       WCC-weighted). M, K, N must be multiples of the 128 tile sizes
+       (callers pad; the model layer handles padding).
+    Returns [M, N] float32 dequantized MAC estimates.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    assert m % TILE_M == 0 and k % TILE_K == 0 and n % TILE_N == 0, (
+        f"shapes must be tile-aligned, got {a.shape} @ {w.shape}"
+    )
+    grid = (m // TILE_M, n // TILE_N, k // TILE_K)
+    kernel = functools.partial(_kernel, corner=corner, act_bits=hw.ACT_BITS)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT path; real-TPU lowering is compile-only
+    )(a, w)
+
+
+def pad_to_tiles(x, tile_m, tile_n):
+    """Zero-pad a 2-D array up to tile multiples (zeros are exact no-ops in
+    the PIM pipeline: a zero activation row contributes no current)."""
+    m, n = x.shape
+    pm = (-m) % tile_m
+    pn = (-n) % tile_n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def pim_mac_padded(a, w, corner: str = "TT"):
+    """Tile-aligned wrapper: pads, runs the kernel, crops.
+
+    NOTE on exactness vs the hardware: padding K with zero *rows* adds
+    zero-current rows to a sub-array block; since blocks are quantized
+    independently, a padded final block quantizes the same MAC value as a
+    short physical block — identical results.
+    """
+    m, k = a.shape
+    _, n = w.shape
+    a_p = pad_to_tiles(a, TILE_M, TILE_K)
+    w_p = pad_to_tiles(w, TILE_K, TILE_N)
+    out = pim_mac_pallas(a_p, w_p, corner)
+    return out[:m, :n]

@@ -1,0 +1,114 @@
+"""Pure-jnp oracle for the PIM MAC kernel.
+
+This is the *functional specification* of the 6T-2R analog MAC pipeline:
+bit-serial 4-bit activations x 4-bit weights over 128-row sub-array tiles,
+with WCC 8:4:2:1 weighting (== the integer weight value), the nonlinear
+analog transfer curve, 6-bit SAR ADC quantization per (tile x bit-plane),
+and digital shift-add recombination.
+
+The Pallas kernel (`pim_mac.py`) must match this exactly (pytest enforces
+equality); the Rust engine (`rust/src/pim/engine.rs`) must match it to
+within 1 ADC LSB per partial sum (enforced by runtime_crosscheck).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import hw_model as hw
+
+CORNER_SCALE = {"SS": 0.80, "TT": 1.00, "FF": 1.25}
+
+
+def adc_transfer(mac, corner: str = "TT", calibrated: bool = True):
+    """jnp version of the analog+ADC pipeline.
+
+    mac -> powerline current -> sampled voltage -> 6-bit code (inverted)
+    -> MAC estimate (inverse linear mapping back to the dynamic range).
+    """
+    scale = CORNER_SCALE[corner]
+    i_unit = hw.I_UNIT_TT
+    v_swing = hw.VDD - hw.V_REF
+    i_ideal = mac * i_unit * scale
+    i = i_ideal / (1.0 + i_ideal * hw.R_LOAD[corner] / v_swing)
+    i_fs_tt_ideal = hw.MAC_FULLSCALE * i_unit
+    i_fs_tt = i_fs_tt_ideal / (1.0 + i_fs_tt_ideal * hw.R_LOAD["TT"] / v_swing)
+    r_ti = (hw.V_SAMP_MAX - hw.V_SAMP_MIN) / i_fs_tt
+    v = hw.V_SAMP_MAX - r_ti * i
+    if calibrated:
+        lo, hi = hw.V_REFN_CAL, hw.V_REFP_CAL
+    else:
+        lo, hi = 0.0, hw.V_REF_UNCAL
+    x = (v - lo) / (hi - lo)
+    code = jnp.clip(jnp.round(x * hw.ADC_CODES), 0, hw.ADC_CODES)
+    code = hw.ADC_CODES - code  # post-processing inversion (V = VDD - MAC)
+    return code * (hw.MAC_FULLSCALE / hw.ADC_CODES)
+
+
+def transfer_continuous(mac, corner: str = "TT"):
+    """Continuous (un-rounded) analog transfer: MAC -> equivalent MAC after
+    the nonlinear compression, *without* ADC rounding. Used by the
+    paper-faithful Table II emulation (Section V-E), where the 6-bit signed
+    quantization is applied separately at the activation level."""
+    scale = CORNER_SCALE[corner]
+    i_unit = hw.I_UNIT_TT
+    v_swing = hw.VDD - hw.V_REF
+    i_ideal = mac * i_unit * scale
+    i = i_ideal / (1.0 + i_ideal * hw.R_LOAD[corner] / v_swing)
+    i_fs_tt_ideal = hw.MAC_FULLSCALE * i_unit
+    i_fs_tt = i_fs_tt_ideal / (1.0 + i_fs_tt_ideal * hw.R_LOAD["TT"] / v_swing)
+    r_ti = (hw.V_SAMP_MAX - hw.V_SAMP_MIN) / i_fs_tt
+    v = hw.V_SAMP_MAX - r_ti * i
+    x = (v - hw.V_REFN_CAL) / (hw.V_REFP_CAL - hw.V_REFN_CAL)
+    return (1.0 - x) * hw.MAC_FULLSCALE
+
+
+def pim_mac_block(a_block, w_block, corner: str = "TT", noise_sigma_codes=None, key=None):
+    """One 128-row sub-array block MAC with per-bit-plane ADC quantization.
+
+    a_block: [M, K<=128] integer-valued activations in [0, 15].
+    w_block: [K, N] integer-valued weights in [0, 15].
+    Returns the dequantized MAC estimate [M, N], float32.
+
+    noise_sigma_codes: optional Gaussian sigma (ADC-code units) injected on
+    each conversion, modeling the Monte-Carlo spread of Section V-E.
+    """
+    a = a_block.astype(jnp.float32)
+    w = w_block.astype(jnp.float32)
+    acc = jnp.zeros((a.shape[0], w.shape[1]), jnp.float32)
+    for b in range(hw.ACT_BITS):
+        a_bit = jnp.floor(a / (2.0**b)) % 2.0
+        mac = a_bit @ w  # per-plane integer MAC in [0, 1920]
+        est = adc_transfer(mac, corner)
+        if noise_sigma_codes is not None and key is not None:
+            key, sub = jax.random.split(key)
+            noise = jax.random.normal(sub, mac.shape) * noise_sigma_codes
+            est = est + noise * (hw.MAC_FULLSCALE / hw.ADC_CODES)
+        acc = acc + (2.0**b) * est
+    return acc
+
+
+def pim_mac(a, w, corner: str = "TT", noise_sigma_codes=None, key=None):
+    """Full PIM matmul: splits K into 128-row sub-array blocks (each with
+    its own WCC+ADC conversion chain), accumulates partial sums digitally —
+    exactly the hardware mapping of Section IV.
+
+    a: [M, K] integer-valued activations in [0, 15]; w: [K, N] in [0, 15].
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    acc = jnp.zeros((m, n), jnp.float32)
+    for k0 in range(0, k, hw.N_ROWS):
+        k1 = min(k0 + hw.N_ROWS, k)
+        blk_key = None
+        if key is not None:
+            key, blk_key = jax.random.split(key)
+        acc = acc + pim_mac_block(
+            a[:, k0:k1], w[k0:k1, :], corner, noise_sigma_codes, blk_key
+        )
+    return acc
+
+
+def exact_mac(a, w):
+    """The ideal digital MAC (no quantization) — the 'infinite-ADC' bound."""
+    return a.astype(jnp.float32) @ w.astype(jnp.float32)

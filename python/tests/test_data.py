@@ -1,0 +1,63 @@
+"""Dataset generator tests: determinism, format, learnability signals."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_deterministic():
+    a_img, a_lab = data.make_split(50, 123)
+    b_img, b_lab = data.make_split(50, 123)
+    np.testing.assert_array_equal(a_img, b_img)
+    np.testing.assert_array_equal(a_lab, b_lab)
+
+
+def test_different_seeds_differ():
+    a_img, _ = data.make_split(20, 1)
+    b_img, _ = data.make_split(20, 2)
+    assert not np.array_equal(a_img, b_img)
+
+
+def test_shapes_and_range():
+    img, lab = data.make_split(30, 7)
+    assert img.shape == (30, 16, 16, 3)
+    assert img.dtype == np.float32
+    assert lab.shape == (30,)
+    assert float(img.min()) >= 0.0 and float(img.max()) <= 1.0
+    assert lab.max() < data.N_CLASSES
+
+
+def test_all_classes_present():
+    _, lab = data.make_split(500, 11)
+    assert len(np.unique(lab)) == data.N_CLASSES
+
+
+def test_classes_are_separable():
+    """Class-conditional structure must exist: per-class mean images should
+    differ far more across classes than the within-class sem."""
+    img, lab = data.make_split(600, 5)
+    means = np.stack([img[lab == c].mean(axis=0) for c in range(data.N_CLASSES)])
+    across = np.std(means, axis=0).mean()
+    assert across > 0.02, f"class means indistinguishable: {across}"
+
+
+def test_train_test_disjoint_seeds():
+    (xtr, _), (xte, _) = data.train_test(100, 50, seed=9)
+    # No identical images across splits.
+    flat_tr = xtr.reshape(len(xtr), -1)
+    flat_te = xte.reshape(len(xte), -1)
+    for row in flat_te[:10]:
+        assert not np.any(np.all(np.isclose(flat_tr, row, atol=1e-7), axis=1))
+
+
+def test_dataset_bin_format(tmp_path):
+    img, lab = data.make_split(8, 3)
+    p = tmp_path / "d.bin"
+    data.write_dataset_bin(str(p), img, lab)
+    raw = p.read_bytes()
+    header = np.frombuffer(raw[:20], np.uint32)
+    assert header[0] == 0x4E564D43
+    assert tuple(header[1:]) == (8, 16, 16, 3)
+    back = np.frombuffer(raw[20 : 20 + img.size * 4], "<f4").reshape(img.shape)
+    np.testing.assert_allclose(back, img, rtol=1e-6)
+    assert raw[20 + img.size * 4 :] == lab.tobytes()

@@ -1,0 +1,129 @@
+"""L1 kernel correctness: the Pallas pim_mac kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute hot-spot: hypothesis
+sweeps shapes and integer ranges; the kernel must match ref.pim_mac to
+float-accumulation tolerance (well below one ADC LSB).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import hw_model as hw
+from compile.kernels import pim_mac as pk
+from compile.kernels import ref
+
+LSB = hw.MAC_FULLSCALE / hw.ADC_CODES
+
+
+def rand_int_mat(rng, m, n):
+    return jnp.asarray(rng.integers(0, 16, (m, n)).astype(np.float32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 300),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31),
+)
+def test_pallas_matches_ref_any_shape(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_int_mat(rng, m, k)
+    w = rand_int_mat(rng, k, n)
+    got = pk.pim_mac_padded(a, w)
+    want = ref.pim_mac(a, w)
+    np.testing.assert_allclose(got, want, atol=0.05, rtol=0)
+
+
+@pytest.mark.parametrize("corner", ["SS", "TT", "FF"])
+def test_pallas_matches_ref_all_corners(corner):
+    rng = np.random.default_rng(7)
+    a = rand_int_mat(rng, 130, 260)
+    w = rand_int_mat(rng, 260, 70)
+    got = pk.pim_mac_padded(a, w, corner)
+    want = ref.pim_mac(a, w, corner)
+    np.testing.assert_allclose(got, want, atol=0.05, rtol=0)
+
+
+def test_tile_aligned_exact_grid():
+    rng = np.random.default_rng(3)
+    a = rand_int_mat(rng, 256, 256)
+    w = rand_int_mat(rng, 256, 256)
+    got = pk.pim_mac_pallas(a, w)
+    want = ref.pim_mac(a, w)
+    np.testing.assert_allclose(got, want, atol=0.05, rtol=0)
+
+
+def test_zero_padding_is_noop():
+    """Padding K with zero rows must not change the quantized result —
+    the hardware property that unused rows source no current."""
+    rng = np.random.default_rng(5)
+    a = rand_int_mat(rng, 64, 100)
+    w = rand_int_mat(rng, 100, 30)
+    unpadded = ref.pim_mac(a, w)
+    a_pad = jnp.pad(a, ((0, 0), (0, 28)))
+    w_pad = jnp.pad(w, ((0, 28), (0, 0)))
+    padded = ref.pim_mac(a_pad, w_pad)
+    np.testing.assert_allclose(unpadded, padded, atol=1e-5)
+
+
+def test_quantization_error_bounded():
+    """The kernel's deviation from the exact digital MAC is bounded by the
+    recombined ADC quantization error."""
+    rng = np.random.default_rng(9)
+    a = rand_int_mat(rng, 32, 128)
+    w = rand_int_mat(rng, 128, 32)
+    est = ref.pim_mac(a, w)
+    exact = ref.exact_mac(a, w)
+    # Per plane ≤ ~1.5 LSB systematic+quant; recombined ×(1+2+4+8)=15.
+    bound = 1.5 * LSB * 15
+    assert float(jnp.max(jnp.abs(est - exact))) <= bound
+
+
+@given(mac=st.integers(0, hw.MAC_FULLSCALE))
+@settings(max_examples=60, deadline=None)
+def test_adc_transfer_monotone_pointwise(mac):
+    if mac == 0:
+        return
+    lo = ref.adc_transfer(jnp.float32(mac - 1))
+    hi = ref.adc_transfer(jnp.float32(mac))
+    assert float(hi) >= float(lo)
+
+
+def test_transfer_endpoints_span_code_range():
+    # MAC = 0 converts to code 1 (the S&H zero level sits one step inside
+    # V_REFP — the systematic offset the digital post-processing removes);
+    # full scale reaches code 63. f32 epsilon slack on the bound.
+    assert float(ref.adc_transfer(jnp.float32(0.0))) <= LSB + 1e-3
+    assert float(ref.adc_transfer(jnp.float32(hw.MAC_FULLSCALE))) >= hw.MAC_FULLSCALE - 1e-3
+
+
+def test_transfer_continuous_brackets_quantized():
+    """The continuous transfer is the rounding-free envelope of the
+    quantized one."""
+    macs = jnp.arange(0.0, 1921.0, 37.0)
+    cont = ref.transfer_continuous(macs)
+    quant = ref.adc_transfer(macs)
+    assert float(jnp.max(jnp.abs(cont - quant))) <= LSB * 0.5 + 1e-6
+
+
+def test_ff_corner_compresses():
+    macs = jnp.arange(0.0, 1921.0, 64.0)
+    tt = ref.transfer_continuous(macs, "TT")
+    ff = ref.transfer_continuous(macs, "FF")
+    # FF saturates harder at high MAC: its normalized curve bends below TT
+    # mid-range after matching at the origin.
+    mid = len(macs) // 2
+    assert float(ff[mid]) > float(tt[mid]), "FF draws more current mid-range"
+
+
+def test_vmem_tile_budget():
+    """Structural L1 check (EXPERIMENTS.md §Perf): one grid step's buffers
+    fit comfortably in a 16 MiB VMEM with double-buffering headroom."""
+    bytes_per_step = (
+        pk.TILE_M * pk.TILE_K * 4 + pk.TILE_K * pk.TILE_N * 4 + pk.TILE_M * pk.TILE_N * 4
+    )
+    assert bytes_per_step * 2 < 16 * 1024 * 1024 * 0.25

@@ -1,0 +1,126 @@
+"""L2 model tests: shapes, quantizers, emulation, STE gradients, noise."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile import hw_model as hw
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), width=8)
+
+
+@pytest.fixture(scope="module")
+def x():
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.random((4, 16, 16, 3)).astype(np.float32))
+
+
+@pytest.mark.parametrize("mode", ["baseline", "pim", "pim_hw"])
+def test_forward_shapes(params, x, mode):
+    logits = model.forward(params, x, mode)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("mode", ["pim_noise", "pim_hw_noise"])
+def test_noise_modes_need_key_and_are_deterministic(params, x, mode):
+    with pytest.raises(AssertionError):
+        model.forward(params, x, mode)
+    k = jax.random.PRNGKey(7)
+    a = model.forward(params, x, mode, key=k, sigma_codes=0.3)
+    b = model.forward(params, x, mode, key=k, sigma_codes=0.3)
+    c = model.forward(params, x, mode, key=jax.random.PRNGKey(8), sigma_codes=0.3)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_param_count_resnet18_width16():
+    p = model.init_params(jax.random.PRNGKey(0), width=16)
+    n = model.param_count(p)
+    # ResNet-18 topology at width 16 ≈ 0.7 M params.
+    assert 6e5 < n < 8e5, n
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_quant_act_bounds(seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.random((5, 7)).astype(np.float32) * rng.uniform(0.1, 10))
+    q, s = model.quant_act(a)
+    assert float(jnp.min(q)) >= 0 and float(jnp.max(q)) <= 15
+    err = jnp.abs(q * s - a)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_quant_weight_per_column(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray((rng.random((9, 4)) - 0.5).astype(np.float32))
+    pos, neg, s = model.quant_weight(w)
+    assert s.shape == (1, 4)
+    # Banks disjoint, reconstruction within half a step per column.
+    assert float(jnp.max(pos * neg)) == 0.0
+    recon = (pos - neg) * s
+    assert float(jnp.max(jnp.abs(recon - w))) <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+def test_adc_emulate_monotone_and_bounded():
+    emu = model.make_adc_emulate("TT")
+    y = jnp.linspace(-3.0, 3.0, 301)
+    z = np.asarray(emu(y))
+    assert np.all(np.diff(z) >= -1e-6), "emulation must be monotone"
+    assert np.max(np.abs(z)) <= 3.0 * (32.0 / 31.0) + 1e-5
+
+
+def test_adc_emulate_ste_gradient():
+    emu = model.make_adc_emulate("TT")
+    g = jax.grad(lambda y: jnp.sum(emu(y)))(jnp.ones((5,)) * 0.7)
+    np.testing.assert_allclose(np.asarray(g), 1.0)  # straight-through
+
+
+def test_pim_matmul_ste_gradient_is_dense():
+    mm = model.make_pim_matmul("TT")
+    a = jnp.abs(jnp.asarray(np.random.default_rng(0).random((6, 16)).astype(np.float32)))
+    w = jnp.asarray((np.random.default_rng(1).random((16, 3)) - 0.5).astype(np.float32))
+    ga = jax.grad(lambda a: jnp.sum(mm(a, w)))(a)
+    # STE backward: d/da sum(a @ w) = row-broadcast of sum_j w.
+    expect = jnp.broadcast_to(jnp.sum(w, axis=1), (6, 16))
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(expect), rtol=1e-5)
+
+
+def test_noise_sigma_out_formula():
+    # σ_out² = σ² · LSB² · 2 · blocks · Σ4^b — check against brute force.
+    k = 300
+    sigma = 0.4
+    lsb = hw.MAC_FULLSCALE / hw.ADC_CODES
+    blocks = (k + hw.N_ROWS - 1) // hw.N_ROWS
+    plane = sum(4.0**b for b in range(hw.ACT_BITS))
+    expect = sigma * lsb * np.sqrt(2 * blocks * plane)
+    got = model.noise_sigma_out(k, sigma)
+    np.testing.assert_allclose(got, expect, rtol=1e-12)
+
+
+def test_pim_mode_close_to_baseline(params, x):
+    """The §V-E emulation is a mild perturbation (the basis of the paper's
+    small Table II deltas)."""
+    base = model.forward(params, x, "baseline")
+    pim = model.forward(params, x, "pim")
+    rel = float(jnp.mean(jnp.abs(base - pim)) / (jnp.mean(jnp.abs(base)) + 1e-9))
+    assert rel < 0.5, rel
+
+
+def test_weights_bin_roundtrip(tmp_path, params):
+    path = tmp_path / "w.bin"
+    model.write_weights_bin(str(path), params)
+    raw = path.read_bytes()
+    assert raw[:4] == (0x4E564D57).to_bytes(4, "little")
+    leaves = model.flatten_params(params)
+    # count field matches
+    assert int.from_bytes(raw[4:8], "little") == len(leaves)

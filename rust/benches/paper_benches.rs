@@ -1,0 +1,155 @@
+//! `cargo bench` — regenerates every paper table/figure with timing, plus
+//! the ablation benches (DESIGN.md A1–A3). Custom harness (criterion is
+//! unavailable offline): warmup + adaptive iterations, mean/p50/p95.
+//!
+//! Output doubles as the reproduction log: each section prints the same
+//! rows/series the paper reports.
+
+use std::path::PathBuf;
+
+use nvm_in_cache::array::SubArray;
+use nvm_in_cache::cache::addr::Geometry;
+use nvm_in_cache::cache::controller::PimIntegration;
+use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS, T_ADC_CONVERSION};
+use nvm_in_cache::coordinator::BankScheduler;
+use nvm_in_cache::device::Corner;
+use nvm_in_cache::figures;
+use nvm_in_cache::mapping::bit_serial::BitSerialSchedule;
+use nvm_in_cache::perf::MacroModel;
+use nvm_in_cache::pim::PimEngine;
+use nvm_in_cache::util::bench::Bencher;
+use nvm_in_cache::util::rng::Pcg64;
+
+fn out_dir() -> PathBuf {
+    let d = PathBuf::from("results/bench");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    let out = out_dir();
+
+    println!("=== Figure/table regeneration (E1–E9, E11) ===");
+    b.bench("fig9a_rram_iv_sweep", || figures::device_figs::fig9a_rram_iv(&out).unwrap());
+    b.bench("fig9bcd_snm_butterflies", || figures::device_figs::fig9bcd_snm(&out).unwrap());
+    b.bench("section_vb_scalars", || figures::device_figs::section_vb_scalars(&out).unwrap());
+    b.bench("fig10_weight_voltage", || figures::linearity::fig10_weight_voltage(&out).unwrap());
+    b.bench("fig11_weight_current", || figures::linearity::fig11_weight_current(&out).unwrap());
+    b.bench("fig12_adc_transfer", || figures::linearity::fig12_adc_transfer(&out).unwrap());
+    b.bench("fig13_monte_carlo_64", || {
+        figures::linearity::fig13_monte_carlo(&out, 64).unwrap()
+    });
+    b.bench("fig14_scaling", || figures::scaling::fig14_scaling(&out).unwrap());
+    b.bench("table1_comparison", || figures::tables::table1(&out, Some(0.919)).unwrap());
+
+    println!("\n=== E8: macro model headline (Table I row) ===");
+    let h = MacroModel::default().headline();
+    println!(
+        "  {:.2} GOPS raw | {:.2} TOPS/W raw | {:.4} TOPS norm | {:.1} TOPS/W norm | {:.2} TOPS/mm²",
+        h.ops_per_s / 1e9,
+        h.ops_per_w / 1e12,
+        h.norm_ops_per_s / 1e12,
+        h.norm_ops_per_w / 1e12,
+        h.norm_tops_per_mm2
+    );
+    println!(
+        "  paper:  25.60 GOPS | 30.73 TOPS/W | 0.4096 TOPS | 491.8 TOPS/W | 4.37 TOPS/mm²"
+    );
+
+    println!("\n=== Hot path: PIM engine matmul (simulator throughput) ===");
+    let mut rng = Pcg64::seeded(1);
+    for (m, k, n) in [(64usize, 128usize, 64usize), (256, 256, 128), (1024, 128, 128)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range(0.0, 1.0) as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+        let eng = PimEngine::tt();
+        let macs = (m * k * n) as f64;
+        b.bench_with_items(&format!("engine_pim_matmul_{m}x{k}x{n}"), macs, || {
+            eng.pim_matmul(&a, m, k, &w, n, None)
+        });
+    }
+
+    println!("\n=== Cell-accurate sub-array full 4b MAC ===");
+    let mut sa = SubArray::new(Corner::TT);
+    let weights: Vec<u8> = (0..ARRAY_ROWS * ARRAY_WORDS).map(|_| rng.below(16) as u8).collect();
+    sa.load_weights(&weights);
+    let ia: Vec<u8> = (0..ARRAY_ROWS).map(|_| rng.below(16) as u8).collect();
+    b.bench_with_items(
+        "subarray_pim_mac_4b",
+        (ARRAY_ROWS * ARRAY_WORDS) as f64,
+        || sa.pim_mac_4b(&ia, None),
+    );
+
+    println!("\n=== A1: retention vs flush/reload (paper motivation) ===");
+    for (name, mode) in [
+        ("retained", PimIntegration::Retained),
+        ("flush_reload", PimIntegration::FlushReload),
+    ] {
+        let mut sched = BankScheduler::new(
+            BankScheduler::resnet18_layers(16),
+            Geometry::default(),
+            mode,
+        )
+        .unwrap();
+        sched.program_network();
+        let cost = sched.batch_cost(1);
+        println!(
+            "  {name:<13}: {:.1} µs, {:.2} µJ, {} lines moved, {:.2} TOPS/W",
+            cost.latency_s * 1e6,
+            cost.energy_j * 1e6,
+            cost.lines_moved,
+            cost.ops / cost.energy_j / 1e12
+        );
+        let mut s2 = BankScheduler::new(
+            BankScheduler::resnet18_layers(16),
+            Geometry::default(),
+            mode,
+        )
+        .unwrap();
+        s2.program_network();
+        b.bench(&format!("scheduler_batch_cost_{name}"), || s2.batch_cost(1));
+    }
+
+    println!("\n=== A2: bit-serial vs ideal DAC bit-parallel (§IV-B) ===");
+    // Bit-parallel would convert all 4 input bits in one window but needs a
+    // 4-bit DAC per row and a wider ADC: model as 1 window vs 4, with 2.5×
+    // conversion energy and 4× DAC-added area (paper's qualitative
+    // argument for bit-serial).
+    let serial = BitSerialSchedule::new(4, 4);
+    let t_serial = serial.latency();
+    let t_parallel = 2.0 * T_ADC_CONVERSION; // both sides, one plane window
+    let e_rel_serial = 1.0;
+    let e_rel_parallel = 2.5 / 4.0; // fewer conversions, each costlier
+    println!(
+        "  bit-serial:   {:.0} ns, 1.00× energy, no DAC area",
+        t_serial * 1e9
+    );
+    println!(
+        "  bit-parallel: {:.0} ns ({:.1}× faster), {:.2}× energy, +DAC area/complexity (rejected by the paper)",
+        t_parallel * 1e9,
+        t_serial / t_parallel,
+        e_rel_parallel / e_rel_serial
+    );
+
+    println!("\n=== A3: ADC sharing / faster ADC (§V-F future work) ===");
+    for (share, rate_mult) in [(1usize, 1.0f64), (2, 1.0), (4, 1.0), (1, 2.0), (1, 4.0)] {
+        // Sharing an ADC across `share` word columns divides ADC area but
+        // multiplies conversion serialization; a faster ADC divides the
+        // window directly.
+        let t_window = T_ADC_CONVERSION * share as f64 / rate_mult;
+        let steps = 8.0;
+        let ops = (ARRAY_ROWS * ARRAY_WORDS) as f64 * 2.0;
+        let gops = ops / (steps * t_window) / 1e9;
+        let adc_area = 0.07 / share as f64 * rate_mult.sqrt(); // mm², scaling heuristic
+        let density = gops / 1e3 * 16.0 / (0.03 + adc_area);
+        println!(
+            "  share={share} rate={rate_mult:.0}×: {:>6.1} GOPS raw, macro {:.3} mm², {:.2} norm-TOPS/mm²",
+            gops,
+            0.03 + adc_area,
+            density
+        );
+    }
+
+    println!("\n=== timing summary ===");
+    b.report();
+}

@@ -1,0 +1,151 @@
+//! The shared control FSM (Fig. 6c, "controlled by a shared finite-state
+//! machine") that sequences PIM operations on a sub-array.
+//!
+//! Per §III-C, each PIM cycle on one side decomposes into:
+//!   Settle (1.5 ns)  — active VDD line pulled to the WCC reference,
+//!                      gated-GND still on, wordlines low;
+//!   Sample (1.0 ns)  — IA on the wordline, V1/V2 off, current sampled;
+//!   Restore (1.0 ns) — supplies and footers back to nominal.
+//! A 6-bit SAR conversion (160 ns) of the held sample runs after the
+//! analog cycle; with bit-serial 4-bit inputs the per-side latency is
+//! 4 × 160 ns = 640 ns (§V-D — ADC-dominated).
+
+use crate::cell::timing::{EnergyLedger, OpKind};
+use crate::consts::{T_ADC_CONVERSION, T_PIM_RESTORE, T_PIM_SAMPLE, T_PIM_SETTLE};
+
+/// FSM states for one PIM side-cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PimPhase {
+    Idle,
+    Settle,
+    Sample,
+    Restore,
+    Convert,
+}
+
+impl PimPhase {
+    pub fn duration(&self) -> f64 {
+        match self {
+            PimPhase::Idle => 0.0,
+            PimPhase::Settle => T_PIM_SETTLE,
+            PimPhase::Sample => T_PIM_SAMPLE,
+            PimPhase::Restore => T_PIM_RESTORE,
+            PimPhase::Convert => T_ADC_CONVERSION,
+        }
+    }
+}
+
+/// Control-signal snapshot for the active side during a phase (§III-C's
+/// timing diagram, encoded): wordline enable, gated-GND on, line at V_REF.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Controls {
+    pub wl_active: bool,
+    pub gated_gnd_on: bool,
+    pub line_at_vref: bool,
+}
+
+/// One sub-array's PIM sequencer.
+#[derive(Clone, Debug)]
+pub struct PimFsm {
+    pub phase: PimPhase,
+    /// Elapsed time in the current side-cycle (s).
+    pub t: f64,
+    /// Trace of (phase, duration) for inspection/tests.
+    pub trace: Vec<(PimPhase, f64)>,
+}
+
+impl PimFsm {
+    pub fn new() -> PimFsm {
+        PimFsm { phase: PimPhase::Idle, t: 0.0, trace: Vec::new() }
+    }
+
+    /// Control signals implied by a phase — the discipline that preserves
+    /// the stored data (Sample: WL on, footer OFF — never both on).
+    pub fn controls(phase: PimPhase) -> Controls {
+        match phase {
+            PimPhase::Idle => Controls { wl_active: false, gated_gnd_on: true, line_at_vref: false },
+            PimPhase::Settle => Controls { wl_active: false, gated_gnd_on: true, line_at_vref: true },
+            PimPhase::Sample => Controls { wl_active: true, gated_gnd_on: false, line_at_vref: true },
+            PimPhase::Restore => Controls { wl_active: false, gated_gnd_on: false, line_at_vref: false },
+            PimPhase::Convert => Controls { wl_active: false, gated_gnd_on: true, line_at_vref: false },
+        }
+    }
+
+    fn advance(&mut self, phase: PimPhase) {
+        self.trace.push((phase, phase.duration()));
+        self.t += phase.duration();
+        self.phase = phase;
+    }
+
+    /// Run one full side-cycle (settle→sample→restore→convert), recording
+    /// array + conversion costs for `n_words` word columns.
+    pub fn run_side_cycle(&mut self, n_words: usize, ledger: &mut EnergyLedger) -> f64 {
+        self.t = 0.0;
+        self.advance(PimPhase::Settle);
+        self.advance(PimPhase::Sample);
+        self.advance(PimPhase::Restore);
+        ledger.record(OpKind::PimArrayCycle);
+        ledger.record_n(OpKind::WccSample, n_words as u64);
+        self.advance(PimPhase::Convert);
+        ledger.record_n(OpKind::AdcConversion, n_words as u64);
+        self.advance(PimPhase::Idle);
+        self.t
+    }
+
+    /// Wall-clock for a full multi-bit MAC: `act_bits` bit-planes × 2 sides,
+    /// ADC-dominated (analog cycle overlaps the next conversion setup).
+    pub fn full_mac_latency(act_bits: u32) -> f64 {
+        2.0 * act_bits as f64 * T_ADC_CONVERSION
+    }
+}
+
+impl Default for PimFsm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn safety_invariant_wl_xor_footer() {
+        // The retention discipline: the wordline and the gated-GND footer
+        // are never simultaneously on in any phase — this is precisely what
+        // prevents both the crowbar path and the cycle-2 data flip.
+        for phase in [PimPhase::Idle, PimPhase::Settle, PimPhase::Sample, PimPhase::Restore, PimPhase::Convert] {
+            let c = PimFsm::controls(phase);
+            assert!(!(c.wl_active && c.gated_gnd_on), "{phase:?} violates the discipline");
+        }
+    }
+
+    #[test]
+    fn side_cycle_duration() {
+        let mut fsm = PimFsm::new();
+        let mut led = EnergyLedger::new();
+        let t = fsm.run_side_cycle(128, &mut led);
+        // 3.5 ns analog + 160 ns conversion.
+        assert!((t - 163.5e-9).abs() < 1e-15, "t = {t}");
+        assert_eq!(led.count(OpKind::AdcConversion), 128);
+        assert_eq!(led.count(OpKind::PimArrayCycle), 1);
+    }
+
+    #[test]
+    fn full_mac_latency_matches_paper() {
+        // §V-D: 640 ns per side for 4-bit inputs ⇒ 1280 ns both sides.
+        assert!((PimFsm::full_mac_latency(4) - 1280.0e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn trace_records_phases_in_order() {
+        let mut fsm = PimFsm::new();
+        let mut led = EnergyLedger::new();
+        fsm.run_side_cycle(4, &mut led);
+        let phases: Vec<PimPhase> = fsm.trace.iter().map(|(p, _)| *p).collect();
+        assert_eq!(
+            phases,
+            vec![PimPhase::Settle, PimPhase::Sample, PimPhase::Restore, PimPhase::Convert, PimPhase::Idle]
+        );
+    }
+}

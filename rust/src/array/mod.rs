@@ -1,0 +1,24 @@
+//! Array level (§IV): the 8 KB, 128×512 6T-2R sub-array and its analog
+//! periphery.
+//!
+//! * [`subarray`] — cell-accurate 128×512 array: weight programming, SRAM
+//!   row traffic, and the massively parallel two-cycle PIM MAC.
+//! * [`powerline`] — per-column VDD current accumulation with the
+//!   self-consistent line/WCC loading solve.
+//! * [`wcc`] — the weighted-configuration circuit: 8:4:2:1 current mirror
+//!   combining the four bit-columns of each word (Fig. 6c).
+//! * [`sample_hold`] — sampling capacitor with droop + kT/C noise.
+//! * [`sar_adc`] — behavioral 6-bit SAR: binary search against a CDAC,
+//!   comparator offset, calibrated/uncalibrated reference modes (Fig. 6d).
+//! * [`fsm`] — the shared control FSM sequencing the PIM sub-phases
+//!   (1.5 ns settle / 1 ns sample / 1 ns restore, then conversion).
+
+pub mod fsm;
+pub mod powerline;
+pub mod sample_hold;
+pub mod sar_adc;
+pub mod subarray;
+pub mod wcc;
+
+pub use sar_adc::SarAdc;
+pub use subarray::SubArray;

@@ -1,0 +1,92 @@
+//! Sample-and-hold stage (Fig. 6d, left block).
+//!
+//! Converts the WCC's weighted current to a held voltage on the sampling
+//! capacitor: `V = V0 − R_ti · I`, with capacitor droop during the
+//! conversion window and kT/C + switch noise. Fig. 10(b) demonstrates the
+//! S&H "does not contribute any non-linearity" — it is linear by
+//! construction here; droop and noise are small additive terms.
+
+use crate::device::VariationModel;
+use crate::pim::transfer::{TransferModel, V_SAMP_MAX};
+use crate::util::rng::Pcg64;
+
+/// Sample-and-hold instance.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleHold {
+    /// Transimpedance (V/A), trimmed at TT — from the transfer model.
+    pub r_ti: f64,
+    /// Hold droop rate (V/s) — leakage off the sampling cap.
+    pub droop_rate: f64,
+    /// RMS sampling noise (V), from the variation model.
+    pub sigma_v: f64,
+}
+
+impl SampleHold {
+    pub fn new(transfer: &TransferModel, var: &VariationModel) -> SampleHold {
+        SampleHold {
+            r_ti: transfer.r_ti,
+            // ~40 µV droop over a 160 ns conversion: negligible vs the
+            // 8.9 mV LSB, matching the paper's "no non-linearity" claim.
+            droop_rate: 250.0,
+            sigma_v: var.sigma_sh,
+        }
+    }
+
+    /// Ideal (noiseless, droopless) sampled voltage.
+    pub fn sample_ideal(&self, current: f64) -> f64 {
+        V_SAMP_MAX - self.r_ti * current
+    }
+
+    /// Sampled voltage after holding for `t_hold` seconds, with one noise
+    /// realization drawn from `rng` (None ⇒ noiseless).
+    pub fn sample(&self, current: f64, t_hold: f64, rng: Option<&mut Pcg64>) -> f64 {
+        let mut v = self.sample_ideal(current) - self.droop_rate * t_hold;
+        if let Some(r) = rng {
+            v += r.normal(0.0, self.sigma_v);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consts::T_ADC_CONVERSION;
+    use crate::device::VariationModel;
+
+    fn sh() -> SampleHold {
+        SampleHold::new(&TransferModel::tt(), &VariationModel::default())
+    }
+
+    #[test]
+    fn linear_in_current() {
+        // Fig. 10(b): the S&H adds no nonlinearity.
+        let s = sh();
+        let i1 = 1.0e-3;
+        let i2 = 2.0e-3;
+        let v0 = s.sample_ideal(0.0);
+        let d1 = v0 - s.sample_ideal(i1);
+        let d2 = v0 - s.sample_ideal(i2);
+        assert!((d2 / d1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn droop_below_lsb() {
+        let s = sh();
+        let droop = s.sample_ideal(1e-3) - s.sample(1e-3, T_ADC_CONVERSION, None);
+        assert!(droop > 0.0);
+        assert!(droop < 0.0089 / 8.0, "droop {droop} V must be ≪ LSB");
+    }
+
+    #[test]
+    fn noise_has_configured_sigma() {
+        let s = sh();
+        let mut rng = Pcg64::seeded(3);
+        let n = 20_000;
+        let base = s.sample_ideal(1e-3);
+        let vs: Vec<f64> = (0..n).map(|_| s.sample(1e-3, 0.0, Some(&mut rng)) - base).collect();
+        let mean = vs.iter().sum::<f64>() / n as f64;
+        let std = (vs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64).sqrt();
+        assert!((std - s.sigma_v).abs() / s.sigma_v < 0.05);
+    }
+}

@@ -1,0 +1,155 @@
+//! Behavioral 6-bit SAR ADC (Fig. 6d).
+//!
+//! Strong-arm-latch comparator + 6-bit capacitive DAC + SAR logic running
+//! the binary search at 50 MHz (8 cycles ⇒ 160 ns per conversion, §V-D).
+//! Supports the calibrated (V_REFP = 660 mV / V_REFN = 90 mV) and
+//! uncalibrated (V_REF = 800 mV) reference configurations of Fig. 12, a
+//! comparator input-referred offset, and per-decision noise.
+
+use crate::consts::{ADC_BITS, T_ADC_CONVERSION, V_REFN_CAL, V_REFP_CAL, V_REF_UNCAL};
+use crate::util::rng::Pcg64;
+
+/// One SAR ADC instance.
+#[derive(Clone, Copy, Debug)]
+pub struct SarAdc {
+    pub v_refp: f64,
+    pub v_refn: f64,
+    /// Comparator input-referred offset (V), from Monte-Carlo sampling.
+    pub cmp_offset: f64,
+    /// Per-decision comparator noise sigma (V).
+    pub cmp_noise: f64,
+}
+
+impl SarAdc {
+    /// Calibrated references (Fig. 12a, full 0–63 code utilization).
+    pub fn calibrated() -> SarAdc {
+        SarAdc { v_refp: V_REFP_CAL, v_refn: V_REFN_CAL, cmp_offset: 0.0, cmp_noise: 0.0 }
+    }
+
+    /// Uncalibrated: full-scale VDD reference (codes 7–48 only).
+    pub fn uncalibrated() -> SarAdc {
+        SarAdc { v_refp: V_REF_UNCAL, v_refn: 0.0, cmp_offset: 0.0, cmp_noise: 0.0 }
+    }
+
+    pub fn with_offset(mut self, offset: f64) -> SarAdc {
+        self.cmp_offset = offset;
+        self
+    }
+
+    pub fn with_noise(mut self, sigma: f64) -> SarAdc {
+        self.cmp_noise = sigma;
+        self
+    }
+
+    /// Run the successive-approximation binary search on input `v`.
+    /// Returns the raw (uninverted) code in [0, 63].
+    pub fn convert_raw(&self, v: f64, mut rng: Option<&mut Pcg64>) -> u32 {
+        let mut code = 0u32;
+        let fs = self.v_refp - self.v_refn;
+        for bit in (0..ADC_BITS).rev() {
+            let trial = code | (1 << bit);
+            // CDAC comparison level for the trial code. The +0.5 LSB makes
+            // the decision thresholds sit mid-step, matching round-to-
+            // nearest (standard SAR with half-LSB CDAC shift).
+            let v_dac = self.v_refn + fs * (trial as f64 - 0.5) / ((1u64 << ADC_BITS) as f64 - 1.0);
+            let noise = match rng.as_mut() {
+                Some(r) if self.cmp_noise > 0.0 => r.normal(0.0, self.cmp_noise),
+                _ => 0.0,
+            };
+            if v + self.cmp_offset + noise >= v_dac {
+                code = trial;
+            }
+        }
+        code
+    }
+
+    /// Convert and apply the post-processing inversion (`V = VDD − MAC`,
+    /// §IV-B), giving a code that increases with MAC.
+    pub fn convert(&self, v: f64, rng: Option<&mut Pcg64>) -> u32 {
+        let max = (1u32 << ADC_BITS) - 1;
+        max - self.convert_raw(v, rng)
+    }
+
+    /// Conversion latency (s): 8 cycles at 50 MHz.
+    pub fn latency(&self) -> f64 {
+        T_ADC_CONVERSION
+    }
+
+    /// Code width of one LSB in volts.
+    pub fn lsb(&self) -> f64 {
+        (self.v_refp - self.v_refn) / ((1u64 << ADC_BITS) as f64 - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_search_equals_rounding() {
+        // The SAR loop with a half-LSB-shifted CDAC must agree with ideal
+        // round-to-nearest quantization — this ties the behavioral ADC to
+        // TransferModel::adc_code.
+        let adc = SarAdc::calibrated();
+        for i in 0..=1000 {
+            let v = adc.v_refn + (adc.v_refp - adc.v_refn) * i as f64 / 1000.0;
+            let x = (v - adc.v_refn) / (adc.v_refp - adc.v_refn);
+            let want = (x * 63.0).round().clamp(0.0, 63.0) as u32;
+            let got = adc.convert_raw(v, None);
+            assert_eq!(got, want, "v={v}");
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let adc = SarAdc::calibrated();
+        assert_eq!(adc.convert_raw(-1.0, None), 0);
+        assert_eq!(adc.convert_raw(2.0, None), 63);
+    }
+
+    #[test]
+    fn inversion() {
+        let adc = SarAdc::calibrated();
+        assert_eq!(adc.convert(adc.v_refn, None), 63);
+        assert_eq!(adc.convert(adc.v_refp, None), 0);
+    }
+
+    #[test]
+    fn offset_shifts_codes() {
+        let adc = SarAdc::calibrated();
+        let shifted = SarAdc::calibrated().with_offset(2.5 * adc.lsb());
+        let v = 0.5 * (adc.v_refp + adc.v_refn);
+        let d = shifted.convert_raw(v, None) as i64 - adc.convert_raw(v, None) as i64;
+        assert!(d >= 2 && d <= 3, "offset moved code by {d}");
+    }
+
+    #[test]
+    fn noise_dithers_near_threshold() {
+        let adc = SarAdc::calibrated().with_noise(0.003);
+        let mut rng = Pcg64::seeded(4);
+        // Bias exactly between two codes: noise must produce both.
+        let v = adc.v_refn + 10.5 * adc.lsb();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(adc.convert_raw(v, Some(&mut rng)));
+        }
+        assert!(seen.len() >= 2, "noise should dither the LSB: {seen:?}");
+    }
+
+    #[test]
+    fn monotone_in_input() {
+        let adc = SarAdc::uncalibrated();
+        let mut prev = 0;
+        for i in 0..=500 {
+            let v = i as f64 * 0.8 / 500.0;
+            let c = adc.convert_raw(v, None);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn latency_matches_paper() {
+        assert_eq!(SarAdc::calibrated().latency(), 160.0e-9);
+    }
+}

@@ -1,0 +1,454 @@
+//! Cell-accurate 128×512 6T-2R sub-array (§IV-A).
+//!
+//! Geometry: 128 rows × 128 words × 4 bits. VSS/wordlines run along rows;
+//! VDD lines + bitlines along columns. Weights live in the RRAMs (both
+//! devices of a cell hold the same bit); the SRAM latches hold ordinary
+//! cache data that PIM operations must not disturb.
+//!
+//! The PIM MAC follows the real hardware pipeline — per side:
+//! per-bit-column powerline accumulation → WCC 8:4:2:1 weighting with
+//! summing-node compression → S&H → per-word 6-bit SAR conversion — and
+//! the two sides' estimates are combined digitally, so the result is
+//! independent of the stored cache data (verified by tests + the
+//! `cache_retention` example).
+//!
+//! Hot-path note: each cell's PIM path conductance is cached on weight
+//! load (the full nonlinear divider solve is collapsed to its operating
+//! point at V_REF); `powerline::solve_line` remains the exact reference
+//! and the `agrees_with_exact_line_solve` test bounds the error.
+
+use crate::cell::bitcell::{BitCell, Side};
+use crate::cell::timing::{EnergyLedger, OpKind};
+use crate::consts::{ARRAY_ROWS, ARRAY_WORDS, VDD, WORD_BITS};
+use crate::device::{Corner, VariationModel};
+use crate::pim::transfer::{TransferModel, V_REF};
+use crate::util::rng::Pcg64;
+
+use super::fsm::PimFsm;
+use super::sample_hold::SampleHold;
+use super::sar_adc::SarAdc;
+
+/// One 8 KB sub-array.
+pub struct SubArray {
+    pub corner: Corner,
+    pub cells: Vec<BitCell>,
+    /// Cached per-cell *calibrated* PIM path conductance (S) at the V_REF
+    /// operating point: `[row * 512 + word * 4 + bit]`, per side.
+    ///
+    /// Calibration (mirrors what §V-C's reference trimming does on the real
+    /// macro): the nominal HRS background conductance is subtracted
+    /// (reference-column offset cancellation) and the result is gain-trimmed
+    /// so a nominal LRS cell contributes exactly the transfer model's
+    /// `i_unit`. Residuals are the *physical* error sources: RRAM/FET
+    /// mismatch and the FET divider's bias dependence.
+    g_left: Vec<f32>,
+    g_right: Vec<f32>,
+    pub sh: SampleHold,
+    pub adc: SarAdc,
+    pub fsm: PimFsm,
+    /// WCC summing-node load (Ω), per the corner (TransferModel contract).
+    pub r_load: f64,
+    pub ledger: EnergyLedger,
+}
+
+impl SubArray {
+    pub fn new(corner: Corner) -> SubArray {
+        Self::build(corner, None, 0)
+    }
+
+    /// With Monte-Carlo per-cell variation (deterministic by seed).
+    pub fn with_variation(corner: Corner, var: &VariationModel, seed: u64) -> SubArray {
+        Self::build(corner, Some(*var), seed)
+    }
+
+    fn build(corner: Corner, var: Option<VariationModel>, seed: u64) -> SubArray {
+        let mut rng = Pcg64::seeded(seed);
+        let n = ARRAY_ROWS * ARRAY_WORDS * WORD_BITS;
+        let cells = (0..n)
+            .map(|_| match &var {
+                Some(v) => BitCell::with_variation(corner, v.sample_cell(&mut rng)),
+                None => BitCell::new(corner),
+            })
+            .collect();
+        let transfer = TransferModel::new(corner);
+        let vm = var.unwrap_or_else(VariationModel::none);
+        let mut sa = SubArray {
+            corner,
+            cells,
+            g_left: vec![0.0; n],
+            g_right: vec![0.0; n],
+            sh: SampleHold::new(&transfer, &vm),
+            adc: SarAdc::calibrated().with_offset(if vm.sigma_cmp_offset > 0.0 {
+                vm.sample_cmp_offset(&mut rng)
+            } else {
+                0.0
+            }),
+            fsm: PimFsm::new(),
+            r_load: transfer.r_load,
+            ledger: EnergyLedger::new(),
+        };
+        sa.refresh_conductances();
+        sa
+    }
+
+    #[inline]
+    fn idx(row: usize, word: usize, bit: usize) -> usize {
+        row * (ARRAY_WORDS * WORD_BITS) + word * WORD_BITS + bit
+    }
+
+    /// Raw (uncalibrated) path conductance of one cell on one side.
+    fn g_raw(cell: &BitCell, side: Side) -> f64 {
+        let drive = VDD - V_REF;
+        let mut cc = cell.clone();
+        cc.q = side == Side::Left; // force the side active for probing
+        cc.pim_current(side, true, V_REF) / drive
+    }
+
+    /// Nominal (variation-free) probe conductances for calibration.
+    fn calibration_trim(&self) -> (f64, f64) {
+        let lrs = BitCell::with_weight_bit(self.corner, true);
+        let hrs = BitCell::with_weight_bit(self.corner, false);
+        let g_lrs = Self::g_raw(&lrs, Side::Left);
+        let g_hrs = Self::g_raw(&hrs, Side::Left);
+        let drive = VDD - V_REF;
+        let g_target = TransferModel::new(self.corner).i_unit / drive;
+        let trim = g_target / (g_lrs - g_hrs);
+        (g_hrs, trim)
+    }
+
+    /// Recompute the cached calibrated path conductances from cell state.
+    pub fn refresh_conductances(&mut self) {
+        let (g_hrs_nom, trim) = self.calibration_trim();
+        for (i, c) in self.cells.iter().enumerate() {
+            self.g_left[i] = ((Self::g_raw(c, Side::Left) - g_hrs_nom) * trim) as f32;
+            self.g_right[i] = ((Self::g_raw(c, Side::Right) - g_hrs_nom) * trim) as f32;
+        }
+    }
+
+    // ---------------------------------------------------------- weights
+
+    /// Fast-load 4-bit weights (one per word): `weights[word]` replicated
+    /// across... no — `weights` is row-major `[row][word]`, each 0..=15.
+    /// Both RRAMs of each cell receive the same bit (§III-A symmetry).
+    pub fn load_weights(&mut self, weights: &[u8]) {
+        assert_eq!(weights.len(), ARRAY_ROWS * ARRAY_WORDS);
+        for row in 0..ARRAY_ROWS {
+            for word in 0..ARRAY_WORDS {
+                let w = weights[row * ARRAY_WORDS + word];
+                assert!(w <= 15);
+                for bit in 0..WORD_BITS {
+                    let cell = &mut self.cells[Self::idx(row, word, bit)];
+                    cell.set_weight_bit((w >> bit) & 1 == 1);
+                }
+            }
+        }
+        self.refresh_conductances();
+    }
+
+    /// Electrically program one cell's weight bit through the §III-A pulse
+    /// sequences (destructive to that cell's SRAM data; costs metered).
+    pub fn program_cell(&mut self, row: usize, word: usize, bit: usize, value: bool) -> bool {
+        let cell = &mut self.cells[Self::idx(row, word, bit)];
+        let ok = if value {
+            let a = cell.program_lrs(Side::Left, &mut self.ledger);
+            let b = cell.program_lrs(Side::Right, &mut self.ledger);
+            a.verified && b.verified
+        } else {
+            cell.program_hrs(&mut self.ledger).verified
+        };
+        let (g_hrs_nom, trim) = self.calibration_trim();
+        let i = Self::idx(row, word, bit);
+        let c = &self.cells[i];
+        self.g_left[i] = ((Self::g_raw(c, Side::Left) - g_hrs_nom) * trim) as f32;
+        self.g_right[i] = ((Self::g_raw(c, Side::Right) - g_hrs_nom) * trim) as f32;
+        ok
+    }
+
+    // ---------------------------------------------------------- SRAM mode
+
+    /// Write one 512-bit row of cache data (bits packed little-endian in 64
+    /// bytes).
+    pub fn sram_write_row(&mut self, row: usize, data: &[u8; 64]) {
+        self.ledger.record(OpKind::SramWrite);
+        for col in 0..(ARRAY_WORDS * WORD_BITS) {
+            let bit = (data[col / 8] >> (col % 8)) & 1 == 1;
+            self.cells[row * 512 + col].q = bit;
+        }
+    }
+
+    /// Read one 512-bit row.
+    pub fn sram_read_row(&mut self, row: usize) -> [u8; 64] {
+        self.ledger.record(OpKind::SramRead6t2r);
+        let mut out = [0u8; 64];
+        for col in 0..(ARRAY_WORDS * WORD_BITS) {
+            if self.cells[row * 512 + col].q {
+                out[col / 8] |= 1 << (col % 8);
+            }
+        }
+        out
+    }
+
+    /// Snapshot of all latch states (for retention verification).
+    pub fn sram_snapshot(&self) -> Vec<bool> {
+        self.cells.iter().map(|c| c.q).collect()
+    }
+
+    // ---------------------------------------------------------- PIM mode
+
+    /// Weighted (WCC-combined, compressed) current for one word on one
+    /// side, for a 1-bit activation vector.
+    pub fn word_current(&self, ia: &[bool], word: usize, side: Side) -> f64 {
+        debug_assert_eq!(ia.len(), ARRAY_ROWS);
+        let g = match side {
+            Side::Left => &self.g_left,
+            Side::Right => &self.g_right,
+        };
+        let drive = VDD - V_REF;
+        let mut weighted = 0.0f64;
+        for bit in 0..WORD_BITS {
+            let mut i_line = 0.0f64;
+            for (row, &a) in ia.iter().enumerate() {
+                if !a {
+                    continue;
+                }
+                let cell = &self.cells[Self::idx(row, word, bit)];
+                let active = match side {
+                    Side::Left => cell.q,
+                    Side::Right => !cell.q,
+                };
+                if active {
+                    i_line += g[Self::idx(row, word, bit)] as f64 * drive;
+                }
+            }
+            weighted += (1u32 << bit) as f64 * i_line;
+        }
+        // Summing-node compression (TransferModel contract).
+        weighted / (1.0 + weighted * self.r_load / drive)
+    }
+
+    /// One full bit-plane PIM step over all words on one side: analog
+    /// cycle + per-word conversion. Returns per-word inverted ADC codes.
+    pub fn pim_plane(&mut self, ia: &[bool], side: Side, rng: Option<&mut Pcg64>) -> Vec<u32> {
+        let mut fsm = std::mem::take(&mut self.fsm);
+        fsm.run_side_cycle(ARRAY_WORDS, &mut self.ledger);
+        self.fsm = fsm;
+        let mut rng = rng;
+        (0..ARRAY_WORDS)
+            .map(|w| {
+                let i = self.word_current(ia, w, side);
+                let v = self.sh.sample(i, 0.0, rng.as_deref_mut());
+                self.adc.convert(v, rng.as_deref_mut())
+            })
+            .collect()
+    }
+
+    /// Complete 4-bit × 4-bit MAC (§IV-B): bit-serial planes × both sides,
+    /// digital shift-add; returns per-word dequantized MAC estimates.
+    /// The stored cache data is untouched (asserted in debug builds).
+    pub fn pim_mac_4b(&mut self, ia4: &[u8], mut rng: Option<&mut Pcg64>) -> Vec<f32> {
+        assert_eq!(ia4.len(), ARRAY_ROWS);
+        debug_assert!(ia4.iter().all(|&x| x <= 15));
+        #[cfg(debug_assertions)]
+        let snap = self.sram_snapshot();
+        let transfer = TransferModel::new(self.corner);
+        // Digital zero-offset correction: a zero partial sum converts to a
+        // nonzero code (the S&H zero level sits one step inside the ADC's
+        // positive reference — visible as "code 1 at weight 0" in Fig. 12a).
+        // The post-processing subtractor removes it per conversion.
+        let zero_est = {
+            let code0 = self.adc.convert(self.sh.sample_ideal(0.0), None);
+            transfer.mac_estimate(code0)
+        };
+        let mut out = vec![0.0f32; ARRAY_WORDS];
+        for plane in 0..4u32 {
+            let ia: Vec<bool> = ia4.iter().map(|&x| (x >> plane) & 1 == 1).collect();
+            let left = self.pim_plane(&ia, Side::Left, rng.as_deref_mut());
+            let right = self.pim_plane(&ia, Side::Right, rng.as_deref_mut());
+            for (o, (l, r)) in out.iter_mut().zip(left.iter().zip(right.iter())) {
+                // Digital combine: the two sides' partial sums (each row
+                // contributes on exactly one side, §III-C), each
+                // offset-corrected.
+                let est = (transfer.mac_estimate(*l) - zero_est).max(0.0)
+                    + (transfer.mac_estimate(*r) - zero_est).max(0.0);
+                *o += (1u32 << plane) as f32 * est as f32;
+                self.ledger.record(OpKind::DigitalPostOp);
+            }
+        }
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(snap, self.sram_snapshot(), "PIM must retain cache data");
+        out
+    }
+
+    /// The exact integer MAC for verification: Σ_rows ia4[r] · weight[r][w].
+    pub fn exact_mac(&self, ia4: &[u8], word: usize) -> u32 {
+        (0..ARRAY_ROWS)
+            .map(|row| {
+                let mut w = 0u32;
+                for bit in 0..WORD_BITS {
+                    if self.cells[Self::idx(row, word, bit)].weight_bit() {
+                        w |= 1 << bit;
+                    }
+                }
+                ia4[row] as u32 * w
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp_weights() -> Vec<u8> {
+        (0..ARRAY_ROWS * ARRAY_WORDS)
+            .map(|i| ((i / ARRAY_WORDS + i % ARRAY_WORDS) % 16) as u8)
+            .collect()
+    }
+
+    fn small_array() -> SubArray {
+        let mut sa = SubArray::new(Corner::TT);
+        sa.load_weights(&ramp_weights());
+        sa
+    }
+
+    #[test]
+    fn sram_rw_roundtrip_with_weights_loaded() {
+        let mut sa = small_array();
+        let mut data = [0u8; 64];
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = (i as u8).wrapping_mul(37) ^ 0x5a;
+        }
+        sa.sram_write_row(3, &data);
+        assert_eq!(sa.sram_read_row(3), data);
+    }
+
+    #[test]
+    fn pim_mac_tracks_exact_and_retains_data() {
+        let mut sa = small_array();
+        // Scatter cache data across the array.
+        let mut rng = Pcg64::seeded(11);
+        for row in 0..ARRAY_ROWS {
+            let mut d = [0u8; 64];
+            for b in d.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            sa.sram_write_row(row, &d);
+        }
+        let snap = sa.sram_snapshot();
+        let ia4: Vec<u8> = (0..ARRAY_ROWS).map(|r| (r % 16) as u8).collect();
+        let got = sa.pim_mac_4b(&ia4, None);
+        assert_eq!(sa.sram_snapshot(), snap, "cache data must be retained");
+        // Accuracy: two-conversion pipeline ⇒ error per plane ≤ ~2 LSB;
+        // recombined bound ≈ 2·LSB·15. Check a representative subset.
+        let lsb = 1920.0 / 63.0;
+        for w in (0..ARRAY_WORDS).step_by(17) {
+            let exact: f64 = (0..4)
+                .map(|p| {
+                    let mac: u32 = (0..ARRAY_ROWS)
+                        .filter(|&r| (ia4[r] >> p) & 1 == 1)
+                        .map(|r| sa.exact_mac(&{
+                            let mut one = vec![0u8; ARRAY_ROWS];
+                            one[r] = 1;
+                            one
+                        }, w))
+                        .sum();
+                    (1u32 << p) as f64 * mac as f64
+                })
+                .sum();
+            let err = (got[w] as f64 - exact).abs();
+            assert!(err < 2.5 * lsb * 15.0, "word {w}: est {} vs exact {exact}", got[w]);
+        }
+    }
+
+    #[test]
+    fn result_independent_of_cache_data() {
+        // The headline property: the MAC estimate does not depend on the
+        // SRAM contents (rows merely contribute on different sides).
+        let ia4: Vec<u8> = (0..ARRAY_ROWS).map(|r| ((r * 7) % 16) as u8).collect();
+        let mut a = small_array();
+        let mut b = small_array();
+        // a: all zeros; b: random cache data.
+        let mut rng = Pcg64::seeded(5);
+        for row in 0..ARRAY_ROWS {
+            let mut d = [0u8; 64];
+            for byte in d.iter_mut() {
+                *byte = rng.next_u64() as u8;
+            }
+            b.sram_write_row(row, &d);
+        }
+        let ra = a.pim_mac_4b(&ia4, None);
+        let rb = b.pim_mac_4b(&ia4, None);
+        let lsb = 1920.0 / 63.0;
+        for w in 0..ARRAY_WORDS {
+            let d = (ra[w] - rb[w]).abs() as f64;
+            // Differences only from which side quantizes which partial sum:
+            // bounded by ~1 LSB per plane recombined.
+            assert!(d <= 2.0 * lsb * 15.0, "word {w}: {} vs {}", ra[w], rb[w]);
+        }
+        // Mean deviation across words stays well under one recombined LSB
+        // (per-word bound above is the worst case; the ramp weights make
+        // all words near-equal, so correlation is not a meaningful metric
+        // here — the absolute agreement is).
+        let mean_dev: f64 = ra
+            .iter()
+            .zip(rb.iter())
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / ra.len() as f64;
+        assert!(mean_dev < 1.0 * lsb * 15.0, "mean dev = {mean_dev}");
+    }
+
+    #[test]
+    fn fullscale_current_matches_transfer_model() {
+        // All weights 15, all IA bits on, all rows on one side: the word
+        // current must land on TransferModel::line_current(1920) — the
+        // calibration contract between the cell-accurate array and the
+        // functional model.
+        let mut sa = SubArray::new(Corner::TT);
+        sa.load_weights(&vec![15u8; ARRAY_ROWS * ARRAY_WORDS]);
+        for c in sa.cells.iter_mut() {
+            c.q = true;
+        }
+        let ia = vec![true; ARRAY_ROWS];
+        let got = sa.word_current(&ia, 0, Side::Left);
+        let want = TransferModel::new(Corner::TT).line_current(1920.0);
+        let rel = (got - want).abs() / want;
+        assert!(rel < 0.01, "got {got} want {want}");
+    }
+
+    #[test]
+    fn calibration_zeroes_hrs_background() {
+        // All-HRS word: the reference-column offset subtraction must leave
+        // only a negligible residual (nominal cells ⇒ ~exactly zero).
+        let mut sa = SubArray::new(Corner::TT);
+        sa.load_weights(&vec![0u8; ARRAY_ROWS * ARRAY_WORDS]);
+        for c in sa.cells.iter_mut() {
+            c.q = true;
+        }
+        let ia = vec![true; ARRAY_ROWS];
+        let got = sa.word_current(&ia, 3, Side::Left);
+        let fullscale = TransferModel::new(Corner::TT).line_current(1920.0);
+        assert!(got.abs() < 0.01 * fullscale, "residual background {got}");
+    }
+
+    #[test]
+    fn electrical_programming_updates_weights() {
+        let mut sa = SubArray::new(Corner::TT);
+        assert!(sa.program_cell(0, 0, 0, true));
+        assert!(sa.cells[SubArray::idx(0, 0, 0)].weight_bit());
+        assert!(sa.program_cell(0, 0, 0, false));
+        assert!(!sa.cells[SubArray::idx(0, 0, 0)].weight_bit());
+        assert!(sa.ledger.count(OpKind::ProgramPulse) >= 3);
+    }
+
+    #[test]
+    fn ledger_counts_full_mac() {
+        let mut sa = small_array();
+        sa.ledger.reset();
+        let ia4 = vec![5u8; ARRAY_ROWS];
+        sa.pim_mac_4b(&ia4, None);
+        // 2 sides × 4 planes = 8 array cycles; 8 × 128 conversions.
+        assert_eq!(sa.ledger.count(OpKind::PimArrayCycle), 8);
+        assert_eq!(sa.ledger.count(OpKind::AdcConversion), 8 * 128);
+    }
+}

@@ -1,0 +1,154 @@
+//! Weighted Configuration Circuit (WCC) — Fig. 6(c).
+//!
+//! Each 4-bit word exposes four VDD lines per side; the WCC's NMOS current
+//! mirrors scale them 8:4:2:1 (MSB→LSB) and combine them in the current
+//! domain at a single summing node. The mirror input stage presents the
+//! loading resistance that produces the corner-dependent compression
+//! (see [`crate::pim::transfer`] for the closed form).
+
+use crate::cell::bitcell::{BitCell, Side};
+use crate::consts::WORD_BITS;
+use crate::device::Corner;
+
+use super::powerline;
+
+/// WCC instance for one word column (one side).
+#[derive(Clone, Copy, Debug)]
+pub struct Wcc {
+    pub corner: Corner,
+    /// Summing-node input resistance (Ω) — the compression knob, matched to
+    /// `TransferModel::r_load` per corner.
+    pub r_load: f64,
+    /// Multiplicative mirror gain error per bit (nominal 1.0).
+    pub mirror_gain: [f64; WORD_BITS],
+}
+
+impl Wcc {
+    pub fn new(corner: Corner) -> Wcc {
+        let r_load = match corner {
+            Corner::SS => 0.6,
+            Corner::TT => 0.8,
+            Corner::FF => 3.2,
+        };
+        Wcc { corner, r_load, mirror_gain: [1.0; WORD_BITS] }
+    }
+
+    /// Weighted current for one word: bit-columns `cols[b]` hold the cells
+    /// of weight-bit `b` (LSB..MSB); all share the row activations `ia`.
+    ///
+    /// The mirror scales each bit line by 2^b *before* summation, so the
+    /// loading applies to the weighted total — we therefore solve each bit
+    /// line with its significance-scaled share of the load (equivalent to
+    /// loading the combined current to first order).
+    pub fn weighted_current(
+        &self,
+        cols: &[Vec<BitCell>],
+        ia: &[bool],
+        side: Side,
+    ) -> f64 {
+        assert_eq!(cols.len(), WORD_BITS);
+        // First pass: unloaded per-bit currents.
+        let raw: Vec<f64> = cols
+            .iter()
+            .map(|col| powerline::solve_line(col, ia, side, 0.0).current)
+            .collect();
+        let weighted_raw: f64 = raw
+            .iter()
+            .enumerate()
+            .map(|(b, i)| self.mirror_gain[b] * (1u32 << b) as f64 * i)
+            .sum();
+        // Apply the summing-node compression to the combined current (the
+        // same first-order form as TransferModel::line_current).
+        let v_swing = crate::consts::VDD - crate::pim::transfer::V_REF;
+        weighted_raw / (1.0 + weighted_raw * self.r_load / v_swing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build one word column set: weight w (4-bit) replicated down 128 rows,
+    /// all cells storing Q = 1 (left side active).
+    fn word_cols(w: u8, rows: usize) -> Vec<Vec<BitCell>> {
+        (0..WORD_BITS)
+            .map(|b| {
+                (0..rows)
+                    .map(|_| {
+                        let mut c =
+                            BitCell::with_weight_bit(Corner::TT, (w >> b) & 1 == 1);
+                        c.q = true;
+                        c
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn binary_weighting_is_monotone_in_w() {
+        let ia = vec![true; 128];
+        let wcc = Wcc::new(Corner::TT);
+        let mut prev = -1.0;
+        for w in 0..16u8 {
+            let cols = word_cols(w, 128);
+            let i = wcc.weighted_current(&cols, &ia, Side::Left);
+            assert!(i > prev, "w={w}: {i} !> {prev}");
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn msb_dominates() {
+        let ia = vec![true; 128];
+        let wcc = Wcc::new(Corner::TT);
+        let i8 = wcc.weighted_current(&word_cols(8, 128), &ia, Side::Left);
+        let i7 = wcc.weighted_current(&word_cols(7, 128), &ia, Side::Left);
+        // 8 > 7 must hold through the analog chain (binary weighting).
+        assert!(i8 > i7, "{i8} vs {i7}");
+        // And w=8 vs w=1 shows the binary ratio diluted by the HRS
+        // background of the off bit-columns (removed downstream by the
+        // sub-array's reference calibration).
+        let i1 = wcc.weighted_current(&word_cols(1, 128), &ia, Side::Left);
+        let ratio = i8 / i1;
+        assert!(ratio > 4.5 && ratio < 8.5, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn gain_error_shifts_current() {
+        let ia = vec![true; 128];
+        let mut wcc = Wcc::new(Corner::TT);
+        let nominal = wcc.weighted_current(&word_cols(15, 128), &ia, Side::Left);
+        wcc.mirror_gain[3] = 1.05;
+        let skewed = wcc.weighted_current(&word_cols(15, 128), &ia, Side::Left);
+        assert!(skewed > nominal);
+    }
+
+    #[test]
+    fn ff_compresses_more_than_tt() {
+        let ia = vec![true; 128];
+        let mk = |corner: Corner| {
+            let cols: Vec<Vec<BitCell>> = (0..WORD_BITS)
+                .map(|_| {
+                    (0..128)
+                        .map(|_| {
+                            let mut c = BitCell::with_weight_bit(corner, true);
+                            c.q = true;
+                            c
+                        })
+                        .collect()
+                })
+                .collect();
+            let wcc = Wcc::new(corner);
+            let raw: f64 = (0..WORD_BITS)
+                .map(|b| {
+                    (1u32 << b) as f64
+                        * powerline::solve_line(&cols[b], &ia, Side::Left, 0.0).current
+                })
+                .sum();
+            let eff = wcc.weighted_current(&cols, &ia, Side::Left);
+            eff / raw // compression factor (1.0 = none)
+        };
+        assert!(mk(Corner::FF) < mk(Corner::TT));
+    }
+}

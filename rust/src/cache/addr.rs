@@ -1,0 +1,124 @@
+//! Physical address decomposition for the modeled LLC.
+//!
+//! Geometry defaults follow the paper's reference organization (§II-B):
+//! 2.5 MB slice, 20 ways, 64 B lines, banks of 32 KB built from 8 KB
+//! (128×512-bit) sub-arrays — i.e. each sub-array row holds one 64 B line.
+
+/// LLC geometry parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    pub line_bytes: usize,
+    pub ways: usize,
+    pub sets_per_slice: usize,
+    pub banks_per_slice: usize,
+    pub subarrays_per_bank: usize,
+    pub rows_per_subarray: usize,
+}
+
+impl Default for Geometry {
+    fn default() -> Self {
+        // 2.5 MB / 64 B / 20 ways = 2048 sets; 80 banks × 32 KB;
+        // 4 × 8 KB sub-arrays per bank; 128 rows (lines) per sub-array.
+        Geometry {
+            line_bytes: 64,
+            ways: 20,
+            sets_per_slice: 2048,
+            banks_per_slice: 80,
+            subarrays_per_bank: 4,
+            rows_per_subarray: 128,
+        }
+    }
+}
+
+impl Geometry {
+    /// A small geometry for fast tests.
+    pub fn tiny() -> Geometry {
+        Geometry {
+            line_bytes: 64,
+            ways: 4,
+            sets_per_slice: 64,
+            banks_per_slice: 4,
+            subarrays_per_bank: 2,
+            rows_per_subarray: 128,
+        }
+    }
+
+    pub fn slice_bytes(&self) -> usize {
+        self.sets_per_slice * self.ways * self.line_bytes
+    }
+
+    /// Lines that one bank can hold.
+    pub fn lines_per_bank(&self) -> usize {
+        self.subarrays_per_bank * self.rows_per_subarray
+    }
+}
+
+/// Decomposed physical address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Address {
+    pub raw: u64,
+}
+
+impl Address {
+    pub fn new(raw: u64) -> Address {
+        Address { raw }
+    }
+
+    pub fn line_offset(&self, g: &Geometry) -> usize {
+        (self.raw as usize) & (g.line_bytes - 1)
+    }
+
+    pub fn set_index(&self, g: &Geometry) -> usize {
+        ((self.raw as usize) / g.line_bytes) % g.sets_per_slice
+    }
+
+    pub fn tag(&self, g: &Geometry) -> u64 {
+        self.raw / (g.line_bytes * g.sets_per_slice) as u64
+    }
+
+    /// Bank selection: sets interleave across banks.
+    pub fn bank_index(&self, g: &Geometry) -> usize {
+        self.set_index(g) % g.banks_per_slice
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_geometry_is_2_5_mb() {
+        let g = Geometry::default();
+        assert_eq!(g.slice_bytes(), 2_621_440); // 2.5 MB
+        assert_eq!(g.lines_per_bank() * g.line_bytes, 32_768); // 32 KB banks
+    }
+
+    #[test]
+    fn decomposition_roundtrips() {
+        let g = Geometry::default();
+        let a = Address::new(0xDEAD_BEEF_40);
+        let reconstructed = a.tag(&g) * (g.line_bytes * g.sets_per_slice) as u64
+            + (a.set_index(&g) * g.line_bytes) as u64
+            + a.line_offset(&g) as u64;
+        assert_eq!(reconstructed, a.raw);
+    }
+
+    #[test]
+    fn same_set_same_bank() {
+        let g = Geometry::default();
+        let stride = (g.line_bytes * g.sets_per_slice) as u64;
+        let a = Address::new(0x1000);
+        let b = Address::new(0x1000 + stride); // same set, different tag
+        assert_eq!(a.set_index(&g), b.set_index(&g));
+        assert_eq!(a.bank_index(&g), b.bank_index(&g));
+        assert_ne!(a.tag(&g), b.tag(&g));
+    }
+
+    #[test]
+    fn adjacent_lines_spread_over_banks() {
+        let g = Geometry::default();
+        let a = Address::new(0);
+        let b = Address::new(g.line_bytes as u64);
+        assert_ne!(a.bank_index(&g), b.bank_index(&g));
+    }
+}

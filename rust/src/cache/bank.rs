@@ -1,0 +1,147 @@
+//! One cache data bank: a set of 6T-2R sub-arrays holding 64 B lines
+//! (one line per sub-array row), plus PIM occupancy state.
+//!
+//! The bank tracks *where data lives* and *what the RRAM layer holds*;
+//! electrical behavior is owned by [`crate::array::SubArray`] (validated
+//! there) — the bank level accounts occupancy, conflicts, and costs, which
+//! is what the architecture-level experiments need.
+
+use crate::cell::timing::{EnergyLedger, OpKind};
+
+/// State of one sub-array inside a bank.
+#[derive(Clone, Debug)]
+pub struct SubArraySlot {
+    /// Cache line data per row (None = not resident).
+    pub lines: Vec<Option<[u8; 64]>>,
+    /// 4-bit weights resident in the RRAM layer (None = unprogrammed).
+    pub weights: Option<Vec<u8>>,
+    /// Busy-until timestamp (s) — PIM occupancy.
+    pub busy_until: f64,
+}
+
+impl SubArraySlot {
+    pub fn new(rows: usize) -> SubArraySlot {
+        SubArraySlot { lines: vec![None; rows], weights: None, busy_until: 0.0 }
+    }
+
+    pub fn resident_lines(&self) -> usize {
+        self.lines.iter().filter(|l| l.is_some()).count()
+    }
+}
+
+/// One 32 KB bank.
+#[derive(Clone, Debug)]
+pub struct Bank {
+    pub subarrays: Vec<SubArraySlot>,
+    pub rows: usize,
+}
+
+impl Bank {
+    pub fn new(subarrays: usize, rows: usize) -> Bank {
+        Bank {
+            subarrays: (0..subarrays).map(|_| SubArraySlot::new(rows)).collect(),
+            rows,
+        }
+    }
+
+    /// Map a bank-local line index to (subarray, row).
+    pub fn locate(&self, line_idx: usize) -> (usize, usize) {
+        (line_idx / self.rows, line_idx % self.rows)
+    }
+
+    pub fn read_line(&self, line_idx: usize, ledger: &mut EnergyLedger) -> Option<[u8; 64]> {
+        let (sa, row) = self.locate(line_idx);
+        ledger.record(OpKind::SramRead6t2r);
+        self.subarrays[sa].lines[row]
+    }
+
+    pub fn write_line(&mut self, line_idx: usize, data: [u8; 64], ledger: &mut EnergyLedger) {
+        let (sa, row) = self.locate(line_idx);
+        ledger.record(OpKind::SramWrite);
+        self.subarrays[sa].lines[row] = Some(data);
+    }
+
+    pub fn evict_line(&mut self, line_idx: usize) -> Option<[u8; 64]> {
+        let (sa, row) = self.locate(line_idx);
+        self.subarrays[sa].lines[row].take()
+    }
+
+    /// Program weights into a sub-array's RRAM layer. Destructive to the
+    /// SRAM data in that array (§III-A) — resident lines are lost unless
+    /// the controller flushed them first; returns how many were destroyed.
+    pub fn program_weights(
+        &mut self,
+        sa: usize,
+        weights: Vec<u8>,
+        ledger: &mut EnergyLedger,
+    ) -> usize {
+        // Two LRS cycles + one HRS cycle worth of pulses per cell, at 512
+        // cells per row... we meter per-word granularity: rows × words
+        // pulses (each 4-bit word programmed as a unit across cycles).
+        let n_cells = weights.len() * 4;
+        ledger.record_n(OpKind::ProgramPulse, n_cells as u64);
+        ledger.record_n(OpKind::NvmRead, n_cells as u64); // program-verify
+        let slot = &mut self.subarrays[sa];
+        let destroyed = slot.resident_lines();
+        for l in slot.lines.iter_mut() {
+            *l = None; // programming clobbers the latches
+        }
+        slot.weights = Some(weights);
+        destroyed
+    }
+
+    pub fn is_busy(&self, sa: usize, now: f64) -> bool {
+        self.subarrays[sa].busy_until > now
+    }
+
+    /// Reserve a sub-array for a PIM window.
+    pub fn reserve(&mut self, sa: usize, now: f64, duration: f64) {
+        let slot = &mut self.subarrays[sa];
+        slot.busy_until = slot.busy_until.max(now) + duration;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_roundtrip() {
+        let mut b = Bank::new(4, 128);
+        let mut led = EnergyLedger::new();
+        let data = [7u8; 64];
+        b.write_line(300, data, &mut led);
+        assert_eq!(b.read_line(300, &mut led), Some(data));
+        assert_eq!(b.locate(300), (2, 44));
+    }
+
+    #[test]
+    fn programming_destroys_resident_lines() {
+        let mut b = Bank::new(2, 128);
+        let mut led = EnergyLedger::new();
+        b.write_line(5, [1u8; 64], &mut led);
+        b.write_line(200, [2u8; 64], &mut led); // other sub-array
+        let destroyed = b.program_weights(0, vec![0u8; 128 * 128], &mut led);
+        assert_eq!(destroyed, 1);
+        assert_eq!(b.read_line(5, &mut led), None);
+        assert_eq!(b.read_line(200, &mut led), Some([2u8; 64]));
+        assert!(b.subarrays[0].weights.is_some());
+    }
+
+    #[test]
+    fn reservation_blocks_until_expiry() {
+        let mut b = Bank::new(1, 128);
+        b.reserve(0, 0.0, 1.0e-6);
+        assert!(b.is_busy(0, 0.5e-6));
+        assert!(!b.is_busy(0, 1.5e-6));
+    }
+
+    #[test]
+    fn back_to_back_reservations_queue() {
+        let mut b = Bank::new(1, 128);
+        b.reserve(0, 0.0, 1.0e-6);
+        b.reserve(0, 0.0, 1.0e-6); // queued behind the first
+        assert!(b.is_busy(0, 1.5e-6));
+        assert!(!b.is_busy(0, 2.5e-6));
+    }
+}

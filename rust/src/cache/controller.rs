@@ -1,0 +1,246 @@
+//! Cache controller: arbitrates SRAM-mode traffic against PIM campaigns.
+//!
+//! Implements the paper's headline architectural property — PIM with
+//! **cache-data retention** — and the flush/reload baseline of prior
+//! 6T-SRAM PIM ([22], [23]) as an ablation mode. See the
+//! `bench_retention_ablation` bench and the `cache_retention` example.
+
+use crate::cell::timing::{EnergyLedger, OpKind};
+use crate::consts::ARRAY_ROWS;
+
+use super::addr::{Address, Geometry};
+use super::slice::{AccessResult, LlcSlice};
+
+/// How PIM coexists with cached data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PimIntegration {
+    /// This paper: 6T-2R computes on the RRAM layer; SRAM data stays put.
+    Retained,
+    /// Prior 6T PIM: weights must occupy the SRAM cells, so resident lines
+    /// are flushed before and reloaded after every PIM campaign.
+    FlushReload,
+}
+
+/// Result of one PIM campaign execution.
+#[derive(Clone, Debug)]
+pub struct CampaignStats {
+    /// Number of MAC invocations executed.
+    pub mac_ops: u64,
+    /// Cache lines moved (flush + reload) to make the campaign possible.
+    pub lines_moved: u64,
+    /// Wall-clock latency including data movement (s).
+    pub latency: f64,
+    /// Energy including data movement (J).
+    pub energy: f64,
+}
+
+/// The controller for one slice.
+pub struct CacheController {
+    pub slice: LlcSlice,
+    pub mode: PimIntegration,
+    pub now: f64,
+}
+
+impl CacheController {
+    pub fn new(geom: Geometry, mode: PimIntegration) -> CacheController {
+        CacheController { slice: LlcSlice::new(geom), mode, now: 0.0 }
+    }
+
+    /// Serve a read; misses are filled from "memory" with a fixed pattern
+    /// (the workload generator owns real contents).
+    pub fn read(&mut self, addr: Address) -> [u8; 64] {
+        match self.slice.read(addr) {
+            (AccessResult::Hit, Some(d)) => d,
+            _ => {
+                let data = Self::memory_pattern(addr);
+                self.slice.fill(addr, data);
+                data
+            }
+        }
+    }
+
+    pub fn write(&mut self, addr: Address, data: [u8; 64]) {
+        self.slice.write(addr, data);
+    }
+
+    fn memory_pattern(addr: Address) -> [u8; 64] {
+        let mut d = [0u8; 64];
+        for (i, b) in d.iter_mut().enumerate() {
+            *b = (addr.raw as u8).wrapping_mul(31).wrapping_add(i as u8);
+        }
+        d
+    }
+
+    /// Program a weight matrix into one sub-array, honoring the mode's data
+    /// discipline (dirty lines are written back first in both modes —
+    /// programming is destructive, §III-A).
+    pub fn program_campaign(&mut self, bank: usize, sa: usize, weights: Vec<u8>) -> CampaignStats {
+        let mut ledger = EnergyLedger::new();
+        let resident = self.slice.banks[bank].subarrays[sa].resident_lines() as u64;
+        // Writeback anything resident (conservative: assume dirty).
+        ledger.record_n(OpKind::CacheLineMove, resident);
+        self.slice.banks[bank].program_weights(sa, weights, &mut self.slice.ledger);
+        let latency = ledger.total_time()
+            + 3.0 * crate::consts::T_PROGRAM * (ARRAY_ROWS * 128) as f64 / 128.0; // row-parallel pulses
+        let energy = ledger.total_energy();
+        self.slice.ledger.merge(&ledger);
+        CampaignStats { mac_ops: 0, lines_moved: resident, latency, energy }
+    }
+
+    /// Execute `n_macs` full-array 4-bit MAC operations on (bank, sa).
+    ///
+    /// Retained: the array computes in place; resident lines stay valid.
+    /// FlushReload: every campaign flushes resident lines, "borrows" the
+    /// SRAM cells for weights, computes, then reloads — the prior-work
+    /// cost structure this paper eliminates.
+    pub fn pim_campaign(&mut self, bank: usize, sa: usize, n_macs: u64) -> CampaignStats {
+        let mut ledger = EnergyLedger::new();
+        let mut lines_moved = 0u64;
+        if self.mode == PimIntegration::FlushReload {
+            // Actually evict: the SRAM cells are about to hold weights, so
+            // every resident line in this array is flushed (tags
+            // invalidated — subsequent accesses miss and refill).
+            let flushed = self.slice.invalidate_subarray(bank, sa) as u64;
+            // Flush out + weight-load writes + (eventual) reload back.
+            lines_moved = 2 * flushed + ARRAY_ROWS as u64;
+            ledger.record_n(OpKind::CacheLineMove, 2 * flushed);
+            ledger.record_n(OpKind::SramWrite, ARRAY_ROWS as u64);
+        }
+        // The MAC pipeline costs (per full 4b MAC: 8 array cycles, 8×128
+        // conversions — see cell::timing).
+        ledger.record_n(OpKind::PimArrayCycle, 8 * n_macs);
+        ledger.record_n(OpKind::WccSample, 8 * 128 * n_macs);
+        ledger.record_n(OpKind::AdcConversion, 8 * 128 * n_macs);
+        ledger.record_n(OpKind::DigitalPostOp, 4 * 128 * n_macs);
+        // Wall-clock: data movement serial + ADC-pipelined MACs.
+        let move_time = lines_moved as f64 * OpKind::CacheLineMove.cost().0;
+        let mac_time = n_macs as f64 * 8.0 * crate::consts::T_ADC_CONVERSION;
+        let latency = move_time + mac_time;
+        self.slice.banks[bank].reserve(sa, self.now, latency);
+        self.now += latency;
+        let energy = ledger.total_energy();
+        self.slice.ledger.merge(&ledger);
+        CampaignStats { mac_ops: n_macs, lines_moved, latency, energy }
+    }
+
+    /// Verify that all resident lines in a sub-array still hold their data
+    /// (the retention property test hook).
+    pub fn verify_retention(&mut self, bank: usize, sa: usize, expected: &[(usize, [u8; 64])]) -> bool {
+        expected.iter().all(|(row, data)| {
+            self.slice.banks[bank].subarrays[sa].lines[*row] == Some(*data)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(mode: PimIntegration) -> CacheController {
+        CacheController::new(Geometry::tiny(), mode)
+    }
+
+    fn warm_lines(c: &mut CacheController, bank: usize, sa: usize, n: usize) -> Vec<(usize, [u8; 64])> {
+        // Write lines directly into the target sub-array for the retention
+        // experiments (bypassing address mapping for determinism).
+        let mut out = Vec::new();
+        for row in 0..n {
+            let mut d = [0u8; 64];
+            d[0] = row as u8;
+            d[63] = 0xA5;
+            let li = sa * c.slice.geom.rows_per_subarray + row;
+            let mut led = EnergyLedger::new();
+            c.slice.banks[bank].write_line(li, d, &mut led);
+            out.push((row, d));
+        }
+        out
+    }
+
+    #[test]
+    fn retained_mode_keeps_data_and_moves_nothing() {
+        let mut c = ctl(PimIntegration::Retained);
+        let expected = warm_lines(&mut c, 0, 0, 50);
+        c.program_campaign(0, 1, vec![0u8; 128 * 128]); // weights in sa 1
+        let stats = c.pim_campaign(0, 1, 100);
+        assert_eq!(stats.lines_moved, 0);
+        assert!(c.verify_retention(0, 0, &expected));
+    }
+
+    #[test]
+    fn flush_reload_moves_lines_every_campaign() {
+        let mut c = ctl(PimIntegration::FlushReload);
+        // Addressed traffic into bank 0 (tiny geometry: sets ≡ 0 mod 4 are
+        // bank 0, and their first ways land in sub-array 0).
+        let g = c.slice.geom;
+        let n = 40;
+        let mut addrs = Vec::new();
+        for i in 0..n as u64 {
+            let set = (i as usize * g.banks_per_slice) % g.sets_per_slice;
+            let tag_part = i as usize / (g.sets_per_slice / g.banks_per_slice);
+            let a = Address::new(
+                (tag_part * g.sets_per_slice * g.line_bytes + set * g.line_bytes) as u64,
+            );
+            assert_eq!(a.bank_index(&g), 0);
+            c.read(a);
+            addrs.push(a);
+        }
+        let resident_in_target: usize = (0..g.sets_per_slice)
+            .filter(|s| s % g.banks_per_slice == 0)
+            .map(|_| 0) // placeholder; we use the invalidation count below
+            .sum();
+        let _ = resident_in_target;
+        let s1 = c.pim_campaign(0, 0, 10);
+        // Everything we touched sat in (bank 0, sa 0): flushed 2× + reload.
+        assert!(s1.lines_moved as usize >= ARRAY_ROWS, "{}", s1.lines_moved);
+        assert!(s1.lines_moved as usize > ARRAY_ROWS, "some lines must flush");
+        assert!(s1.latency > 0.0 && s1.energy > 0.0);
+        // Post-campaign: previously-hitting addresses now miss.
+        let hits_before = c.slice.hits;
+        let misses_before = c.slice.misses;
+        c.read(addrs[0]);
+        assert_eq!(c.slice.hits, hits_before);
+        assert_eq!(c.slice.misses, misses_before + 1);
+    }
+
+    #[test]
+    fn retained_beats_flush_reload_on_cost() {
+        let macs = 4;
+        let mut a = ctl(PimIntegration::Retained);
+        let mut b = ctl(PimIntegration::FlushReload);
+        warm_lines(&mut a, 0, 0, 100);
+        warm_lines(&mut b, 0, 0, 100);
+        let sa = a.pim_campaign(0, 0, macs);
+        let sb = b.pim_campaign(0, 0, macs);
+        assert!(sb.latency > sa.latency, "{} !> {}", sb.latency, sa.latency);
+        assert!(sb.energy > sa.energy);
+    }
+
+    #[test]
+    fn programming_is_destructive_but_metered() {
+        let mut c = ctl(PimIntegration::Retained);
+        let expected = warm_lines(&mut c, 0, 0, 30);
+        let stats = c.program_campaign(0, 0, vec![7u8; 128 * 128]);
+        assert_eq!(stats.lines_moved, 30, "resident lines written back");
+        assert!(!c.verify_retention(0, 0, &expected), "programming clobbers latches");
+    }
+
+    #[test]
+    fn read_miss_fill_hit_path() {
+        let mut c = ctl(PimIntegration::Retained);
+        let a = Address::new(0x7700);
+        let d1 = c.read(a);
+        let d2 = c.read(a);
+        assert_eq!(d1, d2);
+        assert_eq!(c.slice.misses, 1);
+        assert_eq!(c.slice.hits, 1);
+    }
+
+    #[test]
+    fn busy_tracking_reserves_array() {
+        let mut c = ctl(PimIntegration::Retained);
+        let t0 = c.now;
+        c.pim_campaign(0, 0, 10);
+        assert!(c.slice.banks[0].is_busy(0, t0));
+        assert!(!c.slice.banks[0].is_busy(0, c.now + 1.0));
+    }
+}

@@ -1,0 +1,73 @@
+//! True-LRU replacement state per set (the paper's slice keeps "least
+//! recently used (LRU) structures" alongside the tag array, §II-B).
+
+/// LRU tracker for one set of `ways` ways. Stores a recency ordering:
+/// `order[0]` is the MRU way, `order[last]` the LRU victim.
+#[derive(Clone, Debug)]
+pub struct LruSet {
+    order: Vec<u8>,
+}
+
+impl LruSet {
+    pub fn new(ways: usize) -> LruSet {
+        assert!(ways > 0 && ways <= 256);
+        LruSet { order: (0..ways as u8).collect() }
+    }
+
+    /// Mark a way as most-recently used.
+    pub fn touch(&mut self, way: usize) {
+        let pos = self.order.iter().position(|&w| w as usize == way).unwrap();
+        let w = self.order.remove(pos);
+        self.order.insert(0, w);
+    }
+
+    /// The current victim (least-recently used way).
+    pub fn victim(&self) -> usize {
+        *self.order.last().unwrap() as usize
+    }
+
+    pub fn mru(&self) -> usize {
+        self.order[0] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_victim_is_last_way() {
+        let l = LruSet::new(4);
+        assert_eq!(l.victim(), 3);
+    }
+
+    #[test]
+    fn touch_moves_to_mru() {
+        let mut l = LruSet::new(4);
+        l.touch(2);
+        assert_eq!(l.mru(), 2);
+        assert_eq!(l.victim(), 3);
+        l.touch(3);
+        l.touch(1);
+        l.touch(0);
+        // 2 is now the least recently used.
+        assert_eq!(l.victim(), 2);
+    }
+
+    #[test]
+    fn repeated_touch_is_stable() {
+        let mut l = LruSet::new(3);
+        l.touch(1);
+        l.touch(1);
+        assert_eq!(l.mru(), 1);
+        assert_eq!(l.victim(), 2);
+    }
+
+    #[test]
+    fn full_access_sequence() {
+        let mut l = LruSet::new(2);
+        l.touch(0); // order: 0, 1
+        l.touch(1); // order: 1, 0
+        assert_eq!(l.victim(), 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Cache hierarchy substrate (§II-B, Fig. 1).
+//!
+//! Models the LLC organization the paper targets: slices → banks →
+//! sub-arrays, with tag/valid/LRU state and a controller that arbitrates
+//! conventional cache traffic against PIM windows. The controller supports
+//! two PIM integration modes:
+//!
+//! * **Retained** (this paper): PIM runs in place; cache lines stay valid
+//!   (the 6T-2R property). Requests to a busy array stall only for the
+//!   current PIM step.
+//! * **FlushReload** (prior 6T PIM, refs [22]/[23]): the array's lines are
+//!   flushed before a PIM campaign and reloaded after — the ablation
+//!   baseline quantifying the paper's motivation.
+
+pub mod addr;
+pub mod bank;
+pub mod controller;
+pub mod lru;
+pub mod slice;
+pub mod tag;
+pub mod workload;
+
+pub use addr::Address;
+pub use controller::{CacheController, PimIntegration};
+pub use slice::LlcSlice;

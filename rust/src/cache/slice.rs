@@ -1,0 +1,235 @@
+//! One LLC slice: tag array + LRU + banks (Fig. 1b/c).
+
+use crate::cell::timing::EnergyLedger;
+
+use super::addr::{Address, Geometry};
+use super::bank::Bank;
+use super::lru::LruSet;
+use super::tag::TagSet;
+
+/// Access outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessResult {
+    Hit,
+    Miss,
+    /// Miss that evicted a dirty victim (writeback needed).
+    MissDirtyEvict,
+}
+
+/// One slice.
+pub struct LlcSlice {
+    pub geom: Geometry,
+    pub tags: Vec<TagSet>,
+    pub lru: Vec<LruSet>,
+    pub banks: Vec<Bank>,
+    pub ledger: EnergyLedger,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LlcSlice {
+    pub fn new(geom: Geometry) -> LlcSlice {
+        LlcSlice {
+            geom,
+            tags: (0..geom.sets_per_slice).map(|_| TagSet::new(geom.ways)).collect(),
+            lru: (0..geom.sets_per_slice).map(|_| LruSet::new(geom.ways)).collect(),
+            banks: (0..geom.banks_per_slice)
+                .map(|_| Bank::new(geom.subarrays_per_bank, geom.rows_per_subarray))
+                .collect(),
+            ledger: EnergyLedger::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Bank-local line index for (set, way): sets stripe across banks, the
+    /// per-bank stream packs (set/banks, way).
+    fn line_index(&self, set: usize, way: usize) -> usize {
+        let local_set = set / self.geom.banks_per_slice;
+        (local_set * self.geom.ways + way) % (self.geom.lines_per_bank())
+    }
+
+    /// Read access. Returns (result, data-if-hit).
+    pub fn read(&mut self, addr: Address) -> (AccessResult, Option<[u8; 64]>) {
+        let set = addr.set_index(&self.geom);
+        let tag = addr.tag(&self.geom);
+        let bank_i = addr.bank_index(&self.geom);
+        match self.tags[set].lookup(tag) {
+            Some(way) => {
+                self.hits += 1;
+                self.lru[set].touch(way);
+                let li = self.line_index(set, way);
+                let data = self.banks[bank_i].read_line(li, &mut self.ledger);
+                (AccessResult::Hit, data)
+            }
+            None => {
+                self.misses += 1;
+                (AccessResult::Miss, None)
+            }
+        }
+    }
+
+    /// Fill a line after a miss; returns the evicted (addr-tag, data) if a
+    /// dirty victim was displaced.
+    pub fn fill(&mut self, addr: Address, data: [u8; 64]) -> AccessResult {
+        let set = addr.set_index(&self.geom);
+        let tag = addr.tag(&self.geom);
+        let bank_i = addr.bank_index(&self.geom);
+        let way = match self.tags[set].lookup(tag) {
+            Some(w) => w,
+            None => self.lru[set].victim(),
+        };
+        let old = self.tags[set].invalidate(way);
+        let li = self.line_index(set, way);
+        let result = if old.valid && old.dirty {
+            AccessResult::MissDirtyEvict
+        } else {
+            AccessResult::Miss
+        };
+        self.banks[bank_i].evict_line(li);
+        self.tags[set].fill(way, tag);
+        self.lru[set].touch(way);
+        self.banks[bank_i].write_line(li, data, &mut self.ledger);
+        result
+    }
+
+    /// Write access (write-back): hit updates in place and marks dirty.
+    pub fn write(&mut self, addr: Address, data: [u8; 64]) -> AccessResult {
+        let set = addr.set_index(&self.geom);
+        let tag = addr.tag(&self.geom);
+        let bank_i = addr.bank_index(&self.geom);
+        match self.tags[set].lookup(tag) {
+            Some(way) => {
+                self.hits += 1;
+                self.lru[set].touch(way);
+                self.tags[set].mark_dirty(way);
+                let li = self.line_index(set, way);
+                self.banks[bank_i].write_line(li, data, &mut self.ledger);
+                AccessResult::Hit
+            }
+            None => {
+                self.misses += 1;
+                let r = self.fill(addr, data);
+                let set_tags = &mut self.tags[set];
+                let way = set_tags.lookup(tag).unwrap();
+                set_tags.mark_dirty(way);
+                r
+            }
+        }
+    }
+
+    /// Invalidate every resident line that physically lives in the given
+    /// (bank, sub-array) — the flush a 6T-SRAM PIM campaign forces.
+    /// Returns the number of lines invalidated.
+    pub fn invalidate_subarray(&mut self, bank: usize, sa: usize) -> usize {
+        let rows = self.geom.rows_per_subarray;
+        let mut n = 0;
+        for set in 0..self.geom.sets_per_slice {
+            if set % self.geom.banks_per_slice != bank {
+                continue;
+            }
+            for way in 0..self.geom.ways {
+                if !self.tags[set].ways[way].valid {
+                    continue;
+                }
+                let li = self.line_index(set, way);
+                if li / rows == sa {
+                    self.tags[set].invalidate(way);
+                    self.banks[bank].evict_line(li);
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slice() -> LlcSlice {
+        LlcSlice::new(Geometry::tiny())
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let mut s = slice();
+        let a = Address::new(0x4000);
+        let (r, _) = s.read(a);
+        assert_eq!(r, AccessResult::Miss);
+        s.fill(a, [9u8; 64]);
+        let (r, d) = s.read(a);
+        assert_eq!(r, AccessResult::Hit);
+        assert_eq!(d, Some([9u8; 64]));
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn write_allocates_and_dirties() {
+        let mut s = slice();
+        let a = Address::new(0x8000);
+        assert_eq!(s.write(a, [3u8; 64]), AccessResult::Miss);
+        let set = a.set_index(&s.geom);
+        let way = s.tags[set].lookup(a.tag(&s.geom)).unwrap();
+        assert!(s.tags[set].ways[way].dirty);
+        // Re-write hits.
+        assert_eq!(s.write(a, [4u8; 64]), AccessResult::Hit);
+        assert_eq!(s.read(a).1, Some([4u8; 64]));
+    }
+
+    #[test]
+    fn eviction_on_conflict() {
+        let mut s = slice();
+        let g = s.geom;
+        let set_stride = (g.line_bytes * g.sets_per_slice) as u64;
+        // Fill ways+1 conflicting lines in one set.
+        let addrs: Vec<Address> =
+            (0..g.ways as u64 + 1).map(|i| Address::new(0x100 * 64 + i * set_stride)).collect();
+        for a in &addrs {
+            s.fill(*a, [0u8; 64]);
+        }
+        // The first line was LRU-evicted.
+        let (r, _) = s.read(addrs[0]);
+        assert_eq!(r, AccessResult::Miss);
+        // The last is resident.
+        let (r, _) = s.read(addrs[g.ways]);
+        assert_eq!(r, AccessResult::Hit);
+    }
+
+    #[test]
+    fn dirty_eviction_reported() {
+        let mut s = slice();
+        let g = s.geom;
+        let set_stride = (g.line_bytes * g.sets_per_slice) as u64;
+        let a0 = Address::new(0);
+        s.write(a0, [1u8; 64]); // dirty
+        for i in 1..=g.ways as u64 {
+            let r = s.fill(Address::new(i * set_stride), [0u8; 64]);
+            if i == g.ways as u64 {
+                assert_eq!(r, AccessResult::MissDirtyEvict);
+            }
+        }
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let mut s = slice();
+        let a = Address::new(0x40);
+        s.read(a);
+        s.fill(a, [0u8; 64]);
+        s.read(a);
+        s.read(a);
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Tag / valid / dirty state for one cache set (the "1-way tag, cache-valid
+//! (CV) bits, state" structures of §II-B).
+
+/// One way's tag entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TagEntry {
+    pub tag: u64,
+    pub valid: bool,
+    pub dirty: bool,
+}
+
+impl TagEntry {
+    pub fn invalid() -> TagEntry {
+        TagEntry { tag: 0, valid: false, dirty: false }
+    }
+}
+
+/// Tag array for one set.
+#[derive(Clone, Debug)]
+pub struct TagSet {
+    pub ways: Vec<TagEntry>,
+}
+
+impl TagSet {
+    pub fn new(ways: usize) -> TagSet {
+        TagSet { ways: vec![TagEntry::invalid(); ways] }
+    }
+
+    /// Look up a tag; returns the hitting way.
+    pub fn lookup(&self, tag: u64) -> Option<usize> {
+        self.ways
+            .iter()
+            .position(|e| e.valid && e.tag == tag)
+    }
+
+    /// Install a tag into a way (on fill).
+    pub fn fill(&mut self, way: usize, tag: u64) {
+        self.ways[way] = TagEntry { tag, valid: true, dirty: false };
+    }
+
+    pub fn invalidate(&mut self, way: usize) -> TagEntry {
+        std::mem::replace(&mut self.ways[way], TagEntry::invalid())
+    }
+
+    pub fn mark_dirty(&mut self, way: usize) {
+        debug_assert!(self.ways[way].valid);
+        self.ways[way].dirty = true;
+    }
+
+    pub fn valid_count(&self) -> usize {
+        self.ways.iter().filter(|e| e.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_miss_on_empty() {
+        let t = TagSet::new(4);
+        assert_eq!(t.lookup(42), None);
+    }
+
+    #[test]
+    fn fill_then_hit() {
+        let mut t = TagSet::new(4);
+        t.fill(2, 42);
+        assert_eq!(t.lookup(42), Some(2));
+        assert_eq!(t.valid_count(), 1);
+    }
+
+    #[test]
+    fn invalidate_returns_old_state() {
+        let mut t = TagSet::new(2);
+        t.fill(0, 7);
+        t.mark_dirty(0);
+        let old = t.invalidate(0);
+        assert!(old.dirty && old.valid && old.tag == 7);
+        assert_eq!(t.lookup(7), None);
+    }
+
+    #[test]
+    fn distinct_tags_coexist() {
+        let mut t = TagSet::new(4);
+        t.fill(0, 1);
+        t.fill(1, 2);
+        assert_eq!(t.lookup(1), Some(0));
+        assert_eq!(t.lookup(2), Some(1));
+    }
+}

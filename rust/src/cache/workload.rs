@@ -1,0 +1,217 @@
+//! Trace-driven cache workload generation + the PIM-interference study.
+//!
+//! The paper's §I motivation is that prior 6T PIM forces flush/reload,
+//! "introducing additional latency and energy due to extra data movement".
+//! This module quantifies that architecturally: synthetic-but-structured
+//! access traces (sequential scans, zipf-like hot sets, strided walks) run
+//! against the controller while PIM campaigns execute at a configurable
+//! intensity, measuring hit-rate and AMAT degradation in both integration
+//! modes.
+
+use crate::util::rng::Pcg64;
+
+use super::addr::{Address, Geometry};
+use super::controller::{CacheController, PimIntegration};
+
+/// Trace shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Repeated sequential scan over a working set.
+    SequentialScan,
+    /// Hot-set dominated (80/20) re-reference.
+    HotSet,
+    /// Strided walk (conflict-prone).
+    Strided,
+}
+
+impl TraceKind {
+    pub const ALL: [TraceKind; 3] =
+        [TraceKind::SequentialScan, TraceKind::HotSet, TraceKind::Strided];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::SequentialScan => "sequential",
+            TraceKind::HotSet => "hot_set",
+            TraceKind::Strided => "strided",
+        }
+    }
+}
+
+/// Generate `n` line addresses for a trace over `working_set_lines`.
+pub fn generate_trace(
+    kind: TraceKind,
+    working_set_lines: usize,
+    n: usize,
+    rng: &mut Pcg64,
+) -> Vec<Address> {
+    let line = 64u64;
+    match kind {
+        TraceKind::SequentialScan => (0..n)
+            .map(|i| Address::new((i % working_set_lines) as u64 * line))
+            .collect(),
+        TraceKind::HotSet => {
+            let hot = (working_set_lines / 5).max(1);
+            (0..n)
+                .map(|_| {
+                    let idx = if rng.f64() < 0.8 {
+                        rng.below(hot)
+                    } else {
+                        hot + rng.below((working_set_lines - hot).max(1))
+                    };
+                    Address::new(idx as u64 * line)
+                })
+                .collect()
+        }
+        TraceKind::Strided => {
+            // Stride of one set-stride: maximally conflict-prone.
+            (0..n)
+                .map(|i| Address::new((i % working_set_lines) as u64 * line * 17))
+                .collect()
+        }
+    }
+}
+
+/// Result of one interference run.
+#[derive(Clone, Debug)]
+pub struct InterferenceResult {
+    pub trace: TraceKind,
+    pub mode: PimIntegration,
+    /// PIM campaigns per 1000 accesses.
+    pub pim_intensity: usize,
+    pub hit_rate: f64,
+    /// Average memory-access time (s): hit pays the 6T-2R read, miss adds
+    /// a line fill.
+    pub amat: f64,
+    pub lines_moved: u64,
+}
+
+/// Run a trace against a slice while PIM campaigns fire every
+/// `1000/pim_intensity` accesses in rotating banks.
+pub fn run_interference(
+    trace: TraceKind,
+    mode: PimIntegration,
+    pim_intensity: usize,
+    seed: u64,
+) -> InterferenceResult {
+    let geom = Geometry::tiny();
+    let mut ctl = CacheController::new(geom, mode);
+    let mut rng = Pcg64::seeded(seed);
+    let n = 6000;
+    let accesses = generate_trace(trace, 160, n, &mut rng);
+    // Warm up.
+    for a in accesses.iter().take(1000) {
+        ctl.read(*a);
+    }
+    for bank in 0..geom.banks_per_slice {
+        ctl.program_campaign(bank, 0, vec![3u8; 128 * 128]);
+    }
+    ctl.slice.hits = 0;
+    ctl.slice.misses = 0;
+    let mut lines_moved = 0u64;
+    let every = if pim_intensity == 0 { usize::MAX } else { 1000 / pim_intensity.max(1) };
+    let mut bank = 0usize;
+    for (i, a) in accesses.iter().enumerate().skip(1000) {
+        ctl.read(*a);
+        if i % every == 0 {
+            let s = ctl.pim_campaign(bank, 0, 4);
+            lines_moved += s.lines_moved;
+            bank = (bank + 1) % geom.banks_per_slice;
+        }
+    }
+    let hits = ctl.slice.hits as f64;
+    let misses = ctl.slice.misses as f64;
+    let (t_hit, _) = crate::cell::timing::OpKind::SramRead6t2r.cost();
+    let (t_fill, _) = crate::cell::timing::OpKind::CacheLineMove.cost();
+    let amat = (hits * t_hit + misses * (t_hit + t_fill)) / (hits + misses);
+    InterferenceResult {
+        trace,
+        mode,
+        pim_intensity,
+        hit_rate: ctl.slice.hit_rate(),
+        amat,
+        lines_moved,
+    }
+}
+
+/// The full sweep used by `repro cache-sim`: every trace × both modes ×
+/// PIM intensities.
+pub fn interference_sweep(seed: u64) -> Vec<InterferenceResult> {
+    let mut out = Vec::new();
+    for trace in TraceKind::ALL {
+        for mode in [PimIntegration::Retained, PimIntegration::FlushReload] {
+            for intensity in [0usize, 10, 50, 200] {
+                out.push(run_interference(trace, mode, intensity, seed));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_have_expected_shapes() {
+        let mut rng = Pcg64::seeded(1);
+        let seq = generate_trace(TraceKind::SequentialScan, 10, 25, &mut rng);
+        assert_eq!(seq[0], seq[10]);
+        let hot = generate_trace(TraceKind::HotSet, 100, 2000, &mut rng);
+        let hot_hits = hot
+            .iter()
+            .filter(|a| (a.raw / 64) < 20)
+            .count() as f64
+            / 2000.0;
+        assert!(hot_hits > 0.7, "80/20 skew: {hot_hits}");
+    }
+
+    #[test]
+    fn zero_intensity_modes_identical() {
+        let a = run_interference(TraceKind::HotSet, PimIntegration::Retained, 0, 5);
+        let b = run_interference(TraceKind::HotSet, PimIntegration::FlushReload, 0, 5);
+        assert!((a.hit_rate - b.hit_rate).abs() < 1e-12, "no PIM ⇒ identical");
+        assert_eq!(b.lines_moved, 0);
+    }
+
+    #[test]
+    fn flush_reload_degrades_with_intensity() {
+        let lo = run_interference(TraceKind::HotSet, PimIntegration::FlushReload, 10, 5);
+        let hi = run_interference(TraceKind::HotSet, PimIntegration::FlushReload, 200, 5);
+        assert!(hi.hit_rate < lo.hit_rate, "{} !< {}", hi.hit_rate, lo.hit_rate);
+        assert!(hi.lines_moved > lo.lines_moved);
+        assert!(hi.amat > lo.amat);
+    }
+
+    #[test]
+    fn retained_mode_immune_to_intensity() {
+        let lo = run_interference(TraceKind::HotSet, PimIntegration::Retained, 0, 5);
+        let hi = run_interference(TraceKind::HotSet, PimIntegration::Retained, 200, 5);
+        assert!((hi.hit_rate - lo.hit_rate).abs() < 0.01);
+        assert_eq!(hi.lines_moved, 0);
+    }
+
+    #[test]
+    fn sweep_covers_matrix() {
+        let sweep = interference_sweep(3);
+        assert_eq!(sweep.len(), 3 * 2 * 4);
+        // The headline: at max intensity, retained beats flush/reload on
+        // hit rate for every trace kind.
+        for trace in TraceKind::ALL {
+            let ret = sweep
+                .iter()
+                .find(|r| r.trace == trace && r.mode == PimIntegration::Retained && r.pim_intensity == 200)
+                .unwrap();
+            let fr = sweep
+                .iter()
+                .find(|r| r.trace == trace && r.mode == PimIntegration::FlushReload && r.pim_intensity == 200)
+                .unwrap();
+            assert!(
+                ret.hit_rate >= fr.hit_rate,
+                "{}: {} vs {}",
+                trace.name(),
+                ret.hit_rate,
+                fr.hit_rate
+            );
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! 6T-2R bit-cell state and the small electrical solvers shared by the
+//! operation models.
+
+use crate::consts::VDD;
+use crate::device::{CellVariation, Corner, Fet, FetKind, Rram, RramState};
+
+/// Which half of the symmetric cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+impl Side {
+    pub const BOTH: [Side; 2] = [Side::Left, Side::Right];
+
+    pub fn other(&self) -> Side {
+        match self {
+            Side::Left => Side::Right,
+            Side::Right => Side::Left,
+        }
+    }
+}
+
+/// Relative device widths in the SRAM cell (pull-down : access : pull-up),
+/// the classic read-stability sizing.
+pub const W_PULLDOWN: f64 = 1.5;
+pub const W_ACCESS: f64 = 1.0;
+pub const W_PULLUP: f64 = 0.8;
+/// The per-row gated-GND footer is shared by many cells and sized wide.
+pub const W_GATED_GND: f64 = 8.0;
+
+/// One 6T-2R bit-cell.
+#[derive(Clone, Debug)]
+pub struct BitCell {
+    /// SRAM latch state: `true` ⇔ Q = 1 (and QB = 0).
+    pub q: bool,
+    /// RRAM on the VDD1 (left) power line.
+    pub r_left: Rram,
+    /// RRAM on the VDD2 (right) power line.
+    pub r_right: Rram,
+    pub corner: Corner,
+    pub var: CellVariation,
+}
+
+impl BitCell {
+    pub fn new(corner: Corner) -> BitCell {
+        BitCell {
+            q: false,
+            r_left: Rram::new(),
+            r_right: Rram::new(),
+            corner,
+            var: CellVariation::nominal(),
+        }
+    }
+
+    pub fn with_variation(corner: Corner, var: CellVariation) -> BitCell {
+        let mut c = Self::new(corner);
+        c.var = var;
+        c
+    }
+
+    /// Both RRAMs forced to the same logical state (the paper programs
+    /// R_LEFT and R_RIGHT identically to preserve cell symmetry, §III-A).
+    pub fn with_weight_bit(corner: Corner, bit: bool) -> BitCell {
+        let mut c = Self::new(corner);
+        c.set_weight_bit(bit);
+        c
+    }
+
+    /// Load a weight bit into both RRAMs without electrical programming.
+    pub fn set_weight_bit(&mut self, bit: bool) {
+        let s = if bit { RramState::Lrs } else { RramState::Hrs };
+        self.r_left.force_state(s);
+        self.r_right.force_state(s);
+        self.apply_r_variation();
+    }
+
+    /// Apply the sampled MC resistance multipliers to both devices.
+    pub fn apply_r_variation(&mut self) {
+        let mult = |st: RramState, v: &CellVariation| match st {
+            RramState::Lrs => v.r_lrs_mult,
+            RramState::Hrs => v.r_hrs_mult,
+        };
+        self.r_left.r_mult = mult(self.r_left.state(), &self.var);
+        self.r_right.r_mult = mult(self.r_right.state(), &self.var);
+    }
+
+    /// Stored weight bit (requires both devices consistent; debug-asserted).
+    pub fn weight_bit(&self) -> bool {
+        debug_assert_eq!(self.r_left.state(), self.r_right.state());
+        self.r_left.state() == RramState::Lrs
+    }
+
+    pub fn rram(&self, side: Side) -> &Rram {
+        match side {
+            Side::Left => &self.r_left,
+            Side::Right => &self.r_right,
+        }
+    }
+
+    pub fn rram_mut(&mut self, side: Side) -> &mut Rram {
+        match side {
+            Side::Left => &mut self.r_left,
+            Side::Right => &mut self.r_right,
+        }
+    }
+
+    // ---- device instances (with this cell's corner + MC deltas) ----
+
+    pub fn access_fet(&self) -> Fet {
+        Fet::with_deltas(FetKind::Nmos, self.corner, W_ACCESS, self.var.vth_delta, self.var.beta_mult)
+    }
+
+    pub fn pulldown_fet(&self) -> Fet {
+        Fet::with_deltas(FetKind::Nmos, self.corner, W_PULLDOWN, self.var.vth_delta, self.var.beta_mult)
+    }
+
+    pub fn pullup_fet(&self) -> Fet {
+        Fet::with_deltas(FetKind::Pmos, self.corner, W_PULLUP, self.var.vth_delta, self.var.beta_mult)
+    }
+
+    pub fn gated_gnd_fet(&self) -> Fet {
+        // Row-shared footer: no per-cell mismatch (it is one physical device
+        // per row; row-level variation is applied at the array layer).
+        Fet::new(FetKind::Nmos, self.corner, W_GATED_GND)
+    }
+
+    /// Effective series resistance of the access + pull-up FET path used in
+    /// programming / PIM current calculations (both near full gate drive).
+    pub fn series_fet_resistance(&self, overdrive_gate: f64) -> f64 {
+        let r_acc = self.access_fet().r_eff(overdrive_gate, 0.05);
+        let r_pu = self.pullup_fet().r_eff(overdrive_gate, 0.05);
+        r_acc + r_pu
+    }
+
+    /// Solve the self-consistent voltage across an RRAM in series with
+    /// `r_fets` when `v_total` is applied across the chain. The RRAM's
+    /// `sinh` I–V makes its effective resistance bias-dependent, so this is
+    /// a damped fixed-point iteration.
+    pub fn divider_v_rram(rram: &Rram, r_fets: f64, v_total: f64) -> f64 {
+        let sign = v_total.signum();
+        let vt = v_total.abs();
+        if vt < 1e-9 {
+            return 0.0;
+        }
+        let mut v_r = vt; // start assuming all voltage on the RRAM
+        for _ in 0..60 {
+            let r = rram.resistance(sign * v_r);
+            let next = vt * r / (r + r_fets);
+            v_r = 0.5 * v_r + 0.5 * next;
+        }
+        sign * v_r
+    }
+
+    /// Current through the PIM path of `side` during the sampling window
+    /// (§III-C), given the powerline voltage `v_line` on that side's VDD
+    /// rail and the input activation `ia` on that side's wordline.
+    ///
+    /// Cycle-1 (left): path exists iff Q = 1 (M2 on) and IA = 1 (M1 on);
+    /// current flows BL(VDD) → M1 → Q → M2 → R_LEFT → VDD1(v_line).
+    /// Cycle-2 (right) is symmetric with QB.
+    pub fn pim_current(&self, side: Side, ia: bool, v_line: f64) -> f64 {
+        let active = match side {
+            Side::Left => self.q,
+            Side::Right => !self.q,
+        };
+        let dev = self.rram(side);
+        let drive = VDD - v_line;
+        if drive <= 0.0 {
+            return 0.0;
+        }
+        if !(active && ia) {
+            // Inactive path: only subthreshold leakage through the stack.
+            let leak = self.access_fet().id(0.0, drive);
+            return leak.min(drive / dev.resistance(drive.max(0.05)));
+        }
+        let r_fets = self.series_fet_resistance(VDD);
+        let v_r = Self::divider_v_rram(dev, r_fets, drive);
+        dev.current(v_r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consts::{R_HRS, R_LRS};
+
+    #[test]
+    fn weight_bit_roundtrip() {
+        for bit in [false, true] {
+            let c = BitCell::with_weight_bit(Corner::TT, bit);
+            assert_eq!(c.weight_bit(), bit);
+        }
+    }
+
+    #[test]
+    fn divider_puts_most_voltage_on_hrs() {
+        let c = BitCell::with_weight_bit(Corner::TT, false);
+        let r_fets = c.series_fet_resistance(2.0);
+        let v_r = BitCell::divider_v_rram(&c.r_left, r_fets, 2.0);
+        assert!(v_r > 1.8, "HRS should take nearly all of the 2 V: {v_r}");
+    }
+
+    #[test]
+    fn divider_sign_follows_polarity() {
+        let c = BitCell::with_weight_bit(Corner::TT, true);
+        let v = BitCell::divider_v_rram(&c.r_left, 5e3, -2.0);
+        assert!(v < 0.0);
+    }
+
+    #[test]
+    fn pim_current_truth_table() {
+        // Fig. 5(c): the left side conducts a weight-dependent current only
+        // when Q = 1 and IA = 1.
+        let v_line = 0.3;
+        for (q, ia, bit) in
+            [(true, true, true), (true, true, false), (true, false, true), (false, true, true)]
+        {
+            let mut c = BitCell::with_weight_bit(Corner::TT, bit);
+            c.q = q;
+            let i = c.pim_current(Side::Left, ia, v_line);
+            if q && ia {
+                if bit {
+                    // LRS: order-of-magnitude (VDD−v_line)/R_LRS.
+                    let scale = (crate::consts::VDD - v_line) / R_LRS;
+                    assert!(i > 0.5 * scale && i < 3.0 * scale, "LRS i = {i}");
+                } else {
+                    let scale = (crate::consts::VDD - v_line) / R_HRS;
+                    assert!(i < 3.0 * scale, "HRS i = {i}");
+                }
+            } else {
+                assert!(i < 1e-8, "inactive path leaks {i} A");
+            }
+        }
+    }
+
+    #[test]
+    fn pim_right_side_mirrors_left() {
+        let mut c = BitCell::with_weight_bit(Corner::TT, true);
+        c.q = false; // QB = 1 → right side active
+        let i_r = c.pim_current(Side::Right, true, 0.3);
+        let i_l = c.pim_current(Side::Left, true, 0.3);
+        assert!(i_r > 100.0 * i_l.max(1e-12));
+    }
+
+    #[test]
+    fn lrs_hrs_current_ratio_large() {
+        let mut on = BitCell::with_weight_bit(Corner::TT, true);
+        let mut off = BitCell::with_weight_bit(Corner::TT, false);
+        on.q = true;
+        off.q = true;
+        let ratio = on.pim_current(Side::Left, true, 0.3) / off.pim_current(Side::Left, true, 0.3);
+        assert!(ratio > 20.0, "ON/OFF current ratio = {ratio}");
+    }
+
+    #[test]
+    fn ff_corner_draws_more_current() {
+        let mk = |corner| {
+            let mut c = BitCell::with_weight_bit(corner, true);
+            c.q = true;
+            c.pim_current(Side::Left, true, 0.3)
+        };
+        assert!(mk(Corner::FF) > mk(Corner::TT));
+        assert!(mk(Corner::TT) > mk(Corner::SS));
+    }
+}

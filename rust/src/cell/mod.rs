@@ -1,0 +1,37 @@
+//! The 6T-2R bit-cell (paper §III) — behavioral model.
+//!
+//! Transistor naming follows the paper's Fig. 2/3/5:
+//!
+//! ```text
+//!             VDD1                VDD2
+//!              │                   │
+//!           [R_LEFT]            [R_RIGHT]        ← RRAMs on the power lines
+//!              │                   │
+//!        M2 ─┤ PMOS           M4 ─┤ PMOS         ← pull-ups (gates: QB / Q)
+//!              │                   │
+//!   BL ──M1──  Q ───cross────── QB ──M6── BLB    ← access NMOS (WL1 / WL2)
+//!              │    coupled        │
+//!        M3 ─┤ NMOS           M5 ─┤ NMOS         ← pull-downs (gates: QB / Q)
+//!              │                   │
+//!             V1-gated GND        V2-gated GND   ← shared per-row gated VSS
+//! ```
+//!
+//! Sub-modules:
+//! * [`bitcell`] — cell state + the resistive-divider electrical solver.
+//! * [`ops`] — NVM programming (§III-A), SRAM hold/read/write (§III-B).
+//! * [`pim`] — the two-cycle compute-on-powerline dot-product (§III-C),
+//!   including the data-retention property and its violation when the
+//!   gated-GND discipline is broken (ablation).
+//! * [`snm`] — static noise margins via butterfly curves (Fig. 9b–d).
+//! * [`timing`] — per-operation latency/energy ledger anchored to §V-B.
+
+pub mod bitcell;
+pub mod ops;
+pub mod pim;
+pub mod snm;
+pub mod timing;
+
+pub use bitcell::{BitCell, Side};
+pub use pim::{PimCycleOutcome, PimParams};
+pub use snm::{SnmKind, SnmResult};
+pub use timing::{EnergyLedger, OpKind};

@@ -1,0 +1,257 @@
+//! NVM programming (§III-A) and SRAM-mode operations (§III-B).
+//!
+//! Programming uses wordline overdrive (2 V) and drives the 2T-2R portion
+//! of the cell; it is destructive to the SRAM data (the paper accepts this:
+//! weights are programmed rarely relative to inference reads). SRAM
+//! read/write/hold are identical to a conventional 6T cell; the RRAMs on
+//! the power lines carry no DC current in hold, so retention is unaffected
+//! by their state (Fig. 4).
+
+use crate::consts::{T_PROGRAM, VDD, V_OVERDRIVE};
+use crate::device::RramState;
+
+use super::bitcell::{BitCell, Side};
+use super::timing::{EnergyLedger, OpKind};
+
+/// Outcome of a programming operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProgramOutcome {
+    /// Final state of the targeted device(s).
+    pub state: RramState,
+    /// Whether programming verified successfully.
+    pub verified: bool,
+    /// Number of 4 ns pulses applied.
+    pub pulses: u32,
+}
+
+impl BitCell {
+    /// Program one side's RRAM to LRS (§III-A first/second cycle).
+    ///
+    /// Left: WL1/WL2 overdriven to 2 V, BL = 2 V, BLB = 0 V, VDD1/VDD2 = 0,
+    /// V1/V2 = 0. The complementary bitlines force QB → 0, turning M2 on and
+    /// establishing the BL → M1 → Q → M2 → R_LEFT → VDD1 path. The internal
+    /// node sits near BL, so the device sees positive (SET) polarity.
+    /// Destroys SRAM data: the forced node values remain latched.
+    pub fn program_lrs(&mut self, side: Side, ledger: &mut EnergyLedger) -> ProgramOutcome {
+        // Voltage chain: BL(2 V) → access → pull-up → RRAM → VDD(0 V).
+        let r_fets = self.series_fet_resistance(V_OVERDRIVE);
+        let mut pulses = 0;
+        // Up to 3 pulses with verify (real controllers pulse-verify; the
+        // nominal device switches on the first pulse).
+        for _ in 0..3 {
+            let v_r = Self::divider_v_rram(self.rram(side), r_fets, V_OVERDRIVE);
+            self.rram_mut(side).apply_voltage(v_r, T_PROGRAM);
+            ledger.record(OpKind::ProgramPulse);
+            pulses += 1;
+            if self.rram(side).state() == RramState::Lrs {
+                break;
+            }
+        }
+        // Programming forces the storage nodes: for the left sequence the
+        // bitlines drive Q = 1 / QB = 0 (BL = 2 V, BLB = 0 V); the right
+        // sequence is complementary.
+        self.q = side == Side::Left;
+        self.apply_r_variation();
+        let verified = self.verify_programmed(side, RramState::Lrs, ledger);
+        ProgramOutcome { state: self.rram(side).state(), verified, pulses }
+    }
+
+    /// Program *both* RRAMs to HRS in a single cycle (§III-A).
+    ///
+    /// WL1/WL2 = 2 V, BL = BLB = 0 V, VDD1 = VDD2 = 2 V, V1/V2 = 0. Both
+    /// storage nodes are forced to 0, both PMOS turn on, and current flows
+    /// VDD → RRAM → PMOS → node → access → bitline, i.e. RESET polarity.
+    pub fn program_hrs(&mut self, ledger: &mut EnergyLedger) -> ProgramOutcome {
+        let r_fets = self.series_fet_resistance(V_OVERDRIVE);
+        let mut pulses = 0;
+        for _ in 0..3 {
+            let mut done = true;
+            for side in Side::BOTH {
+                // Node is below the VDD rail ⇒ negative voltage across the
+                // device in our polarity convention.
+                let v_r = Self::divider_v_rram(self.rram(side), r_fets, -V_OVERDRIVE);
+                self.rram_mut(side).apply_voltage(v_r, T_PROGRAM);
+                done &= self.rram(side).state() == RramState::Hrs;
+            }
+            ledger.record(OpKind::ProgramPulse);
+            pulses += 1;
+            if done {
+                break;
+            }
+        }
+        // Both nodes were forced to 0 V; on release the latch resolves from
+        // a symmetric condition — we model the deterministic post-layout
+        // mismatch winner as Q = 0.
+        self.q = false;
+        self.apply_r_variation();
+        let ok_l = self.verify_programmed(Side::Left, RramState::Hrs, ledger);
+        let ok_r = self.verify_programmed(Side::Right, RramState::Hrs, ledger);
+        ProgramOutcome {
+            state: self.r_left.state(),
+            verified: ok_l && ok_r,
+            pulses,
+        }
+    }
+
+    /// Program-verify read (§III-A): VDD1/VDD2 at VDD, wordlines at VDD,
+    /// measure the bitline current for 1 ns; LRS ⇒ high current.
+    pub fn verify_programmed(
+        &self,
+        side: Side,
+        expect: RramState,
+        ledger: &mut EnergyLedger,
+    ) -> bool {
+        let i = self.nvm_read_current(side, ledger);
+        // Decision threshold at the geometric mean of the currents a
+        // reference LRS/HRS device would produce through the *same* sense
+        // path (the sinh I–V makes a linear-R estimate unusable here).
+        let r_fets = self.series_fet_resistance(VDD);
+        let i_ref = |st: RramState| {
+            let d = crate::device::Rram::in_state(st);
+            let v = Self::divider_v_rram(&d, r_fets, 0.45);
+            d.current(v).abs()
+        };
+        let thresh = (i_ref(RramState::Lrs) * i_ref(RramState::Hrs)).sqrt();
+        let read_state = if i > thresh { RramState::Lrs } else { RramState::Hrs };
+        read_state == expect
+    }
+
+    /// NVM read current: bias the power line at VDD and sense on the
+    /// bitline through the access path (1 ns window, §III-A).
+    pub fn nvm_read_current(&self, side: Side, ledger: &mut EnergyLedger) -> f64 {
+        ledger.record(OpKind::NvmRead);
+        // Read chain: VDD(0.8) → RRAM → pull-up → node → access → BL(0 V
+        // precharged low for current sensing). Use a 0.1 V effective read
+        // drop across the device after the divider.
+        let r_fets = self.series_fet_resistance(VDD);
+        let dev = self.rram(side);
+        let v_r = Self::divider_v_rram(dev, r_fets, 0.45);
+        dev.current(v_r).abs()
+    }
+
+    // ---- SRAM mode (§III-B) ----
+
+    /// SRAM write: identical to conventional 6T (bitlines driven
+    /// complementary, wordlines asserted).
+    pub fn sram_write(&mut self, bit: bool, ledger: &mut EnergyLedger) {
+        ledger.record(OpKind::SramWrite);
+        self.q = bit;
+    }
+
+    /// SRAM read: returns the stored bit and the differential bitline
+    /// discharge current. The RRAM state must not affect the value (only
+    /// slightly the timing/energy, captured in the ledger: §V-B reports
+    /// 660 → 686 ps and 2.23 → 3.34 fJ per 512-bit row).
+    pub fn sram_read(&self, ledger: &mut EnergyLedger) -> bool {
+        ledger.record(OpKind::SramRead6t2r);
+        self.q
+    }
+
+    /// Hold check (Fig. 4): with both wordlines low and nominal supplies,
+    /// the latch holds regardless of RRAM state because the conducting
+    /// pull-up carries no DC current (no drop across its RRAM) and the off
+    /// pull-up blocks the other rail.
+    pub fn hold_retains(&self) -> bool {
+        // Static condition: the '1' node is connected to its VDD rail via a
+        // conducting PMOS; current into the node is leakage-only, so the IR
+        // drop across the RRAM is < 1 mV even in HRS.
+        let leak = self.pulldown_fet().id(0.0, VDD);
+        let worst_drop = leak * crate::consts::R_HRS;
+        worst_drop < 0.05 * VDD
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Corner;
+
+    fn cell() -> (BitCell, EnergyLedger) {
+        (BitCell::new(Corner::TT), EnergyLedger::new())
+    }
+
+    #[test]
+    fn program_left_lrs_single_pulse() {
+        let (mut c, mut led) = cell();
+        let out = c.program_lrs(Side::Left, &mut led);
+        assert_eq!(out.state, RramState::Lrs);
+        assert!(out.verified);
+        assert_eq!(out.pulses, 1, "nominal device should SET on first 4 ns pulse");
+        // The right device is untouched (HRS) until its own cycle.
+        assert_eq!(c.r_right.state(), RramState::Hrs);
+        // Programming forced the latch: left sequence leaves Q = 1.
+        assert!(c.q);
+    }
+
+    #[test]
+    fn program_both_sides_lrs_two_cycles() {
+        let (mut c, mut led) = cell();
+        c.program_lrs(Side::Left, &mut led);
+        c.program_lrs(Side::Right, &mut led);
+        assert_eq!(c.r_left.state(), RramState::Lrs);
+        assert_eq!(c.r_right.state(), RramState::Lrs);
+        assert!(c.weight_bit());
+    }
+
+    #[test]
+    fn program_hrs_resets_both_in_one_cycle() {
+        let (mut c, mut led) = cell();
+        c.program_lrs(Side::Left, &mut led);
+        c.program_lrs(Side::Right, &mut led);
+        let out = c.program_hrs(&mut led);
+        assert_eq!(out.state, RramState::Hrs);
+        assert!(out.verified);
+        assert_eq!(out.pulses, 1);
+        assert!(!c.weight_bit());
+    }
+
+    #[test]
+    fn programming_is_destructive_to_sram_data() {
+        let (mut c, mut led) = cell();
+        c.sram_write(false, &mut led);
+        c.program_lrs(Side::Left, &mut led);
+        // §III-A: "programming is destructive to the SRAM data".
+        assert!(c.q, "left LRS sequence forces Q = 1");
+    }
+
+    #[test]
+    fn nvm_read_distinguishes_states() {
+        let (mut c, mut led) = cell();
+        c.set_weight_bit(true);
+        let i_lrs = c.nvm_read_current(Side::Left, &mut led);
+        c.set_weight_bit(false);
+        let i_hrs = c.nvm_read_current(Side::Left, &mut led);
+        assert!(i_lrs / i_hrs > 20.0, "read currents: {i_lrs} vs {i_hrs}");
+    }
+
+    #[test]
+    fn sram_rw_independent_of_rram_state() {
+        let (mut c, mut led) = cell();
+        for weight in [false, true] {
+            c.set_weight_bit(weight);
+            for bit in [false, true] {
+                c.sram_write(bit, &mut led);
+                assert_eq!(c.sram_read(&mut led), bit);
+                assert!(c.hold_retains());
+            }
+        }
+    }
+
+    #[test]
+    fn verify_detects_failed_program() {
+        // A device that refuses to switch (simulated by forcing HRS after a
+        // "program") must fail verify.
+        let (mut c, mut led) = cell();
+        c.set_weight_bit(false);
+        assert!(!c.verify_programmed(Side::Left, RramState::Lrs, &mut led));
+        assert!(c.verify_programmed(Side::Left, RramState::Hrs, &mut led));
+    }
+
+    #[test]
+    fn ledger_accumulates_programming_costs() {
+        let (mut c, mut led) = cell();
+        c.program_lrs(Side::Left, &mut led);
+        assert!(led.total_energy() > 0.0);
+        assert!(led.total_time() >= T_PROGRAM);
+    }
+}

@@ -1,0 +1,239 @@
+//! Per-operation latency/energy ledger, anchored to the paper's §V-B/§V-D
+//! numbers.
+//!
+//! Anchors (paper):
+//! * read latency 660 ps (6T) → 686 ps (6T-2R); 512-bit row read energy
+//!   2.23 fJ → 3.34 fJ (§V-B);
+//! * 4 ns programming pulses (§III-A);
+//! * 3.5 ns PIM cycles (§III-C);
+//! * 160 ns per 6-bit SAR conversion at 50 MHz (§V-D);
+//! * full-array 4b×4b MAC: 1280 ns, ≈1.07 nJ → 25.6 GOPS, 30.73 TOPS/W,
+//!   with the array ≈60 % of energy, ADC next, then WCC (§V-D).
+//!
+//! The per-op energies below are derived from those totals (see
+//! EXPERIMENTS.md E8 for the arithmetic) so that summing the ledger over
+//! the paper's workload reproduces the paper's throughput/efficiency row.
+
+/// Operation kinds tracked by the ledger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// One 4 ns NVM programming pulse (one cell).
+    ProgramPulse,
+    /// One 1 ns NVM verify/read (one cell).
+    NvmRead,
+    /// Conventional-6T 512-bit row read (baseline comparison).
+    SramRead6t,
+    /// 6T-2R 512-bit row read.
+    SramRead6t2r,
+    /// 512-bit row write (6T-2R; write path unchanged vs 6T).
+    SramWrite,
+    /// One 3.5 ns PIM cycle over a whole 128×512 sub-array (one side).
+    PimArrayCycle,
+    /// One 6-bit SAR conversion (one word-column ADC).
+    AdcConversion,
+    /// One WCC weighted-sampling event (one word, one side, one bit-plane).
+    WccSample,
+    /// Digital post-processing per word result (shift-add/subtract).
+    DigitalPostOp,
+    /// Cache line transfer for the flush/reload ablation (64 B line).
+    CacheLineMove,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 10] = [
+        OpKind::ProgramPulse,
+        OpKind::NvmRead,
+        OpKind::SramRead6t,
+        OpKind::SramRead6t2r,
+        OpKind::SramWrite,
+        OpKind::PimArrayCycle,
+        OpKind::AdcConversion,
+        OpKind::WccSample,
+        OpKind::DigitalPostOp,
+        OpKind::CacheLineMove,
+    ];
+
+    /// (latency seconds, energy joules) per event.
+    pub fn cost(&self) -> (f64, f64) {
+        use crate::consts::*;
+        match self {
+            // 2 V × ~57 µA × 4 ns ≈ 0.46 pJ per cell programming pulse.
+            OpKind::ProgramPulse => (T_PROGRAM, 0.46e-12),
+            // 1 ns verify read at ~18 µA, 0.8 V.
+            OpKind::NvmRead => (1.0e-9, 14.4e-15),
+            OpKind::SramRead6t => (T_READ_6T, E_READ_ROW_6T),
+            OpKind::SramRead6t2r => (T_READ_6T2R, E_READ_ROW_6T2R),
+            // Write path is the conventional one; slightly higher energy
+            // than a read due to full bitline swing.
+            OpKind::SramWrite => (T_READ_6T2R, 4.2e-15),
+            // Derived: array ≈60 % of the 1.07 nJ full-MAC energy over
+            // 8 side×bit-plane steps ⇒ 80 pJ per array sampling cycle.
+            OpKind::PimArrayCycle => (T_PIM_CYCLE, 80.0e-12),
+            // Derived: ADC share ≈30 % over 1024 conversions ⇒ ~312 fJ.
+            OpKind::AdcConversion => (T_ADC_CONVERSION, 312.5e-15),
+            // Derived: WCC share ≈10 % over 8 steps × 128 words.
+            OpKind::WccSample => (T_PIM_SAMPLE, 104.0e-15),
+            // Shift-add/subtract in the digital periphery, per word.
+            OpKind::DigitalPostOp => (0.5e-9, 5.0e-15),
+            // 64 B line move between cache levels (flush/reload ablation):
+            // representative LLC slice access (≈2 ns, ≈20 pJ).
+            OpKind::CacheLineMove => (2.0e-9, 20.0e-12),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::ProgramPulse => "program_pulse",
+            OpKind::NvmRead => "nvm_read",
+            OpKind::SramRead6t => "sram_read_6t",
+            OpKind::SramRead6t2r => "sram_read_6t2r",
+            OpKind::SramWrite => "sram_write",
+            OpKind::PimArrayCycle => "pim_array_cycle",
+            OpKind::AdcConversion => "adc_conversion",
+            OpKind::WccSample => "wcc_sample",
+            OpKind::DigitalPostOp => "digital_post_op",
+            OpKind::CacheLineMove => "cache_line_move",
+        }
+    }
+}
+
+/// Accumulating latency/energy ledger.
+///
+/// Latency is accumulated *serially* (sum of op latencies); parallelism is
+/// the scheduler's concern — [`crate::perf`] computes pipelined wall-clock
+/// from op counts, and the coordinator tracks real elapsed time.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyLedger {
+    counts: [u64; OpKind::ALL.len()],
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn idx(kind: OpKind) -> usize {
+        OpKind::ALL.iter().position(|k| *k == kind).unwrap()
+    }
+
+    pub fn record(&mut self, kind: OpKind) {
+        self.record_n(kind, 1);
+    }
+
+    pub fn record_n(&mut self, kind: OpKind, n: u64) {
+        self.counts[Self::idx(kind)] += n;
+    }
+
+    pub fn count(&self, kind: OpKind) -> u64 {
+        self.counts[Self::idx(kind)]
+    }
+
+    /// Total serial latency (s).
+    pub fn total_time(&self) -> f64 {
+        OpKind::ALL
+            .iter()
+            .map(|k| self.count(*k) as f64 * k.cost().0)
+            .sum()
+    }
+
+    /// Total energy (J).
+    pub fn total_energy(&self) -> f64 {
+        OpKind::ALL
+            .iter()
+            .map(|k| self.count(*k) as f64 * k.cost().1)
+            .sum()
+    }
+
+    /// Energy broken down per op kind, as (name, joules, fraction).
+    pub fn energy_breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total_energy().max(1e-300);
+        OpKind::ALL
+            .iter()
+            .filter(|k| self.count(**k) > 0)
+            .map(|k| {
+                let e = self.count(*k) as f64 * k.cost().1;
+                (k.name(), e, e / total)
+            })
+            .collect()
+    }
+
+    /// Merge another ledger into this one.
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.counts = Default::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consts::*;
+
+    #[test]
+    fn read_anchors_match_paper() {
+        assert_eq!(OpKind::SramRead6t.cost(), (T_READ_6T, E_READ_ROW_6T));
+        assert_eq!(OpKind::SramRead6t2r.cost(), (T_READ_6T2R, E_READ_ROW_6T2R));
+    }
+
+    #[test]
+    fn ledger_accumulates_and_merges() {
+        let mut a = EnergyLedger::new();
+        a.record_n(OpKind::AdcConversion, 10);
+        let mut b = EnergyLedger::new();
+        b.record(OpKind::AdcConversion);
+        b.record(OpKind::ProgramPulse);
+        a.merge(&b);
+        assert_eq!(a.count(OpKind::AdcConversion), 11);
+        assert_eq!(a.count(OpKind::ProgramPulse), 1);
+        let t = 11.0 * T_ADC_CONVERSION + T_PROGRAM;
+        assert!((a.total_time() - t).abs() < 1e-18);
+    }
+
+    #[test]
+    fn full_array_mac_reproduces_paper_energy_and_power() {
+        // One complete 4b×4b MAC over the 128×512 sub-array:
+        // 2 sides × 4 bit-planes = 8 steps; per step one array cycle,
+        // 128 WCC samples, 128 ADC conversions; + digital post ops.
+        let mut led = EnergyLedger::new();
+        led.record_n(OpKind::PimArrayCycle, 8);
+        led.record_n(OpKind::WccSample, 8 * 128);
+        led.record_n(OpKind::AdcConversion, 8 * 128);
+        let e = led.total_energy();
+        // Paper §V-D: 25.6 GOPS at 30.73 TOPS/W ⇒ 0.833 mW ⇒ 1.066 nJ per
+        // 1280 ns full-array MAC.
+        assert!((e - 1.066e-9).abs() / 1.066e-9 < 0.05, "E = {e}");
+        // Array share ≈ 60 %.
+        let array_frac = led
+            .energy_breakdown()
+            .iter()
+            .find(|(n, _, _)| *n == "pim_array_cycle")
+            .unwrap()
+            .2;
+        assert!((array_frac - 0.60).abs() < 0.05, "array share = {array_frac}");
+        // Wall-clock is ADC-bound: 8 × 160 ns = 1280 ns (pipelined view in
+        // perf/, not the serial ledger sum).
+        let t_pipe = 8.0 * T_ADC_CONVERSION;
+        // 128 rows × 128 word-columns = 16384 MACs × 2 ops; each row
+        // contributes on exactly one side (left if Q=1, right if Q=0), so
+        // the two cycles together complete ONE full-array MAC.
+        let ops = 128.0 * 128.0 * 2.0;
+        let gops = ops / t_pipe / 1e9;
+        assert!((gops - 25.6).abs() < 0.1, "GOPS = {gops}");
+        let tops_w = ops / t_pipe / (e / t_pipe) / 1e12;
+        assert!((tops_w - 30.73).abs() < 2.0, "TOPS/W = {tops_w}");
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let mut led = EnergyLedger::new();
+        led.record_n(OpKind::ProgramPulse, 3);
+        led.record_n(OpKind::NvmRead, 5);
+        let total: f64 = led.energy_breakdown().iter().map(|(_, _, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,165 @@
+//! Dynamic batcher: size-or-deadline batching of inference requests.
+//!
+//! Classic serving tradeoff: larger batches amortize the per-invocation
+//! PIM pipeline (the 1280 ns windows are independent of how many requests
+//! share the weight-resident arrays), smaller deadlines bound tail
+//! latency. Pure data structure — the server thread drives the clock, so
+//! everything is unit-testable without sleeping.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::InferenceRequest;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Preferred (maximum) batch size.
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before forcing a flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 50, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// A formed batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<InferenceRequest>,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// The batcher queue.
+pub struct Batcher {
+    pub config: BatcherConfig,
+    queue: VecDeque<InferenceRequest>,
+}
+
+impl Batcher {
+    pub fn new(config: BatcherConfig) -> Batcher {
+        Batcher { config, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Oldest request's wait time as of `now`.
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| now.duration_since(r.enqueued))
+    }
+
+    /// Should a batch be cut right now?
+    pub fn ready(&self, now: Instant) -> bool {
+        self.queue.len() >= self.config.max_batch
+            || self
+                .oldest_wait(now)
+                .map(|w| w >= self.config.max_wait && !self.queue.is_empty())
+                .unwrap_or(false)
+    }
+
+    /// Cut a batch if policy says so (or `force` to drain).
+    pub fn take(&mut self, now: Instant, force: bool) -> Option<Batch> {
+        if self.queue.is_empty() || (!force && !self.ready(now)) {
+            return None;
+        }
+        let n = self.queue.len().min(self.config.max_batch);
+        let requests = self.queue.drain(..n).collect();
+        Some(Batch { requests, formed_at: now })
+    }
+
+    /// Time until the deadline of the oldest request (for the server's
+    /// poll timeout). None when the queue is empty.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest_wait(now)
+            .map(|w| self.config.max_wait.saturating_sub(w))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, vec![0.0; 4])
+    }
+
+    #[test]
+    fn cuts_at_max_batch() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        b.push(req(1));
+        b.push(req(2));
+        assert!(b.take(now, false).is_none());
+        b.push(req(3));
+        let batch = b.take(now, false).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn cuts_at_deadline() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(1) });
+        b.push(req(1));
+        let later = Instant::now() + Duration::from_millis(5);
+        assert!(b.ready(later));
+        let batch = b.take(later, false).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn force_drains_partial() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        b.push(req(1));
+        b.push(req(2));
+        let batch = b.take(Instant::now(), true).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn oversize_queue_cuts_in_chunks() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::ZERO });
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let now = Instant::now();
+        assert_eq!(b.take(now, false).unwrap().len(), 2);
+        assert_eq!(b.take(now, false).unwrap().len(), 2);
+        assert_eq!(b.take(now, true).unwrap().len(), 1);
+        assert!(b.take(now, true).is_none());
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::ZERO });
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        let ids: Vec<u64> = b
+            .take(Instant::now(), false)
+            .unwrap()
+            .requests
+            .iter()
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+}

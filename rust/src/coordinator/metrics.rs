@@ -1,0 +1,210 @@
+//! Serving metrics: latency histograms, counters, throughput/efficiency
+//! accounting.
+
+use std::time::Instant;
+
+/// Log-bucketed latency histogram (1 µs … ~100 s, 4 buckets/decade).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    /// Raw samples kept for exact percentiles (bounded ring).
+    samples: Vec<f64>,
+    max_samples: usize,
+    pub count: u64,
+    pub sum_s: f64,
+}
+
+const BUCKETS_PER_DECADE: usize = 4;
+const N_DECADES: usize = 8; // 1e-6 .. 1e2 s
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: vec![0; BUCKETS_PER_DECADE * N_DECADES],
+            samples: Vec::new(),
+            max_samples: 65_536,
+            count: 0,
+            sum_s: 0.0,
+        }
+    }
+
+    fn bucket_of(latency_s: f64) -> usize {
+        let log = (latency_s.max(1e-6) / 1e-6).log10();
+        ((log * BUCKETS_PER_DECADE as f64) as usize).min(BUCKETS_PER_DECADE * N_DECADES - 1)
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        self.buckets[Self::bucket_of(latency_s)] += 1;
+        self.count += 1;
+        self.sum_s += latency_s;
+        if self.samples.len() < self.max_samples {
+            self.samples.push(latency_s);
+        } else {
+            // Reservoir-ish: overwrite deterministically.
+            let idx = (self.count as usize) % self.max_samples;
+            self.samples[idx] = latency_s;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::percentile_sorted(&s, p)
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub started: Instant,
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub batch_size_sum: u64,
+    pub e2e_latency: LatencyHistogram,
+    pub queue_latency: LatencyHistogram,
+    /// Simulated hardware MAC ops executed.
+    pub hw_ops: f64,
+    /// Simulated hardware energy (J).
+    pub hw_energy_j: f64,
+    /// Simulated hardware busy time (s).
+    pub hw_time_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            requests: 0,
+            responses: 0,
+            batches: 0,
+            batch_size_sum: 0,
+            e2e_latency: LatencyHistogram::new(),
+            queue_latency: LatencyHistogram::new(),
+            hw_ops: 0.0,
+            hw_energy_j: 0.0,
+            hw_time_s: 0.0,
+        }
+    }
+
+    pub fn record_batch(&mut self, size: usize, hw_ops: f64, hw_energy: f64, hw_time: f64) {
+        self.batches += 1;
+        self.batch_size_sum += size as u64;
+        self.hw_ops += hw_ops;
+        self.hw_energy_j += hw_energy;
+        self.hw_time_s += hw_time;
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Wall-clock request throughput (req/s).
+    pub fn request_throughput(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.responses as f64 / dt
+    }
+
+    /// Simulated hardware efficiency (OPS/W).
+    pub fn hw_ops_per_w(&self) -> f64 {
+        if self.hw_energy_j <= 0.0 {
+            0.0
+        } else {
+            self.hw_ops / self.hw_energy_j
+        }
+    }
+
+    /// Simulated hardware throughput (OPS).
+    pub fn hw_ops_per_s(&self) -> f64 {
+        if self.hw_time_s <= 0.0 {
+            0.0
+        } else {
+            self.hw_ops / self.hw_time_s
+        }
+    }
+
+    /// Render a human-readable summary block.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} mean_batch={:.2}\n\
+             e2e: mean {:.3} ms p50 {:.3} ms p95 {:.3} ms p99 {:.3} ms\n\
+             queue: mean {:.3} ms p95 {:.3} ms\n\
+             hw: {:.3e} ops, {:.3} GOPS busy, {:.2} TOPS/W",
+            self.requests,
+            self.responses,
+            self.batches,
+            self.mean_batch_size(),
+            self.e2e_latency.mean() * 1e3,
+            self.e2e_latency.percentile(50.0) * 1e3,
+            self.e2e_latency.percentile(95.0) * 1e3,
+            self.e2e_latency.percentile(99.0) * 1e3,
+            self.queue_latency.mean() * 1e3,
+            self.queue_latency.percentile(95.0) * 1e3,
+            self.hw_ops,
+            self.hw_ops_per_s() / 1e9,
+            self.hw_ops_per_w() / 1e12,
+        )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count, 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-6);
+        let p50 = h.percentile(50.0);
+        assert!(p50 > 0.045 && p50 < 0.056, "p50 = {p50}");
+        let p99 = h.percentile(99.0);
+        assert!(p99 > 0.095, "p99 = {p99}");
+    }
+
+    #[test]
+    fn bucket_bounds() {
+        assert_eq!(LatencyHistogram::bucket_of(1e-7), 0);
+        assert!(LatencyHistogram::bucket_of(1e3) == BUCKETS_PER_DECADE * N_DECADES - 1);
+    }
+
+    #[test]
+    fn metrics_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch(8, 1e6, 1e-6, 1e-3);
+        m.record_batch(4, 1e6, 1e-6, 1e-3);
+        assert_eq!(m.mean_batch_size(), 6.0);
+        assert!((m.hw_ops_per_w() - 1e12).abs() / 1e12 < 1e-9);
+        assert!((m.hw_ops_per_s() - 1e9).abs() / 1e9 < 1e-9);
+    }
+}

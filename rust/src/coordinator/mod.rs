@@ -1,0 +1,25 @@
+//! The serving coordinator (L3): request router, dynamic batcher, bank
+//! scheduler, metrics, and the threaded server loop.
+//!
+//! The NVM-in-Cache deployment story: inference requests arrive from cores;
+//! the coordinator batches them, schedules their layer MACs onto the LLC's
+//! PIM-capable banks (weights resident in the RRAM layer, cache data
+//! retained), executes the model forward — through the PJRT-compiled
+//! artifacts or the native engine — and accounts hardware-simulated
+//! latency/energy alongside real wall-clock.
+//!
+//! Offline build ⇒ std::thread + mpsc rather than tokio (DESIGN.md §2).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{InferenceRequest, InferenceResponse};
+pub use router::Router;
+pub use scheduler::BankScheduler;
+pub use server::{Executor, Server, ServerConfig};

@@ -1,0 +1,41 @@
+//! Request/response types.
+
+use std::time::Instant;
+
+/// One inference request (a single image).
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Flattened NHWC image, h×w×c f32.
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, image: Vec<f32>) -> InferenceRequest {
+        InferenceRequest { id, image, enqueued: Instant::now() }
+    }
+}
+
+/// The response for one request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub predicted: u8,
+    /// End-to-end latency (s).
+    pub latency_s: f64,
+    /// Simulated hardware latency of the PIM execution (s).
+    pub hw_latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_records_enqueue_time() {
+        let r = InferenceRequest::new(7, vec![0.0; 4]);
+        assert_eq!(r.id, 7);
+        assert!(r.enqueued.elapsed().as_secs_f64() < 1.0);
+    }
+}

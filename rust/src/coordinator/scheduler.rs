@@ -1,0 +1,220 @@
+//! Bank scheduler: places the network on the cache's PIM-capable banks and
+//! computes, per batch, the simulated hardware execution cost (latency,
+//! energy, ops) using the mapping + perf models, while arbitrating PIM
+//! windows against background cache traffic.
+
+use crate::cache::addr::Geometry;
+use crate::cache::controller::{CacheController, PimIntegration};
+use crate::consts::WORD_BITS;
+use crate::mapping::bit_serial::BitSerialSchedule;
+use crate::mapping::conv_mapper::{ConvMapping, ConvShape};
+use crate::mapping::layout::NetworkLayout;
+use crate::perf::model::MacroModel;
+
+/// Per-batch simulated execution cost.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecutionCost {
+    /// MAC ops (2 ops per MAC).
+    pub ops: f64,
+    /// Simulated wall-clock on the hardware (s) — layers serial, tiles of
+    /// one layer parallel, images pipelined through the ADC windows.
+    pub latency_s: f64,
+    /// Simulated energy (J).
+    pub energy_j: f64,
+    /// Cache lines moved for PIM (0 in retained mode after programming).
+    pub lines_moved: u64,
+}
+
+/// The scheduler.
+pub struct BankScheduler {
+    pub layers: Vec<ConvShape>,
+    pub layout: NetworkLayout,
+    pub controller: CacheController,
+    pub model: MacroModel,
+    /// Weights programmed into the arrays?
+    pub programmed: bool,
+}
+
+impl BankScheduler {
+    /// Place `layers` onto a cache with the given geometry/mode.
+    pub fn new(
+        layers: Vec<ConvShape>,
+        geom: Geometry,
+        mode: PimIntegration,
+    ) -> Option<BankScheduler> {
+        let layout =
+            NetworkLayout::place(&layers, geom.banks_per_slice, geom.subarrays_per_bank)?;
+        Some(BankScheduler {
+            layers,
+            layout,
+            controller: CacheController::new(geom, mode),
+            model: MacroModel::default(),
+            programmed: false,
+        })
+    }
+
+    /// The ResNet-18-topology layer list used by the e2e example
+    /// (16×16 input, width 16; FC folded as a 1×1 conv).
+    pub fn resnet18_layers(width: usize) -> Vec<ConvShape> {
+        let mut layers = vec![ConvShape { k: 3, d: 3, n: width, w: 16, stride: 1 }];
+        let mut cin = width;
+        let mut spatial = 16;
+        for s in 0..4usize {
+            let cout = width << s;
+            let stride = if s == 0 { 1 } else { 2 };
+            for b in 0..2usize {
+                let st = if b == 0 { stride } else { 1 };
+                layers.push(ConvShape { k: 3, d: cin, n: cout, w: spatial, stride: st });
+                if st != 1 {
+                    spatial = spatial.div_ceil(2);
+                }
+                layers.push(ConvShape { k: 3, d: cout, n: cout, w: spatial, stride: 1 });
+                if st != 1 || cin != cout {
+                    layers.push(ConvShape { k: 1, d: cin, n: cout, w: spatial, stride: 1 });
+                }
+                cin = cout;
+            }
+        }
+        layers.push(ConvShape { k: 1, d: cin, n: 10, w: 1, stride: 1 }); // FC
+        layers
+    }
+
+    /// Program all layer weights into their assigned arrays (one-time cost;
+    /// destructive to resident cache data — metered by the controller).
+    pub fn program_network(&mut self) -> f64 {
+        let mut total_latency = 0.0;
+        let placements: Vec<_> = self.layout.placements.clone();
+        for p in &placements {
+            for slot in [p.pos_slot, p.neg_slot] {
+                let stats = self.controller.program_campaign(
+                    slot.0,
+                    slot.1,
+                    vec![0u8; crate::consts::ARRAY_ROWS * crate::consts::ARRAY_WORDS],
+                );
+                total_latency += stats.latency;
+            }
+        }
+        self.programmed = true;
+        total_latency
+    }
+
+    /// Simulated hardware cost of running `batch` images through the whole
+    /// network. Layers execute serially; a layer's tiles run in parallel;
+    /// each output pixel of each image is one bit-serial invocation chain.
+    pub fn batch_cost(&mut self, batch: usize) -> ExecutionCost {
+        assert!(self.programmed, "program_network() first");
+        let sched = BitSerialSchedule::new(self.model.act_bits, self.model.weight_bits);
+        let mut cost = ExecutionCost::default();
+        for shape in self.layers.clone() {
+            let m = ConvMapping::plan(shape);
+            let ow = shape.output_width();
+            // Per image: ow² output pixels; per pixel one invocation per
+            // (submatrix-position) chain — tiles run in parallel so the
+            // pixel latency is one schedule; pixels stream back-to-back
+            // (pipelined through the ADC windows).
+            let invocations_serial = (batch * ow * ow) as f64;
+            let lat = invocations_serial * sched.latency();
+            // Ops actually computed (×2 for pos/neg banks at equal time —
+            // both banks convert in parallel on different arrays).
+            let ops = 2.0 * shape.total_macs() as f64 * batch as f64;
+            // Energy: every (tile × pixel × side-cycle) step pays the step
+            // energy on both banks, scaled by row utilization.
+            let tiles = m.submatrices * m.d_tiles * m.n_tiles;
+            let rows_mean = (m.mean_utilization() * 128.0).max(1.0) as usize;
+            let e_step = self.model.step_energy(rows_mean);
+            let energy = invocations_serial
+                * tiles as f64
+                * 2.0 // pos + neg banks
+                * sched.side_cycles as f64
+                * e_step;
+            cost.ops += ops;
+            cost.latency_s += lat;
+            cost.energy_j += energy;
+            // Reserve the placed arrays for the window (cache arbitration).
+            for p in self.layout.layer_tiles(self.layers.iter().position(|l| *l == shape).unwrap()) {
+                self.controller.slice.banks[p.pos_slot.0].reserve(p.pos_slot.1, 0.0, lat);
+                self.controller.slice.banks[p.neg_slot.0].reserve(p.neg_slot.1, 0.0, lat);
+            }
+        }
+        // Flush/reload mode pays line movement per campaign (per batch).
+        if self.controller.mode == PimIntegration::FlushReload {
+            let per_array = 2 * crate::consts::ARRAY_ROWS as u64;
+            let arrays = self.layout.slots_used as u64;
+            cost.lines_moved = per_array * arrays;
+            let (t, e) = crate::cell::timing::OpKind::CacheLineMove.cost();
+            cost.latency_s += cost.lines_moved as f64 * t;
+            cost.energy_j += cost.lines_moved as f64 * e;
+        }
+        cost
+    }
+
+    /// Total weight storage bits resident in RRAM.
+    pub fn weight_bits_resident(&self) -> u64 {
+        self.layout.slots_used as u64
+            * (crate::consts::ARRAY_ROWS * crate::consts::ARRAY_WORDS * WORD_BITS) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(mode: PimIntegration) -> BankScheduler {
+        BankScheduler::new(
+            BankScheduler::resnet18_layers(16),
+            Geometry::default(),
+            mode,
+        )
+        .expect("default LLC slice must fit the width-16 network")
+    }
+
+    #[test]
+    fn resnet_layers_fit_default_slice() {
+        let s = sched(PimIntegration::Retained);
+        assert!(s.layout.occupancy() <= 1.0);
+        assert!(s.layout.placements.len() > 20, "ResNet-18 has many tiles");
+    }
+
+    #[test]
+    fn batch_cost_scales_linearly() {
+        let mut s = sched(PimIntegration::Retained);
+        s.program_network();
+        let c1 = s.batch_cost(1);
+        let c4 = s.batch_cost(4);
+        assert!((c4.ops / c1.ops - 4.0).abs() < 1e-9);
+        assert!((c4.latency_s / c1.latency_s - 4.0).abs() < 0.01);
+        assert_eq!(c1.lines_moved, 0, "retained mode moves nothing");
+    }
+
+    #[test]
+    fn flush_reload_pays_movement() {
+        let mut a = sched(PimIntegration::Retained);
+        let mut b = sched(PimIntegration::FlushReload);
+        a.program_network();
+        b.program_network();
+        let ca = a.batch_cost(1);
+        let cb = b.batch_cost(1);
+        assert!(cb.lines_moved > 0);
+        assert!(cb.latency_s > ca.latency_s);
+        assert!(cb.energy_j > ca.energy_j);
+    }
+
+    #[test]
+    fn programming_required_before_execution() {
+        let mut s = sched(PimIntegration::Retained);
+        let t = s.program_network();
+        assert!(t > 0.0);
+        assert!(s.programmed);
+    }
+
+    #[test]
+    fn efficiency_in_plausible_band() {
+        // The end-to-end simulated efficiency should be within an order of
+        // magnitude of the macro headline (utilization drags it down).
+        let mut s = sched(PimIntegration::Retained);
+        s.program_network();
+        let c = s.batch_cost(8);
+        let tops_w = c.ops / c.energy_j / 1e12;
+        assert!(tops_w > 1.0 && tops_w < 40.0, "TOPS/W = {tops_w}");
+    }
+}

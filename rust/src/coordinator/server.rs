@@ -1,0 +1,341 @@
+//! The server loop: ingest thread → dynamic batcher → executor →
+//! responses, with metrics and simulated-hardware accounting.
+//!
+//! std::thread + mpsc (offline build; no tokio). One executor thread — the
+//! testbed has one core, and PJRT executables are not Sync — with the
+//! batcher amortizing per-invocation cost exactly like the hardware's
+//! shared PIM windows do.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::Result;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse};
+use super::scheduler::BankScheduler;
+
+/// Pluggable inference backend.
+///
+/// Not `Send`: PJRT handles are thread-affine, so the server constructs
+/// its executor *inside* the worker thread from a `Send` factory.
+pub trait Executor {
+    /// Classify `n` images (flattened, n × image_elems). Returns `n`
+    /// predicted classes.
+    fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>>;
+    /// Elements per image (h·w·c).
+    fn image_elems(&self) -> usize;
+}
+
+/// Factory that builds the executor on the server thread.
+pub type ExecutorFactory = Box<dyn FnOnce() -> Result<Box<dyn Executor>> + Send>;
+
+/// Server configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+}
+
+enum Event {
+    Request(InferenceRequest),
+    Shutdown,
+}
+
+/// A running server.
+pub struct Server {
+    tx: mpsc::Sender<Event>,
+    pub responses: mpsc::Receiver<InferenceResponse>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the server thread. `scheduler` (optional) provides the
+    /// simulated-hardware cost accounting per batch.
+    pub fn start(
+        executor_factory: ExecutorFactory,
+        mut scheduler: Option<BankScheduler>,
+        config: ServerConfig,
+    ) -> Server {
+        let (tx, rx) = mpsc::channel::<Event>();
+        let (resp_tx, resp_rx) = mpsc::channel::<InferenceResponse>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let metrics_thread = metrics.clone();
+        if let Some(s) = scheduler.as_mut() {
+            if !s.programmed {
+                s.program_network();
+            }
+        }
+        let handle = std::thread::spawn(move || {
+            let mut executor = match executor_factory() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("executor construction failed: {e}");
+                    return;
+                }
+            };
+            let mut batcher = Batcher::new(config.batcher);
+            let mut running = true;
+            while running || batcher.pending() > 0 {
+                let timeout = batcher
+                    .next_deadline(Instant::now())
+                    .unwrap_or(Duration::from_millis(50));
+                if running {
+                    match rx.recv_timeout(timeout) {
+                        Ok(Event::Request(r)) => {
+                            metrics_thread.lock().unwrap().requests += 1;
+                            batcher.push(r);
+                            // Drain everything already queued in the channel
+                            // before making a batching decision — otherwise a
+                            // slow executor turns every backlog into
+                            // singleton batches.
+                            loop {
+                                match rx.try_recv() {
+                                    Ok(Event::Request(r)) => {
+                                        metrics_thread.lock().unwrap().requests += 1;
+                                        batcher.push(r);
+                                    }
+                                    Ok(Event::Shutdown) => {
+                                        running = false;
+                                        break;
+                                    }
+                                    Err(_) => break,
+                                }
+                            }
+                        }
+                        Ok(Event::Shutdown) => running = false,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
+                    }
+                }
+                let force = !running;
+                while let Some(batch) = batcher.take(Instant::now(), force) {
+                    Self::execute_batch(
+                        batch.requests,
+                        &mut *executor,
+                        scheduler.as_mut(),
+                        &metrics_thread,
+                        &resp_tx,
+                    );
+                }
+            }
+        });
+        Server { tx, responses: resp_rx, metrics, handle: Some(handle) }
+    }
+
+    fn execute_batch(
+        requests: Vec<InferenceRequest>,
+        executor: &mut dyn Executor,
+        scheduler: Option<&mut BankScheduler>,
+        metrics: &Arc<Mutex<Metrics>>,
+        resp_tx: &mpsc::Sender<InferenceResponse>,
+    ) {
+        let n = requests.len();
+        let elems = executor.image_elems();
+        let mut images = Vec::with_capacity(n * elems);
+        for r in &requests {
+            assert_eq!(r.image.len(), elems, "request {} wrong image size", r.id);
+            images.extend_from_slice(&r.image);
+        }
+        let exec_start = Instant::now();
+        let preds = match executor.classify(&images, n) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("executor error: {e}");
+                vec![0u8; n]
+            }
+        };
+        // Simulated hardware cost for this batch.
+        let (hw_lat, hw_ops, hw_energy) = match scheduler {
+            Some(s) => {
+                let c = s.batch_cost(n);
+                (c.latency_s, c.ops, c.energy_j)
+            }
+            None => (0.0, 0.0, 0.0),
+        };
+        let mut m = metrics.lock().unwrap();
+        m.record_batch(n, hw_ops, hw_energy, hw_lat);
+        for (r, p) in requests.into_iter().zip(preds) {
+            let e2e = r.enqueued.elapsed().as_secs_f64();
+            let queue = exec_start.duration_since(r.enqueued).as_secs_f64();
+            m.e2e_latency.record(e2e);
+            m.queue_latency.record(queue);
+            m.responses += 1;
+            let _ = resp_tx.send(InferenceResponse {
+                id: r.id,
+                predicted: p,
+                latency_s: e2e,
+                hw_latency_s: hw_lat / n as f64,
+            });
+        }
+    }
+
+    pub fn submit(&self, req: InferenceRequest) {
+        let _ = self.tx.send(Event::Request(req));
+    }
+
+    /// Graceful shutdown: drains the queue, joins the thread, returns the
+    /// final metrics snapshot.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(Event::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let m = self.metrics.lock().unwrap();
+        m.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Event::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Native-engine executor (no PJRT): runs the Rust ResNet in a mode.
+pub struct NativeExecutor {
+    pub net: crate::nn::ResNet,
+    pub mode: crate::nn::ForwardMode,
+    pub dims: (usize, usize, usize),
+    pub seed: u64,
+}
+
+impl Executor for NativeExecutor {
+    fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>> {
+        let (h, w, c) = self.dims;
+        let x = crate::nn::Tensor::from_vec(&[n, h, w, c], images.to_vec());
+        self.seed = self.seed.wrapping_add(1);
+        self.net.classify(&x, self.mode, self.seed)
+    }
+
+    fn image_elems(&self) -> usize {
+        self.dims.0 * self.dims.1 * self.dims.2
+    }
+}
+
+/// PJRT executor over a fixed-batch compiled model variant; short batches
+/// are zero-padded up to the compiled batch size.
+pub struct PjrtExecutor {
+    pub runtime: crate::runtime::Runtime,
+    pub variant: crate::runtime::ModelVariant,
+    pub dims: (usize, usize, usize),
+    pub n_classes: usize,
+    pub key_counter: u32,
+}
+
+impl Executor for PjrtExecutor {
+    fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>> {
+        let (h, w, c) = self.dims;
+        let elems = h * w * c;
+        let b = self.runtime.batch;
+        assert!(n <= b, "batch {n} exceeds compiled batch {b}");
+        let mut padded = images.to_vec();
+        padded.resize(b * elems, 0.0);
+        self.key_counter += 1;
+        let key = if self.variant == crate::runtime::ModelVariant::PimNoise {
+            Some([0xC0FFEE, self.key_counter])
+        } else {
+            None
+        };
+        let mut preds = self.runtime.classify(self.variant, &padded, self.dims, self.n_classes, key)?;
+        preds.truncate(n);
+        Ok(preds)
+    }
+
+    fn image_elems(&self) -> usize {
+        self.dims.0 * self.dims.1 * self.dims.2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic test executor: predicts image[0] as the class.
+    struct MockExecutor {
+        elems: usize,
+        calls: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl Executor for MockExecutor {
+        fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>> {
+            self.calls.lock().unwrap().push(n);
+            Ok((0..n).map(|i| images[i * self.elems] as u8).collect())
+        }
+
+        fn image_elems(&self) -> usize {
+            self.elems
+        }
+    }
+
+    #[test]
+    fn serves_and_batches() {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let exec = MockExecutor { elems: 4, calls: calls.clone() };
+        let server = Server::start(
+            Box::new(move || Ok(Box::new(exec) as Box<dyn Executor>)),
+            None,
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+            },
+        );
+        for i in 0..10u64 {
+            server.submit(InferenceRequest::new(i, vec![(i % 10) as f32; 4]));
+        }
+        let mut responses = Vec::new();
+        for _ in 0..10 {
+            responses.push(server.responses.recv_timeout(Duration::from_secs(5)).unwrap());
+        }
+        let m = server.shutdown();
+        assert_eq!(m.responses, 10);
+        // Predictions reflect payloads (mock rule).
+        for r in &responses {
+            assert_eq!(r.predicted as u64, r.id % 10);
+        }
+        // Batching actually happened (at least one batch > 1).
+        let sizes = calls.lock().unwrap().clone();
+        assert!(sizes.iter().any(|&s| s > 1), "batch sizes: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let exec = MockExecutor { elems: 1, calls: calls.clone() };
+        let server = Server::start(
+            Box::new(move || Ok(Box::new(exec) as Box<dyn Executor>)),
+            None,
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 100, max_wait: Duration::from_secs(10) },
+            },
+        );
+        for i in 0..5u64 {
+            server.submit(InferenceRequest::new(i, vec![0.0]));
+        }
+        // Deadline far away + batch never filled ⇒ only shutdown drains.
+        let m = server.shutdown();
+        assert_eq!(m.responses, 5);
+    }
+
+    #[test]
+    fn metrics_latencies_recorded() {
+        let exec = MockExecutor { elems: 1, calls: Arc::new(Mutex::new(Vec::new())) };
+        let server = Server::start(
+            Box::new(move || Ok(Box::new(exec) as Box<dyn Executor>)),
+            None,
+            ServerConfig::default(),
+        );
+        server.submit(InferenceRequest::new(1, vec![3.0]));
+        let r = server.responses.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.predicted, 3);
+        assert!(r.latency_s >= 0.0);
+        let m = server.shutdown();
+        assert_eq!(m.e2e_latency.count, 1);
+    }
+}

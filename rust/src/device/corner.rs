@@ -1,0 +1,86 @@
+//! Process corners.
+//!
+//! The paper sweeps SS / TT / FF in the linearity study (Fig. 10, Fig. 11a)
+//! and attributes the FF-corner nonlinearity to "stronger transistor drive
+//! … which reduces the effective voltage swing across the RRAM stack"
+//! (§V-C). The corner parameters below scale FET drive (β) and shift
+//! threshold voltage (Vth) in the conventional slow/typical/fast pattern.
+
+/// Process corner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Corner {
+    /// Slow-slow: weak drive, high Vth.
+    SS,
+    /// Typical-typical.
+    TT,
+    /// Fast-fast: strong drive, low Vth.
+    FF,
+}
+
+impl Corner {
+    pub const ALL: [Corner; 3] = [Corner::SS, Corner::TT, Corner::FF];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Corner::SS => "SS",
+            Corner::TT => "TT",
+            Corner::FF => "FF",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Corner> {
+        match s.to_ascii_uppercase().as_str() {
+            "SS" => Some(Corner::SS),
+            "TT" => Some(Corner::TT),
+            "FF" => Some(Corner::FF),
+            _ => None,
+        }
+    }
+
+    /// Corner parameter multipliers/shifts relative to TT.
+    pub fn params(&self) -> CornerParams {
+        match self {
+            // ±Vth shift and drive scaling chosen to be representative of a
+            // 22 nm FDSOI global-corner spread (≈ ±40 mV Vth, ∓20/+25 % β).
+            Corner::SS => CornerParams { beta_scale: 0.80, vth_shift: 0.040, leak_scale: 0.4 },
+            Corner::TT => CornerParams { beta_scale: 1.00, vth_shift: 0.000, leak_scale: 1.0 },
+            Corner::FF => CornerParams { beta_scale: 1.25, vth_shift: -0.040, leak_scale: 2.5 },
+        }
+    }
+}
+
+/// Per-corner FET parameter modifiers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CornerParams {
+    /// Transconductance scaling relative to TT.
+    pub beta_scale: f64,
+    /// Threshold-voltage shift relative to TT (V); applied with matching
+    /// sign convention to NMOS and PMOS (FF = lower |Vth| on both).
+    pub vth_shift: f64,
+    /// Subthreshold-leakage scaling relative to TT.
+    pub leak_scale: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_of_drive() {
+        let ss = Corner::SS.params();
+        let tt = Corner::TT.params();
+        let ff = Corner::FF.params();
+        assert!(ss.beta_scale < tt.beta_scale && tt.beta_scale < ff.beta_scale);
+        assert!(ss.vth_shift > tt.vth_shift && tt.vth_shift > ff.vth_shift);
+        assert!(ff.leak_scale > tt.leak_scale);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for c in Corner::ALL {
+            assert_eq!(Corner::from_name(c.name()), Some(c));
+        }
+        assert_eq!(Corner::from_name("tt"), Some(Corner::TT));
+        assert_eq!(Corner::from_name("xx"), None);
+    }
+}

@@ -1,0 +1,322 @@
+//! Alpha-power-law MOSFET model (Sakurai–Newton) with process corners.
+//!
+//! Used for (i) inverter voltage-transfer curves in the SNM analysis
+//! (Fig. 9b–d), (ii) access/gated-GND transistor resistive dividers during
+//! read and PIM, and (iii) the corner-dependent series resistance of the
+//! PMOS in the RRAM current path, which produces the FF-corner compression
+//! of the linearity curves (Fig. 10/11).
+//!
+//! The model is intentionally compact: saturation current
+//! `Id = β·(Vgs−Vth)^α`, a quadratic-blend triode region below
+//! `Vdsat = Kd·(Vgs−Vth)`, channel-length modulation, and an exponential
+//! subthreshold tail. All parameters are per-[`Corner`] via
+//! [`CornerParams`], with optional per-device Monte-Carlo deltas.
+
+use super::corner::{Corner, CornerParams};
+
+/// Device polarity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetKind {
+    Nmos,
+    Pmos,
+}
+
+/// One FET instance (per-device MC deltas baked in).
+#[derive(Clone, Copy, Debug)]
+pub struct Fet {
+    pub kind: FetKind,
+    /// Transconductance coefficient β (A/V^α) after corner + width scaling.
+    pub beta: f64,
+    /// Threshold voltage magnitude (V) after corner + MC shift.
+    pub vth: f64,
+    /// Velocity-saturation exponent α.
+    pub alpha: f64,
+    /// Vdsat coefficient: Vdsat = kd·(Vgs−Vth).
+    pub kd: f64,
+    /// Channel-length modulation (1/V).
+    pub lambda: f64,
+    /// Subthreshold swing factor n (Id ∝ exp(Vov/(n·vT))).
+    pub n_sub: f64,
+    /// Leakage prefactor at Vov = 0 (A).
+    pub i_leak0: f64,
+}
+
+/// Thermal voltage at 300 K (V).
+pub const VT_300K: f64 = 0.02585;
+
+/// Nominal (TT, unit-width) device parameters, representative of a 22 nm
+/// FDSOI low-Vt logic transistor sized for a dense SRAM bit-cell.
+#[derive(Clone, Copy, Debug)]
+pub struct FetNominal {
+    pub beta_n: f64,
+    pub beta_p: f64,
+    pub vth_n: f64,
+    pub vth_p: f64,
+    pub alpha: f64,
+    pub kd: f64,
+    pub lambda: f64,
+    pub n_sub: f64,
+    pub i_leak0: f64,
+}
+
+impl Default for FetNominal {
+    fn default() -> Self {
+        FetNominal {
+            // β chosen so the on-resistance of a minimum cell transistor at
+            // Vgs = VDD = 0.8 V is a few kΩ — small against R_LRS = 25 kΩ,
+            // consistent with the paper's near-linear TT transfer curves.
+            beta_n: 5.2e-4,
+            beta_p: 3.2e-4, // PMOS mobility deficit ≈ 0.6×
+            vth_n: 0.26,
+            vth_p: 0.27,
+            alpha: 1.35,
+            kd: 0.55,
+            lambda: 0.06,
+            n_sub: 1.35,
+            i_leak0: 1.0e-9,
+        }
+    }
+}
+
+impl Fet {
+    /// Build a device at a given corner with a width multiplier (SRAM cells
+    /// size pull-down > access > pull-up; callers pass the ratio).
+    pub fn new(kind: FetKind, corner: Corner, width: f64) -> Fet {
+        Self::with_deltas(kind, corner, width, 0.0, 1.0)
+    }
+
+    /// Build with per-device Monte-Carlo deltas: additive Vth shift and
+    /// multiplicative β scaling (from [`super::variation`]).
+    pub fn with_deltas(
+        kind: FetKind,
+        corner: Corner,
+        width: f64,
+        vth_delta: f64,
+        beta_mult: f64,
+    ) -> Fet {
+        let nom = FetNominal::default();
+        let CornerParams { beta_scale, vth_shift, leak_scale } = corner.params();
+        let (beta0, vth0) = match kind {
+            FetKind::Nmos => (nom.beta_n, nom.vth_n),
+            FetKind::Pmos => (nom.beta_p, nom.vth_p),
+        };
+        Fet {
+            kind,
+            beta: beta0 * beta_scale * width * beta_mult,
+            vth: (vth0 + vth_shift + vth_delta).max(0.05),
+            alpha: nom.alpha,
+            kd: nom.kd,
+            lambda: nom.lambda,
+            n_sub: nom.n_sub,
+            i_leak0: nom.i_leak0 * leak_scale * width,
+        }
+    }
+
+    /// Drain current magnitude for *overdrive-domain* terminal voltages:
+    /// `vgs` and `vds` are the gate-source and drain-source magnitudes in
+    /// the device's own polarity (callers flip signs for PMOS).
+    pub fn id(&self, vgs: f64, vds: f64) -> f64 {
+        let vds = vds.max(0.0);
+        let vov = vgs - self.vth;
+        if vov <= 0.0 {
+            // Subthreshold: exponential in overdrive, linear-ish saturation in Vds.
+            let sub = self.i_leak0 * (vov / (self.n_sub * VT_300K)).exp();
+            return sub * (1.0 - (-vds / VT_300K).exp());
+        }
+        let idsat = self.beta * vov.powf(self.alpha) * (1.0 + self.lambda * vds);
+        let vdsat = self.kd * vov;
+        if vds >= vdsat {
+            idsat
+        } else {
+            // Quadratic blend to zero at Vds = 0, continuous at Vdsat.
+            let x = vds / vdsat;
+            idsat * x * (2.0 - x)
+        }
+    }
+
+    /// Small-signal on-resistance at a bias point (numeric dId/dVds)⁻¹.
+    pub fn r_on(&self, vgs: f64, vds: f64) -> f64 {
+        let dv = 1e-4;
+        let di = self.id(vgs, vds + dv) - self.id(vgs, (vds - dv).max(0.0));
+        let denom = di / (2.0 * dv).min(vds + dv);
+        if denom <= 0.0 {
+            1e12
+        } else {
+            1.0 / denom
+        }
+    }
+
+    /// Effective large-signal resistance `vds/id` (used in series-divider
+    /// solves where the FET is deep in triode).
+    pub fn r_eff(&self, vgs: f64, vds: f64) -> f64 {
+        let vds = vds.max(1e-6);
+        let i = self.id(vgs, vds);
+        if i <= 0.0 {
+            1e12
+        } else {
+            vds / i
+        }
+    }
+
+    /// Saturation drain current at the given overdrive (convenience).
+    pub fn idsat(&self, vgs: f64) -> f64 {
+        let vov = vgs - self.vth;
+        if vov <= 0.0 {
+            0.0
+        } else {
+            self.beta * vov.powf(self.alpha)
+        }
+    }
+}
+
+/// CMOS inverter voltage-transfer curve, solved pointwise by balancing the
+/// pull-up and pull-down currents with bisection on Vout. `vdd_eff` allows
+/// the 6T-2R case where the inverter's supply is reached through an RRAM
+/// (series IR drop handled by the caller via `r_pullup_series`).
+pub fn inverter_vtc(
+    nmos: &Fet,
+    pmos: &Fet,
+    vdd_eff: f64,
+    r_pullup_series: f64,
+    r_pulldown_series: f64,
+    vin: f64,
+) -> f64 {
+    // Solve for vout ∈ [0, vdd_eff] such that I_p(vout) = I_n(vout), where
+    // each current accounts for its series resistance via a nested solve.
+    let f = |vout: f64| -> f64 {
+        let i_n = current_through_nmos(nmos, vin, vout, r_pulldown_series);
+        let i_p = current_through_pmos(pmos, vin, vout, vdd_eff, r_pullup_series);
+        i_p - i_n
+    };
+    bisect(f, 0.0, vdd_eff, 60)
+}
+
+/// Current into the output node through the NMOS + series R to ground.
+fn current_through_nmos(nmos: &Fet, vin: f64, vout: f64, r_s: f64) -> f64 {
+    if r_s <= 1e-3 {
+        return nmos.id(vin, vout);
+    }
+    // Source degeneration: find i with vs = i·r_s, i = Id(vin−vs, vout−vs).
+    let mut i = nmos.id(vin, vout);
+    for _ in 0..20 {
+        let vs = (i * r_s).min(vout);
+        i = 0.5 * i + 0.5 * nmos.id(vin - vs, (vout - vs).max(0.0));
+    }
+    i
+}
+
+/// Current into the output node through the PMOS + series R to VDD.
+fn current_through_pmos(pmos: &Fet, vin: f64, vout: f64, vdd: f64, r_s: f64) -> f64 {
+    // PMOS magnitudes: vgs = vdd_node − vin, vds = vdd_node − vout, where
+    // vdd_node = vdd − i·r_s (IR drop across the RRAM on the powerline).
+    let mut i = pmos.id(vdd - vin, (vdd - vout).max(0.0));
+    if r_s <= 1e-3 {
+        return i;
+    }
+    for _ in 0..20 {
+        let vnode = (vdd - i * r_s).max(vout);
+        i = 0.5 * i + 0.5 * pmos.id(vnode - vin, (vnode - vout).max(0.0));
+    }
+    i
+}
+
+/// Bisection root-finder for a decreasing `f` (f(lo) ≥ 0 ≥ f(hi)); clamps to
+/// the bracket endpoint when the sign condition fails (rail-stuck output).
+fn bisect<F: Fn(f64) -> f64>(f: F, lo: f64, hi: f64, iters: usize) -> f64 {
+    let (mut lo, mut hi) = (lo, hi);
+    let flo = f(lo);
+    let fhi = f(hi);
+    if flo <= 0.0 {
+        return lo;
+    }
+    if fhi >= 0.0 {
+        return hi;
+    }
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consts::VDD;
+
+    #[test]
+    fn cutoff_below_threshold() {
+        let n = Fet::new(FetKind::Nmos, Corner::TT, 1.0);
+        assert!(n.id(0.0, VDD) < 1e-9, "leakage should be sub-nA at Vgs=0");
+        assert!(n.id(n.vth - 0.1, VDD) < n.id(n.vth + 0.1, VDD) / 100.0);
+    }
+
+    #[test]
+    fn monotone_in_vgs_and_vds() {
+        let n = Fet::new(FetKind::Nmos, Corner::TT, 1.0);
+        let mut prev = 0.0;
+        for i in 0..=16 {
+            let vgs = i as f64 * 0.05;
+            let id = n.id(vgs, VDD);
+            assert!(id >= prev);
+            prev = id;
+        }
+        let mut prev = 0.0;
+        for i in 0..=16 {
+            let vds = i as f64 * 0.05;
+            let id = n.id(VDD, vds);
+            assert!(id >= prev - 1e-15, "triode→sat must be non-decreasing");
+            prev = id;
+        }
+    }
+
+    #[test]
+    fn corner_drive_ordering() {
+        for kind in [FetKind::Nmos, FetKind::Pmos] {
+            let ss = Fet::new(kind, Corner::SS, 1.0).idsat(VDD);
+            let tt = Fet::new(kind, Corner::TT, 1.0).idsat(VDD);
+            let ff = Fet::new(kind, Corner::FF, 1.0).idsat(VDD);
+            assert!(ss < tt && tt < ff, "{kind:?}: {ss} {tt} {ff}");
+        }
+    }
+
+    #[test]
+    fn on_resistance_plausible() {
+        // A unit-width NMOS at full gate drive should be a few kΩ in triode —
+        // small against R_LRS = 25 kΩ (required for near-linear PIM currents).
+        let n = Fet::new(FetKind::Nmos, Corner::TT, 1.0);
+        let r = n.r_eff(VDD, 0.05);
+        assert!(r > 500.0 && r < 10_000.0, "r_on = {r}");
+    }
+
+    #[test]
+    fn vtc_rails_and_midpoint() {
+        let n = Fet::new(FetKind::Nmos, Corner::TT, 1.0);
+        let p = Fet::new(FetKind::Pmos, Corner::TT, 1.0);
+        let v_lo = inverter_vtc(&n, &p, VDD, 0.0, 0.0, VDD);
+        let v_hi = inverter_vtc(&n, &p, VDD, 0.0, 0.0, 0.0);
+        assert!(v_lo < 0.05, "output low = {v_lo}");
+        assert!(v_hi > VDD - 0.05, "output high = {v_hi}");
+        // Switching threshold near mid-rail.
+        let vm = (0..=80)
+            .map(|i| i as f64 * 0.01)
+            .find(|&vin| inverter_vtc(&n, &p, VDD, 0.0, 0.0, vin) < vin)
+            .unwrap();
+        assert!((vm - 0.4).abs() < 0.15, "Vm = {vm}");
+    }
+
+    #[test]
+    fn vtc_with_series_rram_still_swings() {
+        // Hold-mode insight of the paper (Fig. 4): with *no* DC current the
+        // RRAM drop is zero, so even HRS on the powerline must not destroy
+        // logic levels (only leakage flows).
+        let n = Fet::new(FetKind::Nmos, Corner::TT, 1.0);
+        let p = Fet::new(FetKind::Pmos, Corner::TT, 1.0);
+        let v_hi = inverter_vtc(&n, &p, VDD, crate::consts::R_HRS, 0.0, 0.0);
+        assert!(v_hi > VDD - 0.1, "high level with HRS supply = {v_hi}");
+    }
+}

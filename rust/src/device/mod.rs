@@ -1,0 +1,27 @@
+//! Compact device models — the SPICE-level substrate of the reproduction.
+//!
+//! The paper simulates the 6T-2R cell in GlobalFoundries 22 nm FDSOI with a
+//! Verilog-A RRAM compact model (Jiang et al., SISPAD'14). We do not have a
+//! PDK or a SPICE engine, so this module provides behavioral equivalents
+//! (see DESIGN.md §2 for the substitution argument):
+//!
+//! * [`rram`] — bipolar filamentary RRAM: gap-state dynamics, I–V with
+//!   `sinh` conduction, SET/RESET thresholds at ±1.2 V, 4 ns programming,
+//!   HRS ≈ 1.2 MΩ / LRS ≈ 25 kΩ at read bias (paper §V-B, Fig. 9a).
+//! * [`fet`] — alpha-power-law MOSFET I–V with corner-dependent (SS/TT/FF)
+//!   threshold and drive, used for inverter VTCs (SNM), access-transistor
+//!   dividers, and the FF-corner nonlinearity of the PIM transfer curve.
+//! * [`corner`] — SS/TT/FF process corner parameter sets.
+//! * [`variation`] — Monte-Carlo mismatch sampling (local Vth/β/R σ), used
+//!   by Fig. 13 and the Table II noise model.
+
+pub mod corner;
+pub mod fet;
+pub mod reliability;
+pub mod rram;
+pub mod variation;
+
+pub use corner::{Corner, CornerParams};
+pub use fet::{Fet, FetKind};
+pub use rram::{Rram, RramParams, RramState};
+pub use variation::{CellVariation, VariationModel};

@@ -1,0 +1,142 @@
+//! Monte-Carlo process variation.
+//!
+//! The paper's Fig. 13 reports the Monte-Carlo spread of the 128-row PIM
+//! output voltage/current for a 1-LSB input change, and §V-E injects
+//! "Gaussian noise with variable standard deviations estimated from Monte
+//! Carlo simulations" into the ADC output for the accuracy study. This
+//! module is the source of those σ values: it samples per-device local
+//! mismatch and provides the derived per-cell current spread.
+
+use crate::util::rng::Pcg64;
+
+/// Global variation model: σ values for each mismatch source.
+///
+/// Magnitudes are representative of 22 nm FDSOI local (within-die) mismatch
+/// for minimum devices plus typical filamentary-RRAM cycle-to-cycle /
+/// device-to-device spread (LRS tighter than HRS, as universally reported).
+#[derive(Clone, Copy, Debug)]
+pub struct VariationModel {
+    /// FET threshold-voltage local mismatch σ (V).
+    pub sigma_vth: f64,
+    /// FET β (drive) multiplicative mismatch σ (fraction).
+    pub sigma_beta: f64,
+    /// LRS resistance multiplicative σ (fraction).
+    pub sigma_r_lrs: f64,
+    /// HRS resistance multiplicative σ (fraction).
+    pub sigma_r_hrs: f64,
+    /// ADC comparator input-referred offset σ (V).
+    pub sigma_cmp_offset: f64,
+    /// Sample-and-hold kT/C + switch noise σ (V).
+    pub sigma_sh: f64,
+}
+
+impl Default for VariationModel {
+    fn default() -> Self {
+        VariationModel {
+            sigma_vth: 0.018,
+            sigma_beta: 0.03,
+            sigma_r_lrs: 0.05,
+            sigma_r_hrs: 0.08,
+            sigma_cmp_offset: 0.002,
+            sigma_sh: 0.0008,
+        }
+    }
+}
+
+impl VariationModel {
+    /// No-variation model (nominal corners only).
+    pub fn none() -> Self {
+        VariationModel {
+            sigma_vth: 0.0,
+            sigma_beta: 0.0,
+            sigma_r_lrs: 0.0,
+            sigma_r_hrs: 0.0,
+            sigma_cmp_offset: 0.0,
+            sigma_sh: 0.0,
+        }
+    }
+
+    /// Sample one cell's mismatch.
+    pub fn sample_cell(&self, rng: &mut Pcg64) -> CellVariation {
+        CellVariation {
+            vth_delta: rng.normal(0.0, self.sigma_vth),
+            beta_mult: (1.0 + rng.normal(0.0, self.sigma_beta)).max(0.5),
+            r_lrs_mult: (1.0 + rng.normal(0.0, self.sigma_r_lrs)).max(0.5),
+            r_hrs_mult: (1.0 + rng.normal(0.0, self.sigma_r_hrs)).max(0.5),
+        }
+    }
+
+    /// Sample a comparator offset (per ADC instance).
+    pub fn sample_cmp_offset(&self, rng: &mut Pcg64) -> f64 {
+        rng.normal(0.0, self.sigma_cmp_offset)
+    }
+
+    /// Sample one S&H noise realization (per conversion).
+    pub fn sample_sh_noise(&self, rng: &mut Pcg64) -> f64 {
+        rng.normal(0.0, self.sigma_sh)
+    }
+}
+
+/// Per-cell sampled mismatch, consumed by the cell/array models.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellVariation {
+    /// Additive Vth shift applied to all six transistors of the cell (V).
+    pub vth_delta: f64,
+    /// Multiplicative drive spread.
+    pub beta_mult: f64,
+    /// Multiplicative R_LRS spread for both RRAMs of the cell.
+    pub r_lrs_mult: f64,
+    /// Multiplicative R_HRS spread.
+    pub r_hrs_mult: f64,
+}
+
+impl CellVariation {
+    pub fn nominal() -> CellVariation {
+        CellVariation { vth_delta: 0.0, beta_mult: 1.0, r_lrs_mult: 1.0, r_hrs_mult: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_model_is_deterministic() {
+        let m = VariationModel::none();
+        let mut rng = Pcg64::seeded(1);
+        let c = m.sample_cell(&mut rng);
+        assert_eq!(c, CellVariation::nominal());
+        assert_eq!(m.sample_cmp_offset(&mut rng), 0.0);
+    }
+
+    #[test]
+    fn sampled_spread_matches_sigma() {
+        let m = VariationModel::default();
+        let mut rng = Pcg64::seeded(2);
+        let n = 20_000;
+        let vths: Vec<f64> = (0..n).map(|_| m.sample_cell(&mut rng).vth_delta).collect();
+        let mean = vths.iter().sum::<f64>() / n as f64;
+        let std =
+            (vths.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt();
+        assert!(mean.abs() < 1e-3);
+        assert!((std - m.sigma_vth).abs() / m.sigma_vth < 0.05, "std = {std}");
+    }
+
+    #[test]
+    fn multipliers_positive() {
+        let m = VariationModel::default();
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            let c = m.sample_cell(&mut rng);
+            assert!(c.beta_mult > 0.0 && c.r_lrs_mult > 0.0 && c.r_hrs_mult > 0.0);
+        }
+    }
+
+    #[test]
+    fn reproducible_with_same_seed() {
+        let m = VariationModel::default();
+        let a = m.sample_cell(&mut Pcg64::seeded(7));
+        let b = m.sample_cell(&mut Pcg64::seeded(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,208 @@
+//! E4–E7: linearity and ADC characterization figures (Fig. 10–13).
+//!
+//! These run both the closed-form [`TransferModel`] and (for Fig. 13) the
+//! cell-accurate Monte-Carlo sub-array; Fig. 10/11 use the transfer model
+//! directly — the sub-array is calibrated against it (see
+//! `array::subarray` tests), which is exactly the relationship between a
+//! trimmed silicon macro and its characterization curve.
+
+use std::path::Path;
+
+use crate::consts::ARRAY_ROWS;
+use crate::device::{Corner, VariationModel};
+use crate::pim::transfer::{TransferModel, MAC_FULLSCALE};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+
+use super::emit;
+
+/// Fig. 10: weight → accumulated voltage (a: before S&H, b: after S&H) for
+/// 128-row activation across corners. Both are linear transforms of the
+/// line current; the S&H adds no nonlinearity (asserted in tests).
+pub fn fig10_weight_voltage(out_dir: &Path) -> crate::Result<CsvWriter> {
+    let mut csv = CsvWriter::new(vec!["corner", "weight", "v_accumulated", "v_sampled"]);
+    for corner in Corner::ALL {
+        let m = TransferModel::new(corner);
+        for w in 0..=15u32 {
+            let mac = (w * ARRAY_ROWS as u32) as f64;
+            // "Accumulated" voltage: the droop across the line before the
+            // S&H (∝ current); "sampled": the held output V0 − R_ti·I.
+            let v_acc = crate::consts::VDD - m.line_current(mac) * m.r_ti * 0.5;
+            let v_samp = m.sampled_voltage(mac);
+            csv.row(vec![
+                corner.name().to_string(),
+                w.to_string(),
+                format!("{v_acc:.5}"),
+                format!("{v_samp:.5}"),
+            ]);
+        }
+    }
+    emit(&csv, out_dir, "fig10_weight_voltage.csv")?;
+    Ok(csv)
+}
+
+/// Fig. 11(a): weight → accumulated current per corner; (b) current vs
+/// number of activated rows at weight 15.
+pub fn fig11_weight_current(out_dir: &Path) -> crate::Result<()> {
+    let mut a = CsvWriter::new(vec!["corner", "weight", "i_ua"]);
+    for corner in Corner::ALL {
+        let m = TransferModel::new(corner);
+        for w in 0..=15u32 {
+            let mac = (w * ARRAY_ROWS as u32) as f64;
+            a.row(vec![
+                corner.name().to_string(),
+                w.to_string(),
+                format!("{:.3}", m.line_current(mac) * 1e6),
+            ]);
+        }
+    }
+    emit(&a, out_dir, "fig11a_weight_current.csv")?;
+    let mut b = CsvWriter::new(vec!["rows", "i_ua", "delta_i_ua"]);
+    let m = TransferModel::tt();
+    let mut prev = 0.0;
+    for rows in (8..=ARRAY_ROWS).step_by(8) {
+        let i = m.line_current((rows as u32 * 15) as f64) * 1e6;
+        b.row_f64(&[rows as f64, i, i - prev]);
+        prev = i;
+    }
+    emit(&b, out_dir, "fig11b_current_vs_rows.csv")?;
+    Ok(())
+}
+
+/// Fig. 12: (a) weight → ADC code, calibrated vs uncalibrated;
+/// (b) ADC output vs accumulated MAC value.
+pub fn fig12_adc_transfer(out_dir: &Path) -> crate::Result<()> {
+    let m = TransferModel::tt();
+    let mut a = CsvWriter::new(vec!["weight", "code_calibrated", "code_uncalibrated"]);
+    for w in 0..=15u32 {
+        let mac = (w * ARRAY_ROWS as u32) as f64;
+        let v = m.sampled_voltage(mac);
+        a.row_f64(&[w as f64, m.adc_code(v, true) as f64, m.adc_code(v, false) as f64]);
+    }
+    emit(&a, out_dir, "fig12a_adc_transfer.csv")?;
+    let mut b = CsvWriter::new(vec!["mac", "code_calibrated", "mac_estimate"]);
+    for mac in (0..=MAC_FULLSCALE).step_by(16) {
+        let code = m.adc_code(m.sampled_voltage(mac as f64), true);
+        b.row_f64(&[mac as f64, code as f64, m.mac_estimate(code)]);
+    }
+    emit(&b, out_dir, "fig12b_adc_vs_mac.csv")?;
+    Ok(())
+}
+
+/// Fig. 13: Monte-Carlo spread of the 128-row output voltage/current for a
+/// 1-LSB weight step, on one cell-accurate word column (4 bit-columns ×
+/// 128 rows with per-cell sampled variation, WCC-combined and sampled).
+pub fn fig13_monte_carlo(out_dir: &Path, n_samples: usize) -> crate::Result<(Summary, Summary)> {
+    use crate::array::sample_hold::SampleHold;
+    use crate::array::wcc::Wcc;
+    use crate::cell::bitcell::{BitCell, Side};
+
+    let var = VariationModel::default();
+    let wcc = Wcc::new(Corner::TT);
+    let sh = SampleHold::new(&TransferModel::tt(), &var);
+    let ia = vec![true; ARRAY_ROWS];
+    let mut v_samples = Vec::with_capacity(n_samples);
+    let mut i_samples = Vec::with_capacity(n_samples);
+    let mut csv = CsvWriter::new(vec![
+        "sample", "i_w14_ua", "i_w15_ua", "delta_i_ua", "v_w14", "v_w15", "delta_v_mv",
+    ]);
+    let word_cols = |w: u8, rng: &mut Pcg64| -> Vec<Vec<BitCell>> {
+        (0..crate::consts::WORD_BITS)
+            .map(|b| {
+                (0..ARRAY_ROWS)
+                    .map(|_| {
+                        let mut c = BitCell::with_variation(Corner::TT, var.sample_cell(rng));
+                        c.set_weight_bit((w >> b) & 1 == 1);
+                        c.q = true; // left side active
+                        c
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    for s in 0..n_samples {
+        let mut rng = Pcg64::seeded(1000 + s as u64);
+        let cols14 = word_cols(14, &mut rng);
+        // Same devices, one LSB up: flip the LSB column to LRS.
+        let mut cols15 = cols14.clone();
+        for c in cols15[0].iter_mut() {
+            c.set_weight_bit(true);
+        }
+        let i14 = wcc.weighted_current(&cols14, &ia, Side::Left);
+        let i15 = wcc.weighted_current(&cols15, &ia, Side::Left);
+        let mut srng = rng.fork(7);
+        let v14 = sh.sample(i14, 0.0, Some(&mut srng));
+        let v15 = sh.sample(i15, 0.0, Some(&mut srng));
+        csv.row_f64(&[
+            s as f64,
+            i14 * 1e6,
+            i15 * 1e6,
+            (i15 - i14) * 1e6,
+            v14,
+            v15,
+            (v14 - v15) * 1e3,
+        ]);
+        v_samples.push(v15);
+        i_samples.push(i15 * 1e6);
+    }
+    emit(&csv, out_dir, "fig13_monte_carlo.csv")?;
+    let vs = Summary::of(&v_samples);
+    let is = Summary::of(&i_samples);
+    println!(
+        "  V(w=15): μ={:.1} mV σ={:.2} mV | I(w=15): μ={:.1} µA σ={:.2} µA (n={})",
+        vs.mean * 1e3,
+        vs.std * 1e3,
+        is.mean,
+        is.std,
+        n_samples
+    );
+    Ok((vs, is))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("nvm_figs_lin");
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fig10_monotone_decreasing_voltage() {
+        fig10_weight_voltage(&tmp()).unwrap();
+        // Sampled voltage decreases with weight at every corner (V = VDD−MAC).
+        for corner in Corner::ALL {
+            let m = TransferModel::new(corner);
+            let vs: Vec<f64> = (0..=15u32)
+                .map(|w| -m.sampled_voltage((w * 128) as f64))
+                .collect();
+            assert!(stats::is_monotonic_nondecreasing(&vs), "{corner:?}");
+        }
+    }
+
+    #[test]
+    fn fig13_lsb_separable() {
+        // Fig. 13's point: the 1-LSB step remains distinguishable under MC.
+        let (_vs, _is) = fig13_monte_carlo(&tmp(), 40).unwrap();
+        let text = std::fs::read_to_string(tmp().join("fig13_monte_carlo.csv")).unwrap();
+        let deltas: Vec<f64> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(3).unwrap().parse::<f64>().unwrap())
+            .collect();
+        let s = Summary::of(&deltas);
+        assert!(s.mean > 0.0, "mean ΔI must be positive");
+        assert!(s.mean > 2.0 * s.std, "1 LSB must exceed 2σ: {s:?}");
+    }
+
+    #[test]
+    fn fig12_files_written() {
+        fig12_adc_transfer(&tmp()).unwrap();
+        assert!(tmp().join("fig12a_adc_transfer.csv").exists());
+        assert!(tmp().join("fig12b_adc_vs_mac.csv").exists());
+    }
+}

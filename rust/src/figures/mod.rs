@@ -1,0 +1,45 @@
+//! Figure/table generators — one per paper artifact (see DESIGN.md §4).
+//!
+//! Each generator returns the data series *and* writes a CSV under the
+//! output directory, so every plot in the paper can be regenerated. The
+//! benches drive the same functions for timing.
+
+pub mod device_figs;
+pub mod linearity;
+pub mod scaling;
+pub mod tables;
+
+use std::path::Path;
+
+use crate::util::csv::CsvWriter;
+
+/// Write a CSV and report the path.
+pub fn emit(csv: &CsvWriter, out_dir: &Path, name: &str) -> std::io::Result<()> {
+    let path = out_dir.join(name);
+    csv.write(&path)?;
+    println!("  wrote {} ({} rows)", path.display(), csv.n_rows());
+    Ok(())
+}
+
+/// Run every generator (the `repro figures --all` path).
+pub fn generate_all(out_dir: &Path, mc_samples: usize) -> crate::Result<()> {
+    println!("[fig 9a] RRAM I–V hysteresis");
+    device_figs::fig9a_rram_iv(out_dir)?;
+    println!("[fig 9b-d] SNM butterflies (hold/read/write)");
+    device_figs::fig9bcd_snm(out_dir)?;
+    println!("[scalars] §V-B read latency/energy + programming");
+    device_figs::section_vb_scalars(out_dir)?;
+    println!("[fig 10] weight → voltage linearity across corners");
+    linearity::fig10_weight_voltage(out_dir)?;
+    println!("[fig 11] weight → current linearity + row scaling");
+    linearity::fig11_weight_current(out_dir)?;
+    println!("[fig 12] ADC transfer, calibrated vs uncalibrated");
+    linearity::fig12_adc_transfer(out_dir)?;
+    println!("[fig 13] Monte-Carlo output variation ({mc_samples} samples)");
+    linearity::fig13_monte_carlo(out_dir, mc_samples)?;
+    println!("[fig 14] multi-sub-array scaling");
+    scaling::fig14_scaling(out_dir)?;
+    println!("[table 1] comparison table");
+    tables::table1(out_dir, None)?;
+    Ok(())
+}

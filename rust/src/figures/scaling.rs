@@ -1,0 +1,72 @@
+//! E9: Fig. 14 — multi-sub-array throughput/efficiency scaling vs kernel
+//! size, depth, features, and precision (normalized, as in the paper).
+
+use std::path::Path;
+
+use crate::perf::MacroModel;
+use crate::util::csv::CsvWriter;
+
+use super::emit;
+
+/// All four panels; values normalized to each panel's first point (the
+/// paper's y-axes are unitless "normalized" values).
+pub fn fig14_scaling(out_dir: &Path) -> crate::Result<()> {
+    let m = MacroModel::default();
+
+    // (a) kernel size 3/5/7 at D = 64.
+    let mut a = CsvWriter::new(vec!["kernel", "norm_throughput", "norm_efficiency"]);
+    let (t0, e0) = m.fig14_kernel(3, 64);
+    for k in [3usize, 5, 7] {
+        let (t, e) = m.fig14_kernel(k, 64);
+        a.row_f64(&[k as f64, t / t0, e / e0]);
+    }
+    emit(&a, out_dir, "fig14a_kernel.csv")?;
+
+    // (b) depth D = 32..256.
+    let mut b = CsvWriter::new(vec!["depth", "norm_throughput", "norm_efficiency"]);
+    let (t0, e0) = m.fig14_depth(32);
+    for d in [32usize, 64, 128, 192, 256] {
+        let (t, e) = m.fig14_depth(d);
+        b.row_f64(&[d as f64, t / t0, e / e0]);
+    }
+    emit(&b, out_dir, "fig14b_depth.csv")?;
+
+    // (c) features N = 32..256.
+    let mut c = CsvWriter::new(vec!["features", "norm_throughput", "norm_efficiency"]);
+    let (t0, e0) = m.fig14_features(32);
+    for n in [32usize, 64, 128, 192, 256] {
+        let (t, e) = m.fig14_features(n);
+        c.row_f64(&[n as f64, t / t0, e / e0]);
+    }
+    emit(&c, out_dir, "fig14c_features.csv")?;
+
+    // (d) precision 4/4 vs 8/8.
+    let mut d = CsvWriter::new(vec!["bits", "norm_throughput", "norm_efficiency"]);
+    let (t0, e0) = m.fig14_precision(4);
+    for bits in [4u32, 8] {
+        let (t, e) = m.fig14_precision(bits);
+        d.row_f64(&[bits as f64, t / t0, e / e0]);
+    }
+    emit(&d, out_dir, "fig14d_precision.csv")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_all_panels() {
+        let dir = std::env::temp_dir().join("nvm_fig14");
+        std::fs::create_dir_all(&dir).unwrap();
+        fig14_scaling(&dir).unwrap();
+        for f in ["fig14a_kernel.csv", "fig14b_depth.csv", "fig14c_features.csv", "fig14d_precision.csv"] {
+            let text = std::fs::read_to_string(dir.join(f)).unwrap();
+            assert!(text.lines().count() >= 3, "{f}: {text}");
+            // First data row is the normalization anchor = 1.0.
+            let row1: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+            assert_eq!(row1[1], "1");
+            assert_eq!(row1[2], "1");
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! # NVM-in-Cache — full-system reproduction
+//!
+//! Reproduction of *"NVM-in-Cache: Repurposing Commodity 6T SRAM Cache into
+//! NVM Analog Processing-in-Memory Engine using a Novel Compute-on-Powerline
+//! Scheme"* (Chakraborty et al., 2025).
+//!
+//! The crate is organized bottom-up, mirroring the hardware stack:
+//!
+//! * [`util`] — PRNG, statistics, least-squares fits, CSV/JSON emitters,
+//!   CLI parsing and a micro-benchmark harness (the build is fully offline,
+//!   so these replace `rand`/`serde`/`criterion`/`clap`).
+//! * [`device`] — compact device models: bipolar filamentary RRAM
+//!   (Jiang et al. SISPAD'14 family), corner-aware MOSFETs, Monte-Carlo
+//!   process variation.
+//! * [`cell`] — the 6T-2R bit-cell: NVM programming, SRAM hold/read/write,
+//!   the two-cycle compute-on-powerline PIM dot-product, static noise
+//!   margins, and a per-operation latency/energy ledger.
+//! * [`array`] — the 128×512 sub-array: powerline current accumulation,
+//!   the 8:4:2:1 weighted-configuration circuit (WCC), sample-and-hold,
+//!   6-bit SAR ADC, and the PIM control FSM.
+//! * [`pim`] — quantization + the end-to-end analog transfer model
+//!   (weight → current → voltage → ADC code) and the PIM execution engine
+//!   that runs quantized CNN layers on simulated arrays.
+//! * [`cache`] — the LLC substrate: slices, banks, tags, LRU, and the
+//!   controller that arbitrates SRAM-mode traffic against PIM windows
+//!   while *retaining* cache data (the paper's headline architectural
+//!   property), plus a flush-reload baseline for ablation.
+//! * [`mapping`] — CNN→array mapping: IFM-reuse conv mapping, bit-serial
+//!   multi-bit scheduling, digital shift-add / positive-negative-bank
+//!   subtraction post-processing.
+//! * [`nn`] — a small digital-exact inference stack (tensors, conv/bn/fc,
+//!   the ResNet-18 topology) used as the fp32 baseline and as the
+//!   cross-check against the PJRT-executed JAX artifacts.
+//! * [`runtime`] — PJRT CPU client: loads `artifacts/*.hlo.txt` produced by
+//!   the build-time JAX/Pallas pipeline and executes them from Rust.
+//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
+//!   bank scheduler, metrics. std::thread + mpsc (offline build, no tokio).
+//! * [`perf`] — the analytic throughput/energy/area model that reproduces
+//!   Table I and the Fig. 14 scaling study.
+//! * [`figures`] — one generator per paper table/figure.
+
+pub mod util;
+pub mod device;
+pub mod cell;
+pub mod array;
+pub mod pim;
+pub mod cache;
+pub mod mapping;
+pub mod nn;
+pub mod runtime;
+pub mod coordinator;
+pub mod perf;
+pub mod figures;
+
+/// Shared physical and architectural constants from the paper.
+pub mod consts {
+    /// Nominal supply voltage (V). §III: "VDD1 and VDD2 are maintained at 0.8 V".
+    pub const VDD: f64 = 0.8;
+    /// Wordline overdrive voltage used during NVM programming (V). §III-A.
+    pub const V_OVERDRIVE: f64 = 2.0;
+    /// RRAM SET threshold (V). Fig. 9(a).
+    pub const V_SET: f64 = 1.2;
+    /// RRAM RESET threshold (V). Fig. 9(a).
+    pub const V_RESET: f64 = -1.2;
+    /// Low-resistance state (Ω). §V-B: "LRS, ~25 kΩ".
+    pub const R_LRS: f64 = 25.0e3;
+    /// High-resistance state (Ω). §V-B: "HRS, ~1.2 MΩ".
+    pub const R_HRS: f64 = 1.2e6;
+    /// Programming pulse width (s). §III-A / §V-B: 4 ns per SET/RESET pulse.
+    pub const T_PROGRAM: f64 = 4.0e-9;
+    /// PIM cycle time (s). §III-C: each PIM cycle lasts 3.5 ns.
+    pub const T_PIM_CYCLE: f64 = 3.5e-9;
+    /// PIM settle sub-phase (s): VDD line driven to WCC reference. §III-C.
+    pub const T_PIM_SETTLE: f64 = 1.5e-9;
+    /// PIM sample sub-phase (s): IA applied on the wordline. §III-C.
+    pub const T_PIM_SAMPLE: f64 = 1.0e-9;
+    /// PIM restore sub-phase (s): supplies restored to nominal. §III-C.
+    pub const T_PIM_RESTORE: f64 = 1.0e-9;
+    /// SAR ADC clock (Hz). §IV-B: 50 MHz.
+    pub const ADC_CLOCK_HZ: f64 = 50.0e6;
+    /// SAR ADC conversion latency (s). §V-D: 160 ns (8 clock cycles @50 MHz).
+    pub const T_ADC_CONVERSION: f64 = 160.0e-9;
+    /// ADC resolution in bits. §IV-B.
+    pub const ADC_BITS: u32 = 6;
+    /// Sub-array geometry: rows. §IV-A.
+    pub const ARRAY_ROWS: usize = 128;
+    /// Sub-array geometry: 1-bit columns (= 128 × 4-bit words). §IV-A.
+    pub const ARRAY_COLS: usize = 512;
+    /// Word width in bits (weights are 4-bit). §IV-B.
+    pub const WORD_BITS: usize = 4;
+    /// 4-bit words per sub-array row.
+    pub const ARRAY_WORDS: usize = ARRAY_COLS / WORD_BITS;
+    /// Calibrated SAR ADC positive reference (V). Fig. 12 caption
+    /// (the §V-C body text says 820/260 mV — see EXPERIMENTS.md E6 for the
+    /// discrepancy note; the caption values are consistent with the reported
+    /// uncalibrated code span 7–48, so we use them).
+    pub const V_REFP_CAL: f64 = 0.660;
+    /// Calibrated SAR ADC negative reference (V). Fig. 12 caption.
+    pub const V_REFN_CAL: f64 = 0.090;
+    /// Uncalibrated SAR ADC reference (V): full-scale VDD. §V-C.
+    pub const V_REF_UNCAL: f64 = 0.800;
+    /// Baseline 6T read latency anchor (s). §V-B: 660 ps.
+    pub const T_READ_6T: f64 = 660.0e-12;
+    /// 6T-2R read latency anchor (s). §V-B: 686 ps.
+    pub const T_READ_6T2R: f64 = 686.0e-12;
+    /// 512-bit row read energy, conventional 6T (J). §V-B: 2.23 fJ.
+    pub const E_READ_ROW_6T: f64 = 2.23e-15;
+    /// 512-bit row read energy, 6T-2R (J). §V-B: 3.34 fJ.
+    pub const E_READ_ROW_6T2R: f64 = 3.34e-15;
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("cache error: {0}")]
+    Cache(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error(transparent)]
+    Xla(#[from] xla::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

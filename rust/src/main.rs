@@ -1,0 +1,292 @@
+//! `repro` — the NVM-in-Cache reproduction CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   figures  --all | --fig {9a,9b,10,11,12,13,14,scalars} [--out DIR] [--mc N]
+//!   table1   [--artifacts DIR] [--out DIR]
+//!   table2   [--artifacts DIR] [--out DIR]           (manifest accuracies)
+//!   e2e      [--artifacts DIR] [--variant V] [--limit N]
+//!            re-measures Table II through the PJRT runtime on dataset.bin
+//!   serve    [--artifacts DIR] [--requests N] [--batch B] [--native]
+//!            demo serving run with the dynamic batcher + bank scheduler
+//!   info     print headline perf model numbers
+
+use std::path::PathBuf;
+
+use nvm_in_cache::cache::addr::Geometry;
+use nvm_in_cache::cache::controller::PimIntegration;
+use nvm_in_cache::coordinator::server::{Executor, NativeExecutor, PjrtExecutor};
+use nvm_in_cache::coordinator::{
+    BankScheduler, BatcherConfig, InferenceRequest, Server, ServerConfig,
+};
+use nvm_in_cache::figures;
+use nvm_in_cache::nn::{Dataset, ForwardMode, ResNet};
+use nvm_in_cache::perf::MacroModel;
+use nvm_in_cache::runtime::{ArtifactDir, ModelVariant, Runtime};
+use nvm_in_cache::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("figures") => cmd_figures(&args),
+        Some("table1") => cmd_table1(&args),
+        Some("table2") => cmd_table2(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("cache-sim") => cmd_cache_sim(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: repro <figures|table1|table2|e2e|serve|cache-sim|info> [options]\n\
+                 see rust/src/main.rs header for options"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("out", "results"))
+}
+
+fn artifacts(args: &Args) -> nvm_in_cache::Result<ArtifactDir> {
+    ArtifactDir::open(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_figures(args: &Args) -> nvm_in_cache::Result<()> {
+    let out = out_dir(args);
+    std::fs::create_dir_all(&out)?;
+    let mc = args.get_usize("mc", 200);
+    if args.flag("all") || args.get("fig").is_none() {
+        figures::generate_all(&out, mc)?;
+        return Ok(());
+    }
+    match args.get("fig").unwrap() {
+        "9a" => {
+            figures::device_figs::fig9a_rram_iv(&out)?;
+        }
+        "9b" | "9c" | "9d" | "9bcd" => {
+            figures::device_figs::fig9bcd_snm(&out)?;
+        }
+        "scalars" => figures::device_figs::section_vb_scalars(&out)?,
+        "10" => {
+            figures::linearity::fig10_weight_voltage(&out)?;
+        }
+        "11" => figures::linearity::fig11_weight_current(&out)?,
+        "12" => figures::linearity::fig12_adc_transfer(&out)?,
+        "13" => {
+            figures::linearity::fig13_monte_carlo(&out, mc)?;
+        }
+        "14" => figures::scaling::fig14_scaling(&out)?,
+        other => {
+            return Err(nvm_in_cache::Error::Config(format!("unknown figure `{other}`")))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> nvm_in_cache::Result<()> {
+    let out = out_dir(args);
+    std::fs::create_dir_all(&out)?;
+    let acc = artifacts(args)
+        .ok()
+        .and_then(|d| d.manifest.accuracy("pim_finetuned_noise"));
+    figures::tables::table1(&out, acc)?;
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> nvm_in_cache::Result<()> {
+    let out = out_dir(args);
+    std::fs::create_dir_all(&out)?;
+    let dir = artifacts(args)?;
+    figures::tables::table2_from_manifest(&out, &dir.manifest)?;
+    Ok(())
+}
+
+/// Re-measure Table II through the PJRT runtime (the e2e proof that all
+/// layers compose: artifacts → PJRT → batched inference → accuracy).
+fn cmd_e2e(args: &Args) -> nvm_in_cache::Result<()> {
+    let dir = artifacts(args)?;
+    let ds = Dataset::load(&dir.path("dataset.bin")?)?;
+    let batch = dir.eval_batch();
+    let limit = args.get_usize("limit", ds.n).min(ds.n);
+    let mut rt = Runtime::new(batch)?;
+    println!("platform: {}", rt.platform());
+    let variants: Vec<ModelVariant> = match args.get("variant") {
+        Some("baseline") => vec![ModelVariant::Baseline],
+        Some("pim") => vec![ModelVariant::Pim],
+        Some("pim_noise") => vec![ModelVariant::PimNoise],
+        Some("pim_hw") => vec![ModelVariant::PimHw],
+        Some("all") => ModelVariant::ALL.to_vec(),
+        _ => vec![ModelVariant::Baseline, ModelVariant::Pim, ModelVariant::PimNoise],
+    };
+    for variant in variants {
+        let t0 = std::time::Instant::now();
+        rt.load_variant(&dir, variant)?;
+        let compile_s = t0.elapsed().as_secs_f64();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut infer_s = 0.0;
+        let mut batch_idx = 0u32;
+        while total < limit {
+            let start = total;
+            let n = batch.min(limit - start).min(ds.n - start);
+            if n == 0 {
+                break;
+            }
+            let (x, labels) = ds.batch(start, batch.min(ds.n - start));
+            let mut images = x.data.clone();
+            images.resize(batch * ds.h * ds.w * ds.c, 0.0);
+            batch_idx += 1;
+            let key = Some([0xC0FFEE, batch_idx]);
+            let t = std::time::Instant::now();
+            let preds = rt.classify(variant, &images, (ds.h, ds.w, ds.c), 10, key)?;
+            infer_s += t.elapsed().as_secs_f64();
+            for (p, l) in preds.iter().zip(labels.iter()).take(n) {
+                correct += (p == l) as usize;
+                total += 1;
+            }
+        }
+        println!(
+            "{variant:?}: accuracy {:.2}% ({correct}/{total}) | compile {compile_s:.1}s, \
+             infer {:.3}s ({:.1} img/s)",
+            100.0 * correct as f64 / total as f64,
+            infer_s,
+            total as f64 / infer_s
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
+    let n_requests = args.get_usize("requests", 500);
+    let scheduler = BankScheduler::new(
+        BankScheduler::resnet18_layers(16),
+        Geometry::default(),
+        PimIntegration::Retained,
+    )
+    .expect("network fits the default slice");
+    let dir = artifacts(args)?;
+    let ds = Dataset::load(&dir.path("dataset.bin")?)?;
+    let dims = (ds.h, ds.w, ds.c);
+    let native = args.flag("native");
+    let eval_batch = dir.eval_batch();
+    let max_batch = args.get_usize("batch", eval_batch).min(eval_batch);
+    let batch_cfg = BatcherConfig {
+        max_batch,
+        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)),
+    };
+    let weights = dir.path("weights_ft.bin")?;
+    let dir2 = ArtifactDir::open(dir.root.clone())?;
+    let factory: nvm_in_cache::coordinator::server::ExecutorFactory = if native {
+        Box::new(move || {
+            Ok(Box::new(NativeExecutor {
+                net: ResNet::load(&weights)?,
+                mode: ForwardMode::Pim,
+                dims,
+                seed: 1,
+            }) as Box<dyn Executor>)
+        })
+    } else {
+        Box::new(move || {
+            let mut rt = Runtime::new(dir2.eval_batch())?;
+            rt.load_variant(&dir2, ModelVariant::Pim)?;
+            Ok(Box::new(PjrtExecutor {
+                runtime: rt,
+                variant: ModelVariant::Pim,
+                dims,
+                n_classes: 10,
+                key_counter: 0,
+            }) as Box<dyn Executor>)
+        })
+    };
+    let server = Server::start(factory, Some(scheduler), ServerConfig { batcher: batch_cfg });
+    println!("submitting {n_requests} requests…");
+    let stride = ds.h * ds.w * ds.c;
+    for i in 0..n_requests {
+        let idx = i % ds.n;
+        let img = ds.images.data[idx * stride..(idx + 1) * stride].to_vec();
+        server.submit(InferenceRequest::new(i as u64, img));
+    }
+    let mut correct = 0usize;
+    for _ in 0..n_requests {
+        let r = server
+            .responses
+            .recv_timeout(std::time::Duration::from_secs(600))
+            .map_err(|e| nvm_in_cache::Error::Runtime(e.to_string()))?;
+        if r.predicted == ds.labels[(r.id as usize) % ds.n] {
+            correct += 1;
+        }
+    }
+    let m = server.shutdown();
+    println!(
+        "accuracy over served requests: {:.2}%",
+        100.0 * correct as f64 / n_requests as f64
+    );
+    println!("{}", m.report());
+    Ok(())
+}
+
+fn cmd_info() -> nvm_in_cache::Result<()> {
+    let h = MacroModel::default().headline();
+    println!("NVM-in-Cache macro model (paper §V-D anchors):");
+    println!("  raw throughput      : {:.2} GOPS (paper: 25.6)", h.ops_per_s / 1e9);
+    println!("  raw efficiency      : {:.2} TOPS/W (paper: 30.73)", h.ops_per_w / 1e12);
+    println!("  norm throughput     : {:.4} TOPS (paper: 0.4)", h.norm_ops_per_s / 1e12);
+    println!("  norm efficiency     : {:.1} TOPS/W (paper: 491.78)", h.norm_ops_per_w / 1e12);
+    println!("  norm compute density: {:.2} TOPS/mm² (paper: 4.37)", h.norm_tops_per_mm2);
+    let (array, adc, wcc, dig) = MacroModel::default().energy_breakdown();
+    println!(
+        "  energy breakdown    : array {:.0}%, ADC {:.0}%, WCC {:.0}%, digital {:.0}%",
+        array * 100.0,
+        adc * 100.0,
+        wcc * 100.0,
+        dig * 100.0
+    );
+    Ok(())
+}
+
+/// PIM-interference study: hit-rate/AMAT vs PIM intensity per trace kind,
+/// retained vs flush/reload (the quantified §I motivation).
+fn cmd_cache_sim(args: &Args) -> nvm_in_cache::Result<()> {
+    use nvm_in_cache::cache::workload;
+    let out = out_dir(args);
+    std::fs::create_dir_all(&out)?;
+    let sweep = workload::interference_sweep(args.get_u64("seed", 42));
+    let mut csv = nvm_in_cache::util::csv::CsvWriter::new(vec![
+        "trace", "mode", "pim_per_1k", "hit_rate", "amat_ns", "lines_moved",
+    ]);
+    println!(
+        "{:<12} {:<13} {:>9} {:>9} {:>9} {:>12}",
+        "trace", "mode", "pim/1k", "hit%", "AMAT ns", "lines moved"
+    );
+    for r in &sweep {
+        let mode = match r.mode {
+            nvm_in_cache::cache::PimIntegration::Retained => "retained",
+            nvm_in_cache::cache::PimIntegration::FlushReload => "flush_reload",
+        };
+        println!(
+            "{:<12} {:<13} {:>9} {:>8.1}% {:>9.3} {:>12}",
+            r.trace.name(),
+            mode,
+            r.pim_intensity,
+            r.hit_rate * 100.0,
+            r.amat * 1e9,
+            r.lines_moved
+        );
+        csv.row(vec![
+            r.trace.name().to_string(),
+            mode.to_string(),
+            r.pim_intensity.to_string(),
+            format!("{:.4}", r.hit_rate),
+            format!("{:.4}", r.amat * 1e9),
+            r.lines_moved.to_string(),
+        ]);
+    }
+    csv.write(&out.join("cache_interference.csv"))?;
+    println!("wrote {}", out.join("cache_interference.csv").display());
+    Ok(())
+}

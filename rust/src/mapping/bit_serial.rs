@@ -1,0 +1,94 @@
+//! Bit-serial multi-bit schedule (§IV-B).
+//!
+//! 4-bit inputs are streamed LSB→MSB (4 cycles); 4-bit weights occupy the
+//! four bit-columns of a word and are WCC-combined in analog. Higher
+//! precisions (Fig. 14d) extend this: extra input bits add bit-plane
+//! cycles, extra weight bits add word columns ("multiple column outputs
+//! can be shifted and added in the digital domain", §IV-C).
+
+use crate::consts::{T_ADC_CONVERSION, WORD_BITS};
+
+/// A multi-bit PIM schedule for one sub-array invocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitSerialSchedule {
+    pub act_bits: u32,
+    pub weight_bits: u32,
+    /// Words consumed per logical output ("nibbles" per weight).
+    pub weight_nibbles: u32,
+    /// Total analog side-cycles (planes × sides × nibbles).
+    pub side_cycles: u32,
+    /// ADC conversions per word column.
+    pub conversions_per_word: u32,
+}
+
+impl BitSerialSchedule {
+    pub fn new(act_bits: u32, weight_bits: u32) -> BitSerialSchedule {
+        assert!(act_bits >= 1 && weight_bits >= 1);
+        let nibbles = weight_bits.div_ceil(WORD_BITS as u32);
+        let side_cycles = act_bits * 2 * nibbles;
+        BitSerialSchedule {
+            act_bits,
+            weight_bits,
+            weight_nibbles: nibbles,
+            side_cycles,
+            conversions_per_word: side_cycles,
+        }
+    }
+
+    /// The paper's default 4b×4b schedule.
+    pub fn default_4x4() -> BitSerialSchedule {
+        Self::new(4, 4)
+    }
+
+    /// Wall-clock latency (ADC-dominated, §V-D): side-cycles × 160 ns.
+    pub fn latency(&self) -> f64 {
+        self.side_cycles as f64 * T_ADC_CONVERSION
+    }
+
+    /// Digital shift amount for (act plane `a`, weight nibble `n`).
+    pub fn shift_for(&self, a: u32, nibble: u32) -> u32 {
+        debug_assert!(a < self.act_bits && nibble < self.weight_nibbles);
+        a + nibble * WORD_BITS as u32
+    }
+
+    /// Effective logical ops per physical op, for 1-bit normalization
+    /// (Table I note a: metrics normalize by input×weight precision).
+    pub fn precision_product(&self) -> u32 {
+        self.act_bits * self.weight_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_latency_1280ns() {
+        let s = BitSerialSchedule::default_4x4();
+        assert_eq!(s.side_cycles, 8);
+        assert!((s.latency() - 1280.0e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn eight_bit_weights_take_two_nibbles() {
+        let s = BitSerialSchedule::new(8, 8);
+        assert_eq!(s.weight_nibbles, 2);
+        assert_eq!(s.side_cycles, 8 * 2 * 2);
+        assert_eq!(s.precision_product(), 64);
+    }
+
+    #[test]
+    fn shift_amounts() {
+        let s = BitSerialSchedule::new(4, 8);
+        assert_eq!(s.shift_for(0, 0), 0);
+        assert_eq!(s.shift_for(3, 0), 3);
+        assert_eq!(s.shift_for(0, 1), 4);
+        assert_eq!(s.shift_for(3, 1), 7);
+    }
+
+    #[test]
+    fn one_bit_minimum() {
+        let s = BitSerialSchedule::new(1, 1);
+        assert_eq!(s.side_cycles, 2); // both powerline sides still needed
+    }
+}

@@ -1,0 +1,199 @@
+//! IFM-reuse convolution mapping (§IV-C, Fig. 7, after Peng et al. [33]).
+//!
+//! A K×K×D×N convolution is decomposed into K² weight submatrices of shape
+//! [D, N] — one per kernel position. Each submatrix is tiled over 128×128
+//! sub-arrays (`⌈D/128⌉ × ⌈N/128⌉` tiles). For each output pixel, the K²
+//! kernel positions consume the corresponding input pixels (row vectors of
+//! length D) and their partial sums accumulate digitally. Sliding by one
+//! stride reuses K·(K−stride) of the K² input pixels — neighboring banks
+//! forward them instead of refetching (the "IFM reuse" the paper adopts).
+
+use crate::consts::{ARRAY_ROWS, ARRAY_WORDS};
+
+/// Convolution layer shape (square input, 'same' padding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Kernel size K.
+    pub k: usize,
+    /// Input depth D.
+    pub d: usize,
+    /// Output features N.
+    pub n: usize,
+    /// Input spatial width W (square).
+    pub w: usize,
+    pub stride: usize,
+}
+
+impl ConvShape {
+    pub fn output_width(&self) -> usize {
+        // 'same' padding.
+        self.w.div_ceil(self.stride)
+    }
+
+    /// MACs for the whole layer (out_pixels × K²·D·N).
+    pub fn total_macs(&self) -> u64 {
+        let ow = self.output_width() as u64;
+        ow * ow * (self.k * self.k * self.d * self.n) as u64
+    }
+}
+
+/// The physical mapping plan for one conv layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvMapping {
+    pub shape: ConvShape,
+    /// K² kernel-position submatrices.
+    pub submatrices: usize,
+    /// Tiles per submatrix: (row blocks over D, word blocks over N).
+    pub d_tiles: usize,
+    pub n_tiles: usize,
+    /// Total 128×128 sub-arrays required.
+    pub total_subarrays: usize,
+    /// Row utilization of the last D tile (1.0 = full 128 rows).
+    pub row_utilization: f64,
+    /// Word utilization of the last N tile.
+    pub word_utilization: f64,
+}
+
+impl ConvMapping {
+    pub fn plan(shape: ConvShape) -> ConvMapping {
+        let d_tiles = shape.d.div_ceil(ARRAY_ROWS);
+        let n_tiles = shape.n.div_ceil(ARRAY_WORDS);
+        let submatrices = shape.k * shape.k;
+        let total = submatrices * d_tiles * n_tiles;
+        let last_rows = shape.d - (d_tiles - 1) * ARRAY_ROWS;
+        let last_words = shape.n - (n_tiles - 1) * ARRAY_WORDS;
+        ConvMapping {
+            shape,
+            submatrices,
+            d_tiles,
+            n_tiles,
+            total_subarrays: total,
+            row_utilization: last_rows as f64 / ARRAY_ROWS as f64,
+            word_utilization: last_words as f64 / ARRAY_WORDS as f64,
+        }
+    }
+
+    /// Mean utilization of allocated cells (drives Fig. 14's efficiency
+    /// scaling: bigger K/D/N fill the arrays better).
+    pub fn mean_utilization(&self) -> f64 {
+        let row_u =
+            ((self.d_tiles - 1) as f64 + self.row_utilization) / self.d_tiles as f64;
+        let word_u =
+            ((self.n_tiles - 1) as f64 + self.word_utilization) / self.n_tiles as f64;
+        row_u * word_u
+    }
+
+    /// Input pixels freshly fetched per output step (after IFM reuse):
+    /// sliding by `stride` reuses K·(K−stride) of the K² window pixels.
+    pub fn fresh_inputs_per_step(&self) -> usize {
+        let k = self.shape.k;
+        let s = self.shape.stride.min(k);
+        k * s
+    }
+
+    /// Reuse factor: fraction of window inputs served by neighbor
+    /// forwarding instead of refetch.
+    pub fn reuse_fraction(&self) -> f64 {
+        let k2 = (self.shape.k * self.shape.k) as f64;
+        1.0 - self.fresh_inputs_per_step() as f64 / k2
+    }
+
+    /// Full-array MAC invocations to produce the whole output feature map
+    /// (each invocation covers all N word columns of one tile for one
+    /// output pixel's one kernel position).
+    pub fn mac_invocations(&self) -> u64 {
+        let ow = self.shape.output_width() as u64;
+        ow * ow * (self.submatrices * self.d_tiles * self.n_tiles) as u64
+    }
+
+    /// For output pixel (oy, ox) and kernel position (ky, kx), the input
+    /// pixel coordinate that feeds the submatrix — None if padding.
+    pub fn input_coord(
+        &self,
+        oy: usize,
+        ox: usize,
+        ky: usize,
+        kx: usize,
+    ) -> Option<(usize, usize)> {
+        let k = self.shape.k as isize;
+        let pad = (k - 1) / 2;
+        let iy = oy as isize * self.shape.stride as isize + ky as isize - pad;
+        let ix = ox as isize * self.shape.stride as isize + kx as isize - pad;
+        if iy < 0 || ix < 0 || iy >= self.shape.w as isize || ix >= self.shape.w as isize {
+            None
+        } else {
+            Some((iy as usize, ix as usize))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape3x3() -> ConvShape {
+        ConvShape { k: 3, d: 64, n: 128, w: 16, stride: 1 }
+    }
+
+    #[test]
+    fn plan_counts_tiles() {
+        let m = ConvMapping::plan(shape3x3());
+        assert_eq!(m.submatrices, 9);
+        assert_eq!(m.d_tiles, 1);
+        assert_eq!(m.n_tiles, 1);
+        assert_eq!(m.total_subarrays, 9);
+        assert!((m.row_utilization - 0.5).abs() < 1e-12);
+        assert!((m.word_utilization - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_depth_splits_rows() {
+        let m = ConvMapping::plan(ConvShape { k: 3, d: 300, n: 64, w: 8, stride: 1 });
+        assert_eq!(m.d_tiles, 3);
+        assert!((m.row_utilization - 44.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_improves_with_depth() {
+        // Fig. 14(b): larger D ⇒ better utilization ⇒ better efficiency.
+        let u32_ = ConvMapping::plan(ConvShape { k: 3, d: 32, n: 128, w: 8, stride: 1 })
+            .mean_utilization();
+        let u128 = ConvMapping::plan(ConvShape { k: 3, d: 128, n: 128, w: 8, stride: 1 })
+            .mean_utilization();
+        assert!(u128 > u32_, "{u128} !> {u32_}");
+    }
+
+    #[test]
+    fn ifm_reuse_fraction() {
+        let m = ConvMapping::plan(shape3x3());
+        // stride 1, K=3: fresh 3 of 9 ⇒ 2/3 reused.
+        assert_eq!(m.fresh_inputs_per_step(), 3);
+        assert!((m.reuse_fraction() - 2.0 / 3.0).abs() < 1e-12);
+        let m2 = ConvMapping::plan(ConvShape { k: 3, d: 64, n: 64, w: 16, stride: 3 });
+        assert_eq!(m2.reuse_fraction(), 0.0, "stride = K ⇒ no reuse");
+    }
+
+    #[test]
+    fn same_padding_coords() {
+        let m = ConvMapping::plan(shape3x3());
+        // Center kernel position maps output (0,0) to input (0,0).
+        assert_eq!(m.input_coord(0, 0, 1, 1), Some((0, 0)));
+        // Top-left kernel position at output (0,0) reads padding.
+        assert_eq!(m.input_coord(0, 0, 0, 0), None);
+        // Interior is in-bounds.
+        assert_eq!(m.input_coord(5, 5, 0, 0), Some((4, 4)));
+    }
+
+    #[test]
+    fn output_width_same_padding() {
+        assert_eq!(ConvShape { k: 3, d: 1, n: 1, w: 16, stride: 1 }.output_width(), 16);
+        assert_eq!(ConvShape { k: 3, d: 1, n: 1, w: 16, stride: 2 }.output_width(), 8);
+        assert_eq!(ConvShape { k: 3, d: 1, n: 1, w: 15, stride: 2 }.output_width(), 8);
+    }
+
+    #[test]
+    fn total_macs() {
+        let s = ConvShape { k: 3, d: 16, n: 32, w: 8, stride: 1 };
+        assert_eq!(s.total_macs(), 64 * (9 * 16 * 32) as u64);
+    }
+}

@@ -1,0 +1,109 @@
+//! Digital periphery (§IV-B end): shift-and-add units, the
+//! positive/negative-bank subtractor, and output registers — "these digital
+//! operations can be implemented outside the cache array".
+
+use super::bit_serial::BitSerialSchedule;
+
+/// Shift-add recombination of per-(plane, nibble) dequantized partial sums.
+/// `partials[a][n]` is the ADC-estimated MAC for activation plane `a` and
+/// weight nibble `n`.
+pub fn shift_add(schedule: &BitSerialSchedule, partials: &[Vec<f64>]) -> f64 {
+    assert_eq!(partials.len(), schedule.act_bits as usize);
+    partials
+        .iter()
+        .enumerate()
+        .map(|(a, nibbles)| {
+            assert_eq!(nibbles.len(), schedule.weight_nibbles as usize);
+            nibbles
+                .iter()
+                .enumerate()
+                .map(|(n, v)| v * (1u64 << schedule.shift_for(a as u32, n as u32)) as f64)
+                .sum::<f64>()
+        })
+        .sum()
+}
+
+/// Positive/negative bank subtraction (§IV-C).
+pub fn subtract_banks(pos: f64, neg: f64) -> f64 {
+    pos - neg
+}
+
+/// Saturating output register with configurable width (the accumulators
+/// downstream of the subtractor; paper reports 6-bit output precision per
+/// conversion but wider accumulation).
+#[derive(Clone, Copy, Debug)]
+pub struct OutputRegister {
+    pub bits: u32,
+    pub value: i64,
+}
+
+impl OutputRegister {
+    pub fn new(bits: u32) -> OutputRegister {
+        OutputRegister { bits, value: 0 }
+    }
+
+    pub fn max(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    pub fn min(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Accumulate with saturation; returns the post-saturation value.
+    pub fn accumulate(&mut self, x: i64) -> i64 {
+        self.value = (self.value + x).clamp(self.min(), self.max());
+        self.value
+    }
+
+    pub fn reset(&mut self) {
+        self.value = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shift_add_4x4() {
+        let s = BitSerialSchedule::default_4x4();
+        // Partial per plane = 1.0 ⇒ result = 1+2+4+8 = 15.
+        let partials = vec![vec![1.0]; 4];
+        assert_eq!(shift_add(&s, &partials), 15.0);
+    }
+
+    #[test]
+    fn shift_add_8bit_weights() {
+        let s = BitSerialSchedule::new(2, 8);
+        // plane 0: nibbles (low=3, high=1) ⇒ 3 + 16; plane 1: (0,0) ⇒ ×2 of 0.
+        let partials = vec![vec![3.0, 1.0], vec![0.0, 0.0]];
+        assert_eq!(shift_add(&s, &partials), 3.0 + 16.0);
+    }
+
+    #[test]
+    fn bank_subtraction() {
+        assert_eq!(subtract_banks(10.0, 4.0), 6.0);
+        assert_eq!(subtract_banks(4.0, 10.0), -6.0);
+    }
+
+    #[test]
+    fn register_saturates_both_ways() {
+        let mut r = OutputRegister::new(8);
+        assert_eq!(r.max(), 127);
+        r.accumulate(100);
+        assert_eq!(r.accumulate(100), 127);
+        r.reset();
+        r.accumulate(-200);
+        assert_eq!(r.value, -128);
+    }
+
+    #[test]
+    fn register_accumulates_exactly_in_range() {
+        let mut r = OutputRegister::new(16);
+        for _ in 0..100 {
+            r.accumulate(10);
+        }
+        assert_eq!(r.value, 1000);
+    }
+}

@@ -1,0 +1,142 @@
+//! Network placement: assign every conv/fc layer's weight tiles to
+//! physical (bank, sub-array) slots across the cache (consumed by the
+//! coordinator's scheduler).
+//!
+//! Positive and negative weight banks get separate sub-arrays (§IV-C), so
+//! each logical tile occupies two physical arrays.
+
+use super::conv_mapper::{ConvMapping, ConvShape};
+
+/// One placed tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilePlacement {
+    pub layer: usize,
+    /// Kernel-position submatrix index (ky*K + kx); 0 for FC.
+    pub submatrix: usize,
+    pub d_tile: usize,
+    pub n_tile: usize,
+    /// Physical slot for the positive bank.
+    pub pos_slot: (usize, usize),
+    /// Physical slot for the negative bank.
+    pub neg_slot: (usize, usize),
+}
+
+/// The whole network's placement.
+#[derive(Clone, Debug)]
+pub struct NetworkLayout {
+    pub placements: Vec<TilePlacement>,
+    pub banks: usize,
+    pub subarrays_per_bank: usize,
+    /// Slots consumed (2 per logical tile).
+    pub slots_used: usize,
+}
+
+impl NetworkLayout {
+    /// Round-robin placement of all layers' tiles over the available slots.
+    /// Errors (None) if capacity is insufficient.
+    pub fn place(
+        layers: &[ConvShape],
+        banks: usize,
+        subarrays_per_bank: usize,
+    ) -> Option<NetworkLayout> {
+        let capacity = banks * subarrays_per_bank;
+        let mut placements = Vec::new();
+        let mut next = 0usize;
+        let alloc = |next: &mut usize| -> Option<(usize, usize)> {
+            if *next >= capacity {
+                return None;
+            }
+            let slot = (*next / subarrays_per_bank, *next % subarrays_per_bank);
+            *next += 1;
+            Some(slot)
+        };
+        for (li, shape) in layers.iter().enumerate() {
+            let m = ConvMapping::plan(*shape);
+            for sm in 0..m.submatrices {
+                for dt in 0..m.d_tiles {
+                    for nt in 0..m.n_tiles {
+                        let pos = alloc(&mut next)?;
+                        let neg = alloc(&mut next)?;
+                        placements.push(TilePlacement {
+                            layer: li,
+                            submatrix: sm,
+                            d_tile: dt,
+                            n_tile: nt,
+                            pos_slot: pos,
+                            neg_slot: neg,
+                        });
+                    }
+                }
+            }
+        }
+        Some(NetworkLayout {
+            placements,
+            banks,
+            subarrays_per_bank,
+            slots_used: next,
+        })
+    }
+
+    /// Tiles belonging to one layer.
+    pub fn layer_tiles(&self, layer: usize) -> Vec<&TilePlacement> {
+        self.placements.iter().filter(|p| p.layer == layer).collect()
+    }
+
+    /// Fraction of available slots used.
+    pub fn occupancy(&self) -> f64 {
+        self.slots_used as f64 / (self.banks * self.subarrays_per_bank) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_net() -> Vec<ConvShape> {
+        vec![
+            ConvShape { k: 3, d: 16, n: 16, w: 16, stride: 1 },
+            ConvShape { k: 3, d: 16, n: 32, w: 16, stride: 2 },
+            ConvShape { k: 1, d: 32, n: 10, w: 1, stride: 1 }, // FC as 1×1
+        ]
+    }
+
+    #[test]
+    fn placement_covers_all_tiles() {
+        let layers = small_net();
+        let l = NetworkLayout::place(&layers, 80, 4).unwrap();
+        // 9 + 9 + 1 = 19 logical tiles, ×2 banks.
+        assert_eq!(l.placements.len(), 19);
+        assert_eq!(l.slots_used, 38);
+        assert_eq!(l.layer_tiles(0).len(), 9);
+        assert_eq!(l.layer_tiles(2).len(), 1);
+    }
+
+    #[test]
+    fn pos_neg_slots_distinct() {
+        let l = NetworkLayout::place(&small_net(), 80, 4).unwrap();
+        for p in &l.placements {
+            assert_ne!(p.pos_slot, p.neg_slot);
+        }
+    }
+
+    #[test]
+    fn no_slot_double_booked() {
+        let l = NetworkLayout::place(&small_net(), 80, 4).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for p in &l.placements {
+            assert!(seen.insert(p.pos_slot));
+            assert!(seen.insert(p.neg_slot));
+        }
+    }
+
+    #[test]
+    fn insufficient_capacity_rejected() {
+        assert!(NetworkLayout::place(&small_net(), 2, 4).is_none());
+    }
+
+    #[test]
+    fn occupancy_fraction() {
+        let l = NetworkLayout::place(&small_net(), 80, 4).unwrap();
+        assert!((l.occupancy() - 38.0 / 320.0).abs() < 1e-12);
+    }
+}

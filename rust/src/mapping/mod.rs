@@ -1,0 +1,20 @@
+//! CNN → 6T-2R array mapping (§IV-C, Fig. 7).
+//!
+//! * [`conv_mapper`] — the IFM-reuse mapping of Peng et al. [33]: a
+//!   K×K×D×N kernel becomes K² submatrices of shape [D, N], each tiled
+//!   onto 128×128 sub-array banks; input pixels stream along wordlines and
+//!   are reused by neighboring banks as the window slides.
+//! * [`bit_serial`] — the multi-bit schedule: activation bit-planes ×
+//!   2 powerline sides × weight nibbles, with conversion counts/latency.
+//! * [`digital`] — the digital periphery: shift-add recombination,
+//!   positive/negative bank subtraction, output registers.
+//! * [`layout`] — placement of a whole network's tiles onto the cache's
+//!   banks/sub-arrays (consumed by the coordinator's scheduler).
+
+pub mod bit_serial;
+pub mod conv_mapper;
+pub mod digital;
+pub mod layout;
+
+pub use conv_mapper::{ConvMapping, ConvShape};
+pub use layout::{NetworkLayout, TilePlacement};

@@ -1,0 +1,104 @@
+//! dataset.bin loader (format written by `python/compile/data.py`):
+//! u32 magic 'NVMC', u32 n, u32 h, u32 w, u32 c, f32 images, u8 labels.
+
+use std::path::Path;
+
+use crate::{Error, Result};
+
+use super::tensor::Tensor;
+
+const MAGIC: u32 = 0x4E56_4D43;
+
+/// Loaded evaluation dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Tensor,
+    pub labels: Vec<u8>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+fn read_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let buf = std::fs::read(path)?;
+        if buf.len() < 20 || read_u32(&buf, 0) != MAGIC {
+            return Err(Error::Artifact(format!("{path:?}: bad dataset magic")));
+        }
+        let n = read_u32(&buf, 4) as usize;
+        let h = read_u32(&buf, 8) as usize;
+        let w = read_u32(&buf, 12) as usize;
+        let c = read_u32(&buf, 16) as usize;
+        let img_bytes = n * h * w * c * 4;
+        let expected = 20 + img_bytes + n;
+        if buf.len() != expected {
+            return Err(Error::Artifact(format!(
+                "{path:?}: size {} != expected {expected}",
+                buf.len()
+            )));
+        }
+        let mut data = Vec::with_capacity(n * h * w * c);
+        for i in 0..(n * h * w * c) {
+            let off = 20 + i * 4;
+            data.push(f32::from_le_bytes(buf[off..off + 4].try_into().unwrap()));
+        }
+        let labels = buf[20 + img_bytes..].to_vec();
+        Ok(Dataset { images: Tensor::from_vec(&[n, h, w, c], data), labels, n, h, w, c })
+    }
+
+    /// Slice a batch [start, start+len) as its own tensor.
+    pub fn batch(&self, start: usize, len: usize) -> (Tensor, &[u8]) {
+        let end = (start + len).min(self.n);
+        let stride = self.h * self.w * self.c;
+        let data = self.images.data[start * stride..end * stride].to_vec();
+        (
+            Tensor::from_vec(&[end - start, self.h, self.w, self.c], data),
+            &self.labels[start..end],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tiny(path: &Path) {
+        let n = 3usize;
+        let (h, w, c) = (2usize, 2usize, 1usize);
+        let mut buf = Vec::new();
+        for v in [MAGIC, n as u32, h as u32, w as u32, c as u32] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in 0..(n * h * w * c) {
+            buf.extend_from_slice(&(i as f32 * 0.1).to_le_bytes());
+        }
+        buf.extend_from_slice(&[0u8, 1, 2]);
+        std::fs::write(path, buf).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = std::env::temp_dir().join("nvm_dataset_test.bin");
+        write_tiny(&path);
+        let ds = Dataset::load(&path).unwrap();
+        assert_eq!(ds.n, 3);
+        assert_eq!(ds.labels, vec![0, 1, 2]);
+        assert!((ds.images.data[5] - 0.5).abs() < 1e-6);
+        let (batch, labels) = ds.batch(1, 2);
+        assert_eq!(batch.shape, vec![2, 2, 2, 1]);
+        assert_eq!(labels, &[1, 2]);
+        assert!((batch.data[0] - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("nvm_dataset_bad.bin");
+        std::fs::write(&path, [0u8; 24]).unwrap();
+        assert!(Dataset::load(&path).is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! Inference layers, matched operation-for-operation to
+//! `python/compile/model.py`.
+
+use crate::pim::PimEngine;
+use crate::util::rng::Pcg64;
+
+use super::tensor::Tensor;
+
+/// XLA/TF 'SAME' padding split: total = max((ow−1)·s + k − w, 0),
+/// lo = total/2, hi = total − lo.
+pub fn same_padding(w: usize, k: usize, stride: usize) -> (usize, usize, usize) {
+    let ow = w.div_ceil(stride);
+    let total = ((ow - 1) * stride + k).saturating_sub(w);
+    (ow, total / 2, total - total / 2)
+}
+
+/// im2col: NHWC input → [N·OH·OW, C·K·K] patches with channel-major
+/// feature order (c·K·K + ky·K + kx), matching
+/// `jax.lax.conv_general_dilated_patches` as used in model.py.
+pub fn im2col(x: &Tensor, k: usize, stride: usize) -> (Tensor, usize, usize) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, pad_lo_h, _) = same_padding(h, k, stride);
+    let (ow, pad_lo_w, _) = same_padding(w, k, stride);
+    let kdim = c * k * k;
+    let mut out = Tensor::zeros(&[n * oh * ow, kdim]);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (ni * oh + oy) * ow + ox;
+                let base = row * kdim;
+                for ci in 0..c {
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad_lo_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad_lo_w as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            out.data[base + ci * k * k + ky * k + kx] =
+                                x.at4(ni, iy as usize, ix as usize, ci);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Reorder HWIO conv weights to the im2col layout [C·K·K, OC].
+pub fn weights_to_matrix(w_hwio: &Tensor) -> Tensor {
+    let (kh, kw, cin, cout) = (w_hwio.shape[0], w_hwio.shape[1], w_hwio.shape[2], w_hwio.shape[3]);
+    let mut m = Tensor::zeros(&[cin * kh * kw, cout]);
+    for ky in 0..kh {
+        for kx in 0..kw {
+            for ci in 0..cin {
+                for co in 0..cout {
+                    let src = ((ky * kw + kx) * cin + ci) * cout + co;
+                    let dst = (ci * kh * kw + ky * kw + kx) * cout + co;
+                    m.data[dst] = w_hwio.data[src];
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Dense fp32 matmul: [m,k] × [k,n] → [m,n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    Tensor::from_vec(&[m, n], PimEngine::exact_matmul(&a.data, m, k, &b.data, n))
+}
+
+/// Convolution. `engine = None` ⇒ dense fp32; otherwise the quantized PIM
+/// pipeline (with optional per-conversion noise RNG).
+pub fn conv2d(
+    x: &Tensor,
+    w_hwio: &Tensor,
+    stride: usize,
+    engine: Option<&PimEngine>,
+    rng: Option<&mut Pcg64>,
+) -> Tensor {
+    let k = w_hwio.shape[0];
+    let cout = w_hwio.shape[3];
+    let n = x.shape[0];
+    let (patches, oh, ow) = im2col(x, k, stride);
+    let wm = weights_to_matrix(w_hwio);
+    let out2d = match engine {
+        None => matmul(&patches, &wm),
+        Some(eng) => Tensor::from_vec(
+            &[patches.shape[0], cout],
+            eng.pim_matmul(
+                &patches.data,
+                patches.shape[0],
+                patches.shape[1],
+                &wm.data,
+                cout,
+                rng,
+            ),
+        ),
+    };
+    Tensor::from_vec(&[n, oh, ow, cout], out2d.data)
+}
+
+/// GroupNorm over NHWC with `groups = min(8, c)` (matches model.py).
+pub fn group_norm(x: &Tensor, gamma: &[f32], beta: &[f32], eps: f32) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let g = 8.min(c);
+    assert_eq!(c % g, 0, "channels {c} not divisible by groups {g}");
+    let cg = c / g;
+    let mut out = x.clone();
+    for ni in 0..n {
+        for gi in 0..g {
+            // Mean/var over (h, w, channels-in-group).
+            let mut sum = 0.0f64;
+            let mut sq = 0.0f64;
+            for hi in 0..h {
+                for wi in 0..w {
+                    for cj in 0..cg {
+                        let v = x.at4(ni, hi, wi, gi * cg + cj) as f64;
+                        sum += v;
+                        sq += v * v;
+                    }
+                }
+            }
+            let cnt = (h * w * cg) as f64;
+            let mean = sum / cnt;
+            let var = (sq / cnt - mean * mean).max(0.0);
+            let inv = 1.0 / (var + eps as f64).sqrt();
+            for hi in 0..h {
+                for wi in 0..w {
+                    for cj in 0..cg {
+                        let ci = gi * cg + cj;
+                        let v = out.at4_mut(ni, hi, wi, ci);
+                        *v = (((*v as f64 - mean) * inv) as f32) * gamma[ci] + beta[ci];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool NHWC → [N, C].
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, c]);
+    let scale = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        for hi in 0..h {
+            for wi in 0..w {
+                for ci in 0..c {
+                    out.data[ni * c + ci] += x.at4(ni, hi, wi, ci) * scale;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The §V-E Table II ADC emulation, applied per layer output (mirrors
+/// `model.py::make_adc_emulate` exactly): activations are mapped into the
+/// 6-bit *signed* range, pushed through the continuous nonlinear transfer,
+/// rounded, and inversely mapped; optional Gaussian code noise.
+pub fn adc_emulate(
+    y: &Tensor,
+    transfer: &crate::pim::TransferModel,
+    sigma_codes: Option<f64>,
+    rng: Option<&mut Pcg64>,
+) -> Tensor {
+    const HALF: f64 = 31.0; // ADC_SIGNED_MAX
+    let fullscale = crate::pim::transfer::MAC_FULLSCALE as f64;
+    let max = y.data.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-6) as f64;
+    let s = max / HALF;
+    let mut out = y.clone();
+    let mut rng = rng;
+    for v in out.data.iter_mut() {
+        let u = *v as f64 / s;
+        let mac = u.abs() * (fullscale / HALF);
+        let u_nl = u.signum() * transfer.transfer_continuous(mac) * (HALF / fullscale);
+        let mut code = u_nl.round().clamp(-HALF - 1.0, HALF);
+        if let (Some(sig), Some(r)) = (sigma_codes, rng.as_deref_mut()) {
+            code += r.normal(0.0, sig);
+        }
+        *v = (code * s) as f32;
+    }
+    out
+}
+
+/// Linear layer [N, K] × [K, C] + bias, optionally through the PIM engine
+/// (inputs passed through ReLU first in the PIM path, matching model.py).
+pub fn linear(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    engine: Option<&PimEngine>,
+    rng: Option<&mut Pcg64>,
+) -> Tensor {
+    let (n, k) = (x.shape[0], x.shape[1]);
+    let c = w.shape[1];
+    let mut out = match engine {
+        None => matmul(x, w),
+        Some(eng) => {
+            let relu_x: Vec<f32> = x.data.iter().map(|v| v.max(0.0)).collect();
+            Tensor::from_vec(&[n, c], eng.pim_matmul(&relu_x, n, k, &w.data, c, rng))
+        }
+    };
+    for ni in 0..n {
+        for ci in 0..c {
+            out.data[ni * c + ci] += bias[ci];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_rules() {
+        assert_eq!(same_padding(16, 3, 1), (16, 1, 1));
+        assert_eq!(same_padding(16, 3, 2), (8, 0, 1));
+        assert_eq!(same_padding(16, 1, 1), (16, 0, 0));
+        assert_eq!(same_padding(8, 3, 2), (4, 0, 1));
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1×1 identity conv preserves the input.
+        let x = Tensor::from_vec(&[1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let mut w = Tensor::zeros(&[1, 1, 2, 2]);
+        w.data[0] = 1.0; // (0,0,c0,o0)
+        w.data[3] = 1.0; // (0,0,c1,o1)
+        let y = conv2d(&x, &w, 1, None, None);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_3x3_manual_check() {
+        // Single channel 3×3 input, all-ones 3×3 kernel: center output is
+        // the full sum; corners see 4 values (SAME zero padding).
+        let x = Tensor::from_vec(&[1, 3, 3, 1], (1..=9).map(|i| i as f32).collect());
+        let w = Tensor::from_vec(&[3, 3, 1, 1], vec![1.0; 9]);
+        let y = conv2d(&x, &w, 1, None, None);
+        assert_eq!(y.shape, vec![1, 3, 3, 1]);
+        assert_eq!(y.at4(0, 1, 1, 0), 45.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 1.0 + 2.0 + 4.0 + 5.0);
+    }
+
+    #[test]
+    fn conv_stride2_shape() {
+        let x = Tensor::zeros(&[2, 16, 16, 3]);
+        let w = Tensor::zeros(&[3, 3, 3, 8]);
+        let y = conv2d(&x, &w, 2, None, None);
+        assert_eq!(y.shape, vec![2, 8, 8, 8]);
+    }
+
+    #[test]
+    fn group_norm_normalizes() {
+        let mut x = Tensor::zeros(&[1, 2, 2, 8]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let y = group_norm(&x, &[1.0; 8], &[0.0; 8], 1e-5);
+        // Each group (1 channel here, g=8) has zero mean across h,w.
+        for c in 0..8 {
+            let vals: Vec<f32> = (0..2)
+                .flat_map(|h| (0..2).map(move |w| (h, w)))
+                .map(|(h, w)| y.at4(0, h, w, c))
+                .collect();
+            let mean: f32 = vals.iter().sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "c={c} mean={mean}");
+            let var: f32 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!((var - 1.0).abs() < 1e-2, "c={c} var={var}");
+        }
+    }
+
+    #[test]
+    fn gap_averages() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = global_avg_pool(&x);
+        assert_eq!(y.data, vec![2.5]);
+    }
+
+    #[test]
+    fn linear_with_bias() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = linear(&x, &w, &[10.0, 20.0], None, None);
+        assert_eq!(y.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn pim_conv_close_to_dense() {
+        let mut rng = Pcg64::seeded(3);
+        let x = Tensor::from_vec(
+            &[1, 8, 8, 4],
+            (0..256).map(|_| rng.range(0.0, 1.0) as f32).collect(),
+        );
+        let w = Tensor::from_vec(
+            &[3, 3, 4, 8],
+            (0..288).map(|_| rng.range(-0.3, 0.3) as f32).collect(),
+        );
+        let dense = conv2d(&x, &w, 1, None, None);
+        let eng = PimEngine::tt();
+        let pim = conv2d(&x, &w, 1, Some(&eng), None);
+        assert_eq!(dense.shape, pim.shape);
+        let scale = dense.data.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        let err = dense.max_abs_diff(&pim);
+        assert!(err < 0.5 * scale, "err {err} scale {scale}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Rust-native inference stack.
+//!
+//! Mirrors `python/compile/model.py` exactly (same topology, GroupNorm,
+//! padding rules, quantization): the fp32 path is the digital baseline, and
+//! the PIM path routes every conv/fc matmul through
+//! [`crate::pim::PimEngine`] — so Table II can be regenerated natively and
+//! cross-checked against the PJRT-executed JAX artifacts.
+//!
+//! * [`tensor`] — minimal NHWC tensor.
+//! * [`layers`] — conv (im2col), GroupNorm, ReLU, global-avg-pool, linear.
+//! * [`resnet`] — the ResNet-18-topology network + weights.bin loading.
+//! * [`dataset`] — dataset.bin loading.
+
+pub mod dataset;
+pub mod layers;
+pub mod resnet;
+pub mod tensor;
+
+pub use dataset::Dataset;
+pub use resnet::{ForwardMode, ResNet};
+pub use tensor::Tensor;

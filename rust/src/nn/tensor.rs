@@ -1,0 +1,101 @@
+//! Minimal NHWC tensor.
+
+/// Dense f32 tensor, row-major over its shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape {shape:?}");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// NHWC index.
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        let (_, hh, ww, cc) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * hh + h) * ww + w) * cc + c]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
+        let (hh, ww, cc) = (self.shape[1], self.shape[2], self.shape[3]);
+        &mut self.data[((n * hh + h) * ww + w) * cc + c]
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for x in self.data.iter_mut() {
+            *x = f(*x);
+        }
+        self
+    }
+
+    /// Elementwise add (shapes must match).
+    pub fn add(mut self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        self
+    }
+
+    pub fn relu(self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    /// Max |a−b| against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_nhwc() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        *t.at4_mut(1, 2, 3, 4) = 7.0;
+        assert_eq!(t.at4(1, 2, 3, 4), 7.0);
+        assert_eq!(t.data[t.len() - 1], 7.0);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let a = Tensor::from_vec(&[1, 1, 1, 2], vec![-1.0, 2.0]);
+        let b = Tensor::from_vec(&[1, 1, 1, 2], vec![0.5, 0.5]);
+        let r = a.relu().add(&b);
+        assert_eq!(r.data, vec![0.5, 2.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_rejected() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,194 @@
+//! Table I: comparison with prior PIM designs.
+//!
+//! Prior-work rows are constants transcribed from the paper's Table I
+//! (they are citations, not things we can re-measure); the "This Work" row
+//! is *computed* from [`super::model::MacroModel`] so the bench verifies
+//! our model regenerates the paper's own numbers.
+
+use super::model::MacroModel;
+
+/// One Table I row.
+#[derive(Clone, Debug)]
+pub struct ComparisonRow {
+    pub name: &'static str,
+    pub technology: &'static str,
+    pub array_size: &'static str,
+    pub domain: &'static str,
+    pub memory_type: &'static str,
+    pub cache_retention: bool,
+    pub accuracy_pct: Option<f64>,
+    pub in_w_precision: (u32, u32),
+    pub output_precision: &'static str,
+    pub throughput_gops: f64,
+    pub efficiency_tops_w: f64,
+    pub norm_throughput_tops: f64,
+    pub norm_efficiency_tops_w: f64,
+    pub norm_density_tops_mm2: f64,
+}
+
+/// The prior-work rows (Table I constants).
+pub fn prior_work() -> Vec<ComparisonRow> {
+    vec![
+        ComparisonRow {
+            name: "TCASII'24 [35]",
+            technology: "180nm CMOS",
+            array_size: "8Kb",
+            domain: "Time",
+            memory_type: "6T SRAM + 9T",
+            cache_retention: false,
+            accuracy_pct: Some(86.1),
+            in_w_precision: (8, 8),
+            output_precision: "14-16 (TDC)",
+            throughput_gops: 0.07,
+            efficiency_tops_w: 0.291,
+            norm_throughput_tops: 0.2,
+            norm_efficiency_tops_w: 768.7,
+            norm_density_tops_mm2: 0.9,
+        },
+        ComparisonRow {
+            name: "ISSCC'23 [36]",
+            technology: "28nm FDSOI",
+            array_size: "16Kb",
+            domain: "Charge",
+            memory_type: "10T1C SRAM",
+            cache_retention: false,
+            accuracy_pct: None,
+            in_w_precision: (8, 8),
+            output_precision: "8",
+            throughput_gops: 7.65,
+            efficiency_tops_w: 16.02,
+            norm_throughput_tops: 0.49,
+            norm_efficiency_tops_w: 1025.2,
+            norm_density_tops_mm2: 1.19,
+        },
+        ComparisonRow {
+            name: "ISSCC'22 [37]",
+            technology: "22nm FDSOI",
+            array_size: "256Kb",
+            domain: "Current",
+            memory_type: "1T1R RRAM",
+            cache_retention: false,
+            accuracy_pct: Some(91.74),
+            in_w_precision: (8, 8),
+            output_precision: "19",
+            throughput_gops: 142.2,
+            efficiency_tops_w: 0.96,
+            norm_throughput_tops: 5.1,
+            norm_efficiency_tops_w: 61.8,
+            norm_density_tops_mm2: 7.9,
+        },
+        ComparisonRow {
+            name: "TCASI'23 [38]",
+            technology: "65nm CMOS",
+            array_size: "101Kb",
+            domain: "Charge",
+            memory_type: "10T1C SRAM",
+            cache_retention: false,
+            accuracy_pct: Some(88.6),
+            in_w_precision: (8, 8),
+            output_precision: "8",
+            throughput_gops: 12.8,
+            efficiency_tops_w: 10.3,
+            norm_throughput_tops: 3.28,
+            norm_efficiency_tops_w: 659.2,
+            norm_density_tops_mm2: 1.52,
+        },
+        ComparisonRow {
+            name: "TCASI'23 [39]",
+            technology: "28nm FDSOI",
+            array_size: "16Kb",
+            domain: "Charge",
+            memory_type: "6T SRAM",
+            cache_retention: false,
+            accuracy_pct: Some(85.07),
+            in_w_precision: (4, 4),
+            output_precision: "4",
+            throughput_gops: 12.8,
+            efficiency_tops_w: 16.1,
+            norm_throughput_tops: 0.2,
+            norm_efficiency_tops_w: 257.6,
+            norm_density_tops_mm2: 3.59,
+        },
+        ComparisonRow {
+            name: "JSSCC'24 [40]",
+            technology: "22nm FDSOI",
+            array_size: "256Kb",
+            domain: "Current",
+            memory_type: "1T1R MRAM",
+            cache_retention: false,
+            accuracy_pct: Some(90.25),
+            in_w_precision: (4, 4),
+            output_precision: "6",
+            throughput_gops: 54.3,
+            efficiency_tops_w: 5.26,
+            norm_throughput_tops: 0.87,
+            norm_efficiency_tops_w: 84.2,
+            norm_density_tops_mm2: 10.9,
+        },
+    ]
+}
+
+/// The computed "This Work" row. `accuracy_pct` comes from the measured
+/// Table II run (passed in from the artifact manifest when available).
+pub fn this_work(accuracy_pct: Option<f64>) -> ComparisonRow {
+    let h = MacroModel::default().headline();
+    ComparisonRow {
+        name: "This Work",
+        technology: "22nm FDSOI (modeled)",
+        array_size: "64Kb",
+        domain: "Current",
+        memory_type: "6T-2R SRAM+RRAM",
+        cache_retention: true,
+        accuracy_pct,
+        in_w_precision: (4, 4),
+        output_precision: "6",
+        throughput_gops: h.ops_per_s / 1e9,
+        efficiency_tops_w: h.ops_per_w / 1e12,
+        norm_throughput_tops: h.norm_ops_per_s / 1e12,
+        norm_efficiency_tops_w: h.norm_ops_per_w / 1e12,
+        norm_density_tops_mm2: h.norm_tops_per_mm2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn only_this_work_retains_cache_data() {
+        // The paper's qualitative headline: every prior design loses the
+        // cache contents; ours does not.
+        assert!(prior_work().iter().all(|r| !r.cache_retention));
+        assert!(this_work(None).cache_retention);
+    }
+
+    #[test]
+    fn this_work_matches_paper_numbers() {
+        let tw = this_work(Some(91.27));
+        assert!((tw.throughput_gops - 25.6).abs() < 0.1);
+        assert!((tw.norm_throughput_tops - 0.4096).abs() < 0.001);
+        assert!((tw.norm_efficiency_tops_w - 491.78).abs() < 40.0);
+    }
+
+    #[test]
+    fn normalization_rule_consistent() {
+        // Table I note a: normalized = raw × in_bits × w_bits. Row [35] is
+        // additionally technology-scaled to 28 nm by its authors (note b),
+        // so the simple rule does not apply to it.
+        for row in prior_work().iter().filter(|r| !r.name.contains("[35]")) {
+            let (i, w) = row.in_w_precision;
+            let expect = row.throughput_gops * (i * w) as f64 / 1000.0;
+            // Prior rows were normalized by the original authors with
+            // additional tech scaling in some cases — allow slack, but the
+            // order of magnitude must hold.
+            assert!(
+                row.norm_throughput_tops / expect < 8.0
+                    && expect / row.norm_throughput_tops < 8.0,
+                "{}: {} vs {}",
+                row.name,
+                row.norm_throughput_tops,
+                expect
+            );
+        }
+    }
+}

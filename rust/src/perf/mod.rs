@@ -1,0 +1,14 @@
+//! Analytic performance model (§V-D, Table I, Fig. 14).
+//!
+//! * [`model`] — the macro-level throughput/energy/area model, built from
+//!   the per-op costs in [`crate::cell::timing`]; reproduces the paper's
+//!   headline row (25.6 GOPS, 30.73 TOPS/W at 4b/4b; 0.4096 TOPS and
+//!   491.78 TOPS/W normalized to 1 bit; ~0.1 mm² with the ADC ≈70 %) and
+//!   the Fig. 14 scaling trends.
+//! * [`comparison`] — Table I prior-work rows (constants from the cited
+//!   papers) + our computed row.
+
+pub mod comparison;
+pub mod model;
+
+pub use model::MacroModel;

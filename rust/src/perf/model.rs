@@ -1,0 +1,304 @@
+//! The macro performance model.
+//!
+//! Structure (derived in EXPERIMENTS.md E8): one full 4b×4b MAC over a
+//! 128×512 sub-array takes `2·bits` ADC windows of 160 ns (ADC-bound,
+//! §V-D) and costs, per side×plane step:
+//!
+//!   E_step = E_array(active rows) + 128·(E_adc + E_wcc)
+//!
+//! with E_array ∝ active rows. The Fig. 14 trends all fall out of this:
+//! throughput ∝ active rows × word columns per window; efficiency rises as
+//! row/word utilization amortizes the conversion-fixed energy; larger
+//! kernels amortize input streaming through IFM reuse; higher precision
+//! amortizes the fixed per-invocation digital/streaming overhead in the
+//! 1-bit-normalized metrics.
+
+use crate::cell::timing::OpKind;
+use crate::consts::{ARRAY_ROWS, ARRAY_WORDS, T_ADC_CONVERSION};
+use crate::mapping::bit_serial::BitSerialSchedule;
+use crate::mapping::conv_mapper::{ConvMapping, ConvShape};
+
+/// Headline metrics for one macro configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MacroPerf {
+    /// Raw throughput at the configured precision (OPS; MAC = 2 ops).
+    pub ops_per_s: f64,
+    /// Raw power (W).
+    pub power_w: f64,
+    /// Raw efficiency (OPS/W = OPS/J·s).
+    pub ops_per_w: f64,
+    /// Normalized-to-1-bit throughput (OPS · in_bits · w_bits).
+    pub norm_ops_per_s: f64,
+    /// Normalized efficiency.
+    pub norm_ops_per_w: f64,
+    /// Macro area (mm²).
+    pub area_mm2: f64,
+    /// Normalized compute density (TOPS/mm² · precision product · 1e-12).
+    pub norm_tops_per_mm2: f64,
+}
+
+/// The analytic macro model.
+#[derive(Clone, Copy, Debug)]
+pub struct MacroModel {
+    pub act_bits: u32,
+    pub weight_bits: u32,
+    /// Active rows per sub-array invocation (≤128).
+    pub rows: usize,
+    /// Active word columns (≤128).
+    pub words: usize,
+    /// Input-streaming overhead coefficient (per fresh input row per word
+    /// of time relative to the MAC window) — calibrated so the Fig. 14(a)
+    /// K: 3→7 throughput gain lands at ≈1.8× (see fig14 tests).
+    pub io_overhead: f64,
+    /// Fixed per-invocation digital/control energy as a fraction of the
+    /// full-array step energy (amortized by precision, Fig. 14d).
+    pub fixed_invocation_frac: f64,
+}
+
+impl Default for MacroModel {
+    fn default() -> Self {
+        MacroModel {
+            act_bits: 4,
+            weight_bits: 4,
+            rows: ARRAY_ROWS,
+            words: ARRAY_WORDS,
+            io_overhead: 10.5,
+            fixed_invocation_frac: 0.08,
+        }
+    }
+}
+
+/// Area model: §V-D — total macro ≈0.1 mm², ADC ≈70 %.
+pub const AREA_MACRO_MM2: f64 = 0.1;
+pub const AREA_ADC_FRAC: f64 = 0.70;
+
+impl MacroModel {
+    pub fn with_precision(act_bits: u32, weight_bits: u32) -> MacroModel {
+        MacroModel { act_bits, weight_bits, ..Default::default() }
+    }
+
+    /// Energy of one side×plane step with `rows` active rows (J).
+    pub fn step_energy(&self, rows: usize) -> f64 {
+        let e_array_full = OpKind::PimArrayCycle.cost().1;
+        let e_conv = OpKind::AdcConversion.cost().1 + OpKind::WccSample.cost().1;
+        e_array_full * rows as f64 / ARRAY_ROWS as f64 + self.words as f64 * e_conv
+    }
+
+    /// One full multi-bit MAC over the sub-array: (latency s, energy J,
+    /// ops done). Ops = rows × words × 2 (MAC = 2 ops) at the configured
+    /// precision.
+    pub fn full_mac(&self) -> (f64, f64, f64) {
+        let sched = BitSerialSchedule::new(self.act_bits, self.weight_bits);
+        let steps = sched.side_cycles as f64;
+        let latency = steps * T_ADC_CONVERSION;
+        let energy = steps * self.step_energy(self.rows)
+            * (1.0 + self.fixed_invocation_frac / steps * 8.0);
+        let ops = (self.rows * self.words) as f64 * 2.0 / sched.weight_nibbles as f64;
+        (latency, energy, ops)
+    }
+
+    /// Headline metrics (Table I row "This Work" when defaults are used).
+    pub fn headline(&self) -> MacroPerf {
+        let (latency, energy, ops) = self.full_mac();
+        let ops_per_s = ops / latency;
+        let power = energy / latency;
+        let ops_per_w = ops / energy;
+        let precision = (self.act_bits * self.weight_bits) as f64;
+        let norm_t = ops_per_s * precision;
+        let norm_e = ops_per_w * precision;
+        MacroPerf {
+            ops_per_s,
+            power_w: power,
+            ops_per_w,
+            norm_ops_per_s: norm_t,
+            norm_ops_per_w: norm_e,
+            area_mm2: AREA_MACRO_MM2,
+            norm_tops_per_mm2: norm_t / AREA_MACRO_MM2 / 1e12,
+        }
+    }
+
+    /// Energy breakdown fractions (array, adc, wcc, digital).
+    pub fn energy_breakdown(&self) -> (f64, f64, f64, f64) {
+        let e_array = OpKind::PimArrayCycle.cost().1 * self.rows as f64 / ARRAY_ROWS as f64;
+        let e_adc = self.words as f64 * OpKind::AdcConversion.cost().1;
+        let e_wcc = self.words as f64 * OpKind::WccSample.cost().1;
+        let e_dig = (e_array + e_adc + e_wcc) * self.fixed_invocation_frac;
+        let total = e_array + e_adc + e_wcc + e_dig;
+        (e_array / total, e_adc / total, e_wcc / total, e_dig / total)
+    }
+
+    // ------------------------------------------------- Fig. 14 scaling
+
+    /// Fig. 14(a): throughput/efficiency vs kernel size (IFM reuse
+    /// amortizes the input-streaming overhead: fresh inputs per output
+    /// step = K·stride of K² window pixels).
+    pub fn fig14_kernel(&self, k: usize, d: usize) -> (f64, f64) {
+        let shape = ConvShape { k, d, n: self.words, w: 16, stride: 1 };
+        let m = ConvMapping::plan(shape);
+        let (lat, energy, ops) = self.full_mac();
+        // Input streaming stretches the effective window; reuse shrinks it.
+        let fresh_frac = 1.0 - m.reuse_fraction();
+        let t_eff = lat * (1.0 + self.io_overhead * fresh_frac / k as f64);
+        // Input-movement energy per window: dominated by off-array fetch at
+        // small K (this is the memory-wall premise of the paper's §I), and
+        // amortized by IFM reuse at large K. The 20× multiplier on the
+        // fresh fraction is calibrated so 3×3 → 7×7 gives the paper's ≈2×
+        // efficiency gain.
+        let e_io = energy * 20.0 * fresh_frac;
+        (ops / t_eff, ops / (energy + e_io))
+    }
+
+    /// Fig. 14(b): vs input depth D — throughput ∝ active rows, efficiency
+    /// amortizes the conversion-fixed energy over the active rows.
+    pub fn fig14_depth(&self, d: usize) -> (f64, f64) {
+        let tiles = d.div_ceil(ARRAY_ROWS);
+        let sched = BitSerialSchedule::new(self.act_bits, self.weight_bits);
+        let steps = sched.side_cycles as f64;
+        let lat = steps * T_ADC_CONVERSION;
+        // All tiles run in parallel (their conversions overlap): one window
+        // completes D×words MACs.
+        let ops = (d * self.words) as f64 * 2.0 / sched.weight_nibbles as f64;
+        let mut energy = 0.0;
+        let mut rem = d;
+        for _ in 0..tiles {
+            let rows = rem.min(ARRAY_ROWS);
+            energy += steps * self.step_energy(rows);
+            rem -= rows;
+        }
+        (ops / lat, ops / energy)
+    }
+
+    /// Fig. 14(c): vs output features N — throughput ∝ word columns,
+    /// efficiency amortizes per-invocation fixed digital/streaming energy.
+    pub fn fig14_features(&self, n: usize) -> (f64, f64) {
+        let sched = BitSerialSchedule::new(self.act_bits, self.weight_bits);
+        let steps = sched.side_cycles as f64;
+        let lat = steps * T_ADC_CONVERSION;
+        let words_total = n.div_ceil(4); // 4-bit words across tiles
+        let ops = (self.rows * words_total) as f64 * 2.0 / sched.weight_nibbles as f64;
+        let e_conv = OpKind::AdcConversion.cost().1 + OpKind::WccSample.cost().1;
+        let e_array_share =
+            OpKind::PimArrayCycle.cost().1 * (words_total as f64 / ARRAY_WORDS as f64);
+        // Fixed per-invocation overhead does NOT scale with N — this is
+        // what drives the efficiency gain.
+        let e_fixed = self.step_energy(self.rows) * self.fixed_invocation_frac * 8.0;
+        let energy = steps * (e_array_share + words_total as f64 * e_conv) + e_fixed;
+        (ops / lat, ops / energy)
+    }
+
+    /// Fig. 14(d): vs input/weight precision, *normalized-to-1-bit*
+    /// metrics at the multi-sub-array level.
+    ///
+    /// At the macro level alone, 8b/8b is normalized-neutral (4× the
+    /// windows and 2× the word columns exactly cancel the 4× precision
+    /// credit). The figure's gain comes from the *system-level fixed
+    /// overhead* (input streaming across sub-arrays, digital collection)
+    /// that is independent of precision and therefore amortized over p²
+    /// normalized ops — modeled here as a fixed time/energy adder equal to
+    /// `SYS_FIXED_MULT`× the 4b full-MAC cost (documented assumption; the
+    /// paper's axis is unitless).
+    pub fn fig14_precision(&self, bits: u32) -> (f64, f64) {
+        const SYS_FIXED_MULT: f64 = 3.0;
+        let base = MacroModel::default();
+        let (lat4, e4, _) = base.full_mac();
+        let m = MacroModel { act_bits: bits, weight_bits: bits, ..*self };
+        let (lat, energy, ops) = m.full_mac();
+        let p2 = (bits * bits) as f64;
+        let thr = p2 * ops / (lat + SYS_FIXED_MULT * lat4);
+        let eff = p2 * ops / (energy + SYS_FIXED_MULT * e4);
+        (thr, eff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_matches_paper_table1_row() {
+        let h = MacroModel::default().headline();
+        // §V-D / Table I "This Work": 25.6 GOPS, ~30.73 TOPS/W raw;
+        // 0.4096 TOPS and ~491.78 TOPS/W normalized to 1 bit.
+        assert!((h.ops_per_s / 1e9 - 25.6).abs() < 0.01, "GOPS = {}", h.ops_per_s / 1e9);
+        assert!(
+            (h.ops_per_w / 1e12 - 30.73).abs() < 2.5,
+            "TOPS/W = {}",
+            h.ops_per_w / 1e12
+        );
+        assert!((h.norm_ops_per_s / 1e12 - 0.4096).abs() < 1e-4);
+        assert!(
+            (h.norm_ops_per_w / 1e12 - 491.78).abs() < 40.0,
+            "norm TOPS/W = {}",
+            h.norm_ops_per_w / 1e12
+        );
+        // Compute density ≈ 4.1–4.4 TOPS/mm² (paper: 4.37).
+        assert!(h.norm_tops_per_mm2 > 3.8 && h.norm_tops_per_mm2 < 4.6);
+    }
+
+    #[test]
+    fn energy_breakdown_array_dominates() {
+        // §V-D: "the 6T-2R array … accounts for approximately 60 % of the
+        // total energy, followed by the ADC and the WCC block".
+        let (array, adc, wcc, _dig) = MacroModel::default().energy_breakdown();
+        assert!((array - 0.60).abs() < 0.08, "array = {array}");
+        assert!(adc < array && adc > wcc, "adc = {adc}, wcc = {wcc}");
+    }
+
+    #[test]
+    fn fig14a_kernel_scaling() {
+        // 3×3 → 7×7: ≈1.8× throughput, ≈2× efficiency (paper numbers).
+        let m = MacroModel::default();
+        let (t3, e3) = m.fig14_kernel(3, 64);
+        let (t7, e7) = m.fig14_kernel(7, 64);
+        let tr = t7 / t3;
+        let er = e7 / e3;
+        assert!(tr > 1.5 && tr < 2.2, "thr ratio = {tr}");
+        assert!(er > 1.6 && er < 2.4, "eff ratio = {er}");
+    }
+
+    #[test]
+    fn fig14b_depth_scaling() {
+        // D: 32 → 256: throughput ≈8×, efficiency more than doubles.
+        let m = MacroModel::default();
+        let (t32, e32) = m.fig14_depth(32);
+        let (t256, e256) = m.fig14_depth(256);
+        assert!((t256 / t32 - 8.0).abs() < 0.01, "thr ratio = {}", t256 / t32);
+        let er = e256 / e32;
+        assert!(er > 2.0 && er < 3.2, "eff ratio = {er}");
+    }
+
+    #[test]
+    fn fig14c_features_scaling() {
+        // N: throughput almost linear; efficiency up to ≈2.7×.
+        let m = MacroModel::default();
+        let (t32, e32) = m.fig14_features(32);
+        let (t256, e256) = m.fig14_features(256);
+        assert!((t256 / t32 - 8.0).abs() < 0.2, "thr ratio = {}", t256 / t32);
+        let er = e256 / e32;
+        assert!(er > 1.3 && er < 3.2, "eff ratio = {er}");
+    }
+
+    #[test]
+    fn fig14d_precision_scaling() {
+        // 4/4 → 8/8 improves both normalized metrics (modestly, via
+        // fixed-overhead amortization).
+        let m = MacroModel::default();
+        let (t4, e4) = m.fig14_precision(4);
+        let (t8, e8) = m.fig14_precision(8);
+        let tr = t8 / t4;
+        let er = e8 / e4;
+        assert!(tr > 1.0 && tr < 1.6, "thr ratio {tr}");
+        assert!(er > 1.0 && er < 1.6, "eff ratio {er}");
+    }
+
+    #[test]
+    fn monotone_depth_efficiency() {
+        let m = MacroModel::default();
+        let mut prev = 0.0;
+        for d in [32, 64, 96, 128] {
+            let (_, e) = m.fig14_depth(d);
+            assert!(e > prev, "d={d}");
+            prev = e;
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! The PIM execution engine: quantized matmuls through the analog pipeline.
+//!
+//! This is the Rust-native counterpart of the L1 kernel: identical math to
+//! `kernels/ref.py::pim_mac` (bit-serial planes, per-128-row-block ADC
+//! quantization via [`TransferModel`], digital shift-add, pos/neg bank
+//! subtraction). Used by the figure generators, the retention/serving
+//! examples, the benches, and as the ground truth the PJRT-executed HLO is
+//! cross-checked against.
+//!
+//! Hot path: integer bit-plane accumulation + an exact ADC LUT (the analog
+//! transfer is a pure function of an integer MAC ≤ 1920).
+
+use crate::consts::ARRAY_ROWS;
+use crate::device::Corner;
+use crate::util::rng::Pcg64;
+
+use super::quant::{quantize_acts, quantize_weights, QuantizedActs};
+use super::transfer::{TransferModel, ADC_CODES, MAC_FULLSCALE};
+
+/// Engine configuration + precomputed state.
+#[derive(Clone, Debug)]
+pub struct PimEngine {
+    pub transfer: TransferModel,
+    pub calibrated: bool,
+    /// Per-conversion ADC noise sigma in code units (None = noiseless).
+    pub noise_sigma_codes: Option<f64>,
+    lut: Vec<f32>,
+}
+
+impl PimEngine {
+    pub fn new(corner: Corner) -> PimEngine {
+        let transfer = TransferModel::new(corner);
+        PimEngine {
+            transfer,
+            calibrated: true,
+            noise_sigma_codes: None,
+            lut: transfer.quantize_lut(true),
+        }
+    }
+
+    pub fn tt() -> PimEngine {
+        Self::new(Corner::TT)
+    }
+
+    pub fn with_noise(mut self, sigma_codes: f64) -> PimEngine {
+        self.noise_sigma_codes = Some(sigma_codes);
+        self
+    }
+
+    pub fn uncalibrated(mut self) -> PimEngine {
+        self.calibrated = false;
+        self.lut = self.transfer.quantize_lut(false);
+        self
+    }
+
+    /// One unsigned bank MAC: quantized activations [m,k] × bank [k,n]
+    /// (u8 weights 0..=15), with per-(128-row block × bit-plane) ADC
+    /// quantization. Returns dequantized MAC estimates (integer units).
+    ///
+    /// Hot-path layout (EXPERIMENTS.md §Perf): all four bit-plane MACs of
+    /// a block accumulate in ONE pass over the rows, packed into a u64
+    /// (each plane MAC ≤ 1920 < 2¹⁶). The activation nibble expands to a
+    /// 4×16-bit spread mask via a 16-entry LUT, so the inner loop is one
+    /// u64 multiply-add per (row, column) — ~3.4× over the per-plane-pass
+    /// version.
+    pub fn bank_mac(&self, a: &QuantizedActs, bank: &[u8], n: usize, rng: Option<&mut Pcg64>) -> Vec<f32> {
+        let (m, k) = (a.m, a.k);
+        assert_eq!(bank.len(), k * n);
+        let lsb = MAC_FULLSCALE as f64 / ADC_CODES as f64;
+        // Spread mask: nibble bit b → bit 16·b.
+        let spread: [u64; 16] = {
+            let mut t = [0u64; 16];
+            let mut v = 0usize;
+            while v < 16 {
+                t[v] = (v as u64 & 1)
+                    | ((v as u64 >> 1) & 1) << 16
+                    | ((v as u64 >> 2) & 1) << 32
+                    | ((v as u64 >> 3) & 1) << 48;
+                v += 1;
+            }
+            t
+        };
+        let mut out = vec![0.0f32; m * n];
+        let mut packed = vec![0u64; n];
+        // (Perf note, EXPERIMENTS.md §Perf: pre-widening the bank to u64
+        // was tried and reverted — 8× memory traffic lost more than the
+        // widening saved. The u8 loads below widen in-register.)
+        let mut local_rng = rng.map(|r| r.fork(0x6ba7));
+        for i in 0..m {
+            let a_row = &a.data[i * k..(i + 1) * k];
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + ARRAY_ROWS).min(k);
+                // Powerline accumulation, all four planes at once.
+                packed.iter_mut().for_each(|x| *x = 0);
+                for kk in k0..k1 {
+                    let mask = spread[a_row[kk] as usize];
+                    if mask == 0 {
+                        continue;
+                    }
+                    let w_row = &bank[kk * n..kk * n + n];
+                    for (acc, &w) in packed.iter_mut().zip(w_row) {
+                        *acc += mask * w as u64;
+                    }
+                }
+                // WCC + S&H + SAR ADC, one conversion per word column per
+                // plane; digital shift-add recombination.
+                let out_row = &mut out[i * n..(i + 1) * n];
+                match local_rng.as_mut() {
+                    None => {
+                        for (o, &p) in out_row.iter_mut().zip(packed.iter()) {
+                            *o += self.lut[(p & 0xFFFF) as usize]
+                                + 2.0 * self.lut[((p >> 16) & 0xFFFF) as usize]
+                                + 4.0 * self.lut[((p >> 32) & 0xFFFF) as usize]
+                                + 8.0 * self.lut[((p >> 48) & 0xFFFF) as usize];
+                        }
+                    }
+                    Some(r) => {
+                        let sigma = self.noise_sigma_codes.unwrap_or(0.0) * lsb;
+                        for (o, &p) in out_row.iter_mut().zip(packed.iter()) {
+                            for b in 0..4u32 {
+                                let mac = ((p >> (16 * b)) & 0xFFFF) as usize;
+                                let noise = r.normal(0.0, sigma) as f32;
+                                *o += (1u32 << b) as f32 * (self.lut[mac] + noise);
+                            }
+                        }
+                    }
+                }
+                k0 = k1;
+            }
+        }
+        out
+    }
+
+    /// Full signed PIM matmul: quantize, run both banks, subtract in the
+    /// digital domain, rescale. `a` is [m,k] (non-negative, e.g. post-ReLU);
+    /// `w` is [k,n] signed.
+    pub fn pim_matmul(
+        &self,
+        a: &[f32],
+        m: usize,
+        k: usize,
+        w: &[f32],
+        n: usize,
+        rng: Option<&mut Pcg64>,
+    ) -> Vec<f32> {
+        let qa = quantize_acts(a, m, k);
+        let qw = quantize_weights(w, k, n);
+        let mut rng = rng;
+        let pos = self.bank_mac(&qa, &qw.pos, n, rng.as_deref_mut());
+        let neg = self.bank_mac(&qa, &qw.neg, n, rng.as_deref_mut());
+        pos.iter()
+            .zip(neg.iter())
+            .enumerate()
+            .map(|(i, (p, q))| (p - q) * qa.scale * qw.scale[i % n])
+            .collect()
+    }
+
+    /// Exact digital matmul (the "infinite ADC" bound / fp32 baseline).
+    pub fn exact_matmul(a: &[f32], m: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let w_row = &w[kk * n..kk * n + n];
+                let out_row = &mut out[i * n..i * n + n];
+                for (o, &wv) in out_row.iter_mut().zip(w_row) {
+                    *o += av * wv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Ops per full MAC for throughput accounting (MAC = 2 ops).
+    pub fn op_count(m: usize, k: usize, n: usize) -> u64 {
+        2 * m as u64 * k as u64 * n as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_mat(rng: &mut Pcg64, len: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..len).map(|_| rng.range(lo, hi) as f32).collect()
+    }
+
+    #[test]
+    fn matches_exact_for_small_values() {
+        // With tiny MACs the ADC LSB (30.5) dominates — instead check the
+        // engine tracks the exact result within quantization error bounds
+        // on a moderate problem.
+        let mut rng = Pcg64::seeded(3);
+        let (m, k, n) = (8, 128, 16);
+        let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+        let eng = PimEngine::tt();
+        let got = eng.pim_matmul(&a, m, k, &w, n, None);
+        let want = PimEngine::exact_matmul(&a, m, k, &w, n);
+        let scale = want.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .map(|(g, e)| (g - e).abs())
+            .fold(0.0f32, f32::max);
+        // Quantization + two-bank recombination error: bounded by a modest
+        // fraction of full scale for a 1-block problem.
+        assert!(max_err < 0.35 * scale, "max_err={max_err} scale={scale}");
+        // And correlation with the exact result should be very high.
+        let gv: Vec<f64> = got.iter().map(|&x| x as f64).collect();
+        let wv: Vec<f64> = want.iter().map(|&x| x as f64).collect();
+        assert!(crate::util::stats::pearson(&gv, &wv) > 0.97);
+    }
+
+    #[test]
+    fn zero_activation_gives_zero() {
+        let eng = PimEngine::tt();
+        let a = vec![0.0f32; 2 * 128];
+        let w = vec![0.3f32; 128 * 4];
+        let out = eng.pim_matmul(&a, 2, 128, &w, 4, None);
+        assert!(out.iter().all(|&x| x == 0.0), "{out:?}");
+    }
+
+    #[test]
+    fn blockwise_quantization_matches_manual() {
+        // k = 200 → blocks of 128 + 72; verify the engine quantizes each
+        // block independently (the hardware property).
+        let mut rng = Pcg64::seeded(9);
+        let (m, k, n) = (3, 200, 5);
+        let a_q: Vec<u8> = (0..m * k).map(|_| rng.below(16) as u8).collect();
+        let bank: Vec<u8> = (0..k * n).map(|_| rng.below(16) as u8).collect();
+        let qa = QuantizedActs { data: a_q.clone(), m, k, scale: 1.0 };
+        let eng = PimEngine::tt();
+        let got = eng.bank_mac(&qa, &bank, n, None);
+        // Manual recomputation.
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0.0f32;
+                for b in 0..4u32 {
+                    for (k0, k1) in [(0usize, 128usize), (128, 200)] {
+                        let mac: u32 = (k0..k1)
+                            .filter(|&kk| (a_q[i * k + kk] >> b) & 1 == 1)
+                            .map(|kk| bank[kk * n + j] as u32)
+                            .sum();
+                        want += (1u32 << b) as f32
+                            * eng.transfer.quantize_mac(mac as f64, true) as f32;
+                    }
+                }
+                let g = got[i * n + j];
+                // f32 accumulation-order tolerance.
+                let tol = 1e-3 + 1e-6 * want.abs();
+                assert!((g - want).abs() < tol, "({i},{j}): {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn noise_perturbs_but_preserves_signal() {
+        let mut rng = Pcg64::seeded(5);
+        let (m, k, n) = (4, 128, 8);
+        let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+        let clean = PimEngine::tt().pim_matmul(&a, m, k, &w, n, None);
+        let noisy_eng = PimEngine::tt().with_noise(0.3);
+        let mut nrng = Pcg64::seeded(77);
+        let noisy = noisy_eng.pim_matmul(&a, m, k, &w, n, Some(&mut nrng));
+        let diff: f64 = clean
+            .iter()
+            .zip(&noisy)
+            .map(|(c, x)| (c - x).abs() as f64)
+            .sum::<f64>()
+            / clean.len() as f64;
+        assert!(diff > 0.0, "noise must perturb");
+        let cv: Vec<f64> = clean.iter().map(|&x| x as f64).collect();
+        let nv: Vec<f64> = noisy.iter().map(|&x| x as f64).collect();
+        assert!(crate::util::stats::pearson(&cv, &nv) > 0.9);
+    }
+
+    #[test]
+    fn noise_deterministic_with_seed() {
+        let (m, k, n) = (2, 64, 3);
+        let a = vec![0.5f32; m * k];
+        let w = vec![0.25f32; k * n];
+        let eng = PimEngine::tt().with_noise(0.5);
+        let x = eng.pim_matmul(&a, m, k, &w, n, Some(&mut Pcg64::seeded(1)));
+        let y = eng.pim_matmul(&a, m, k, &w, n, Some(&mut Pcg64::seeded(1)));
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn uncalibrated_loses_resolution() {
+        // The uncalibrated ADC wastes dynamic range ⇒ larger quantization
+        // error on mid-range MACs.
+        let cal = PimEngine::tt();
+        let uncal = PimEngine::tt().uncalibrated();
+        let mut err_cal = 0.0;
+        let mut err_uncal = 0.0;
+        for mac in (0..=MAC_FULLSCALE).step_by(3) {
+            err_cal += (cal.transfer.quantize_mac(mac as f64, true) - mac as f64).abs();
+            err_uncal +=
+                (uncal.transfer.quantize_mac(mac as f64, false) - mac as f64).abs();
+        }
+        assert!(err_uncal > 1.3 * err_cal, "{err_uncal} vs {err_cal}");
+    }
+}

@@ -1,0 +1,22 @@
+//! PIM compute layer: quantization, the canonical analog transfer model,
+//! and the execution engine that runs quantized CNN layers on the
+//! simulated 6T-2R arrays.
+//!
+//! * [`transfer`] — the closed-form weight-sum → current → voltage → ADC
+//!   code pipeline. This is the *cross-language contract*: the constants
+//!   and equations are mirrored exactly in `python/compile/hw_model.py` /
+//!   `kernels/ref.py`, and `rust/tests/runtime_crosscheck.rs` verifies the
+//!   AOT-exported kernel HLO against this module.
+//! * [`quant`] — 4-bit activation/weight quantization and the
+//!   positive/negative weight-bank split (§IV-C).
+//! * [`engine`] — the fast vectorized PIM executor (integer bit-plane
+//!   matmuls + an ADC LUT) used by the figures, benches, and the
+//!   coordinator's non-PJRT fallback path.
+
+pub mod engine;
+pub mod quant;
+pub mod transfer;
+
+pub use engine::PimEngine;
+pub use quant::{QuantizedActs, QuantizedWeights};
+pub use transfer::TransferModel;

@@ -1,0 +1,156 @@
+//! 4-bit quantization and the positive/negative weight-bank split (§IV-C).
+//!
+//! Mirrors `python/compile/model.py::quant_act` / `quant_weight`: dynamic
+//! per-tensor scales, unsigned 4-bit activations (post-ReLU), signed 4-bit
+//! weights split into two unsigned banks whose PIM outputs are subtracted
+//! in the digital domain.
+
+/// Quantized activation matrix (row-major [m][k], values 0..=15).
+#[derive(Clone, Debug)]
+pub struct QuantizedActs {
+    pub data: Vec<u8>,
+    pub m: usize,
+    pub k: usize,
+    pub scale: f32,
+}
+
+/// Quantized weight banks (row-major [k][n], values 0..=15 each) with
+/// per-output-column scales (the digital rescale after the subtractor is
+/// per column, so per-channel scaling is free — mirrors
+/// `model.py::quant_weight`).
+#[derive(Clone, Debug)]
+pub struct QuantizedWeights {
+    pub pos: Vec<u8>,
+    pub neg: Vec<u8>,
+    pub k: usize,
+    pub n: usize,
+    /// Per-column scale, length `n`.
+    pub scale: Vec<f32>,
+}
+
+/// Quantize activations: `q = clip(round(a / s), 0, 15)`, `s = max(a)/15`.
+pub fn quantize_acts(a: &[f32], m: usize, k: usize) -> QuantizedActs {
+    assert_eq!(a.len(), m * k);
+    let max = a.iter().cloned().fold(0.0f32, f32::max).max(1e-6);
+    let scale = max / 15.0;
+    let data = a
+        .iter()
+        .map(|&x| (x / scale).round().clamp(0.0, 15.0) as u8)
+        .collect();
+    QuantizedActs { data, m, k, scale }
+}
+
+/// Quantize signed weights into positive/negative banks with per-column
+/// scales: `q = clip(round(w / s[j]), -15, 15)`, `s[j] = max_i |w[i][j]|/15`.
+pub fn quantize_weights(w: &[f32], k: usize, n: usize) -> QuantizedWeights {
+    assert_eq!(w.len(), k * n);
+    let mut scale = vec![0.0f32; n];
+    for i in 0..k {
+        for (j, s) in scale.iter_mut().enumerate() {
+            *s = s.max(w[i * n + j].abs());
+        }
+    }
+    for s in scale.iter_mut() {
+        *s = s.max(1e-6) / 15.0;
+    }
+    let mut pos = vec![0u8; k * n];
+    let mut neg = vec![0u8; k * n];
+    for i in 0..k {
+        for j in 0..n {
+            let q = (w[i * n + j] / scale[j]).round().clamp(-15.0, 15.0) as i8;
+            if q >= 0 {
+                pos[i * n + j] = q as u8;
+            } else {
+                neg[i * n + j] = (-q) as u8;
+            }
+        }
+    }
+    QuantizedWeights { pos, neg, k, n, scale }
+}
+
+impl QuantizedActs {
+    /// Extract bit-plane `b` (0 = LSB) as 0/1 bytes.
+    pub fn bit_plane(&self, b: u32) -> Vec<u8> {
+        self.data.iter().map(|&v| (v >> b) & 1).collect()
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> u8 {
+        self.data[i * self.k + j]
+    }
+}
+
+impl QuantizedWeights {
+    /// Reconstruct the signed integer weight at (i, j).
+    pub fn signed_at(&self, i: usize, j: usize) -> i16 {
+        self.pos[i * self.n + j] as i16 - self.neg[i * self.n + j] as i16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_quantization_roundtrip() {
+        let a = vec![0.0, 0.5, 1.0, 1.5];
+        let q = quantize_acts(&a, 2, 2);
+        assert_eq!(q.scale, 0.1);
+        assert_eq!(q.data, vec![0, 5, 10, 15]);
+    }
+
+    #[test]
+    fn act_clamps_nonnegative() {
+        let q = quantize_acts(&[3.0, 1.0], 1, 2);
+        assert_eq!(q.data, vec![15, 5]);
+    }
+
+    #[test]
+    fn weight_banks_split_per_column() {
+        // Column 0 holds {1.0, 0.4} → scale 1/15; column 1 {−1.0, 0} →
+        // scale 1/15. Per-column quantization.
+        let w = vec![1.0, -1.0, 0.4, 0.0];
+        let q = quantize_weights(&w, 2, 2);
+        assert_eq!(q.pos, vec![15, 0, 6, 0]);
+        assert_eq!(q.neg, vec![0, 15, 0, 0]);
+        assert_eq!(q.signed_at(0, 0), 15);
+        assert_eq!(q.signed_at(0, 1), -15);
+        assert_eq!(q.signed_at(1, 0), 6);
+        // A small column gets its own fine scale.
+        let w2 = vec![1.0, 0.01, 1.0, -0.01];
+        let q2 = quantize_weights(&w2, 2, 2);
+        assert_eq!(q2.pos[1], 15, "small column uses its own scale");
+        assert_eq!(q2.neg[3], 15);
+        assert!((q2.scale[1] - 0.01 / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn banks_are_disjoint() {
+        let w: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.01).collect();
+        let q = quantize_weights(&w, 10, 10);
+        for i in 0..100 {
+            assert!(q.pos[i] == 0 || q.neg[i] == 0, "both banks set at {i}");
+            assert!(q.pos[i] <= 15 && q.neg[i] <= 15);
+        }
+    }
+
+    #[test]
+    fn bit_planes_reassemble() {
+        let a = vec![0.0, 7.0, 15.0, 9.0];
+        let q = quantize_acts(&a, 1, 4);
+        let mut recon = vec![0u8; 4];
+        for b in 0..4 {
+            for (r, bit) in recon.iter_mut().zip(q.bit_plane(b)) {
+                *r |= bit << b;
+            }
+        }
+        assert_eq!(recon, q.data);
+    }
+
+    #[test]
+    fn zero_tensor_safe() {
+        let q = quantize_acts(&[0.0; 4], 2, 2);
+        assert!(q.data.iter().all(|&x| x == 0));
+        let w = quantize_weights(&[0.0; 4], 2, 2);
+        assert!(w.pos.iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,244 @@
+//! The canonical analog transfer model: integer weighted MAC → powerline
+//! current → sampled voltage → 6-bit SAR code → MAC estimate.
+//!
+//! CROSS-LANGUAGE CONTRACT: every constant and equation here is mirrored in
+//! `python/compile/hw_model.py` (`line_current`, `sampled_voltage`,
+//! `adc_code`, `mac_estimate_from_code`) and `kernels/ref.py::adc_transfer`.
+//! Change one side and the runtime cross-check
+//! (`rust/tests/runtime_crosscheck.rs`) will fail.
+//!
+//! Derivation of the compression term: the active powerline is pulled to
+//! V_REF while cells source `I_cell = (VDD − v_line)/R_path`; the summed
+//! current drops `I·R_LOAD` across the line + WCC input stage, so to first
+//! order `I = I_ideal / (1 + I_ideal·R_LOAD/V_SWING)` — the FF corner's
+//! stronger drive (larger `I_ideal`, larger mirror droop) bends the curve
+//! exactly as Fig. 11(a) shows.
+
+use crate::consts::{ADC_BITS, ARRAY_ROWS, VDD, V_REFN_CAL, V_REFP_CAL, V_REF_UNCAL};
+use crate::device::Corner;
+
+/// Max ADC code (63 for 6 bits).
+pub const ADC_CODES: u32 = (1 << ADC_BITS) - 1;
+/// Per-bit-plane full-scale weighted MAC: 128 rows × weight 15.
+pub const MAC_FULLSCALE: u32 = (ARRAY_ROWS as u32) * 15;
+/// WCC reference voltage during sampling (V) — `hw_model.V_REF`.
+pub const V_REF: f64 = 0.30;
+/// Series FET resistance of the cell PIM path at TT (Ω) — `R_FETS_TT`.
+pub const R_FETS_TT: f64 = 6.0e3;
+/// Sampled-voltage calibration span (V) — Fig. 12's 90/660 mV references.
+pub const V_SAMP_MAX: f64 = 0.655;
+pub const V_SAMP_MIN: f64 = 0.092;
+
+/// The transfer model for one corner.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferModel {
+    pub corner: Corner,
+    /// Per-cell LRS unit current (A): (VDD−V_REF)/(R_LRS+R_FETS) × drive.
+    pub i_unit: f64,
+    /// Line + WCC input loading (Ω).
+    pub r_load: f64,
+    /// Fixed transimpedance, trimmed once at TT (V/A).
+    pub r_ti: f64,
+}
+
+impl TransferModel {
+    pub fn new(corner: Corner) -> TransferModel {
+        let i_unit_tt = (VDD - V_REF) / (crate::consts::R_LRS + R_FETS_TT);
+        let (scale, r_load) = match corner {
+            Corner::SS => (0.80, 0.6),
+            Corner::TT => (1.00, 0.8),
+            Corner::FF => (1.25, 3.2),
+        };
+        // r_ti is fixed by the TT calibration (the S&H/WCC is trimmed at
+        // the typical corner), so SS/FF curves shift/bend — Fig. 10.
+        let v_swing = VDD - V_REF;
+        let i_fs_tt_ideal = MAC_FULLSCALE as f64 * i_unit_tt;
+        let i_fs_tt = i_fs_tt_ideal / (1.0 + i_fs_tt_ideal * 0.8 / v_swing);
+        let r_ti = (V_SAMP_MAX - V_SAMP_MIN) / i_fs_tt;
+        TransferModel { corner, i_unit: i_unit_tt * scale, r_load, r_ti }
+    }
+
+    pub fn tt() -> TransferModel {
+        Self::new(Corner::TT)
+    }
+
+    /// Powerline current for an integer weighted MAC value (one bit-plane).
+    pub fn line_current(&self, mac: f64) -> f64 {
+        let v_swing = VDD - V_REF;
+        let i_ideal = mac * self.i_unit;
+        i_ideal / (1.0 + i_ideal * self.r_load / v_swing)
+    }
+
+    /// Sample-and-hold output voltage (V): V0 − R_ti·I ("VDD − MAC").
+    pub fn sampled_voltage(&self, mac: f64) -> f64 {
+        V_SAMP_MAX - self.r_ti * self.line_current(mac)
+    }
+
+    /// 6-bit SAR conversion of a sampled voltage; returns the
+    /// post-processing-inverted code (monotone increasing with MAC).
+    pub fn adc_code(&self, v: f64, calibrated: bool) -> u32 {
+        let (lo, hi) = if calibrated {
+            (V_REFN_CAL, V_REFP_CAL)
+        } else {
+            (0.0, V_REF_UNCAL)
+        };
+        let x = (v - lo) / (hi - lo);
+        let code = (x * ADC_CODES as f64).round().clamp(0.0, ADC_CODES as f64) as u32;
+        ADC_CODES - code
+    }
+
+    /// Inverse linear mapping of a code back to the MAC dynamic range.
+    pub fn mac_estimate(&self, code: u32) -> f64 {
+        code as f64 * (MAC_FULLSCALE as f64 / ADC_CODES as f64)
+    }
+
+    /// The full pipeline for one bit-plane partial sum.
+    pub fn quantize_mac(&self, mac: f64, calibrated: bool) -> f64 {
+        self.mac_estimate(self.adc_code(self.sampled_voltage(mac), calibrated))
+    }
+
+    /// Continuous (un-rounded) transfer: MAC → nonlinearly-compressed MAC
+    /// equivalent, no ADC rounding. Mirrors `ref.transfer_continuous` —
+    /// used by the §V-E Table II activation-level emulation, where the
+    /// 6-bit signed quantization is applied separately.
+    pub fn transfer_continuous(&self, mac: f64) -> f64 {
+        let v = self.sampled_voltage(mac);
+        let x = (v - V_REFN_CAL) / (V_REFP_CAL - V_REFN_CAL);
+        (1.0 - x) * MAC_FULLSCALE as f64
+    }
+
+    /// Precomputed LUT over all integer MAC values [0, MAC_FULLSCALE] —
+    /// the hot-path form used by [`super::engine`]. (The analog transfer is
+    /// a pure function of an integer ≤ 1920, so this is exact.)
+    pub fn quantize_lut(&self, calibrated: bool) -> Vec<f32> {
+        (0..=MAC_FULLSCALE)
+            .map(|m| self.quantize_mac(m as f64, calibrated) as f32)
+            .collect()
+    }
+
+    /// Least-squares polynomial fit of mac → sampled voltage — the §V-E
+    /// "curve-fitted polynomial" used by the accuracy pipeline.
+    pub fn voltage_polynomial(&self, degree: usize) -> Vec<f64> {
+        let macs: Vec<f64> = (0..=MAC_FULLSCALE).step_by(16).map(|m| m as f64).collect();
+        let vs: Vec<f64> = macs.iter().map(|&m| self.sampled_voltage(m)).collect();
+        crate::util::fit::poly_fit(&macs, &vs, degree)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn endpoints_match_calibration() {
+        let tt = TransferModel::tt();
+        let v0 = tt.sampled_voltage(0.0);
+        let v1 = tt.sampled_voltage(MAC_FULLSCALE as f64);
+        assert!((v0 - V_SAMP_MAX).abs() < 1e-12, "v0 = {v0}");
+        assert!((v1 - V_SAMP_MIN).abs() < 1e-9, "v1 = {v1}");
+    }
+
+    #[test]
+    fn calibrated_adc_spans_full_code_range() {
+        // Fig. 12(a): after calibration the full 6-bit space is exercised.
+        let tt = TransferModel::tt();
+        let c0 = tt.adc_code(tt.sampled_voltage(0.0), true);
+        let c1 = tt.adc_code(tt.sampled_voltage(MAC_FULLSCALE as f64), true);
+        assert!(c0 <= 1, "code at MAC=0: {c0}");
+        assert!(c1 >= 62, "code at fullscale: {c1}");
+    }
+
+    #[test]
+    fn uncalibrated_adc_compressed_range() {
+        // Fig. 12(a): the uncalibrated ADC wastes dynamic range. The paper
+        // reports raw codes 7–48 (≈65 % of range); our calibration span
+        // [92, 655] mV gives raw 7–52 (≈71 %) — same qualitative
+        // compression + systematic offset, see EXPERIMENTS.md E6.
+        let tt = TransferModel::tt();
+        let c0 = tt.adc_code(tt.sampled_voltage(0.0), false); // inverted low
+        let c1 = tt.adc_code(tt.sampled_voltage(MAC_FULLSCALE as f64), false);
+        let span = c1 - c0;
+        assert!(c0 >= 8 && c0 <= 14, "low code = {c0}");
+        assert!(c1 >= 52 && c1 <= 60, "high code = {c1}");
+        assert!((span as f64) < 0.75 * ADC_CODES as f64, "span = {span}");
+        // Both endpoints well inside the rails ⇒ wasted code space at both
+        // ends, unlike the calibrated configuration.
+        assert!(c0 > 1 && c1 < ADC_CODES);
+    }
+
+    #[test]
+    fn monotone_nondecreasing_codes() {
+        for corner in Corner::ALL {
+            let m = TransferModel::new(corner);
+            let codes: Vec<f64> = (0..=MAC_FULLSCALE)
+                .map(|mac| m.adc_code(m.sampled_voltage(mac as f64), true) as f64)
+                .collect();
+            assert!(
+                stats::is_monotonic_nondecreasing(&codes),
+                "{corner:?} codes not monotone"
+            );
+        }
+    }
+
+    #[test]
+    fn ff_corner_most_nonlinear() {
+        // Fig. 11(a): FF deviates from linearity; TT/SS near-linear.
+        let macs: Vec<f64> = (0..=MAC_FULLSCALE).step_by(64).map(|m| m as f64).collect();
+        let nl = |c: Corner| {
+            let m = TransferModel::new(c);
+            let is: Vec<f64> = macs.iter().map(|&x| m.line_current(x)).collect();
+            stats::nonlinearity_fraction(&macs, &is)
+        };
+        let (ss, tt, ff) = (nl(Corner::SS), nl(Corner::TT), nl(Corner::FF));
+        assert!(ff > 2.0 * tt, "FF {ff} vs TT {tt}");
+        assert!(ss <= tt * 1.05, "SS {ss} vs TT {tt}");
+        assert!(tt < 0.05, "TT should be near-linear: {tt}");
+    }
+
+    #[test]
+    fn four_codes_per_weight_step() {
+        // Fig. 12(b): each weight increment ≈ 4 ADC codes at 128 rows.
+        let tt = TransferModel::tt();
+        let code = |w: u32| tt.adc_code(tt.sampled_voltage((128 * w) as f64), true);
+        let steps: Vec<f64> = (1..=15).map(|w| (code(w) - code(w - 1)) as f64).collect();
+        let mean = steps.iter().sum::<f64>() / steps.len() as f64;
+        assert!((mean - 4.0).abs() < 0.5, "mean codes/weight = {mean}");
+    }
+
+    #[test]
+    fn lut_matches_direct_eval() {
+        let tt = TransferModel::tt();
+        let lut = tt.quantize_lut(true);
+        assert_eq!(lut.len() as u32, MAC_FULLSCALE + 1);
+        for mac in [0u32, 1, 64, 777, 1920] {
+            assert_eq!(lut[mac as usize], tt.quantize_mac(mac as f64, true) as f32);
+        }
+    }
+
+    #[test]
+    fn polynomial_fits_voltage_curve() {
+        let tt = TransferModel::tt();
+        let poly = tt.voltage_polynomial(3);
+        let mut max_err = 0.0f64;
+        for mac in (0..=MAC_FULLSCALE).step_by(32) {
+            let v = tt.sampled_voltage(mac as f64);
+            let p = crate::util::fit::poly_eval(&poly, mac as f64);
+            max_err = max_err.max((v - p).abs());
+        }
+        // Fit error well under one ADC LSB (≈ 9 mV).
+        assert!(max_err < 2e-3, "poly fit max err = {max_err}");
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_lsb() {
+        let tt = TransferModel::tt();
+        let lsb = MAC_FULLSCALE as f64 / ADC_CODES as f64;
+        for mac in (0..=MAC_FULLSCALE).step_by(7) {
+            let err = (tt.quantize_mac(mac as f64, true) - mac as f64).abs();
+            // Nonlinearity adds systematic error on top of ±LSB/2; at TT the
+            // total stays within ~1.5 LSB.
+            assert!(err <= 1.5 * lsb, "mac={mac} err={err}");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Artifact directory + manifest handling.
+//!
+//! `make artifacts` populates `artifacts/` (see DESIGN.md §5); this module
+//! locates and validates the pieces the runtime needs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Parsed key=value manifest (written by `python/compile/aot.py`).
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Manifest {
+        let entries = text
+            .lines()
+            .filter_map(|l| {
+                let l = l.trim();
+                if l.is_empty() || l.starts_with('#') {
+                    return None;
+                }
+                l.split_once('=')
+                    .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+            })
+            .collect();
+        Manifest { entries }
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        Ok(Self::parse(&std::fs::read_to_string(path)?))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key)?.parse().ok()
+    }
+
+    /// Reported accuracy for a Table II row (fraction in [0,1]).
+    pub fn accuracy(&self, row: &str) -> Option<f64> {
+        self.get_f64(&format!("acc_{row}"))
+    }
+}
+
+/// The artifact directory with existence checks.
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactDir {
+    pub fn open<P: Into<PathBuf>>(root: P) -> Result<ArtifactDir> {
+        let root = root.into();
+        let manifest_path = root.join("manifest.txt");
+        if !manifest_path.exists() {
+            return Err(Error::Artifact(format!(
+                "{} missing — run `make artifacts` first",
+                manifest_path.display()
+            )));
+        }
+        Ok(ArtifactDir { root: root.clone(), manifest: Manifest::load(&manifest_path)? })
+    }
+
+    pub fn path(&self, name: &str) -> Result<PathBuf> {
+        let p = self.root.join(name);
+        if !p.exists() {
+            return Err(Error::Artifact(format!("missing artifact {}", p.display())));
+        }
+        Ok(p)
+    }
+
+    pub fn eval_batch(&self) -> usize {
+        self.manifest.get_usize("eval_batch").unwrap_or(50)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse("a=1\n# comment\n  key = value \n\nacc_baseline=0.9234\n");
+        assert_eq!(m.get("a"), Some("1"));
+        assert_eq!(m.get("key"), Some("value"));
+        assert_eq!(m.accuracy("baseline"), Some(0.9234));
+        assert_eq!(m.get("missing"), None);
+    }
+
+    #[test]
+    fn open_missing_dir_fails_helpfully() {
+        let err = ArtifactDir::open("/nonexistent_artifacts").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn artifact_dir_roundtrip() {
+        let dir = std::env::temp_dir().join("nvm_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "eval_batch=25\n").unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        let ad = ArtifactDir::open(&dir).unwrap();
+        assert_eq!(ad.eval_batch(), 25);
+        assert!(ad.path("x.hlo.txt").is_ok());
+        assert!(ad.path("missing.hlo.txt").is_err());
+    }
+}

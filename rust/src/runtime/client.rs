@@ -1,0 +1,186 @@
+//! xla-crate (PJRT CPU) wrapper.
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, avoiding the 64-bit-id protos that xla_extension 0.5.1
+//! rejects (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+use super::artifact::ArtifactDir;
+
+/// Which exported model variant to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelVariant {
+    /// fp32 baseline forward.
+    Baseline,
+    /// Table II emulation: per-layer ADC nonlinearity (no noise).
+    Pim,
+    /// Table II emulation + ADC noise (takes a u32[2] threefry key).
+    PimNoise,
+    /// Hardware-true pipeline with the pallas kernel lowered in.
+    PimHw,
+}
+
+impl ModelVariant {
+    pub fn file(&self) -> &'static str {
+        match self {
+            ModelVariant::Baseline => "model_baseline.hlo.txt",
+            ModelVariant::Pim => "model_pim.hlo.txt",
+            ModelVariant::PimNoise => "model_pim_noise.hlo.txt",
+            ModelVariant::PimHw => "model_pim_hw.hlo.txt",
+        }
+    }
+
+    pub const ALL: [ModelVariant; 4] = [
+        ModelVariant::Baseline,
+        ModelVariant::Pim,
+        ModelVariant::PimNoise,
+        ModelVariant::PimHw,
+    ];
+}
+
+/// PJRT runtime with a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<ModelVariant, xla::PjRtLoadedExecutable>,
+    kernels: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+}
+
+impl Runtime {
+    pub fn new(batch: usize) -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            executables: HashMap::new(),
+            kernels: HashMap::new(),
+            batch,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
+    }
+
+    /// Load + compile a model variant (idempotent).
+    pub fn load_variant(&mut self, dir: &ArtifactDir, variant: ModelVariant) -> Result<()> {
+        if self.executables.contains_key(&variant) {
+            return Ok(());
+        }
+        let path = dir.path(variant.file())?;
+        let exe = Self::compile_file(&self.client, &path)?;
+        self.executables.insert(variant, exe);
+        Ok(())
+    }
+
+    /// Load + compile an arbitrary kernel artifact by file name.
+    pub fn load_kernel(&mut self, dir: &ArtifactDir, file: &str) -> Result<()> {
+        if self.kernels.contains_key(file) {
+            return Ok(());
+        }
+        let exe = Self::compile_file(&self.client, &dir.path(file)?)?;
+        self.kernels.insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    fn run_exe(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // Exports lower with return_tuple=True ⇒ unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Run a model variant on a batch of images (flattened NHWC f32,
+    /// exactly `batch × h × w × c` long). Returns flattened logits.
+    pub fn forward(
+        &self,
+        variant: ModelVariant,
+        images: &[f32],
+        dims: (usize, usize, usize),
+        key: Option<[u32; 2]>,
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .executables
+            .get(&variant)
+            .ok_or_else(|| Error::Runtime(format!("{variant:?} not loaded")))?;
+        let (h, w, c) = dims;
+        assert_eq!(images.len(), self.batch * h * w * c, "batch shape mismatch");
+        let x = xla::Literal::vec1(images).reshape(&[
+            self.batch as i64,
+            h as i64,
+            w as i64,
+            c as i64,
+        ])?;
+        let inputs: Vec<xla::Literal> = match (variant, key) {
+            (ModelVariant::PimNoise, Some(k)) => {
+                vec![x, xla::Literal::vec1(&k[..])]
+            }
+            (ModelVariant::PimNoise, None) => {
+                return Err(Error::Runtime("PimNoise requires a key".into()))
+            }
+            (_, _) => vec![x],
+        };
+        Self::run_exe(exe, &inputs)
+    }
+
+    /// Run the standalone L1 kernel tile: a,w are 128×128 f32 (integer
+    /// values 0..=15); returns the 128×128 dequantized MAC estimates.
+    pub fn pim_mac_tile(&self, a: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .kernels
+            .get("pim_mac.hlo.txt")
+            .ok_or_else(|| Error::Runtime("pim_mac kernel not loaded".into()))?;
+        let la = xla::Literal::vec1(a).reshape(&[128, 128])?;
+        let lw = xla::Literal::vec1(w).reshape(&[128, 128])?;
+        Self::run_exe(exe, &[la, lw])
+    }
+
+    /// Argmax classification over the forward logits.
+    pub fn classify(
+        &self,
+        variant: ModelVariant,
+        images: &[f32],
+        dims: (usize, usize, usize),
+        n_classes: usize,
+        key: Option<[u32; 2]>,
+    ) -> Result<Vec<u8>> {
+        let logits = self.forward(variant, images, dims, key)?;
+        Ok(logits
+            .chunks(n_classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as u8
+            })
+            .collect())
+    }
+}
+
+// PJRT-dependent tests live in rust/tests/runtime_crosscheck.rs (they need
+// built artifacts); here we only test pure logic.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_files() {
+        assert_eq!(ModelVariant::Baseline.file(), "model_baseline.hlo.txt");
+        assert_eq!(ModelVariant::ALL.len(), 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
+//! from the Rust hot path. Python never runs at serve time.
+//!
+//! * [`artifact`] — manifest parsing + artifact directory handling.
+//! * [`client`] — the xla-crate (PJRT C API) wrapper: HLO text →
+//!   `HloModuleProto` → compile → execute (one compiled executable per
+//!   model variant, reused across requests).
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactDir, Manifest};
+pub use client::{ModelVariant, Runtime};

@@ -1,0 +1,174 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports mean / p50 /
+//! p95 / min and derived throughput. Used both by `cargo bench`
+//! (`rust/benches/paper_benches.rs`, `harness = false`) and by the CLI
+//! `repro bench` path.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub times: Vec<f64>,
+    pub summary: Summary,
+    /// Work items per iteration (for throughput reporting), if meaningful.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean
+    }
+
+    /// Items per second, if `items_per_iter` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.summary.mean)
+    }
+
+    /// Render a single fixed-width report line.
+    pub fn report_line(&self) -> String {
+        let t = |s: f64| format_time(s);
+        let base = format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}  (n={})",
+            self.name,
+            t(self.summary.mean),
+            t(self.summary.p50),
+            t(self.summary.p95),
+            t(self.summary.min),
+            self.summary.n
+        );
+        match self.throughput() {
+            Some(tp) => format!("{base}  {:.3e} items/s", tp),
+            None => base,
+        }
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn format_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark runner with adaptive iteration count.
+pub struct Bencher {
+    /// Target total measurement time per benchmark, seconds.
+    pub target_s: f64,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+    /// Minimum iterations (for stable percentiles).
+    pub min_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { target_s: 1.0, max_iters: 1000, min_iters: 10, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { target_s: 0.2, max_iters: 100, min_iters: 5, results: Vec::new() }
+    }
+
+    /// Run `f` repeatedly; the closure should return something observable to
+    /// prevent dead-code elimination (we `black_box` it).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_items(name, None, &mut f)
+    }
+
+    /// Like [`Self::bench`], additionally recording per-iteration item count
+    /// so the report includes throughput.
+    pub fn bench_with_items<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_items(name, Some(items), &mut f)
+    }
+
+    fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        // Warmup: one untimed call + estimate the per-iter cost.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let est = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_s / est) as usize)
+            .clamp(self.min_iters, self.max_iters);
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&times);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            times,
+            summary,
+            items_per_iter: items,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the full report.
+    pub fn report(&self) {
+        for r in &self.results {
+            println!("{}", r.report_line());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher { target_s: 0.02, max_iters: 50, min_iters: 5, results: vec![] };
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.summary.n >= 5);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.min <= r.summary.p50);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bencher::quick();
+        let r = b.bench_with_items("items", 100.0, || 1 + 1);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.report_line().contains("items/s"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(format_time(5e-9), "5.0 ns");
+        assert_eq!(format_time(2.5e-6), "2.50 µs");
+        assert_eq!(format_time(3.0e-3), "3.00 ms");
+        assert_eq!(format_time(2.0), "2.000 s");
+    }
+}

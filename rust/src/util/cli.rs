@@ -1,0 +1,136 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `repro <subcommand> [--flag] [--key value]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        // First non-dashed token is the subcommand.
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = iter.next();
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("figures --fig 10 --out results/ --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.get("fig"), Some("10"));
+        assert_eq!(a.get("out"), Some("results/"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("serve --port=8080 --batch-size=16");
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert_eq!(a.get_usize("batch-size", 0), 16);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("bench --all");
+        assert!(a.flag("all"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run input.bin output.bin --fast");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["input.bin", "output.bin"]);
+    }
+
+    #[test]
+    fn typed_getters_defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("v", 1.5), 1.5);
+        assert_eq!(a.get_or("mode", "tt"), "tt");
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("f --offset -3.5");
+        assert_eq!(a.get_f64("offset", 0.0), -3.5);
+    }
+}

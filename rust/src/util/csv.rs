@@ -1,0 +1,118 @@
+//! Minimal CSV emitter for figure data.
+//!
+//! Every figure generator in [`crate::figures`] writes its series through a
+//! [`CsvWriter`], so the paper's plots can be regenerated from the emitted
+//! files with any plotting tool.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// In-memory CSV table, written out atomically at the end.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new<S: Into<String>>(columns: Vec<S>) -> Self {
+        CsvWriter {
+            header: columns.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of f64 cells (the common case for figure data).
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows
+            .push(cells.iter().map(|c| format_num(*c)).collect());
+    }
+
+    /// Append a row of preformatted cells.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a CSV string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+}
+
+/// Compact numeric formatting: integers stay integral, small/large values go
+/// to scientific notation, everything else keeps 6 significant digits.
+pub fn format_num(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        return format!("{}", x as i64);
+    }
+    let mag = x.abs();
+    if !(1e-4..1e7).contains(&mag) {
+        format!("{x:.6e}")
+    } else {
+        let s = format!("{x:.6}");
+        // Trim trailing zeros but keep at least one decimal.
+        let trimmed = s.trim_end_matches('0').trim_end_matches('.');
+        trimmed.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut w = CsvWriter::new(vec!["a", "b"]);
+        w.row_f64(&[1.0, 2.5]);
+        w.row(vec!["x", "y"]);
+        let s = w.to_string();
+        assert_eq!(s, "a,b\n1,2.5\nx,y\n");
+        assert_eq!(w.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn rejects_wrong_arity() {
+        let mut w = CsvWriter::new(vec!["a"]);
+        w.row_f64(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(format_num(0.0), "0");
+        assert_eq!(format_num(42.0), "42");
+        assert_eq!(format_num(2.5), "2.5");
+        assert_eq!(format_num(1.23e-9), "1.230000e-9");
+    }
+
+    #[test]
+    fn writes_file() {
+        let mut w = CsvWriter::new(vec!["v"]);
+        w.row_f64(&[3.0]);
+        let path = std::env::temp_dir().join("nvm_csv_test/out.csv");
+        w.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "v\n3\n");
+    }
+}

@@ -1,0 +1,143 @@
+//! Least-squares fitting: linear and polynomial.
+//!
+//! The paper characterizes the 6T-2R array's analog transfer function with a
+//! "curve-fitted polynomial derived from simulation and SPICE measurements"
+//! (§V-E); `poly_fit` is that step for our simulated array, and the fitted
+//! coefficients are what the accuracy pipeline (Table II) applies during
+//! forward propagation.
+
+/// Ordinary least-squares line `y = slope·x + intercept`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-300 {
+        return (0.0, sy / n);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    (slope, (sy - slope * sx) / n)
+}
+
+/// Least-squares polynomial fit of given `degree`; returns coefficients
+/// `c[0] + c[1]·x + … + c[degree]·x^degree`. Solved via normal equations
+/// with Gaussian elimination + partial pivoting (well-conditioned for the
+/// low degrees ≤ 5 we use).
+pub fn poly_fit(xs: &[f64], ys: &[f64], degree: usize) -> Vec<f64> {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() > degree, "need more points than coefficients");
+    let m = degree + 1;
+    // Normal matrix A (m×m) and rhs b.
+    let mut a = vec![vec![0.0f64; m]; m];
+    let mut b = vec![0.0f64; m];
+    // Power sums S_k = Σ x^k for k = 0..2·degree.
+    let mut s = vec![0.0f64; 2 * degree + 1];
+    for &x in xs {
+        let mut p = 1.0;
+        for sk in s.iter_mut() {
+            *sk += p;
+            p *= x;
+        }
+    }
+    for (i, row) in a.iter_mut().enumerate() {
+        for (j, cell) in row.iter_mut().enumerate() {
+            *cell = s[i + j];
+        }
+    }
+    for (&x, &y) in xs.iter().zip(ys) {
+        let mut p = 1.0;
+        for bi in b.iter_mut() {
+            *bi += p * y;
+            p *= x;
+        }
+    }
+    solve_linear(&mut a, &mut b)
+}
+
+/// Evaluate a polynomial with coefficients in ascending order (Horner).
+pub fn poly_eval(coeffs: &[f64], x: f64) -> f64 {
+    coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+}
+
+/// Solve `A x = b` in place via Gaussian elimination with partial pivoting.
+pub fn solve_linear(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Partial pivot.
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        let diag = a[col][col];
+        assert!(diag.abs() > 1e-300, "singular normal matrix");
+        for row in col + 1..n {
+            let factor = a[row][col] / diag;
+            for k in col..n {
+                a[row][k] -= factor * a[col][k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_exact() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (m, c) = linear_fit(&xs, &ys);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((c - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poly_recovers_cubic() {
+        let truth = [0.5, -1.0, 2.0, 0.25]; // 0.5 - x + 2x² + 0.25x³
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 * 0.3 - 3.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| poly_eval(&truth, x)).collect();
+        let fit = poly_fit(&xs, &ys, 3);
+        for (f, t) in fit.iter().zip(truth.iter()) {
+            assert!((f - t).abs() < 1e-8, "fit={fit:?}");
+        }
+    }
+
+    #[test]
+    fn poly_eval_horner() {
+        assert_eq!(poly_eval(&[1.0, 2.0, 3.0], 2.0), 1.0 + 4.0 + 12.0);
+        assert_eq!(poly_eval(&[], 5.0), 0.0);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let mut a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let mut b = vec![3.0, 4.0];
+        assert_eq!(solve_linear(&mut a, &mut b), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_needs_pivot() {
+        // First pivot is zero — exercises row swapping.
+        let mut a = vec![vec![0.0, 1.0], vec![2.0, 0.0]];
+        let mut b = vec![5.0, 6.0];
+        let x = solve_linear(&mut a, &mut b);
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Offline-build utility layer: PRNG, statistics, fitting, emitters, CLI,
+//! and a micro-benchmark harness.
+//!
+//! The build environment vendors only the `xla` crate closure, so the usual
+//! ecosystem crates (`rand`, `serde`, `clap`, `criterion`, `proptest`) are
+//! unavailable; these modules are small, tested replacements.
+
+pub mod rng;
+pub mod stats;
+pub mod fit;
+pub mod csv;
+pub mod json;
+pub mod cli;
+pub mod bench;
+
+pub use rng::Pcg64;
+pub use stats::Summary;

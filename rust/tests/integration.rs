@@ -1,0 +1,213 @@
+//! Cross-module integration tests (no artifacts required).
+
+use nvm_in_cache::array::SubArray;
+use nvm_in_cache::cache::addr::Geometry;
+use nvm_in_cache::cache::controller::{CacheController, PimIntegration};
+use nvm_in_cache::cell::timing::EnergyLedger;
+use nvm_in_cache::cell::{BitCell, PimParams};
+use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
+use nvm_in_cache::coordinator::{
+    BankScheduler, BatcherConfig, InferenceRequest, Server, ServerConfig,
+};
+use nvm_in_cache::device::Corner;
+use nvm_in_cache::nn::{resnet, ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::transfer::TransferModel;
+use nvm_in_cache::pim::PimEngine;
+use nvm_in_cache::util::rng::Pcg64;
+
+/// The full analog stack agrees: cell-accurate sub-array ≈ fast engine ≈
+/// closed-form transfer model, within ADC quantization bounds.
+#[test]
+fn subarray_engine_transfer_consistency() {
+    let mut rng = Pcg64::seeded(42);
+    let weights: Vec<u8> = (0..ARRAY_ROWS * ARRAY_WORDS)
+        .map(|_| rng.below(16) as u8)
+        .collect();
+    let ia4: Vec<u8> = (0..ARRAY_ROWS).map(|_| rng.below(16) as u8).collect();
+
+    // Cell-accurate sub-array.
+    let mut sa = SubArray::new(Corner::TT);
+    sa.load_weights(&weights);
+    let sa_out = sa.pim_mac_4b(&ia4, None);
+
+    // Fast engine path on the same integer problem (single unsigned bank).
+    let eng = PimEngine::tt();
+    let qa = nvm_in_cache::pim::quant::QuantizedActs {
+        data: ia4.clone(),
+        m: 1,
+        k: ARRAY_ROWS,
+        scale: 1.0,
+    };
+    let eng_out = eng.bank_mac(&qa, &weights, ARRAY_WORDS, None);
+
+    // Closed-form: quantize each plane MAC.
+    let tm = TransferModel::tt();
+    let lsb = 1920.0 / 63.0;
+    for w in (0..ARRAY_WORDS).step_by(13) {
+        let mut closed = 0.0f64;
+        for b in 0..4u32 {
+            let mac: u32 = (0..ARRAY_ROWS)
+                .filter(|&r| (ia4[r] >> b) & 1 == 1)
+                .map(|r| weights[r * ARRAY_WORDS + w] as u32)
+                .sum();
+            closed += (1u32 << b) as f64 * tm.quantize_mac(mac as f64, true);
+        }
+        assert!(
+            (eng_out[w] as f64 - closed).abs() < 1e-2,
+            "engine vs closed at word {w}: {} vs {closed}",
+            eng_out[w]
+        );
+        assert!(
+            (sa_out[w] as f64 - closed).abs() <= 2.0 * lsb * 15.0,
+            "subarray vs closed at word {w}: {} vs {closed}",
+            sa_out[w]
+        );
+    }
+}
+
+/// PIM campaigns on the cache retain data end-to-end through controller +
+/// addressed traffic.
+#[test]
+fn retention_end_to_end() {
+    let geom = Geometry::tiny();
+    let mut retained = CacheController::new(geom, PimIntegration::Retained);
+    let addrs: Vec<_> = (0..32u64)
+        .map(|i| nvm_in_cache::cache::Address::new(i * 64))
+        .collect();
+    let datas: Vec<[u8; 64]> = addrs.iter().map(|a| retained.read(*a)).collect();
+    // Program weights + run campaigns in a different sub-array.
+    retained.program_campaign(0, 1, vec![5u8; 128 * 128]);
+    retained.pim_campaign(0, 1, 64);
+    for (a, d) in addrs.iter().zip(&datas) {
+        let (res, got) = retained.slice.read(*a);
+        assert_eq!(res, nvm_in_cache::cache::slice::AccessResult::Hit);
+        assert_eq!(got.as_ref(), Some(d));
+    }
+}
+
+/// Scheduler + server end-to-end with the native executor on synthetic
+/// weights: responses arrive, hardware cost is accounted.
+#[test]
+fn serve_with_native_executor() {
+    let params = resnet::test_params(8, 10, 3);
+    let scheduler = BankScheduler::new(
+        BankScheduler::resnet18_layers(8),
+        Geometry::default(),
+        PimIntegration::Retained,
+    )
+    .unwrap();
+    let server = Server::start(
+        Box::new(move || {
+            Ok(Box::new(nvm_in_cache::coordinator::server::NativeExecutor {
+                net: ResNet::new(params),
+                mode: ForwardMode::Baseline,
+                dims: (16, 16, 3),
+                seed: 0,
+            }) as Box<dyn nvm_in_cache::coordinator::Executor>)
+        }),
+        Some(scheduler),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+        },
+    );
+    let mut rng = Pcg64::seeded(9);
+    for i in 0..8u64 {
+        let img: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.f64() as f32).collect();
+        server.submit(InferenceRequest::new(i, img));
+    }
+    for _ in 0..8 {
+        let r = server
+            .responses
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("response");
+        assert!(r.predicted < 10);
+        assert!(r.hw_latency_s > 0.0, "scheduler must account hw latency");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.responses, 8);
+    assert!(m.hw_energy_j > 0.0);
+    assert!(m.hw_ops > 0.0);
+}
+
+/// Gated-GND discipline ablation at the cell level.
+#[test]
+fn gated_gnd_discipline_protects_data() {
+    for q in [false, true] {
+        for w in [false, true] {
+            let mut good = BitCell::with_weight_bit(Corner::TT, w);
+            good.q = q;
+            let mut bad = good.clone();
+            let mut led = EnergyLedger::new();
+            let ok = good.pim_dot_product(true, &PimParams::default(), &mut led);
+            assert!(ok.retained);
+            let violated = bad.pim_dot_product(
+                true,
+                &PimParams { skip_gated_gnd: true, ..Default::default() },
+                &mut led,
+            );
+            if q {
+                assert!(!violated.retained, "q=1 must corrupt under violation");
+            }
+        }
+    }
+}
+
+/// Conv mapping → scheduler placement → cost model chain is coherent for
+/// every layer of the e2e network.
+#[test]
+fn mapping_chain_consistency() {
+    let layers = BankScheduler::resnet18_layers(16);
+    for shape in &layers {
+        let m = nvm_in_cache::mapping::ConvMapping::plan(*shape);
+        assert!(m.total_subarrays >= 1);
+        assert!(m.mean_utilization() > 0.0 && m.mean_utilization() <= 1.0);
+        assert_eq!(m.submatrices, shape.k * shape.k);
+    }
+    let mut sched =
+        BankScheduler::new(layers, Geometry::default(), PimIntegration::Retained).unwrap();
+    sched.program_network();
+    let c = sched.batch_cost(2);
+    assert!(c.ops > 1e6, "ResNet-18 fwd is MMACs: {}", c.ops);
+    assert!(c.latency_s > 0.0 && c.energy_j > 0.0);
+}
+
+/// The native PIM path computes the same function as fp32 up to
+/// quantization (finite, same shape) on a random net.
+#[test]
+fn native_pim_vs_baseline_predictions() {
+    let net = ResNet::new(resnet::test_params(8, 10, 11));
+    let mut rng = Pcg64::seeded(3);
+    let x = Tensor::from_vec(
+        &[4, 16, 16, 3],
+        (0..4 * 16 * 16 * 3).map(|_| rng.f64() as f32).collect(),
+    );
+    let base = net.forward(&x, ForwardMode::Baseline, 0).unwrap();
+    let pim = net.forward(&x, ForwardMode::Pim, 0).unwrap();
+    assert_eq!(base.shape, pim.shape);
+    assert!(pim.data.iter().all(|v| v.is_finite()));
+}
+
+/// Figures generate cleanly into a temp dir (smoke over all generators,
+/// small MC count).
+#[test]
+fn figures_generate_all_smoke() {
+    let dir = std::env::temp_dir().join("nvm_figs_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    nvm_in_cache::figures::generate_all(&dir, 10).unwrap();
+    for f in [
+        "fig9a_rram_iv.csv",
+        "fig9bcd_snm.csv",
+        "section_vb_scalars.csv",
+        "fig10_weight_voltage.csv",
+        "fig11a_weight_current.csv",
+        "fig12a_adc_transfer.csv",
+        "fig13_monte_carlo.csv",
+        "fig14a_kernel.csv",
+        "table1_comparison.csv",
+    ] {
+        assert!(dir.join(f).exists(), "{f} missing");
+    }
+}

@@ -1,0 +1,280 @@
+//! Property-based tests (hand-rolled randomized-invariant harness; the
+//! proptest crate is unavailable offline — see DESIGN.md §2).
+//!
+//! Each property runs against many seeded random cases; failures print the
+//! seed for reproduction.
+
+use nvm_in_cache::array::SarAdc;
+use nvm_in_cache::cache::lru::LruSet;
+use nvm_in_cache::cache::tag::TagSet;
+use nvm_in_cache::cell::timing::EnergyLedger;
+use nvm_in_cache::cell::{BitCell, PimParams};
+use nvm_in_cache::consts::ARRAY_ROWS;
+use nvm_in_cache::coordinator::batcher::{Batcher, BatcherConfig};
+use nvm_in_cache::coordinator::request::InferenceRequest;
+use nvm_in_cache::device::{Corner, Rram, RramState};
+use nvm_in_cache::pim::quant::{quantize_acts, quantize_weights, QuantizedActs};
+use nvm_in_cache::pim::transfer::TransferModel;
+use nvm_in_cache::pim::PimEngine;
+use nvm_in_cache::util::rng::Pcg64;
+
+const CASES: u64 = 60;
+
+/// Property: activation quantization error is bounded by scale/2 and the
+/// reconstruction never exceeds the original max.
+#[test]
+fn prop_act_quantization_error_bounded() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(seed);
+        let m = 1 + rng.below(8);
+        let k = 1 + rng.below(300);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range(0.0, 4.0) as f32).collect();
+        let q = quantize_acts(&a, m, k);
+        for (orig, lvl) in a.iter().zip(q.data.iter()) {
+            let recon = *lvl as f32 * q.scale;
+            assert!(
+                (orig - recon).abs() <= q.scale * 0.5 + 1e-5,
+                "seed {seed}: {orig} vs {recon} (scale {})",
+                q.scale
+            );
+        }
+    }
+}
+
+/// Property: pos/neg weight banks are disjoint and reconstruct the
+/// quantized weight exactly, per column scale.
+#[test]
+fn prop_weight_banks_reconstruct() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(1000 + seed);
+        let k = 1 + rng.below(200);
+        let n = 1 + rng.below(32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.range(-2.0, 2.0) as f32).collect();
+        let q = quantize_weights(&w, k, n);
+        for i in 0..k {
+            for j in 0..n {
+                let idx = i * n + j;
+                assert!(q.pos[idx] == 0 || q.neg[idx] == 0, "seed {seed}");
+                let recon = q.signed_at(i, j) as f32 * q.scale[j];
+                assert!(
+                    (w[idx] - recon).abs() <= q.scale[j] * 0.5 + 1e-5,
+                    "seed {seed} ({i},{j}): {} vs {recon}",
+                    w[idx]
+                );
+            }
+        }
+    }
+}
+
+/// Property: the engine's blockwise MAC is additive over K blocks — the
+/// hardware decomposition invariant (each 128-row block quantized
+/// independently, partial sums added digitally).
+#[test]
+fn prop_engine_block_additivity() {
+    for seed in 0..20 {
+        let mut rng = Pcg64::seeded(2000 + seed);
+        let k1 = ARRAY_ROWS;
+        let k2 = 1 + rng.below(ARRAY_ROWS);
+        let n = 1 + rng.below(12);
+        let eng = PimEngine::tt();
+        let a1: Vec<u8> = (0..k1).map(|_| rng.below(16) as u8).collect();
+        let a2: Vec<u8> = (0..k2).map(|_| rng.below(16) as u8).collect();
+        let b1: Vec<u8> = (0..k1 * n).map(|_| rng.below(16) as u8).collect();
+        let b2: Vec<u8> = (0..k2 * n).map(|_| rng.below(16) as u8).collect();
+        // Whole problem.
+        let mut a = a1.clone();
+        a.extend_from_slice(&a2);
+        let mut bank = b1.clone();
+        bank.extend_from_slice(&b2);
+        let whole = eng.bank_mac(
+            &QuantizedActs { data: a, m: 1, k: k1 + k2, scale: 1.0 },
+            &bank,
+            n,
+            None,
+        );
+        // Parts.
+        let p1 = eng.bank_mac(&QuantizedActs { data: a1, m: 1, k: k1, scale: 1.0 }, &b1, n, None);
+        let p2 = eng.bank_mac(&QuantizedActs { data: a2, m: 1, k: k2, scale: 1.0 }, &b2, n, None);
+        for j in 0..n {
+            let sum = p1[j] + p2[j];
+            // f32 accumulation-order tolerance.
+            let tol = 1e-3 + 1e-6 * sum.abs();
+            assert!(
+                (whole[j] - sum).abs() < tol,
+                "seed {seed} col {j}: {} vs {sum}",
+                whole[j]
+            );
+        }
+    }
+}
+
+/// Property: the SAR ADC equals ideal round-to-nearest for arbitrary
+/// random reference pairs (binary search correctness).
+#[test]
+fn prop_sar_equals_rounding_any_refs() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(3000 + seed);
+        let lo = rng.range(0.0, 0.4);
+        let hi = lo + rng.range(0.1, 0.6);
+        let adc = SarAdc { v_refp: hi, v_refn: lo, cmp_offset: 0.0, cmp_noise: 0.0 };
+        for _ in 0..50 {
+            let v = rng.range(lo - 0.1, hi + 0.1);
+            let x = ((v - lo) / (hi - lo) * 63.0).round().clamp(0.0, 63.0) as u32;
+            assert_eq!(adc.convert_raw(v, None), x, "seed {seed} v={v}");
+        }
+    }
+}
+
+/// Property: transfer-model codes are monotone in MAC for random corners
+/// and calibration settings.
+#[test]
+fn prop_transfer_monotone() {
+    for seed in 0..12 {
+        let mut rng = Pcg64::seeded(4000 + seed);
+        let corner = [Corner::SS, Corner::TT, Corner::FF][rng.below(3)];
+        let cal = rng.below(2) == 0;
+        let m = TransferModel::new(corner);
+        let mut prev = 0;
+        for mac in 0..=1920u32 {
+            let c = m.adc_code(m.sampled_voltage(mac as f64), cal);
+            assert!(c >= prev, "seed {seed} {corner:?} mac={mac}: {c} < {prev}");
+            prev = c;
+        }
+    }
+}
+
+/// Property: LRU + tag behave like a reference model under random traffic.
+#[test]
+fn prop_cache_set_reference_model() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(5000 + seed);
+        let ways = 2 + rng.below(6);
+        let mut tags = TagSet::new(ways);
+        let mut lru = LruSet::new(ways);
+        // Reference: vector of tags in recency order (front = MRU).
+        let mut reference: Vec<u64> = Vec::new();
+        for _ in 0..200 {
+            let tag = rng.below(12) as u64; // small space forces conflicts
+            match tags.lookup(tag) {
+                Some(way) => {
+                    lru.touch(way);
+                    let pos = reference.iter().position(|&t| t == tag).unwrap();
+                    let t = reference.remove(pos);
+                    reference.insert(0, t);
+                }
+                None => {
+                    let way = if tags.valid_count() < ways {
+                        (0..ways).find(|&w| !tags.ways[w].valid).unwrap()
+                    } else {
+                        lru.victim()
+                    };
+                    if tags.ways[way].valid {
+                        let evicted = tags.ways[way].tag;
+                        let pos = reference.iter().position(|&t| t == evicted).unwrap();
+                        assert_eq!(
+                            pos,
+                            reference.len() - 1,
+                            "seed {seed}: evicted tag must be reference-LRU"
+                        );
+                        reference.pop();
+                    }
+                    tags.fill(way, tag);
+                    lru.touch(way);
+                    reference.insert(0, tag);
+                }
+            }
+            // Invariant: resident sets agree.
+            let mut resident: Vec<u64> =
+                tags.ways.iter().filter(|e| e.valid).map(|e| e.tag).collect();
+            resident.sort();
+            let mut refs = reference.clone();
+            refs.sort();
+            assert_eq!(resident, refs, "seed {seed}");
+        }
+    }
+}
+
+/// Property: the batcher never loses, duplicates, or reorders requests.
+#[test]
+fn prop_batcher_conservation() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(6000 + seed);
+        let max_batch = 1 + rng.below(10);
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch,
+            max_wait: std::time::Duration::ZERO,
+        });
+        let n = 1 + rng.below(60);
+        for i in 0..n {
+            b.push(InferenceRequest::new(i as u64, vec![]));
+        }
+        let mut seen = Vec::new();
+        let now = std::time::Instant::now();
+        while let Some(batch) = b.take(now, true) {
+            assert!(batch.len() <= max_batch, "seed {seed}");
+            seen.extend(batch.requests.iter().map(|r| r.id));
+        }
+        assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+/// Property: RRAM programming converges from any random gap state, and
+/// read currents remain ordered LRS > HRS afterwards.
+#[test]
+fn prop_rram_program_from_any_state() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(7000 + seed);
+        let mut d = Rram::new();
+        d.gap = rng.range(d.params.g_min, d.params.g_max);
+        if rng.below(2) == 0 {
+            d.program_pulse(1.6, 4.0e-9);
+            assert_eq!(d.state(), RramState::Lrs, "seed {seed}");
+        } else {
+            d.program_pulse(-1.6, 4.0e-9);
+            assert_eq!(d.state(), RramState::Hrs, "seed {seed}");
+        }
+    }
+}
+
+/// Property: PIM retention holds for every (q, weight, ia) across random
+/// Monte-Carlo cell variations.
+#[test]
+fn prop_pim_retention_under_variation() {
+    let vm = nvm_in_cache::device::VariationModel::default();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(8000 + seed);
+        let mut cell =
+            BitCell::with_variation(Corner::TT, vm.sample_cell(&mut rng));
+        cell.set_weight_bit(rng.below(2) == 0);
+        cell.q = rng.below(2) == 0;
+        let q0 = cell.q;
+        let mut led = EnergyLedger::new();
+        let out = cell.pim_dot_product(rng.below(2) == 0, &PimParams::default(), &mut led);
+        assert!(out.retained, "seed {seed}");
+        assert_eq!(cell.q, q0, "seed {seed}");
+    }
+}
+
+/// Property: ledger totals are additive under merge (random op streams).
+#[test]
+fn prop_ledger_merge_additive() {
+    use nvm_in_cache::cell::timing::OpKind;
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(9000 + seed);
+        let mut a = EnergyLedger::new();
+        let mut b = EnergyLedger::new();
+        for _ in 0..50 {
+            let kind = OpKind::ALL[rng.below(OpKind::ALL.len())];
+            if rng.below(2) == 0 {
+                a.record(kind);
+            } else {
+                b.record(kind);
+            }
+        }
+        let (ta, ea) = (a.total_time(), a.total_energy());
+        let (tb, eb) = (b.total_time(), b.total_energy());
+        a.merge(&b);
+        assert!((a.total_time() - (ta + tb)).abs() < 1e-18, "seed {seed}");
+        assert!((a.total_energy() - (ea + eb)).abs() < 1e-24, "seed {seed}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Cross-language runtime checks: the AOT-exported HLO artifacts executed
+//! through PJRT must agree with the Rust-native implementations.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass with a
+//! notice) when the artifact directory is absent so `cargo test` stays
+//! green on a fresh checkout.
+
+use nvm_in_cache::nn::{Dataset, ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::quant::QuantizedActs;
+use nvm_in_cache::pim::transfer::{ADC_CODES, MAC_FULLSCALE};
+use nvm_in_cache::pim::PimEngine;
+use nvm_in_cache::runtime::{ArtifactDir, ModelVariant, Runtime};
+use nvm_in_cache::util::rng::Pcg64;
+
+fn artifacts() -> Option<ArtifactDir> {
+    match ArtifactDir::open("artifacts") {
+        Ok(d) => Some(d),
+        Err(_) => {
+            eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+/// The L1 pallas kernel HLO, executed via PJRT, must match the Rust
+/// engine's LUT math on random integer tiles to well below one ADC LSB.
+#[test]
+fn pim_mac_kernel_hlo_matches_engine() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(1).expect("pjrt cpu client");
+    rt.load_kernel(&dir, "pim_mac.hlo.txt").expect("kernel compiles");
+    let eng = PimEngine::tt();
+    let mut rng = Pcg64::seeded(77);
+    for case in 0..3 {
+        let a_int: Vec<u8> = (0..128 * 128).map(|_| rng.below(16) as u8).collect();
+        let w_int: Vec<u8> = (0..128 * 128).map(|_| rng.below(16) as u8).collect();
+        let a_f: Vec<f32> = a_int.iter().map(|&x| x as f32).collect();
+        let w_f: Vec<f32> = w_int.iter().map(|&x| x as f32).collect();
+        let hlo_out = rt.pim_mac_tile(&a_f, &w_f).expect("kernel runs");
+        let rust_out = eng.bank_mac(
+            &QuantizedActs { data: a_int, m: 128, k: 128, scale: 1.0 },
+            &w_int,
+            128,
+            None,
+        );
+        let lsb = MAC_FULLSCALE as f32 / ADC_CODES as f32;
+        let mut max_err = 0.0f32;
+        for (h, r) in hlo_out.iter().zip(rust_out.iter()) {
+            max_err = max_err.max((h - r).abs());
+        }
+        assert!(
+            max_err < 0.1 * lsb,
+            "case {case}: kernel-vs-engine max err {max_err} (LSB {lsb})"
+        );
+    }
+}
+
+/// The baseline model HLO must match the Rust-native fp32 forward on the
+/// real weights — layout, GroupNorm, padding: everything.
+#[test]
+fn baseline_model_hlo_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let batch = dir.eval_batch();
+    let mut rt = Runtime::new(batch).expect("pjrt");
+    rt.load_variant(&dir, ModelVariant::Baseline).expect("compiles");
+    let ds = Dataset::load(&dir.path("dataset.bin").unwrap()).unwrap();
+    let net = ResNet::load(&dir.path("weights.bin").unwrap()).unwrap();
+    let (x, _) = ds.batch(0, batch);
+    let hlo_logits = rt
+        .forward(ModelVariant::Baseline, &x.data, (ds.h, ds.w, ds.c), None)
+        .unwrap();
+    let native = net.forward(&x, ForwardMode::Baseline, 0).unwrap();
+    assert_eq!(hlo_logits.len(), native.len());
+    let scale = native.data.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+    let max_err = hlo_logits
+        .iter()
+        .zip(&native.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_err < 5e-3 * scale.max(1.0),
+        "baseline logits diverge: max err {max_err}, scale {scale}"
+    );
+    // And the predictions agree exactly.
+    let hlo_preds: Vec<u8> = hlo_logits
+        .chunks(10)
+        .map(|r| r.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as u8)
+        .collect();
+    let native_preds = net.classify(&x, ForwardMode::Baseline, 0).unwrap();
+    assert_eq!(hlo_preds, native_preds);
+}
+
+/// Table II through PJRT must reproduce the manifest accuracies (same
+/// dataset, same weights — exact for deterministic variants).
+#[test]
+fn table2_via_pjrt_matches_manifest() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Dataset::load(&dir.path("dataset.bin").unwrap()).unwrap();
+    let batch = dir.eval_batch();
+    let mut rt = Runtime::new(batch).expect("pjrt");
+    for (variant, key) in [
+        (ModelVariant::Baseline, "baseline"),
+        (ModelVariant::Pim, "pim_finetuned"),
+    ] {
+        rt.load_variant(&dir, variant).expect("compiles");
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut start = 0usize;
+        while start < ds.n {
+            let take = batch.min(ds.n - start);
+            let (x, labels) = ds.batch(start, take);
+            let mut images = x.data.clone();
+            images.resize(batch * ds.h * ds.w * ds.c, 0.0);
+            let preds = rt
+                .classify(variant, &images, (ds.h, ds.w, ds.c), 10, None)
+                .unwrap();
+            for (p, l) in preds.iter().zip(labels.iter()) {
+                correct += (p == l) as usize;
+                total += 1;
+            }
+            start += take;
+        }
+        let acc = correct as f64 / total as f64;
+        let expected = dir.manifest.accuracy(key).expect("manifest accuracy");
+        assert!(
+            (acc - expected).abs() < 0.005,
+            "{variant:?}: PJRT acc {acc:.4} vs manifest {expected:.4}"
+        );
+        println!("{variant:?}: {acc:.4} (manifest {expected:.4}) ✓");
+    }
+}
+
+/// The noise variant is deterministic in the key and perturbs predictions
+/// only slightly at the calibrated sigma.
+#[test]
+fn noise_variant_deterministic_and_mild() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Dataset::load(&dir.path("dataset.bin").unwrap()).unwrap();
+    let batch = dir.eval_batch();
+    let mut rt = Runtime::new(batch).expect("pjrt");
+    rt.load_variant(&dir, ModelVariant::PimNoise).expect("compiles");
+    let (x, _) = ds.batch(0, batch);
+    let a = rt
+        .forward(ModelVariant::PimNoise, &x.data, (ds.h, ds.w, ds.c), Some([1, 2]))
+        .unwrap();
+    let b = rt
+        .forward(ModelVariant::PimNoise, &x.data, (ds.h, ds.w, ds.c), Some([1, 2]))
+        .unwrap();
+    let c = rt
+        .forward(ModelVariant::PimNoise, &x.data, (ds.h, ds.w, ds.c), Some([3, 4]))
+        .unwrap();
+    assert_eq!(a, b, "same key ⇒ identical logits");
+    assert_ne!(a, c, "different key ⇒ different noise");
+    // Noise is mild: logit perturbation well below the logit scale.
+    let scale = a.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+    let mean_d: f32 =
+        a.iter().zip(&c).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+    assert!(mean_d < 0.5 * scale, "noise too large: {mean_d} vs {scale}");
+}
+
+/// Native Rust PIM-emulation accuracy lands near the manifest number — the
+/// three implementations (JAX, PJRT-HLO, Rust-native) of the §V-E pipeline
+/// agree at the accuracy level.
+#[test]
+fn native_pim_accuracy_near_manifest() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Dataset::load(&dir.path("dataset.bin").unwrap()).unwrap();
+    let net = ResNet::load(&dir.path("weights_ft.bin").unwrap()).unwrap();
+    // Subset for speed (native conv is the slow path).
+    let n = 200.min(ds.n);
+    let (x, labels) = ds.batch(0, n);
+    let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], x.data);
+    let preds = net.classify(&x, ForwardMode::Pim, 0).unwrap();
+    let acc = preds
+        .iter()
+        .zip(labels.iter())
+        .filter(|(p, l)| p == l)
+        .count() as f64
+        / n as f64;
+    let expected = dir.manifest.accuracy("pim_finetuned").unwrap();
+    assert!(
+        (acc - expected).abs() < 0.06,
+        "native PIM acc {acc:.3} vs manifest {expected:.3} (subset n={n})"
+    );
+}
