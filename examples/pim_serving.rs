@@ -1,24 +1,26 @@
 //! Serving demo: the L3 coordinator end-to-end — router, dynamic batcher,
-//! bank scheduler, metrics — with the PJRT-compiled PIM model as backend.
+//! bank scheduler, metrics — with the PIM model variant executed through
+//! the `Runtime` seam (StubRuntime by default).
 //!
 //! Simulates an open-loop arrival process of single-image inference
 //! requests, serves them through the batched PIM path, and reports latency
 //! percentiles, batching efficiency, and the simulated hardware
 //! throughput/energy of the underlying 6T-2R arrays.
 //!
-//! Requires `make artifacts`. Run:
+//! Requires the trained artifacts (weights_ft.bin + dataset.bin; see
+//! python/compile/aot.py). Run:
 //!   cargo run --release --example pim_serving [n_requests]
 
 use std::time::Duration;
 
 use nvm_in_cache::cache::addr::Geometry;
 use nvm_in_cache::cache::controller::PimIntegration;
-use nvm_in_cache::coordinator::server::{Executor, PjrtExecutor};
+use nvm_in_cache::coordinator::server::{Executor, RuntimeExecutor};
 use nvm_in_cache::coordinator::{
     BankScheduler, BatcherConfig, InferenceRequest, Router, Server, ServerConfig,
 };
 use nvm_in_cache::nn::Dataset;
-use nvm_in_cache::runtime::{ArtifactDir, ModelVariant, Runtime};
+use nvm_in_cache::runtime::{default_runtime, ArtifactDir, ModelVariant};
 use nvm_in_cache::util::rng::Pcg64;
 
 fn main() -> nvm_in_cache::Result<()> {
@@ -26,7 +28,15 @@ fn main() -> nvm_in_cache::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(400);
-    let dir = ArtifactDir::open("artifacts")?;
+    let dir = match ArtifactDir::open("artifacts") {
+        Ok(d) => d,
+        Err(e) => {
+            println!("NOTE: {e}");
+            println!("this demo needs the trained artifacts; try the artifact-free");
+            println!("`cargo run --release --example quickstart` instead.");
+            return Ok(());
+        }
+    };
     let ds = Dataset::load(&dir.path("dataset.bin")?)?;
     let dims = (ds.h, ds.w, ds.c);
     let batch = dir.eval_batch();
@@ -52,9 +62,9 @@ fn main() -> nvm_in_cache::Result<()> {
     let dir2 = ArtifactDir::open(dir.root.clone())?;
     let server = Server::start(
         Box::new(move || {
-            let mut rt = Runtime::new(dir2.eval_batch())?;
+            let mut rt = default_runtime(dir2.eval_batch())?;
             rt.load_variant(&dir2, ModelVariant::Pim)?;
-            Ok(Box::new(PjrtExecutor {
+            Ok(Box::new(RuntimeExecutor {
                 runtime: rt,
                 variant: ModelVariant::Pim,
                 dims,

@@ -2,7 +2,9 @@
 //!
 //! Walks the paper's §III story at the API level: program a weight, verify
 //! SRAM mode still works, run the two-cycle PIM dot-product while holding
-//! cache data, then scale up to a full 128×512 sub-array MAC.
+//! cache data, scale up to a full 128×512 sub-array MAC, then run a whole
+//! CNN batch end-to-end through the `Runtime` seam (StubRuntime — no
+//! artifacts or external dependencies needed).
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -11,7 +13,9 @@ use nvm_in_cache::cell::timing::EnergyLedger;
 use nvm_in_cache::cell::{BitCell, PimParams, Side};
 use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
 use nvm_in_cache::device::Corner;
+use nvm_in_cache::nn::resnet::test_params;
 use nvm_in_cache::pim::transfer::TransferModel;
+use nvm_in_cache::runtime::{ModelVariant, Runtime, StubRuntime};
 use nvm_in_cache::util::rng::Pcg64;
 
 fn main() {
@@ -82,6 +86,29 @@ fn main() {
         let code = tm.adc_code(v, true);
         println!("  weight {w:>2} → {:.1} mV → code {code}", v * 1e3);
     }
+
+    println!("\n=== 4. A CNN batch through the Runtime seam (§V-E) ===");
+    // The serving stack programs against the `Runtime` trait; the in-tree
+    // StubRuntime backend routes variants through the digital-exact ResNet
+    // forward + ADC emulation. Synthetic weights here — swap in
+    // `load_variant(&ArtifactDir::open("artifacts")?, …)` for the trained
+    // ones.
+    let batch = 4;
+    let mut rt = StubRuntime::new(batch);
+    rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1));
+    rt.load_variant_params(ModelVariant::Pim, test_params(8, 10, 1));
+    println!("runtime backend: {}", rt.platform());
+    let images: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.f64() as f32).collect();
+    let base = rt
+        .classify(ModelVariant::Baseline, &images, (16, 16, 3), 10, None)
+        .expect("baseline classify");
+    let pim = rt
+        .classify(ModelVariant::Pim, &images, (16, 16, 3), 10, None)
+        .expect("pim classify");
+    println!("fp32 baseline predictions : {base:?}");
+    println!("PIM-emulated predictions  : {pim:?}");
+    let agree = base.iter().zip(&pim).filter(|(a, b)| a == b).count();
+    println!("agreement under 6-bit ADC quantization: {agree}/{batch}");
 
     println!("\nenergy so far: {:.2} pJ over {:.1} ns of op time",
         ledger.total_energy() * 1e12, ledger.total_time() * 1e9);

@@ -1,19 +1,19 @@
-//! End-to-end driver (DESIGN.md E10 / Table II): load the AOT-compiled
+//! End-to-end driver (EXPERIMENTS.md E10 / Table II): load the trained
 //! model artifacts, run batched inference over the full test set through
-//! the PJRT runtime, and report Table II side-by-side with the paper —
-//! proving all three layers compose (Pallas kernel → JAX model → Rust
+//! the `Runtime` seam, and report Table II side-by-side with the paper —
+//! proving all the layers compose (quantized kernel math → model →
 //! runtime/coordinator).
 //!
-//! Requires `make artifacts`. Run:
+//! Requires the trained artifacts (see python/compile/aot.py). Run:
 //!   cargo run --release --example resnet_pim_e2e
 
 use std::time::Instant;
 
 use nvm_in_cache::nn::Dataset;
-use nvm_in_cache::runtime::{ArtifactDir, ModelVariant, Runtime};
+use nvm_in_cache::runtime::{default_runtime, ArtifactDir, ModelVariant, Runtime};
 
 fn eval(
-    rt: &Runtime,
+    rt: &dyn Runtime,
     ds: &Dataset,
     variant: ModelVariant,
     batch: usize,
@@ -43,10 +43,18 @@ fn eval(
 }
 
 fn main() -> nvm_in_cache::Result<()> {
-    let dir = ArtifactDir::open("artifacts")?;
+    let dir = match ArtifactDir::open("artifacts") {
+        Ok(d) => d,
+        Err(e) => {
+            println!("NOTE: {e}");
+            println!("this driver needs the trained artifacts; try the artifact-free");
+            println!("`cargo run --release --example quickstart` instead.");
+            return Ok(());
+        }
+    };
     let ds = Dataset::load(&dir.path("dataset.bin")?)?;
     let batch = dir.eval_batch();
-    let mut rt = Runtime::new(batch)?;
+    let mut rt = default_runtime(batch)?;
     println!(
         "platform {} | test set {} images ({}×{}×{}) | batch {}",
         rt.platform(),
@@ -63,7 +71,7 @@ fn main() -> nvm_in_cache::Result<()> {
         ("ADC nonlinearity + noise (fine-tuned)", ModelVariant::PimNoise, "pim_finetuned_noise", Some(91.27)),
     ];
 
-    println!("\nTable II — measured through the PJRT runtime:");
+    println!("\nTable II — measured through the runtime backend:");
     println!(
         "{:<44} {:>9} {:>9} {:>8} {:>9}",
         "configuration", "measured", "manifest", "paper", "img/s"
@@ -109,6 +117,9 @@ fn main() -> nvm_in_cache::Result<()> {
         ips
     );
 
-    println!("\nAll layers composed: Pallas kernel → JAX model → HLO text → PJRT → Rust.");
+    println!(
+        "\nAll layers composed: quantized kernel math → model → runtime ({}).",
+        rt.platform()
+    );
     Ok(())
 }

@@ -4,11 +4,11 @@
 //! The NVM-in-Cache deployment story: inference requests arrive from cores;
 //! the coordinator batches them, schedules their layer MACs onto the LLC's
 //! PIM-capable banks (weights resident in the RRAM layer, cache data
-//! retained), executes the model forward — through the PJRT-compiled
-//! artifacts or the native engine — and accounts hardware-simulated
-//! latency/energy alongside real wall-clock.
+//! retained), executes the model forward — through any
+//! [`crate::runtime::Runtime`] backend or the native engine — and accounts
+//! hardware-simulated latency/energy alongside real wall-clock.
 //!
-//! Offline build ⇒ std::thread + mpsc rather than tokio (DESIGN.md §2).
+//! Offline build ⇒ std::thread + mpsc rather than tokio.
 
 pub mod batcher;
 pub mod metrics;
@@ -22,4 +22,4 @@ pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};
 pub use router::Router;
 pub use scheduler::BankScheduler;
-pub use server::{Executor, Server, ServerConfig};
+pub use server::{Executor, NativeExecutor, RuntimeExecutor, Server, ServerConfig};

@@ -2,9 +2,9 @@
 //! responses, with metrics and simulated-hardware accounting.
 //!
 //! std::thread + mpsc (offline build; no tokio). One executor thread — the
-//! testbed has one core, and PJRT executables are not Sync — with the
-//! batcher amortizing per-invocation cost exactly like the hardware's
-//! shared PIM windows do.
+//! testbed has one core, and runtime backends (e.g. PJRT executables) need
+//! not be Sync — with the batcher amortizing per-invocation cost exactly
+//! like the hardware's shared PIM windows do.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -20,8 +20,9 @@ use super::scheduler::BankScheduler;
 
 /// Pluggable inference backend.
 ///
-/// Not `Send`: PJRT handles are thread-affine, so the server constructs
-/// its executor *inside* the worker thread from a `Send` factory.
+/// Not `Send`: runtime handles (PJRT in particular) are thread-affine, so
+/// the server constructs its executor *inside* the worker thread from a
+/// `Send` factory.
 pub trait Executor {
     /// Classify `n` images (flattened, n × image_elems). Returns `n`
     /// predicted classes.
@@ -36,6 +37,7 @@ pub type ExecutorFactory = Box<dyn FnOnce() -> Result<Box<dyn Executor>> + Send>
 /// Server configuration.
 #[derive(Clone, Debug, Default)]
 pub struct ServerConfig {
+    /// Dynamic-batching policy.
     pub batcher: BatcherConfig,
 }
 
@@ -47,7 +49,9 @@ enum Event {
 /// A running server.
 pub struct Server {
     tx: mpsc::Sender<Event>,
+    /// Completed responses, in execution order.
     pub responses: mpsc::Receiver<InferenceResponse>,
+    /// Live metrics (shared with the worker thread).
     pub metrics: Arc<Mutex<Metrics>>,
     handle: Option<JoinHandle<()>>,
 }
@@ -173,6 +177,7 @@ impl Server {
         }
     }
 
+    /// Enqueue a request (non-blocking).
     pub fn submit(&self, req: InferenceRequest) {
         let _ = self.tx.send(Event::Request(req));
     }
@@ -198,11 +203,16 @@ impl Drop for Server {
     }
 }
 
-/// Native-engine executor (no PJRT): runs the Rust ResNet in a mode.
+/// Native-engine executor (no runtime backend): runs the Rust ResNet in a
+/// forward mode directly.
 pub struct NativeExecutor {
+    /// The network.
     pub net: crate::nn::ResNet,
+    /// Forward mode (baseline / PIM emulation / hardware-true).
     pub mode: crate::nn::ForwardMode,
+    /// Image dimensions (h, w, c).
     pub dims: (usize, usize, usize),
+    /// Noise seed, bumped per batch.
     pub seed: u64,
 }
 
@@ -219,21 +229,28 @@ impl Executor for NativeExecutor {
     }
 }
 
-/// PJRT executor over a fixed-batch compiled model variant; short batches
-/// are zero-padded up to the compiled batch size.
-pub struct PjrtExecutor {
-    pub runtime: crate::runtime::Runtime,
+/// Executor over any [`crate::runtime::Runtime`] backend with a loaded
+/// fixed-batch model variant; short batches are zero-padded up to the
+/// backend's batch size.
+pub struct RuntimeExecutor {
+    /// The backend (stub by default; PJRT behind the `pjrt` feature).
+    pub runtime: Box<dyn crate::runtime::Runtime>,
+    /// Which loaded variant this executor serves.
     pub variant: crate::runtime::ModelVariant,
+    /// Image dimensions (h, w, c).
     pub dims: (usize, usize, usize),
+    /// Number of output classes.
     pub n_classes: usize,
+    /// Per-batch counter feeding the PimNoise key (fresh noise per batch,
+    /// reproducible per counter value).
     pub key_counter: u32,
 }
 
-impl Executor for PjrtExecutor {
+impl Executor for RuntimeExecutor {
     fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>> {
         let (h, w, c) = self.dims;
         let elems = h * w * c;
-        let b = self.runtime.batch;
+        let b = self.runtime.batch();
         assert!(n <= b, "batch {n} exceeds compiled batch {b}");
         let mut padded = images.to_vec();
         padded.resize(b * elems, 0.0);

@@ -29,15 +29,24 @@
 //!   multi-bit scheduling, digital shift-add / positive-negative-bank
 //!   subtraction post-processing.
 //! * [`nn`] — a small digital-exact inference stack (tensors, conv/bn/fc,
-//!   the ResNet-18 topology) used as the fp32 baseline and as the
-//!   cross-check against the PJRT-executed JAX artifacts.
-//! * [`runtime`] — PJRT CPU client: loads `artifacts/*.hlo.txt` produced by
-//!   the build-time JAX/Pallas pipeline and executes them from Rust.
+//!   the ResNet-18 topology) used as the fp32 baseline and as the ground
+//!   truth every runtime backend is cross-checked against.
+//! * [`runtime`] — the model-execution seam: the [`runtime::Runtime`]
+//!   trait, the in-tree [`runtime::StubRuntime`] backend (digital-exact
+//!   [`nn::ResNet`] forward + [`pim::TransferModel`] emulation, zero
+//!   dependencies), and a feature-gated (`pjrt`) slot where the original
+//!   xla-crate PJRT client can be re-attached.
 //! * [`coordinator`] — the serving layer: request router, dynamic batcher,
 //!   bank scheduler, metrics. std::thread + mpsc (offline build, no tokio).
 //! * [`perf`] — the analytic throughput/energy/area model that reproduces
 //!   Table I and the Fig. 14 scaling study.
 //! * [`figures`] — one generator per paper table/figure.
+//!
+//! See README.md for the quickstart, ARCHITECTURE.md for the layer-by-layer
+//! data flow, and EXPERIMENTS.md for the experiment ids (E1–E11, §Perf,
+//! A1–A3) cited throughout the code.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod device;
@@ -110,20 +119,65 @@ pub mod consts {
 }
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// Hand-rolled `Display`/`Error`/`From` impls (the `thiserror` crate is
+/// unavailable in the offline build).
+#[derive(Debug)]
 pub enum Error {
-    #[error("artifact error: {0}")]
+    /// A required artifact (weights, dataset, manifest) is missing or
+    /// malformed.
     Artifact(String),
-    #[error("runtime error: {0}")]
+    /// A runtime backend failed (variant not loaded, shape mismatch, …).
     Runtime(String),
-    #[error("config error: {0}")]
+    /// Bad user-supplied configuration (CLI options, geometry, …).
     Config(String),
-    #[error("cache error: {0}")]
+    /// Cache-substrate invariant violation.
     Cache(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error(transparent)]
-    Xla(#[from] xla::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Cache(m) => write!(f, "cache error: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_and_source() {
+        let e = Error::Artifact("weights.bin missing".into());
+        assert_eq!(e.to_string(), "artifact error: weights.bin missing");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(io.to_string().contains("boom"));
+        assert!(std::error::Error::source(&io).is_some());
+        assert!(std::error::Error::source(&e).is_none());
+    }
+}

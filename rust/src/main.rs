@@ -5,7 +5,7 @@
 //!   table1   [--artifacts DIR] [--out DIR]
 //!   table2   [--artifacts DIR] [--out DIR]           (manifest accuracies)
 //!   e2e      [--artifacts DIR] [--variant V] [--limit N]
-//!            re-measures Table II through the PJRT runtime on dataset.bin
+//!            re-measures Table II through the runtime backend on dataset.bin
 //!   serve    [--artifacts DIR] [--requests N] [--batch B] [--native]
 //!            demo serving run with the dynamic batcher + bank scheduler
 //!   info     print headline perf model numbers
@@ -14,14 +14,14 @@ use std::path::PathBuf;
 
 use nvm_in_cache::cache::addr::Geometry;
 use nvm_in_cache::cache::controller::PimIntegration;
-use nvm_in_cache::coordinator::server::{Executor, NativeExecutor, PjrtExecutor};
+use nvm_in_cache::coordinator::server::{Executor, NativeExecutor, RuntimeExecutor};
 use nvm_in_cache::coordinator::{
     BankScheduler, BatcherConfig, InferenceRequest, Server, ServerConfig,
 };
 use nvm_in_cache::figures;
 use nvm_in_cache::nn::{Dataset, ForwardMode, ResNet};
 use nvm_in_cache::perf::MacroModel;
-use nvm_in_cache::runtime::{ArtifactDir, ModelVariant, Runtime};
+use nvm_in_cache::runtime::{default_runtime, ArtifactDir, ModelVariant};
 use nvm_in_cache::util::cli::Args;
 
 fn main() {
@@ -106,14 +106,14 @@ fn cmd_table2(args: &Args) -> nvm_in_cache::Result<()> {
     Ok(())
 }
 
-/// Re-measure Table II through the PJRT runtime (the e2e proof that all
-/// layers compose: artifacts → PJRT → batched inference → accuracy).
+/// Re-measure Table II through the runtime backend (the e2e proof that all
+/// layers compose: artifacts → runtime → batched inference → accuracy).
 fn cmd_e2e(args: &Args) -> nvm_in_cache::Result<()> {
     let dir = artifacts(args)?;
     let ds = Dataset::load(&dir.path("dataset.bin")?)?;
     let batch = dir.eval_batch();
     let limit = args.get_usize("limit", ds.n).min(ds.n);
-    let mut rt = Runtime::new(batch)?;
+    let mut rt = default_runtime(batch)?;
     println!("platform: {}", rt.platform());
     let variants: Vec<ModelVariant> = match args.get("variant") {
         Some("baseline") => vec![ModelVariant::Baseline],
@@ -192,9 +192,9 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
         })
     } else {
         Box::new(move || {
-            let mut rt = Runtime::new(dir2.eval_batch())?;
+            let mut rt = default_runtime(dir2.eval_batch())?;
             rt.load_variant(&dir2, ModelVariant::Pim)?;
-            Ok(Box::new(PjrtExecutor {
+            Ok(Box::new(RuntimeExecutor {
                 runtime: rt,
                 variant: ModelVariant::Pim,
                 dims,

@@ -1,8 +1,14 @@
-//! xla-crate (PJRT CPU) wrapper.
+//! xla-crate (PJRT CPU) wrapper — the real-hardware-compiler backend.
+//!
+//! Compiled only with `--features pjrt`: the `xla` crate is not vendored
+//! in the offline build, so this module is the documented seam where a
+//! PJRT backend re-attaches (add the `xla` dependency to rust/Cargo.toml,
+//! enable the feature, and every `Runtime` call site picks it up through
+//! [`super::default_runtime`]).
 //!
 //! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
 //! instruction ids, avoiding the 64-bit-id protos that xla_extension 0.5.1
-//! rejects (see /opt/xla-example/README.md).
+//! rejects.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -10,58 +16,31 @@ use std::path::Path;
 use crate::{Error, Result};
 
 use super::artifact::ArtifactDir;
+use super::{ModelVariant, Runtime};
 
-/// Which exported model variant to execute.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum ModelVariant {
-    /// fp32 baseline forward.
-    Baseline,
-    /// Table II emulation: per-layer ADC nonlinearity (no noise).
-    Pim,
-    /// Table II emulation + ADC noise (takes a u32[2] threefry key).
-    PimNoise,
-    /// Hardware-true pipeline with the pallas kernel lowered in.
-    PimHw,
-}
-
-impl ModelVariant {
-    pub fn file(&self) -> &'static str {
-        match self {
-            ModelVariant::Baseline => "model_baseline.hlo.txt",
-            ModelVariant::Pim => "model_pim.hlo.txt",
-            ModelVariant::PimNoise => "model_pim_noise.hlo.txt",
-            ModelVariant::PimHw => "model_pim_hw.hlo.txt",
-        }
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::Runtime(e.to_string())
     }
-
-    pub const ALL: [ModelVariant; 4] = [
-        ModelVariant::Baseline,
-        ModelVariant::Pim,
-        ModelVariant::PimNoise,
-        ModelVariant::PimHw,
-    ];
 }
 
 /// PJRT runtime with a cache of compiled executables.
-pub struct Runtime {
+pub struct PjrtRuntime {
     client: xla::PjRtClient,
     executables: HashMap<ModelVariant, xla::PjRtLoadedExecutable>,
     kernels: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub batch: usize,
+    batch: usize,
 }
 
-impl Runtime {
-    pub fn new(batch: usize) -> Result<Runtime> {
-        Ok(Runtime {
+impl PjrtRuntime {
+    /// Initialize the PJRT CPU client at a fixed batch size.
+    pub fn new(batch: usize) -> Result<PjrtRuntime> {
+        Ok(PjrtRuntime {
             client: xla::PjRtClient::cpu()?,
             executables: HashMap::new(),
             kernels: HashMap::new(),
             batch,
         })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
     }
 
     fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
@@ -73,27 +52,6 @@ impl Runtime {
         Ok(client.compile(&comp)?)
     }
 
-    /// Load + compile a model variant (idempotent).
-    pub fn load_variant(&mut self, dir: &ArtifactDir, variant: ModelVariant) -> Result<()> {
-        if self.executables.contains_key(&variant) {
-            return Ok(());
-        }
-        let path = dir.path(variant.file())?;
-        let exe = Self::compile_file(&self.client, &path)?;
-        self.executables.insert(variant, exe);
-        Ok(())
-    }
-
-    /// Load + compile an arbitrary kernel artifact by file name.
-    pub fn load_kernel(&mut self, dir: &ArtifactDir, file: &str) -> Result<()> {
-        if self.kernels.contains_key(file) {
-            return Ok(());
-        }
-        let exe = Self::compile_file(&self.client, &dir.path(file)?)?;
-        self.kernels.insert(file.to_string(), exe);
-        Ok(())
-    }
-
     fn run_exe(
         exe: &xla::PjRtLoadedExecutable,
         inputs: &[xla::Literal],
@@ -103,10 +61,37 @@ impl Runtime {
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
     }
+}
 
-    /// Run a model variant on a batch of images (flattened NHWC f32,
-    /// exactly `batch × h × w × c` long). Returns flattened logits.
-    pub fn forward(
+impl Runtime for PjrtRuntime {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn load_variant(&mut self, dir: &ArtifactDir, variant: ModelVariant) -> Result<()> {
+        if self.executables.contains_key(&variant) {
+            return Ok(());
+        }
+        let path = dir.path(variant.file())?;
+        let exe = Self::compile_file(&self.client, &path)?;
+        self.executables.insert(variant, exe);
+        Ok(())
+    }
+
+    fn load_kernel(&mut self, dir: &ArtifactDir, file: &str) -> Result<()> {
+        if self.kernels.contains_key(file) {
+            return Ok(());
+        }
+        let exe = Self::compile_file(&self.client, &dir.path(file)?)?;
+        self.kernels.insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    fn forward(
         &self,
         variant: ModelVariant,
         images: &[f32],
@@ -137,9 +122,7 @@ impl Runtime {
         Self::run_exe(exe, &inputs)
     }
 
-    /// Run the standalone L1 kernel tile: a,w are 128×128 f32 (integer
-    /// values 0..=15); returns the 128×128 dequantized MAC estimates.
-    pub fn pim_mac_tile(&self, a: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+    fn pim_mac_tile(&self, a: &[f32], w: &[f32]) -> Result<Vec<f32>> {
         let exe = self
             .kernels
             .get("pim_mac.hlo.txt")
@@ -147,40 +130,5 @@ impl Runtime {
         let la = xla::Literal::vec1(a).reshape(&[128, 128])?;
         let lw = xla::Literal::vec1(w).reshape(&[128, 128])?;
         Self::run_exe(exe, &[la, lw])
-    }
-
-    /// Argmax classification over the forward logits.
-    pub fn classify(
-        &self,
-        variant: ModelVariant,
-        images: &[f32],
-        dims: (usize, usize, usize),
-        n_classes: usize,
-        key: Option<[u32; 2]>,
-    ) -> Result<Vec<u8>> {
-        let logits = self.forward(variant, images, dims, key)?;
-        Ok(logits
-            .chunks(n_classes)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0 as u8
-            })
-            .collect())
-    }
-}
-
-// PJRT-dependent tests live in rust/tests/runtime_crosscheck.rs (they need
-// built artifacts); here we only test pure logic.
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn variant_files() {
-        assert_eq!(ModelVariant::Baseline.file(), "model_baseline.hlo.txt");
-        assert_eq!(ModelVariant::ALL.len(), 4);
     }
 }

@@ -1,13 +1,175 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
-//! from the Rust hot path. Python never runs at serve time.
+//! Model-execution runtime: the seam between the serving stack and
+//! whatever actually runs the network.
 //!
-//! * [`artifact`] — manifest parsing + artifact directory handling.
-//! * [`client`] — the xla-crate (PJRT C API) wrapper: HLO text →
-//!   `HloModuleProto` → compile → execute (one compiled executable per
-//!   model variant, reused across requests).
+//! The [`Runtime`] trait abstracts "execute a [`ModelVariant`] on a batch
+//! of images"; everything above it (CLI `e2e`/`serve`, the coordinator's
+//! executor, the examples, the cross-check tests) programs against the
+//! trait, so backends are interchangeable:
+//!
+//! * [`stub`] — [`StubRuntime`], the in-tree, dependency-free backend:
+//!   routes variants through the digital-exact [`crate::nn::ResNet`]
+//!   forward with the [`crate::pim::TransferModel`] ADC emulation, and the
+//!   standalone MAC-tile kernel through [`crate::pim::PimEngine`]. This is
+//!   the default (and, offline, the only) backend.
+//! * [`client`] — the original xla-crate (PJRT C API) wrapper that loads
+//!   AOT-compiled `artifacts/*.hlo.txt` and executes them on the XLA CPU
+//!   client. Feature-gated behind `pjrt` because the `xla` crate is not
+//!   vendored in the offline build; the module is kept as the re-attachment
+//!   point for a real PJRT backend (see ARCHITECTURE.md §Runtime).
+//! * [`artifact`] — manifest parsing + artifact directory handling, shared
+//!   by every backend.
+//!
+//! `rust/tests/runtime_crosscheck.rs` pins the contract: any backend's
+//! outputs must agree with the Rust-native ground truth ([`crate::nn`] +
+//! [`crate::pim`]).
+
+use crate::{Error, Result};
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+pub mod stub;
 
 pub use artifact::{ArtifactDir, Manifest};
-pub use client::{ModelVariant, Runtime};
+#[cfg(feature = "pjrt")]
+pub use client::PjrtRuntime;
+pub use stub::StubRuntime;
+
+/// Which exported model variant to execute.
+///
+/// The four variants mirror `python/compile/model.py`'s forward modes and
+/// Table II's rows (see EXPERIMENTS.md E10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelVariant {
+    /// fp32 baseline forward.
+    Baseline,
+    /// Table II emulation: per-layer ADC nonlinearity (no noise).
+    Pim,
+    /// Table II emulation + ADC noise (takes a u32[2] threefry key).
+    PimNoise,
+    /// Hardware-true pipeline with the pallas kernel lowered in.
+    PimHw,
+}
+
+impl ModelVariant {
+    /// HLO artifact file name for this variant (PJRT backend).
+    pub fn file(&self) -> &'static str {
+        match self {
+            ModelVariant::Baseline => "model_baseline.hlo.txt",
+            ModelVariant::Pim => "model_pim.hlo.txt",
+            ModelVariant::PimNoise => "model_pim_noise.hlo.txt",
+            ModelVariant::PimHw => "model_pim_hw.hlo.txt",
+        }
+    }
+
+    /// Weights artifact this variant runs on (stub backend): the baseline
+    /// uses the pre-fine-tuning weights, every PIM variant the fine-tuned
+    /// ones (Table II's "fine-tuned" rows).
+    pub fn weights_file(&self) -> &'static str {
+        match self {
+            ModelVariant::Baseline => "weights.bin",
+            _ => "weights_ft.bin",
+        }
+    }
+
+    /// Every variant, in Table II row order.
+    pub const ALL: [ModelVariant; 4] = [
+        ModelVariant::Baseline,
+        ModelVariant::Pim,
+        ModelVariant::PimNoise,
+        ModelVariant::PimHw,
+    ];
+}
+
+/// A model-execution backend.
+///
+/// Implementations hold one compiled/loaded executable per
+/// [`ModelVariant`] at a fixed batch size, plus any standalone kernels.
+/// All methods are object-safe; the serving stack holds a
+/// `Box<dyn Runtime>`.
+pub trait Runtime {
+    /// Human-readable backend/platform name (for logs).
+    fn platform(&self) -> String;
+
+    /// The fixed batch size every loaded variant executes at. Shorter
+    /// inputs must be zero-padded by the caller (see
+    /// [`crate::coordinator::server::RuntimeExecutor`]).
+    fn batch(&self) -> usize;
+
+    /// Load (and compile, where applicable) a model variant from the
+    /// artifact directory. Idempotent.
+    fn load_variant(&mut self, dir: &ArtifactDir, variant: ModelVariant) -> Result<()>;
+
+    /// Load an arbitrary standalone kernel artifact by file name.
+    /// Idempotent.
+    fn load_kernel(&mut self, dir: &ArtifactDir, file: &str) -> Result<()>;
+
+    /// Run a model variant on a batch of images (flattened NHWC f32,
+    /// exactly `batch × h × w × c` long). Returns flattened logits.
+    /// `key` seeds the ADC noise for [`ModelVariant::PimNoise`] (required
+    /// there, ignored elsewhere): same key ⇒ identical logits.
+    fn forward(
+        &self,
+        variant: ModelVariant,
+        images: &[f32],
+        dims: (usize, usize, usize),
+        key: Option<[u32; 2]>,
+    ) -> Result<Vec<f32>>;
+
+    /// Run the standalone L1 kernel tile: `a`,`w` are 128×128 f32 (integer
+    /// values 0..=15); returns the 128×128 dequantized MAC estimates.
+    fn pim_mac_tile(&self, a: &[f32], w: &[f32]) -> Result<Vec<f32>>;
+
+    /// Argmax classification over the forward logits.
+    fn classify(
+        &self,
+        variant: ModelVariant,
+        images: &[f32],
+        dims: (usize, usize, usize),
+        n_classes: usize,
+        key: Option<[u32; 2]>,
+    ) -> Result<Vec<u8>> {
+        let logits = self.forward(variant, images, dims, key)?;
+        Ok(logits
+            .chunks(n_classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as u8
+            })
+            .collect())
+    }
+}
+
+/// Construct the default backend for this build: [`PjrtRuntime`] when the
+/// `pjrt` feature is enabled, [`StubRuntime`] otherwise.
+pub fn default_runtime(batch: usize) -> Result<Box<dyn Runtime>> {
+    if batch == 0 {
+        return Err(Error::Config("runtime batch must be ≥ 1".into()));
+    }
+    #[cfg(feature = "pjrt")]
+    return Ok(Box::new(client::PjrtRuntime::new(batch)?));
+    #[cfg(not(feature = "pjrt"))]
+    Ok(Box::new(StubRuntime::new(batch)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_files() {
+        assert_eq!(ModelVariant::Baseline.file(), "model_baseline.hlo.txt");
+        assert_eq!(ModelVariant::Baseline.weights_file(), "weights.bin");
+        assert_eq!(ModelVariant::Pim.weights_file(), "weights_ft.bin");
+        assert_eq!(ModelVariant::ALL.len(), 4);
+    }
+
+    #[test]
+    fn default_runtime_rejects_zero_batch() {
+        assert!(default_runtime(0).is_err());
+        assert!(default_runtime(4).is_ok());
+    }
+}

@@ -1,0 +1,327 @@
+//! The in-tree, dependency-free runtime backend.
+//!
+//! [`StubRuntime`] implements [`Runtime`] by routing every
+//! [`ModelVariant`] through the digital-exact [`ResNet`] forward with the
+//! [`crate::pim::TransferModel`] ADC emulation — the same math the AOT
+//! JAX/Pallas pipeline bakes into its HLO exports — and the standalone
+//! 128×128 MAC tile through [`PimEngine`]. It therefore reproduces
+//! Table II natively, keeps `rust/tests/runtime_crosscheck.rs` meaningful
+//! (backend output vs. ground-truth math), and needs nothing beyond the
+//! weight/dataset artifacts; the MAC tile needs no artifacts at all.
+//!
+//! Variant → forward-mode mapping (mirrors `python/compile/model.py`):
+//!
+//! | [`ModelVariant`] | weights            | [`ForwardMode`]        |
+//! |------------------|--------------------|------------------------|
+//! | `Baseline`       | `weights.bin`      | `Baseline` (fp32)      |
+//! | `Pim`            | `weights_ft.bin`   | `Pim` (ADC emulation)  |
+//! | `PimNoise`       | `weights_ft.bin`   | `PimNoise(σ)`          |
+//! | `PimHw`          | `weights_ft.bin`   | `PimHw` (4-bit kernel) |
+//!
+//! The noise sigma σ (in ADC code units) comes from the artifact
+//! manifest's `noise_sigma` key when present, else the training default
+//! 0.5 (`python/compile/model.py::resnet_forward`).
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use crate::nn::resnet::Params;
+use crate::nn::{ForwardMode, ResNet, Tensor};
+use crate::pim::quant::QuantizedActs;
+use crate::pim::PimEngine;
+use crate::{Error, Result};
+
+use super::artifact::ArtifactDir;
+use super::{ModelVariant, Runtime};
+
+/// Default per-conversion ADC noise sigma in code units — the value
+/// `python/compile/model.py` trains the `pim_noise` variant with.
+pub const DEFAULT_NOISE_SIGMA: f64 = 0.5;
+
+/// Kernel artifacts the stub knows how to emulate.
+const KNOWN_KERNELS: [&str; 1] = ["pim_mac.hlo.txt"];
+
+/// Dependency-free [`Runtime`] backend over the native [`ResNet`] +
+/// [`PimEngine`] stack.
+pub struct StubRuntime {
+    batch: usize,
+    models: HashMap<ModelVariant, Rc<ResNet>>,
+    /// Loaded networks keyed by weights file, so the three PIM variants
+    /// sharing `weights_ft.bin` parse and hold it once.
+    by_file: HashMap<&'static str, Rc<ResNet>>,
+    kernels: HashSet<String>,
+    engine: PimEngine,
+    noise_sigma: f64,
+    /// Set by [`Self::with_noise_sigma`]; a manifest `noise_sigma` never
+    /// overrides an explicit caller choice.
+    noise_sigma_overridden: bool,
+}
+
+impl StubRuntime {
+    /// A stub runtime executing at a fixed `batch` size. Infallible: the
+    /// backend has no client/device to initialize.
+    pub fn new(batch: usize) -> StubRuntime {
+        StubRuntime {
+            batch,
+            models: HashMap::new(),
+            by_file: HashMap::new(),
+            kernels: HashSet::new(),
+            engine: PimEngine::tt(),
+            noise_sigma: DEFAULT_NOISE_SIGMA,
+            noise_sigma_overridden: false,
+        }
+    }
+
+    /// Override the [`ModelVariant::PimNoise`] sigma (code units). Takes
+    /// precedence over any manifest `noise_sigma`.
+    pub fn with_noise_sigma(mut self, sigma_codes: f64) -> StubRuntime {
+        self.noise_sigma = sigma_codes;
+        self.noise_sigma_overridden = true;
+        self
+    }
+
+    /// Load a variant from in-memory parameters instead of an artifact
+    /// directory — lets tests and the quickstart example exercise the full
+    /// runtime path with synthetic weights, no artifacts required.
+    pub fn load_variant_params(&mut self, variant: ModelVariant, params: Params) {
+        self.models.insert(variant, Rc::new(ResNet::new(params)));
+    }
+
+    /// Register an emulated kernel without an artifact directory — the
+    /// artifact-free counterpart of [`Runtime::load_kernel`], same
+    /// known-kernel validation.
+    pub fn load_kernel_emulated(&mut self, file: &str) -> Result<()> {
+        if !KNOWN_KERNELS.contains(&file) {
+            return Err(Error::Artifact(format!(
+                "stub runtime has no emulation for kernel `{file}`"
+            )));
+        }
+        self.kernels.insert(file.to_string());
+        Ok(())
+    }
+
+    fn seed_from_key(key: Option<[u32; 2]>) -> u64 {
+        key.map(|k| ((k[0] as u64) << 32) | k[1] as u64).unwrap_or(0)
+    }
+}
+
+impl Runtime for StubRuntime {
+    fn platform(&self) -> String {
+        "stub (native digital-exact emulation)".to_string()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn load_variant(&mut self, dir: &ArtifactDir, variant: ModelVariant) -> Result<()> {
+        if self.models.contains_key(&variant) {
+            return Ok(());
+        }
+        if !self.noise_sigma_overridden {
+            if let Some(sigma) = dir.manifest.get_f64("noise_sigma") {
+                self.noise_sigma = sigma;
+            }
+        }
+        let file = variant.weights_file();
+        let net = match self.by_file.get(file).cloned() {
+            Some(shared) => shared,
+            None => {
+                let loaded = Rc::new(ResNet::load(&dir.path(file)?)?);
+                self.by_file.insert(file, loaded.clone());
+                loaded
+            }
+        };
+        self.models.insert(variant, net);
+        Ok(())
+    }
+
+    fn load_kernel(&mut self, _dir: &ArtifactDir, file: &str) -> Result<()> {
+        self.load_kernel_emulated(file)
+    }
+
+    fn forward(
+        &self,
+        variant: ModelVariant,
+        images: &[f32],
+        dims: (usize, usize, usize),
+        key: Option<[u32; 2]>,
+    ) -> Result<Vec<f32>> {
+        let net = self
+            .models
+            .get(&variant)
+            .ok_or_else(|| Error::Runtime(format!("{variant:?} not loaded")))?;
+        let (h, w, c) = dims;
+        if images.len() != self.batch * h * w * c {
+            return Err(Error::Runtime(format!(
+                "batch shape mismatch: {} elements for batch {} × {h}×{w}×{c}",
+                images.len(),
+                self.batch
+            )));
+        }
+        let mode = match variant {
+            ModelVariant::Baseline => ForwardMode::Baseline,
+            ModelVariant::Pim => ForwardMode::Pim,
+            ModelVariant::PimNoise => {
+                if key.is_none() {
+                    return Err(Error::Runtime("PimNoise requires a key".into()));
+                }
+                ForwardMode::PimNoise(self.noise_sigma)
+            }
+            ModelVariant::PimHw => ForwardMode::PimHw,
+        };
+        let x = Tensor::from_vec(&[self.batch, h, w, c], images.to_vec());
+        Ok(net.forward(&x, mode, Self::seed_from_key(key))?.data)
+    }
+
+    fn pim_mac_tile(&self, a: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        // Enforce the load-before-use contract even though the emulation
+        // needs no artifact — otherwise code written against the stub
+        // would break on a backend that actually compiles the kernel.
+        if !self.kernels.contains("pim_mac.hlo.txt") {
+            return Err(Error::Runtime("pim_mac kernel not loaded".into()));
+        }
+        const TILE: usize = 128;
+        if a.len() != TILE * TILE || w.len() != TILE * TILE {
+            return Err(Error::Runtime(format!(
+                "pim_mac tile must be {TILE}×{TILE}, got a:{} w:{}",
+                a.len(),
+                w.len()
+            )));
+        }
+        // Values outside the 4-bit range would index past the engine's
+        // 16-entry spread LUT (activations) or overflow the 16-bit
+        // per-plane packing (weights) — reject instead.
+        let to_nibbles = |xs: &[f32], name: &str| -> Result<Vec<u8>> {
+            xs.iter()
+                .map(|&x| {
+                    if (0.0..=15.0).contains(&x) {
+                        Ok(x as u8)
+                    } else {
+                        Err(Error::Runtime(format!(
+                            "pim_mac {name} values must be in 0..=15, got {x}"
+                        )))
+                    }
+                })
+                .collect()
+        };
+        let qa = QuantizedActs {
+            data: to_nibbles(a, "activation")?,
+            m: TILE,
+            k: TILE,
+            scale: 1.0,
+        };
+        let bank = to_nibbles(w, "weight")?;
+        Ok(self.engine.bank_mac(&qa, &bank, TILE, None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::resnet::test_params;
+    use crate::util::rng::Pcg64;
+
+    fn images(batch: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..batch * 16 * 16 * 3).map(|_| rng.f64() as f32).collect()
+    }
+
+    #[test]
+    fn forward_requires_loaded_variant() {
+        let rt = StubRuntime::new(1);
+        let err = rt.forward(ModelVariant::Baseline, &images(1, 1), (16, 16, 3), None);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn forward_and_classify_via_params() {
+        let mut rt = StubRuntime::new(2);
+        rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1));
+        let x = images(2, 2);
+        let logits = rt.forward(ModelVariant::Baseline, &x, (16, 16, 3), None).unwrap();
+        assert_eq!(logits.len(), 2 * 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let preds = rt.classify(ModelVariant::Baseline, &x, (16, 16, 3), 10, None).unwrap();
+        assert_eq!(preds.len(), 2);
+        assert!(preds.iter().all(|&p| p < 10));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut rt = StubRuntime::new(2);
+        rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1));
+        let x = images(1, 3); // half the expected batch
+        assert!(rt.forward(ModelVariant::Baseline, &x, (16, 16, 3), None).is_err());
+    }
+
+    #[test]
+    fn noise_requires_key_and_is_deterministic_in_it() {
+        let mut rt = StubRuntime::new(1);
+        rt.load_variant_params(ModelVariant::PimNoise, test_params(8, 10, 5));
+        let x = images(1, 4);
+        assert!(rt.forward(ModelVariant::PimNoise, &x, (16, 16, 3), None).is_err());
+        let a = rt.forward(ModelVariant::PimNoise, &x, (16, 16, 3), Some([1, 2])).unwrap();
+        let b = rt.forward(ModelVariant::PimNoise, &x, (16, 16, 3), Some([1, 2])).unwrap();
+        let c = rt.forward(ModelVariant::PimNoise, &x, (16, 16, 3), Some([3, 4])).unwrap();
+        assert_eq!(a, b, "same key ⇒ identical logits");
+        assert_ne!(a, c, "different key ⇒ different noise");
+    }
+
+    #[test]
+    fn unknown_kernel_rejected() {
+        let mut rt = StubRuntime::new(1);
+        let dir = {
+            // Per-process path: /tmp is shared across users/CI jobs.
+            let d = std::env::temp_dir()
+                .join(format!("nvm_stub_kernel_test_{}", std::process::id()));
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("manifest.txt"), "eval_batch=1\n").unwrap();
+            ArtifactDir::open(&d).unwrap()
+        };
+        assert!(rt.load_kernel(&dir, "pim_mac.hlo.txt").is_ok());
+        assert!(rt.load_kernel(&dir, "nonsense.hlo.txt").is_err());
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn mac_tile_requires_load() {
+        let rt = StubRuntime::new(1);
+        let a = vec![1.0f32; 128 * 128];
+        assert!(rt.pim_mac_tile(&a, &a).is_err(), "unloaded kernel must error");
+    }
+
+    #[test]
+    fn mac_tile_rejects_out_of_range_values() {
+        let mut rt = StubRuntime::new(1);
+        rt.load_kernel_emulated("pim_mac.hlo.txt").unwrap();
+        let ok = vec![1.0f32; 128 * 128];
+        let mut bad = ok.clone();
+        bad[0] = 16.0;
+        assert!(rt.pim_mac_tile(&bad, &ok).is_err(), "activation 16 must error");
+        assert!(rt.pim_mac_tile(&ok, &bad).is_err(), "weight 16 must error");
+        let mut neg = ok.clone();
+        neg[5] = -1.0;
+        assert!(rt.pim_mac_tile(&neg, &ok).is_err(), "negative value must error");
+    }
+
+    #[test]
+    fn mac_tile_matches_engine() {
+        let mut rt = StubRuntime::new(1);
+        rt.load_kernel_emulated("pim_mac.hlo.txt").unwrap();
+        let mut rng = Pcg64::seeded(7);
+        let a_int: Vec<u8> = (0..128 * 128).map(|_| rng.below(16) as u8).collect();
+        let w_int: Vec<u8> = (0..128 * 128).map(|_| rng.below(16) as u8).collect();
+        let a_f: Vec<f32> = a_int.iter().map(|&x| x as f32).collect();
+        let w_f: Vec<f32> = w_int.iter().map(|&x| x as f32).collect();
+        let got = rt.pim_mac_tile(&a_f, &w_f).unwrap();
+        let want = PimEngine::tt().bank_mac(
+            &QuantizedActs { data: a_int, m: 128, k: 128, scale: 1.0 },
+            &w_int,
+            128,
+            None,
+        );
+        assert_eq!(got, want);
+    }
+}

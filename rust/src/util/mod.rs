@@ -1,9 +1,10 @@
 //! Offline-build utility layer: PRNG, statistics, fitting, emitters, CLI,
 //! and a micro-benchmark harness.
 //!
-//! The build environment vendors only the `xla` crate closure, so the usual
-//! ecosystem crates (`rand`, `serde`, `clap`, `criterion`, `proptest`) are
-//! unavailable; these modules are small, tested replacements.
+//! The build is fully offline with zero external dependencies, so the
+//! usual ecosystem crates (`rand`, `serde`, `clap`, `criterion`,
+//! `proptest`) are unavailable; these modules are small, tested
+//! replacements.
 
 pub mod rng;
 pub mod stats;
