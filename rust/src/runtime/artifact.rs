@@ -1,7 +1,9 @@
 //! Artifact directory + manifest handling.
 //!
-//! `make artifacts` populates `artifacts/` (see DESIGN.md §5); this module
-//! locates and validates the pieces the runtime needs.
+//! The build-time pipeline (`python/compile/aot.py`) populates
+//! `artifacts/` with weights, the evaluation dataset, HLO exports, and a
+//! key=value manifest; this module locates and validates the pieces the
+//! runtime needs. See EXPERIMENTS.md E10.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -11,10 +13,12 @@ use crate::{Error, Result};
 /// Parsed key=value manifest (written by `python/compile/aot.py`).
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// All key=value entries, sorted by key.
     pub entries: BTreeMap<String, String>,
 }
 
 impl Manifest {
+    /// Parse manifest text: `key=value` lines, `#` comments, blank lines.
     pub fn parse(text: &str) -> Manifest {
         let entries = text
             .lines()
@@ -30,18 +34,22 @@ impl Manifest {
         Manifest { entries }
     }
 
+    /// Load + parse a manifest file.
     pub fn load(path: &Path) -> Result<Manifest> {
         Ok(Self::parse(&std::fs::read_to_string(path)?))
     }
 
+    /// Raw string value for `key`.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.entries.get(key).map(|s| s.as_str())
     }
 
+    /// `key` parsed as f64 (None when absent or unparsable).
     pub fn get_f64(&self, key: &str) -> Option<f64> {
         self.get(key)?.parse().ok()
     }
 
+    /// `key` parsed as usize (None when absent or unparsable).
     pub fn get_usize(&self, key: &str) -> Option<usize> {
         self.get(key)?.parse().ok()
     }
@@ -55,23 +63,27 @@ impl Manifest {
 /// The artifact directory with existence checks.
 #[derive(Clone, Debug)]
 pub struct ArtifactDir {
+    /// Directory root.
     pub root: PathBuf,
+    /// The parsed `manifest.txt`.
     pub manifest: Manifest,
 }
 
 impl ArtifactDir {
+    /// Open an artifact directory, requiring its `manifest.txt`.
     pub fn open<P: Into<PathBuf>>(root: P) -> Result<ArtifactDir> {
         let root = root.into();
         let manifest_path = root.join("manifest.txt");
         if !manifest_path.exists() {
             return Err(Error::Artifact(format!(
-                "{} missing — run `make artifacts` first",
+                "{} missing — artifacts not built (see python/compile/aot.py)",
                 manifest_path.display()
             )));
         }
         Ok(ArtifactDir { root: root.clone(), manifest: Manifest::load(&manifest_path)? })
     }
 
+    /// Absolute path of artifact `name`, verified to exist.
     pub fn path(&self, name: &str) -> Result<PathBuf> {
         let p = self.root.join(name);
         if !p.exists() {
@@ -80,6 +92,7 @@ impl ArtifactDir {
         Ok(p)
     }
 
+    /// The batch size every model variant was exported at.
     pub fn eval_batch(&self) -> usize {
         self.manifest.get_usize("eval_batch").unwrap_or(50)
     }
@@ -101,7 +114,7 @@ mod tests {
     #[test]
     fn open_missing_dir_fails_helpfully() {
         let err = ArtifactDir::open("/nonexistent_artifacts").unwrap_err();
-        assert!(err.to_string().contains("make artifacts"));
+        assert!(err.to_string().contains("artifacts not built"));
     }
 
     #[test]
