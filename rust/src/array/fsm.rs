@@ -16,14 +16,20 @@ use crate::consts::{T_ADC_CONVERSION, T_PIM_RESTORE, T_PIM_SAMPLE, T_PIM_SETTLE}
 /// FSM states for one PIM side-cycle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PimPhase {
+    /// No PIM activity (SRAM mode).
     Idle,
+    /// Active VDD line pulled to the WCC reference (1.5 ns).
     Settle,
+    /// IA applied, current sampled (1 ns).
     Sample,
+    /// Supplies restored to nominal (1 ns).
     Restore,
+    /// SAR conversion of the held sample (160 ns).
     Convert,
 }
 
 impl PimPhase {
+    /// Phase duration (s), per §III-C / §V-D.
     pub fn duration(&self) -> f64 {
         match self {
             PimPhase::Idle => 0.0,
@@ -39,14 +45,18 @@ impl PimPhase {
 /// timing diagram, encoded): wordline enable, gated-GND on, line at V_REF.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Controls {
+    /// Wordline asserted (IA applied).
     pub wl_active: bool,
+    /// Gated-GND footer conducting.
     pub gated_gnd_on: bool,
+    /// Active power line held at the WCC reference.
     pub line_at_vref: bool,
 }
 
 /// One sub-array's PIM sequencer.
 #[derive(Clone, Debug)]
 pub struct PimFsm {
+    /// Current phase.
     pub phase: PimPhase,
     /// Elapsed time in the current side-cycle (s).
     pub t: f64,
@@ -55,6 +65,7 @@ pub struct PimFsm {
 }
 
 impl PimFsm {
+    /// Idle sequencer.
     pub fn new() -> PimFsm {
         PimFsm { phase: PimPhase::Idle, t: 0.0, trace: Vec::new() }
     }

@@ -22,6 +22,7 @@ pub struct SampleHold {
 }
 
 impl SampleHold {
+    /// S&H stage trimmed against a transfer model, with noise from `var`.
     pub fn new(transfer: &TransferModel, var: &VariationModel) -> SampleHold {
         SampleHold {
             r_ti: transfer.r_ti,

@@ -12,7 +12,9 @@ use crate::util::rng::Pcg64;
 /// One SAR ADC instance.
 #[derive(Clone, Copy, Debug)]
 pub struct SarAdc {
+    /// Positive reference (V).
     pub v_refp: f64,
+    /// Negative reference (V).
     pub v_refn: f64,
     /// Comparator input-referred offset (V), from Monte-Carlo sampling.
     pub cmp_offset: f64,
@@ -31,11 +33,13 @@ impl SarAdc {
         SarAdc { v_refp: V_REF_UNCAL, v_refn: 0.0, cmp_offset: 0.0, cmp_noise: 0.0 }
     }
 
+    /// Set the comparator offset (builder style).
     pub fn with_offset(mut self, offset: f64) -> SarAdc {
         self.cmp_offset = offset;
         self
     }
 
+    /// Set the per-decision comparator noise sigma (builder style).
     pub fn with_noise(mut self, sigma: f64) -> SarAdc {
         self.cmp_noise = sigma;
         self

@@ -30,7 +30,9 @@ use super::sar_adc::SarAdc;
 
 /// One 8 KB sub-array.
 pub struct SubArray {
+    /// Process corner of every cell.
     pub corner: Corner,
+    /// All 128×512 cells, row-major `[row][word][bit]`.
     pub cells: Vec<BitCell>,
     /// Cached per-cell *calibrated* PIM path conductance (S) at the V_REF
     /// operating point: `[row * 512 + word * 4 + bit]`, per side.
@@ -43,15 +45,20 @@ pub struct SubArray {
     /// mismatch and the FET divider's bias dependence.
     g_left: Vec<f32>,
     g_right: Vec<f32>,
+    /// Shared sample-and-hold stage.
     pub sh: SampleHold,
+    /// Per-word-column SAR ADC (one modeled instance).
     pub adc: SarAdc,
+    /// PIM sub-phase control FSM.
     pub fsm: PimFsm,
     /// WCC summing-node load (Ω), per the corner (TransferModel contract).
     pub r_load: f64,
+    /// Latency/energy accounting for every metered operation.
     pub ledger: EnergyLedger,
 }
 
 impl SubArray {
+    /// Nominal (variation-free) sub-array at a corner.
     pub fn new(corner: Corner) -> SubArray {
         Self::build(corner, None, 0)
     }

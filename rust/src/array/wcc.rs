@@ -15,6 +15,7 @@ use super::powerline;
 /// WCC instance for one word column (one side).
 #[derive(Clone, Copy, Debug)]
 pub struct Wcc {
+    /// Process corner (sets the summing-node loading).
     pub corner: Corner,
     /// Summing-node input resistance (Ω) — the compression knob, matched to
     /// `TransferModel::r_load` per corner.
@@ -24,6 +25,7 @@ pub struct Wcc {
 }
 
 impl Wcc {
+    /// WCC with the corner's nominal loading and unit mirror gains.
     pub fn new(corner: Corner) -> Wcc {
         let r_load = match corner {
             Corner::SS => 0.6,

@@ -7,11 +7,17 @@
 /// LLC geometry parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Geometry {
+    /// Cache-line size (bytes).
     pub line_bytes: usize,
+    /// Set associativity.
     pub ways: usize,
+    /// Sets per slice.
     pub sets_per_slice: usize,
+    /// Banks per slice.
     pub banks_per_slice: usize,
+    /// 8 KB sub-arrays per bank.
     pub subarrays_per_bank: usize,
+    /// Rows (= cache lines) per sub-array.
     pub rows_per_subarray: usize,
 }
 
@@ -43,6 +49,7 @@ impl Geometry {
         }
     }
 
+    /// Total slice capacity (bytes).
     pub fn slice_bytes(&self) -> usize {
         self.sets_per_slice * self.ways * self.line_bytes
     }
@@ -56,22 +63,27 @@ impl Geometry {
 /// Decomposed physical address.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Address {
+    /// The raw physical address.
     pub raw: u64,
 }
 
 impl Address {
+    /// Wrap a raw physical address.
     pub fn new(raw: u64) -> Address {
         Address { raw }
     }
 
+    /// Byte offset within the cache line.
     pub fn line_offset(&self, g: &Geometry) -> usize {
         (self.raw as usize) & (g.line_bytes - 1)
     }
 
+    /// Set index within the slice.
     pub fn set_index(&self, g: &Geometry) -> usize {
         ((self.raw as usize) / g.line_bytes) % g.sets_per_slice
     }
 
+    /// Tag bits above the set index.
     pub fn tag(&self, g: &Geometry) -> u64 {
         self.raw / (g.line_bytes * g.sets_per_slice) as u64
     }

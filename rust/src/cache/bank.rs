@@ -20,10 +20,12 @@ pub struct SubArraySlot {
 }
 
 impl SubArraySlot {
+    /// Empty slot with `rows` line positions.
     pub fn new(rows: usize) -> SubArraySlot {
         SubArraySlot { lines: vec![None; rows], weights: None, busy_until: 0.0 }
     }
 
+    /// Number of resident cache lines.
     pub fn resident_lines(&self) -> usize {
         self.lines.iter().filter(|l| l.is_some()).count()
     }
@@ -32,11 +34,14 @@ impl SubArraySlot {
 /// One 32 KB bank.
 #[derive(Clone, Debug)]
 pub struct Bank {
+    /// Sub-array slots.
     pub subarrays: Vec<SubArraySlot>,
+    /// Rows (lines) per sub-array.
     pub rows: usize,
 }
 
 impl Bank {
+    /// Empty bank of `subarrays` slots × `rows` lines.
     pub fn new(subarrays: usize, rows: usize) -> Bank {
         Bank {
             subarrays: (0..subarrays).map(|_| SubArraySlot::new(rows)).collect(),
@@ -49,18 +54,21 @@ impl Bank {
         (line_idx / self.rows, line_idx % self.rows)
     }
 
+    /// Read a resident line (metered).
     pub fn read_line(&self, line_idx: usize, ledger: &mut EnergyLedger) -> Option<[u8; 64]> {
         let (sa, row) = self.locate(line_idx);
         ledger.record(OpKind::SramRead6t2r);
         self.subarrays[sa].lines[row]
     }
 
+    /// Write a line (metered).
     pub fn write_line(&mut self, line_idx: usize, data: [u8; 64], ledger: &mut EnergyLedger) {
         let (sa, row) = self.locate(line_idx);
         ledger.record(OpKind::SramWrite);
         self.subarrays[sa].lines[row] = Some(data);
     }
 
+    /// Remove and return a line (no cost — bookkeeping only).
     pub fn evict_line(&mut self, line_idx: usize) -> Option<[u8; 64]> {
         let (sa, row) = self.locate(line_idx);
         self.subarrays[sa].lines[row].take()
@@ -90,6 +98,7 @@ impl Bank {
         destroyed
     }
 
+    /// Is the sub-array reserved by a PIM window at time `now`?
     pub fn is_busy(&self, sa: usize, now: f64) -> bool {
         self.subarrays[sa].busy_until > now
     }

@@ -36,12 +36,16 @@ pub struct CampaignStats {
 
 /// The controller for one slice.
 pub struct CacheController {
+    /// The slice being arbitrated.
     pub slice: LlcSlice,
+    /// PIM integration mode.
     pub mode: PimIntegration,
+    /// Simulated wall-clock (s).
     pub now: f64,
 }
 
 impl CacheController {
+    /// Controller over a fresh slice.
     pub fn new(geom: Geometry, mode: PimIntegration) -> CacheController {
         CacheController { slice: LlcSlice::new(geom), mode, now: 0.0 }
     }
@@ -59,6 +63,7 @@ impl CacheController {
         }
     }
 
+    /// Serve a write (write-allocate).
     pub fn write(&mut self, addr: Address, data: [u8; 64]) {
         self.slice.write(addr, data);
     }

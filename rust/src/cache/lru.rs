@@ -9,6 +9,7 @@ pub struct LruSet {
 }
 
 impl LruSet {
+    /// Fresh tracker: way 0 is MRU, the last way is the victim.
     pub fn new(ways: usize) -> LruSet {
         assert!(ways > 0 && ways <= 256);
         LruSet { order: (0..ways as u8).collect() }
@@ -26,6 +27,7 @@ impl LruSet {
         *self.order.last().unwrap() as usize
     }
 
+    /// The most-recently-used way.
     pub fn mru(&self) -> usize {
         self.order[0] as usize
     }

@@ -10,7 +10,9 @@ use super::tag::TagSet;
 /// Access outcome.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AccessResult {
+    /// Tag matched a valid way.
     Hit,
+    /// No matching way.
     Miss,
     /// Miss that evicted a dirty victim (writeback needed).
     MissDirtyEvict,
@@ -18,16 +20,24 @@ pub enum AccessResult {
 
 /// One slice.
 pub struct LlcSlice {
+    /// Slice geometry.
     pub geom: Geometry,
+    /// Per-set tag arrays.
     pub tags: Vec<TagSet>,
+    /// Per-set LRU state.
     pub lru: Vec<LruSet>,
+    /// Data banks.
     pub banks: Vec<Bank>,
+    /// Access cost accounting.
     pub ledger: EnergyLedger,
+    /// Hit counter.
     pub hits: u64,
+    /// Miss counter.
     pub misses: u64,
 }
 
 impl LlcSlice {
+    /// Empty slice with the given geometry.
     pub fn new(geom: Geometry) -> LlcSlice {
         LlcSlice {
             geom,
@@ -143,6 +153,7 @@ impl LlcSlice {
         n
     }
 
+    /// Fraction of accesses that hit (0 when no accesses yet).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {

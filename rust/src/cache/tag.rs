@@ -4,12 +4,16 @@
 /// One way's tag entry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TagEntry {
+    /// Tag bits.
     pub tag: u64,
+    /// Cache-valid bit.
     pub valid: bool,
+    /// Dirty (modified) bit.
     pub dirty: bool,
 }
 
 impl TagEntry {
+    /// An empty (invalid) entry.
     pub fn invalid() -> TagEntry {
         TagEntry { tag: 0, valid: false, dirty: false }
     }
@@ -18,10 +22,12 @@ impl TagEntry {
 /// Tag array for one set.
 #[derive(Clone, Debug)]
 pub struct TagSet {
+    /// Per-way entries.
     pub ways: Vec<TagEntry>,
 }
 
 impl TagSet {
+    /// An empty set with `ways` ways.
     pub fn new(ways: usize) -> TagSet {
         TagSet { ways: vec![TagEntry::invalid(); ways] }
     }
@@ -38,15 +44,18 @@ impl TagSet {
         self.ways[way] = TagEntry { tag, valid: true, dirty: false };
     }
 
+    /// Invalidate a way, returning its previous entry.
     pub fn invalidate(&mut self, way: usize) -> TagEntry {
         std::mem::replace(&mut self.ways[way], TagEntry::invalid())
     }
 
+    /// Set the dirty bit of a (valid) way.
     pub fn mark_dirty(&mut self, way: usize) {
         debug_assert!(self.ways[way].valid);
         self.ways[way].dirty = true;
     }
 
+    /// Number of valid ways.
     pub fn valid_count(&self) -> usize {
         self.ways.iter().filter(|e| e.valid).count()
     }

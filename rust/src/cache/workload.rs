@@ -25,9 +25,11 @@ pub enum TraceKind {
 }
 
 impl TraceKind {
+    /// Every trace shape.
     pub const ALL: [TraceKind; 3] =
         [TraceKind::SequentialScan, TraceKind::HotSet, TraceKind::Strided];
 
+    /// Snake-case label for CSV emission.
     pub fn name(&self) -> &'static str {
         match self {
             TraceKind::SequentialScan => "sequential",
@@ -74,14 +76,18 @@ pub fn generate_trace(
 /// Result of one interference run.
 #[derive(Clone, Debug)]
 pub struct InterferenceResult {
+    /// Trace shape used.
     pub trace: TraceKind,
+    /// PIM integration mode.
     pub mode: PimIntegration,
     /// PIM campaigns per 1000 accesses.
     pub pim_intensity: usize,
+    /// Post-warmup cache hit rate.
     pub hit_rate: f64,
     /// Average memory-access time (s): hit pays the 6T-2R read, miss adds
     /// a line fill.
     pub amat: f64,
+    /// Cache lines moved by PIM campaigns (flush + reload).
     pub lines_moved: u64,
 }
 

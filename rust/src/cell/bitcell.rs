@@ -7,13 +7,17 @@ use crate::device::{CellVariation, Corner, Fet, FetKind, Rram, RramState};
 /// Which half of the symmetric cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Side {
+    /// The VDD1 / Q half.
     Left,
+    /// The VDD2 / QB half.
     Right,
 }
 
 impl Side {
+    /// Both sides, left first.
     pub const BOTH: [Side; 2] = [Side::Left, Side::Right];
 
+    /// The opposite side.
     pub fn other(&self) -> Side {
         match self {
             Side::Left => Side::Right,
@@ -22,10 +26,12 @@ impl Side {
     }
 }
 
-/// Relative device widths in the SRAM cell (pull-down : access : pull-up),
-/// the classic read-stability sizing.
+/// Relative pull-down width in the SRAM cell (pull-down : access :
+/// pull-up = 1.5 : 1 : 0.8, the classic read-stability sizing).
 pub const W_PULLDOWN: f64 = 1.5;
+/// Relative access-transistor width.
 pub const W_ACCESS: f64 = 1.0;
+/// Relative pull-up width.
 pub const W_PULLUP: f64 = 0.8;
 /// The per-row gated-GND footer is shared by many cells and sized wide.
 pub const W_GATED_GND: f64 = 8.0;
@@ -39,11 +45,14 @@ pub struct BitCell {
     pub r_left: Rram,
     /// RRAM on the VDD2 (right) power line.
     pub r_right: Rram,
+    /// Process corner of the cell's FETs.
     pub corner: Corner,
+    /// Sampled Monte-Carlo mismatch.
     pub var: CellVariation,
 }
 
 impl BitCell {
+    /// Fresh cell (Q = 0, both RRAMs HRS) at a corner.
     pub fn new(corner: Corner) -> BitCell {
         BitCell {
             q: false,
@@ -54,6 +63,7 @@ impl BitCell {
         }
     }
 
+    /// Fresh cell with explicit Monte-Carlo mismatch.
     pub fn with_variation(corner: Corner, var: CellVariation) -> BitCell {
         let mut c = Self::new(corner);
         c.var = var;
@@ -92,6 +102,7 @@ impl BitCell {
         self.r_left.state() == RramState::Lrs
     }
 
+    /// The RRAM on `side`.
     pub fn rram(&self, side: Side) -> &Rram {
         match side {
             Side::Left => &self.r_left,
@@ -99,6 +110,7 @@ impl BitCell {
         }
     }
 
+    /// Mutable access to the RRAM on `side`.
     pub fn rram_mut(&mut self, side: Side) -> &mut Rram {
         match side {
             Side::Left => &mut self.r_left,
@@ -108,18 +120,22 @@ impl BitCell {
 
     // ---- device instances (with this cell's corner + MC deltas) ----
 
+    /// Access NMOS (M1/M6) with this cell's corner + mismatch.
     pub fn access_fet(&self) -> Fet {
         Fet::with_deltas(FetKind::Nmos, self.corner, W_ACCESS, self.var.vth_delta, self.var.beta_mult)
     }
 
+    /// Pull-down NMOS (M3/M5).
     pub fn pulldown_fet(&self) -> Fet {
         Fet::with_deltas(FetKind::Nmos, self.corner, W_PULLDOWN, self.var.vth_delta, self.var.beta_mult)
     }
 
+    /// Pull-up PMOS (M2/M4).
     pub fn pullup_fet(&self) -> Fet {
         Fet::with_deltas(FetKind::Pmos, self.corner, W_PULLUP, self.var.vth_delta, self.var.beta_mult)
     }
 
+    /// Row-shared gated-GND footer NMOS.
     pub fn gated_gnd_fet(&self) -> Fet {
         // Row-shared footer: no per-cell mismatch (it is one physical device
         // per row; row-level variation is applied at the array layer).

@@ -17,12 +17,16 @@ use super::bitcell::{W_ACCESS, W_GATED_GND, W_PULLDOWN, W_PULLUP};
 /// Which margin.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SnmKind {
+    /// Hold margin (wordlines low).
     Hold,
+    /// Read margin (access on, bitlines precharged).
     Read,
+    /// Write margin (one bitline driven low).
     Write,
 }
 
 impl SnmKind {
+    /// Lower-case label for CSV emission.
     pub fn name(&self) -> &'static str {
         match self {
             SnmKind::Hold => "hold",
@@ -44,14 +48,18 @@ pub enum CellFlavor {
 /// SNM analysis result.
 #[derive(Clone, Debug)]
 pub struct SnmResult {
+    /// Which margin was computed.
     pub kind: SnmKind,
+    /// Cell flavor analyzed.
     pub flavor: CellFlavor,
+    /// Process corner.
     pub corner: Corner,
     /// Margin in volts (side of the largest embedded square).
     pub snm: f64,
-    /// The two voltage-transfer curves (vin, vout) — the butterfly wings —
+    /// First voltage-transfer curve (vin, vout) — one butterfly wing —
     /// for figure emission.
     pub vtc_a: Vec<(f64, f64)>,
+    /// Second voltage-transfer curve (mirrored by the plotter).
     pub vtc_b: Vec<(f64, f64)>,
 }
 

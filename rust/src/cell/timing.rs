@@ -40,6 +40,7 @@ pub enum OpKind {
 }
 
 impl OpKind {
+    /// Every op kind, in ledger index order.
     pub const ALL: [OpKind; 10] = [
         OpKind::ProgramPulse,
         OpKind::NvmRead,
@@ -81,6 +82,7 @@ impl OpKind {
         }
     }
 
+    /// Snake-case label for breakdown reports.
     pub fn name(&self) -> &'static str {
         match self {
             OpKind::ProgramPulse => "program_pulse",
@@ -108,6 +110,7 @@ pub struct EnergyLedger {
 }
 
 impl EnergyLedger {
+    /// Empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
@@ -116,14 +119,17 @@ impl EnergyLedger {
         OpKind::ALL.iter().position(|k| *k == kind).unwrap()
     }
 
+    /// Record one event of `kind`.
     pub fn record(&mut self, kind: OpKind) {
         self.record_n(kind, 1);
     }
 
+    /// Record `n` events of `kind`.
     pub fn record_n(&mut self, kind: OpKind, n: u64) {
         self.counts[Self::idx(kind)] += n;
     }
 
+    /// Event count for `kind`.
     pub fn count(&self, kind: OpKind) -> u64 {
         self.counts[Self::idx(kind)]
     }
@@ -164,6 +170,7 @@ impl EnergyLedger {
         }
     }
 
+    /// Clear all counts.
     pub fn reset(&mut self) {
         self.counts = Default::default();
     }

@@ -29,15 +29,19 @@ impl Default for BatcherConfig {
 /// A formed batch.
 #[derive(Debug)]
 pub struct Batch {
+    /// The batched requests, FIFO order.
     pub requests: Vec<InferenceRequest>,
+    /// When the batch was cut.
     pub formed_at: Instant,
 }
 
 impl Batch {
+    /// Number of requests in the batch.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// Whether the batch is empty.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
@@ -45,19 +49,23 @@ impl Batch {
 
 /// The batcher queue.
 pub struct Batcher {
+    /// Batching policy.
     pub config: BatcherConfig,
     queue: VecDeque<InferenceRequest>,
 }
 
 impl Batcher {
+    /// Empty batcher with the given policy.
     pub fn new(config: BatcherConfig) -> Batcher {
         Batcher { config, queue: VecDeque::new() }
     }
 
+    /// Enqueue a request.
     pub fn push(&mut self, req: InferenceRequest) {
         self.queue.push_back(req);
     }
 
+    /// Requests waiting to be batched.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

@@ -10,7 +10,9 @@ pub struct LatencyHistogram {
     /// Raw samples kept for exact percentiles (bounded ring).
     samples: Vec<f64>,
     max_samples: usize,
+    /// Total samples recorded.
     pub count: u64,
+    /// Sum of all recorded latencies (s).
     pub sum_s: f64,
 }
 
@@ -18,6 +20,7 @@ const BUCKETS_PER_DECADE: usize = 4;
 const N_DECADES: usize = 8; // 1e-6 .. 1e2 s
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> LatencyHistogram {
         LatencyHistogram {
             buckets: vec![0; BUCKETS_PER_DECADE * N_DECADES],
@@ -33,6 +36,7 @@ impl LatencyHistogram {
         ((log * BUCKETS_PER_DECADE as f64) as usize).min(BUCKETS_PER_DECADE * N_DECADES - 1)
     }
 
+    /// Record one latency sample (s).
     pub fn record(&mut self, latency_s: f64) {
         self.buckets[Self::bucket_of(latency_s)] += 1;
         self.count += 1;
@@ -46,6 +50,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Mean latency (s), 0 when empty.
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -54,6 +59,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Percentile `p` (0–100) over the retained samples.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -73,12 +79,19 @@ impl Default for LatencyHistogram {
 /// Aggregated serving metrics.
 #[derive(Clone, Debug)]
 pub struct Metrics {
+    /// Server start time (throughput denominator).
     pub started: Instant,
+    /// Requests ingested.
     pub requests: u64,
+    /// Responses delivered.
     pub responses: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Sum of batch sizes (for the mean).
     pub batch_size_sum: u64,
+    /// End-to-end (enqueue → response) latency.
     pub e2e_latency: LatencyHistogram,
+    /// Queue (enqueue → execution start) latency.
     pub queue_latency: LatencyHistogram,
     /// Simulated hardware MAC ops executed.
     pub hw_ops: f64,
@@ -89,6 +102,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh metrics anchored at now.
     pub fn new() -> Metrics {
         Metrics {
             started: Instant::now(),
@@ -104,6 +118,7 @@ impl Metrics {
         }
     }
 
+    /// Record one executed batch and its simulated hardware cost.
     pub fn record_batch(&mut self, size: usize, hw_ops: f64, hw_energy: f64, hw_time: f64) {
         self.batches += 1;
         self.batch_size_sum += size as u64;
@@ -112,6 +127,7 @@ impl Metrics {
         self.hw_time_s += hw_time;
     }
 
+    /// Mean executed batch size.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0

@@ -5,13 +5,16 @@ use std::time::Instant;
 /// One inference request (a single image).
 #[derive(Clone, Debug)]
 pub struct InferenceRequest {
+    /// Caller-assigned request id (echoed in the response).
     pub id: u64,
     /// Flattened NHWC image, h×w×c f32.
     pub image: Vec<f32>,
+    /// Arrival timestamp (set by [`InferenceRequest::new`]).
     pub enqueued: Instant,
 }
 
 impl InferenceRequest {
+    /// A request enqueued now.
     pub fn new(id: u64, image: Vec<f32>) -> InferenceRequest {
         InferenceRequest { id, image, enqueued: Instant::now() }
     }
@@ -20,7 +23,9 @@ impl InferenceRequest {
 /// The response for one request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct InferenceResponse {
+    /// Request id this answers.
     pub id: u64,
+    /// Predicted class.
     pub predicted: u8,
     /// End-to-end latency (s).
     pub latency_s: f64,

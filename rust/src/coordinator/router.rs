@@ -7,7 +7,9 @@
 /// One replica's load state.
 #[derive(Clone, Debug, Default)]
 pub struct ReplicaState {
+    /// Batches currently executing.
     pub inflight: usize,
+    /// Batches completed.
     pub served: u64,
     /// Simulated busy-until (s, scheduler clock).
     pub busy_until: f64,
@@ -15,10 +17,12 @@ pub struct ReplicaState {
 
 /// Least-loaded router.
 pub struct Router {
+    /// Replica states, indexed by replica id.
     pub replicas: Vec<ReplicaState>,
 }
 
 impl Router {
+    /// Router over `n_replicas` idle replicas.
     pub fn new(n_replicas: usize) -> Router {
         assert!(n_replicas > 0);
         Router { replicas: vec![ReplicaState::default(); n_replicas] }

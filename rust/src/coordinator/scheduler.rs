@@ -27,9 +27,13 @@ pub struct ExecutionCost {
 
 /// The scheduler.
 pub struct BankScheduler {
+    /// Network layers in execution order.
     pub layers: Vec<ConvShape>,
+    /// Physical tile placement.
     pub layout: NetworkLayout,
+    /// The cache being arbitrated.
     pub controller: CacheController,
+    /// Analytic cost model.
     pub model: MacroModel,
     /// Weights programmed into the arrays?
     pub programmed: bool,

@@ -18,8 +18,10 @@ pub enum Corner {
 }
 
 impl Corner {
+    /// All corners, slow to fast.
     pub const ALL: [Corner; 3] = [Corner::SS, Corner::TT, Corner::FF];
 
+    /// Canonical two-letter name.
     pub fn name(&self) -> &'static str {
         match self {
             Corner::SS => "SS",
@@ -28,6 +30,7 @@ impl Corner {
         }
     }
 
+    /// Parse a (case-insensitive) corner name.
     pub fn from_name(s: &str) -> Option<Corner> {
         match s.to_ascii_uppercase().as_str() {
             "SS" => Some(Corner::SS),

@@ -17,13 +17,16 @@ use super::corner::{Corner, CornerParams};
 /// Device polarity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FetKind {
+    /// N-channel device.
     Nmos,
+    /// P-channel device.
     Pmos,
 }
 
 /// One FET instance (per-device MC deltas baked in).
 #[derive(Clone, Copy, Debug)]
 pub struct Fet {
+    /// Device polarity.
     pub kind: FetKind,
     /// Transconductance coefficient β (A/V^α) after corner + width scaling.
     pub beta: f64,
@@ -48,14 +51,23 @@ pub const VT_300K: f64 = 0.02585;
 /// FDSOI low-Vt logic transistor sized for a dense SRAM bit-cell.
 #[derive(Clone, Copy, Debug)]
 pub struct FetNominal {
+    /// NMOS transconductance coefficient (A/V^α).
     pub beta_n: f64,
+    /// PMOS transconductance coefficient (A/V^α).
     pub beta_p: f64,
+    /// NMOS threshold voltage (V).
     pub vth_n: f64,
+    /// PMOS threshold-voltage magnitude (V).
     pub vth_p: f64,
+    /// Velocity-saturation exponent α.
     pub alpha: f64,
+    /// Vdsat coefficient: Vdsat = kd·(Vgs−Vth).
     pub kd: f64,
+    /// Channel-length modulation (1/V).
     pub lambda: f64,
+    /// Subthreshold swing factor n.
     pub n_sub: f64,
+    /// Leakage prefactor at Vov = 0 (A).
     pub i_leak0: f64,
 }
 

@@ -80,6 +80,7 @@ impl Default for RramParams {
 /// One RRAM device instance with analog gap state.
 #[derive(Clone, Debug)]
 pub struct Rram {
+    /// Model parameters.
     pub params: RramParams,
     /// Tunneling gap, nm. Smaller gap ⇒ lower resistance.
     pub gap: f64,
@@ -95,6 +96,7 @@ impl Rram {
         Self::with_params(RramParams::default())
     }
 
+    /// Fresh device in HRS with explicit parameters.
     pub fn with_params(params: RramParams) -> Rram {
         Rram { params, gap: params.g_max, r_mult: 1.0, cycles: 0 }
     }

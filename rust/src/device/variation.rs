@@ -91,6 +91,7 @@ pub struct CellVariation {
 }
 
 impl CellVariation {
+    /// Zero-mismatch (nominal) cell.
     pub fn nominal() -> CellVariation {
         CellVariation { vth_delta: 0.0, beta_mult: 1.0, r_lrs_mult: 1.0, r_hrs_mult: 1.0 }
     }

@@ -65,15 +65,17 @@ pub fn table1(out_dir: &Path, accuracy: Option<f64>) -> crate::Result<Vec<Compar
 /// One Table II row: configuration + measured accuracy.
 #[derive(Clone, Debug)]
 pub struct Table2Row {
+    /// Configuration description (Table II row label).
     pub config: String,
+    /// Measured accuracy (fraction in [0,1]).
     pub accuracy: f64,
     /// The paper's corresponding number (%), for side-by-side reporting.
     pub paper_pct: Option<f64>,
 }
 
 /// Table II from the artifact manifest (accuracies measured at build time
-/// by the training protocol; the e2e example re-measures them through
-/// PJRT and must agree — that's the runtime_crosscheck).
+/// by the training protocol; the e2e example re-measures them through the
+/// runtime backend and must agree — that's the runtime_crosscheck).
 pub fn table2_from_manifest(out_dir: &Path, manifest: &Manifest) -> crate::Result<Vec<Table2Row>> {
     let rows = vec![
         Table2Row {

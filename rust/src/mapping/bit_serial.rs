@@ -11,7 +11,9 @@ use crate::consts::{T_ADC_CONVERSION, WORD_BITS};
 /// A multi-bit PIM schedule for one sub-array invocation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BitSerialSchedule {
+    /// Input-activation precision (bits).
     pub act_bits: u32,
+    /// Weight precision (bits).
     pub weight_bits: u32,
     /// Words consumed per logical output ("nibbles" per weight).
     pub weight_nibbles: u32,
@@ -22,6 +24,7 @@ pub struct BitSerialSchedule {
 }
 
 impl BitSerialSchedule {
+    /// Schedule for the given activation/weight precisions.
     pub fn new(act_bits: u32, weight_bits: u32) -> BitSerialSchedule {
         assert!(act_bits >= 1 && weight_bits >= 1);
         let nibbles = weight_bits.div_ceil(WORD_BITS as u32);

@@ -21,10 +21,12 @@ pub struct ConvShape {
     pub n: usize,
     /// Input spatial width W (square).
     pub w: usize,
+    /// Convolution stride.
     pub stride: usize,
 }
 
 impl ConvShape {
+    /// Output spatial width under 'same' padding.
     pub fn output_width(&self) -> usize {
         // 'same' padding.
         self.w.div_ceil(self.stride)
@@ -40,11 +42,13 @@ impl ConvShape {
 /// The physical mapping plan for one conv layer.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ConvMapping {
+    /// The layer being mapped.
     pub shape: ConvShape,
     /// K² kernel-position submatrices.
     pub submatrices: usize,
-    /// Tiles per submatrix: (row blocks over D, word blocks over N).
+    /// Row-block tiles over D per submatrix.
     pub d_tiles: usize,
+    /// Word-block tiles over N per submatrix.
     pub n_tiles: usize,
     /// Total 128×128 sub-arrays required.
     pub total_subarrays: usize,
@@ -55,6 +59,7 @@ pub struct ConvMapping {
 }
 
 impl ConvMapping {
+    /// Plan the tiling of `shape` onto 128×128 sub-arrays.
     pub fn plan(shape: ConvShape) -> ConvMapping {
         let d_tiles = shape.d.div_ceil(ARRAY_ROWS);
         let n_tiles = shape.n.div_ceil(ARRAY_WORDS);

@@ -33,19 +33,24 @@ pub fn subtract_banks(pos: f64, neg: f64) -> f64 {
 /// conversion but wider accumulation).
 #[derive(Clone, Copy, Debug)]
 pub struct OutputRegister {
+    /// Register width (bits, two's complement).
     pub bits: u32,
+    /// Current accumulated value.
     pub value: i64,
 }
 
 impl OutputRegister {
+    /// Zeroed register of the given width.
     pub fn new(bits: u32) -> OutputRegister {
         OutputRegister { bits, value: 0 }
     }
 
+    /// Largest representable value.
     pub fn max(&self) -> i64 {
         (1i64 << (self.bits - 1)) - 1
     }
 
+    /// Smallest representable value.
     pub fn min(&self) -> i64 {
         -(1i64 << (self.bits - 1))
     }
@@ -56,6 +61,7 @@ impl OutputRegister {
         self.value
     }
 
+    /// Clear the accumulator.
     pub fn reset(&mut self) {
         self.value = 0;
     }

@@ -10,10 +10,13 @@ use super::conv_mapper::{ConvMapping, ConvShape};
 /// One placed tile.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TilePlacement {
+    /// Owning layer index.
     pub layer: usize,
     /// Kernel-position submatrix index (ky*K + kx); 0 for FC.
     pub submatrix: usize,
+    /// Row-block index over D.
     pub d_tile: usize,
+    /// Word-block index over N.
     pub n_tile: usize,
     /// Physical slot for the positive bank.
     pub pos_slot: (usize, usize),
@@ -24,8 +27,11 @@ pub struct TilePlacement {
 /// The whole network's placement.
 #[derive(Clone, Debug)]
 pub struct NetworkLayout {
+    /// Every placed tile.
     pub placements: Vec<TilePlacement>,
+    /// Banks available.
     pub banks: usize,
+    /// Sub-array slots per bank.
     pub subarrays_per_bank: usize,
     /// Slots consumed (2 per logical tile).
     pub slots_used: usize,

@@ -12,11 +12,17 @@ const MAGIC: u32 = 0x4E56_4D43;
 /// Loaded evaluation dataset.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// All images, [n, h, w, c].
     pub images: Tensor,
+    /// Class label per image.
     pub labels: Vec<u8>,
+    /// Number of images.
     pub n: usize,
+    /// Image height.
     pub h: usize,
+    /// Image width.
     pub w: usize,
+    /// Channels.
     pub c: usize,
 }
 
@@ -25,6 +31,7 @@ fn read_u32(buf: &[u8], off: usize) -> u32 {
 }
 
 impl Dataset {
+    /// Load a dataset.bin file.
     pub fn load(path: &Path) -> Result<Dataset> {
         let buf = std::fs::read(path)?;
         if buf.len() < 20 || read_u32(&buf, 0) != MAGIC {

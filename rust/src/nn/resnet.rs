@@ -36,6 +36,7 @@ pub enum ForwardMode {
 /// Parameter store: flat name → tensor (names as in model.flatten_params).
 #[derive(Clone, Debug)]
 pub struct Params {
+    /// All parameters by flat name (e.g. `s0b1/w1`, `fc/b`).
     pub tensors: BTreeMap<String, Tensor>,
 }
 
@@ -82,6 +83,7 @@ impl Params {
         Ok(Params { tensors })
     }
 
+    /// Look up a parameter by name.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)
@@ -91,11 +93,14 @@ impl Params {
 
 /// The network.
 pub struct ResNet {
+    /// Weights and norm parameters.
     pub params: Params,
+    /// Stem width (channels after the first conv).
     pub width: usize,
 }
 
 impl ResNet {
+    /// Wrap a parameter store (width inferred from the stem conv).
     pub fn new(params: Params) -> ResNet {
         let width = params
             .tensors
@@ -105,6 +110,7 @@ impl ResNet {
         ResNet { params, width }
     }
 
+    /// Load from a weights.bin file.
     pub fn load(path: &Path) -> Result<ResNet> {
         Ok(Self::new(Params::load(path)?))
     }

@@ -3,28 +3,35 @@
 /// Dense f32 tensor, row-major over its shape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes.
     pub shape: Vec<usize>,
+    /// Elements, row-major.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Zero-filled tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Tensor from existing data (length must match the shape product).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(data.len(), shape.iter().product::<usize>(), "shape {shape:?}");
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Size of dimension `i`.
     pub fn dim(&self, i: usize) -> usize {
         self.shape[i]
     }
@@ -36,12 +43,14 @@ impl Tensor {
         self.data[((n * hh + h) * ww + w) * cc + c]
     }
 
+    /// Mutable NHWC index.
     #[inline]
     pub fn at4_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
         let (hh, ww, cc) = (self.shape[1], self.shape[2], self.shape[3]);
         &mut self.data[((n * hh + h) * ww + w) * cc + c]
     }
 
+    /// Elementwise map (consuming).
     pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
         for x in self.data.iter_mut() {
             *x = f(*x);
@@ -58,6 +67,7 @@ impl Tensor {
         self
     }
 
+    /// Elementwise max(x, 0).
     pub fn relu(self) -> Tensor {
         self.map(|x| x.max(0.0))
     }

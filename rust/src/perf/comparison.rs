@@ -10,19 +10,33 @@ use super::model::MacroModel;
 /// One Table I row.
 #[derive(Clone, Debug)]
 pub struct ComparisonRow {
+    /// Design name / citation.
     pub name: &'static str,
+    /// Process technology.
     pub technology: &'static str,
+    /// Array capacity.
     pub array_size: &'static str,
+    /// Compute domain (current/charge/time).
     pub domain: &'static str,
+    /// Bit-cell / memory type.
     pub memory_type: &'static str,
+    /// Does the design retain cache data during PIM?
     pub cache_retention: bool,
+    /// Reported CIFAR-10 accuracy (%), if any.
     pub accuracy_pct: Option<f64>,
+    /// (input, weight) precision in bits.
     pub in_w_precision: (u32, u32),
+    /// Output precision description.
     pub output_precision: &'static str,
+    /// Raw throughput (GOPS).
     pub throughput_gops: f64,
+    /// Raw efficiency (TOPS/W).
     pub efficiency_tops_w: f64,
+    /// 1-bit-normalized throughput (TOPS).
     pub norm_throughput_tops: f64,
+    /// 1-bit-normalized efficiency (TOPS/W).
     pub norm_efficiency_tops_w: f64,
+    /// 1-bit-normalized compute density (TOPS/mm²).
     pub norm_density_tops_mm2: f64,
 }
 

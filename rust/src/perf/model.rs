@@ -40,7 +40,9 @@ pub struct MacroPerf {
 /// The analytic macro model.
 #[derive(Clone, Copy, Debug)]
 pub struct MacroModel {
+    /// Input-activation precision (bits).
     pub act_bits: u32,
+    /// Weight precision (bits).
     pub weight_bits: u32,
     /// Active rows per sub-array invocation (≤128).
     pub rows: usize,
@@ -68,11 +70,13 @@ impl Default for MacroModel {
     }
 }
 
-/// Area model: §V-D — total macro ≈0.1 mm², ADC ≈70 %.
+/// Area model: §V-D — total macro ≈0.1 mm².
 pub const AREA_MACRO_MM2: f64 = 0.1;
+/// ADC share of the macro area (§V-D: ≈70 %).
 pub const AREA_ADC_FRAC: f64 = 0.70;
 
 impl MacroModel {
+    /// Default model at a different input/weight precision.
     pub fn with_precision(act_bits: u32, weight_bits: u32) -> MacroModel {
         MacroModel { act_bits, weight_bits, ..Default::default() }
     }

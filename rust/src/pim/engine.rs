@@ -20,7 +20,9 @@ use super::transfer::{TransferModel, ADC_CODES, MAC_FULLSCALE};
 /// Engine configuration + precomputed state.
 #[derive(Clone, Debug)]
 pub struct PimEngine {
+    /// The analog transfer model (corner-specific).
     pub transfer: TransferModel,
+    /// Calibrated ADC references (Fig. 12a) vs full-VDD uncalibrated.
     pub calibrated: bool,
     /// Per-conversion ADC noise sigma in code units (None = noiseless).
     pub noise_sigma_codes: Option<f64>,
@@ -28,6 +30,7 @@ pub struct PimEngine {
 }
 
 impl PimEngine {
+    /// Engine for a corner, calibrated references, noiseless.
     pub fn new(corner: Corner) -> PimEngine {
         let transfer = TransferModel::new(corner);
         PimEngine {
@@ -38,15 +41,18 @@ impl PimEngine {
         }
     }
 
+    /// Typical-corner engine (the common case).
     pub fn tt() -> PimEngine {
         Self::new(Corner::TT)
     }
 
+    /// Enable per-conversion ADC noise (sigma in code units).
     pub fn with_noise(mut self, sigma_codes: f64) -> PimEngine {
         self.noise_sigma_codes = Some(sigma_codes);
         self
     }
 
+    /// Switch to the uncalibrated (full-VDD reference) ADC of Fig. 12.
     pub fn uncalibrated(mut self) -> PimEngine {
         self.calibrated = false;
         self.lut = self.transfer.quantize_lut(false);

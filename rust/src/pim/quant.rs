@@ -8,9 +8,13 @@
 /// Quantized activation matrix (row-major [m][k], values 0..=15).
 #[derive(Clone, Debug)]
 pub struct QuantizedActs {
+    /// Quantized levels, row-major.
     pub data: Vec<u8>,
+    /// Number of rows (batch/spatial positions).
     pub m: usize,
+    /// Inner (reduction) dimension.
     pub k: usize,
+    /// Dequantization scale: `a ≈ data · scale`.
     pub scale: f32,
 }
 
@@ -20,9 +24,13 @@ pub struct QuantizedActs {
 /// `model.py::quant_weight`).
 #[derive(Clone, Debug)]
 pub struct QuantizedWeights {
+    /// Positive bank (magnitudes of w ≥ 0), row-major [k][n].
     pub pos: Vec<u8>,
+    /// Negative bank (magnitudes of w < 0), row-major [k][n].
     pub neg: Vec<u8>,
+    /// Reduction dimension.
     pub k: usize,
+    /// Output columns.
     pub n: usize,
     /// Per-column scale, length `n`.
     pub scale: Vec<f32>,
@@ -74,6 +82,7 @@ impl QuantizedActs {
         self.data.iter().map(|&v| (v >> b) & 1).collect()
     }
 
+    /// Level at row `i`, column `j`.
     pub fn at(&self, i: usize, j: usize) -> u8 {
         self.data[i * self.k + j]
     }

@@ -25,13 +25,16 @@ pub const MAC_FULLSCALE: u32 = (ARRAY_ROWS as u32) * 15;
 pub const V_REF: f64 = 0.30;
 /// Series FET resistance of the cell PIM path at TT (Ω) — `R_FETS_TT`.
 pub const R_FETS_TT: f64 = 6.0e3;
-/// Sampled-voltage calibration span (V) — Fig. 12's 90/660 mV references.
+/// Sampled-voltage calibration span, upper end (V) — Fig. 12's 660 mV
+/// reference sits just above this.
 pub const V_SAMP_MAX: f64 = 0.655;
+/// Sampled-voltage calibration span, lower end (V).
 pub const V_SAMP_MIN: f64 = 0.092;
 
 /// The transfer model for one corner.
 #[derive(Clone, Copy, Debug)]
 pub struct TransferModel {
+    /// Process corner the model describes.
     pub corner: Corner,
     /// Per-cell LRS unit current (A): (VDD−V_REF)/(R_LRS+R_FETS) × drive.
     pub i_unit: f64,
@@ -42,6 +45,7 @@ pub struct TransferModel {
 }
 
 impl TransferModel {
+    /// Transfer model for a corner (TT-trimmed transimpedance).
     pub fn new(corner: Corner) -> TransferModel {
         let i_unit_tt = (VDD - V_REF) / (crate::consts::R_LRS + R_FETS_TT);
         let (scale, r_load) = match corner {
@@ -58,6 +62,7 @@ impl TransferModel {
         TransferModel { corner, i_unit: i_unit_tt * scale, r_load, r_ti }
     }
 
+    /// Typical-corner model (the common case).
     pub fn tt() -> TransferModel {
         Self::new(Corner::TT)
     }

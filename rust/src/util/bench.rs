@@ -12,15 +12,18 @@ use super::stats::Summary;
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark name (report key).
     pub name: String,
     /// Per-iteration wall time, seconds.
     pub times: Vec<f64>,
+    /// Summary statistics over [`Self::times`].
     pub summary: Summary,
     /// Work items per iteration (for throughput reporting), if meaningful.
     pub items_per_iter: Option<f64>,
 }
 
 impl BenchResult {
+    /// Mean per-iteration wall time, seconds.
     pub fn mean_s(&self) -> f64 {
         self.summary.mean
     }
@@ -70,6 +73,7 @@ pub struct Bencher {
     pub max_iters: usize,
     /// Minimum iterations (for stable percentiles).
     pub min_iters: usize,
+    /// Accumulated results, in run order.
     pub results: Vec<BenchResult>,
 }
 
@@ -80,6 +84,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A faster, less precise configuration for smoke runs and tests.
     pub fn quick() -> Self {
         Bencher { target_s: 0.2, max_iters: 100, min_iters: 5, results: Vec::new() }
     }

@@ -7,9 +7,13 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First non-dashed token, if any.
     pub subcommand: Option<String>,
+    /// Bare `--flag` tokens.
     pub flags: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Remaining non-dashed tokens.
     pub positional: Vec<String>,
 }
 
@@ -51,30 +55,39 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Was `--name` given (as a flag or an option)?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
     }
 
+    /// Raw option value for `--name`.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Integer option with a default (panics with a usage message on a
+    /// non-integer value).
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
             .unwrap_or(default)
     }
 
+    /// Float option with a default (panics with a usage message on a
+    /// non-numeric value).
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")))
             .unwrap_or(default)
     }
 
+    /// u64 option with a default (panics with a usage message on a
+    /// non-integer value).
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))

@@ -15,6 +15,7 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// A table with the given column headers.
     pub fn new<S: Into<String>>(columns: Vec<S>) -> Self {
         CsvWriter {
             header: columns.into_iter().map(Into::into).collect(),
@@ -35,6 +36,7 @@ impl CsvWriter {
         self.rows.push(cells.into_iter().map(Into::into).collect());
     }
 
+    /// Number of data rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

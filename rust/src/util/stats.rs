@@ -4,14 +4,21 @@
 /// Summary statistics over a sample.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
     /// Sample standard deviation (n-1 denominator).
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (linear-interpolated).
     pub p50: f64,
+    /// 95th percentile (linear-interpolated).
     pub p95: f64,
+    /// 99th percentile (linear-interpolated).
     pub p99: f64,
 }
 
