@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate for the NVM-in-Cache reproduction:
+#   1. release build (lib + repro bin + examples + benches)
+#   2. full test suite
+#   3. rustdoc build (crate carries #![warn(missing_docs)])
+#
+# Run from anywhere inside the repository; fully offline.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo doc --no-deps =="
+cargo doc --no-deps
+
+echo "verify: OK"
