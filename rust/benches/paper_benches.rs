@@ -131,6 +131,14 @@ fn main() {
         e_rel_parallel / e_rel_serial
     );
 
+    println!("\n=== E12: multi-tenant fleet simulation (fleet/) ===");
+    let fleet_cfg = nvm_in_cache::fleet::FleetSimConfig::bench_quick();
+    let mut fleet_report = None;
+    b.bench(&fleet_cfg.bench_label(), || {
+        fleet_report = Some(nvm_in_cache::fleet::FleetSim::run(&fleet_cfg).unwrap());
+    });
+    print!("{}", fleet_report.expect("bench ran at least once").render());
+
     println!("\n=== A3: ADC sharing / faster ADC (§V-F future work) ===");
     for (share, rate_mult) in [(1usize, 1.0f64), (2, 1.0), (4, 1.0), (1, 2.0), (1, 4.0)] {
         // Sharing an ADC across `share` word columns divides ADC area but

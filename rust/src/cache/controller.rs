@@ -84,9 +84,13 @@ impl CacheController {
         let resident = self.slice.banks[bank].subarrays[sa].resident_lines() as u64;
         // Writeback anything resident (conservative: assume dirty).
         ledger.record_n(OpKind::CacheLineMove, resident);
-        self.slice.banks[bank].program_weights(sa, weights, &mut self.slice.ledger);
-        let latency = ledger.total_time()
-            + 3.0 * crate::consts::T_PROGRAM * (ARRAY_ROWS * 128) as f64 / 128.0; // row-parallel pulses
+        self.slice.banks[bank].program_weights(sa, weights, &mut ledger);
+        // Wall-clock: line moves serial, then programming pulses applied
+        // row-parallel (not the ledger's serial per-cell sum).
+        let latency = resident as f64 * OpKind::CacheLineMove.cost().0
+            + 3.0 * crate::consts::T_PROGRAM * (ARRAY_ROWS * 128) as f64 / 128.0;
+        // Energy is the full ledger: writebacks + every programming pulse
+        // and verify read.
         let energy = ledger.total_energy();
         self.slice.ledger.merge(&ledger);
         CampaignStats { mac_ops: 0, lines_moved: resident, latency, energy }
@@ -126,6 +130,40 @@ impl CacheController {
         let energy = ledger.total_energy();
         self.slice.ledger.merge(&ledger);
         CampaignStats { mac_ops: n_macs, lines_moved, latency, energy }
+    }
+
+    /// Snapshot the resident lines of one sub-array: (row, data) pairs —
+    /// the set a destructive programming campaign must reload afterwards.
+    pub fn resident_snapshot(&self, bank: usize, sa: usize) -> Vec<(usize, [u8; 64])> {
+        self.slice.banks[bank].subarrays[sa]
+            .lines
+            .iter()
+            .enumerate()
+            .filter_map(|(row, l)| l.map(|d| (row, d)))
+            .collect()
+    }
+
+    /// Rewarm a sub-array after a destructive programming campaign:
+    /// reload the snapshot taken beforehand (metered as line moves +
+    /// writes — the drain→program→rewarm cost a fleet campaign pays
+    /// before a replica returns to service). Residency is restored, so a
+    /// later campaign on the same array displaces these lines again.
+    pub fn rewarm_campaign(
+        &mut self,
+        bank: usize,
+        sa: usize,
+        saved: &[(usize, [u8; 64])],
+    ) -> CampaignStats {
+        let mut ledger = EnergyLedger::new();
+        ledger.record_n(OpKind::CacheLineMove, saved.len() as u64);
+        let rows = self.slice.geom.rows_per_subarray;
+        for &(row, data) in saved {
+            self.slice.banks[bank].write_line(sa * rows + row, data, &mut ledger);
+        }
+        let latency = ledger.total_time();
+        let energy = ledger.total_energy();
+        self.slice.ledger.merge(&ledger);
+        CampaignStats { mac_ops: 0, lines_moved: saved.len() as u64, latency, energy }
     }
 
     /// Verify that all resident lines in a sub-array still hold their data
@@ -227,6 +265,35 @@ mod tests {
         let stats = c.program_campaign(0, 0, vec![7u8; 128 * 128]);
         assert_eq!(stats.lines_moved, 30, "resident lines written back");
         assert!(!c.verify_retention(0, 0, &expected), "programming clobbers latches");
+        // Energy covers the programming pulses themselves (65,536 cells ×
+        // ~0.46 pJ ≈ 30 nJ), not just the 30-line writeback (~0.6 nJ).
+        let writeback = 30.0 * OpKind::CacheLineMove.cost().1;
+        assert!(stats.energy > 10.0 * writeback, "programming energy metered: {}", stats.energy);
+        // Latency stays row-parallel: microseconds, not the ~260 µs a
+        // serial per-cell pulse sum would give.
+        assert!(stats.latency < 1e-5, "row-parallel programming: {}", stats.latency);
+    }
+
+    #[test]
+    fn rewarm_restores_displaced_residency() {
+        let mut c = ctl(PimIntegration::Retained);
+        let warmed = warm_lines(&mut c, 0, 0, 20);
+        let saved = c.resident_snapshot(0, 0);
+        assert_eq!(saved.len(), 20);
+        let prog = c.program_campaign(0, 0, vec![1u8; 128 * 128]);
+        assert_eq!(prog.lines_moved, 20);
+        assert_eq!(c.slice.banks[0].subarrays[0].resident_lines(), 0);
+        let rewarm = c.rewarm_campaign(0, 0, &saved);
+        assert_eq!(rewarm.lines_moved, 20);
+        let (t, e) = OpKind::CacheLineMove.cost();
+        assert!(rewarm.latency >= 20.0 * t);
+        assert!(rewarm.energy >= 20.0 * e);
+        // Residency and contents are actually restored, so a later
+        // campaign on this array displaces these lines again.
+        assert_eq!(c.slice.banks[0].subarrays[0].resident_lines(), 20);
+        assert!(c.verify_retention(0, 0, &warmed));
+        let prog2 = c.program_campaign(0, 0, vec![2u8; 128 * 128]);
+        assert_eq!(prog2.lines_moved, 20, "second campaign displaces the reloaded lines");
     }
 
     #[test]

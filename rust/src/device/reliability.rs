@@ -44,6 +44,14 @@ impl EnduranceModel {
         let lg = (1.0 / min_window).log2();
         self.cycles_50pct * lg.powf(1.0 / self.shape)
     }
+
+    /// Campaigns still available to a bank that has already absorbed
+    /// `cycles` write cycles, under the `min_window` criterion (0 when the
+    /// budget is exhausted). The fleet placer uses this headroom to refuse
+    /// placements that would over-commit a bank's endurance.
+    pub fn remaining_campaigns(&self, cycles: f64, min_window: f64) -> f64 {
+        (self.max_campaigns(min_window) - cycles).max(0.0)
+    }
 }
 
 /// Retention model: thermally-activated gap relaxation toward HRS.
@@ -124,6 +132,15 @@ mod tests {
         let c = e.max_campaigns(0.5);
         assert!((e.window_fraction(c) - 0.5).abs() < 1e-6);
         assert!(e.max_campaigns(0.8) < c, "stricter window ⇒ fewer campaigns");
+    }
+
+    #[test]
+    fn remaining_campaigns_headroom() {
+        let e = EnduranceModel::default();
+        let max = e.max_campaigns(0.8);
+        assert!((e.remaining_campaigns(0.0, 0.8) - max).abs() < 1e-6);
+        assert!((e.remaining_campaigns(max / 2.0, 0.8) - max / 2.0).abs() < 1e-6);
+        assert_eq!(e.remaining_campaigns(max * 2.0, 0.8), 0.0, "clamped at zero");
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Campaign scheduler: interleaves destructive weight-programming
+//! campaigns with live traffic.
+//!
+//! Programming the RRAM layer is destructive to the SRAM latches
+//! (§III-A), so a replica must be taken through **drain → program →
+//! rewarm** before it can serve again:
+//!
+//! 1. *drain* — stop routing to the replica and wait for its in-flight
+//!    work (a driver with an asynchronous drain window marks it
+//!    [`super::router::ReplicaHealth::Draining`]; the synchronous fleet
+//!    simulator accounts the wait as `drain_s` and goes straight to
+//!    [`super::router::ReplicaHealth::Programming`]);
+//! 2. *program* — run [`crate::cache::CacheController::program_campaign`]
+//!    for every tile slot, metered through [`crate::cell::timing`];
+//! 3. *rewarm* — reload the cache lines the programming displaced
+//!    ([`crate::cache::CacheController::rewarm_campaign`]).
+//!
+//! The sum of the three phases is the replica's campaign downtime, which
+//! the fleet report pins alongside QoS and wear.
+
+use crate::cache::controller::CacheController;
+use crate::consts::{ARRAY_ROWS, ARRAY_WORDS};
+
+use super::placer::{BankWear, ReplicaPlacement};
+
+/// Outcome of one replica's programming campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    /// Tenant owning the reprogrammed replica.
+    pub tenant: usize,
+    /// Replica index within the tenant.
+    pub replica: usize,
+    /// Slice the replica lives on.
+    pub slice: usize,
+    /// Time spent waiting for in-flight work to drain (s).
+    pub drain_s: f64,
+    /// Programming latency across all tile slots (s).
+    pub program_s: f64,
+    /// Cache-rewarm latency (s).
+    pub rewarm_s: f64,
+    /// Cache lines displaced by the destructive programming.
+    pub lines_displaced: u64,
+    /// Energy of programming + rewarm (J).
+    pub energy_j: f64,
+}
+
+impl CampaignReport {
+    /// Total replica downtime: drain + program + rewarm (s).
+    pub fn downtime_s(&self) -> f64 {
+        self.drain_s + self.program_s + self.rewarm_s
+    }
+}
+
+/// Stateless executor for drain → program → rewarm campaigns.
+pub struct CampaignScheduler;
+
+impl CampaignScheduler {
+    /// Reprogram one replica's weights in place on its slice.
+    ///
+    /// `drain_s` is the simulated time the caller spent draining in-flight
+    /// work before calling. Every touched bank's wear counter is bumped by
+    /// one campaign cycle.
+    pub fn run(
+        controller: &mut CacheController,
+        placement: &ReplicaPlacement,
+        wear: &mut BankWear,
+        drain_s: f64,
+    ) -> CampaignReport {
+        let mut program_s = 0.0;
+        let mut energy_j = 0.0;
+        let mut lines_displaced = 0u64;
+        let mut snapshots = Vec::new();
+        for tile in &placement.layout.placements {
+            for (bank, sa) in [tile.pos_slot, tile.neg_slot] {
+                let saved = controller.resident_snapshot(bank, sa);
+                let stats = controller.program_campaign(
+                    bank,
+                    sa,
+                    vec![0u8; ARRAY_ROWS * ARRAY_WORDS],
+                );
+                program_s += stats.latency;
+                energy_j += stats.energy;
+                lines_displaced += stats.lines_moved;
+                snapshots.push((bank, sa, saved));
+            }
+        }
+        for bank in placement.banks() {
+            wear.record_program(bank);
+        }
+        // Reload everything the programming displaced, so the cache model
+        // is warm again and a later campaign pays the same displacement.
+        let mut rewarm_s = 0.0;
+        for (bank, sa, saved) in &snapshots {
+            let rewarm = controller.rewarm_campaign(*bank, *sa, saved);
+            rewarm_s += rewarm.latency;
+            energy_j += rewarm.energy;
+        }
+        CampaignReport {
+            tenant: placement.tenant,
+            replica: placement.replica,
+            slice: placement.slice,
+            drain_s,
+            program_s,
+            rewarm_s,
+            lines_displaced,
+            energy_j,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::addr::Geometry;
+    use crate::cache::controller::PimIntegration;
+    use crate::fleet::placer::EndurancePlacer;
+    use crate::fleet::registry::ModelRegistry;
+
+    fn one_placement() -> (CacheController, ReplicaPlacement, BankWear) {
+        let reg = ModelRegistry::synthetic(2);
+        let placer = EndurancePlacer::new(Geometry::default(), 4);
+        let fleet = placer.place(&reg).unwrap();
+        // Take the compact tenant's first replica.
+        let placement = fleet.tenant_replicas(1)[0].clone();
+        let controller = CacheController::new(Geometry::default(), PimIntegration::Retained);
+        let wear = BankWear::new(Geometry::default().banks_per_slice);
+        (controller, placement, wear)
+    }
+
+    #[test]
+    fn campaign_meters_program_and_rewarm() {
+        let (mut c, placement, mut wear) = one_placement();
+        let report = CampaignScheduler::run(&mut c, &placement, &mut wear, 1e-3);
+        assert!(report.program_s > 0.0);
+        assert!(report.energy_j > 0.0);
+        assert!(
+            (report.downtime_s() - (1e-3 + report.program_s + report.rewarm_s)).abs() < 1e-15
+        );
+        assert_eq!(report.tenant, 1);
+    }
+
+    #[test]
+    fn campaign_bumps_wear_on_touched_banks_only() {
+        let (mut c, placement, mut wear) = one_placement();
+        CampaignScheduler::run(&mut c, &placement, &mut wear, 0.0);
+        let touched = placement.banks();
+        for (bank, cycles) in wear.cycles.iter().enumerate() {
+            if touched.contains(&bank) {
+                assert_eq!(*cycles, 1.0, "bank {bank}");
+            } else {
+                assert_eq!(*cycles, 0.0, "bank {bank}");
+            }
+        }
+    }
+
+    #[test]
+    fn second_campaign_accumulates_wear() {
+        let (mut c, placement, mut wear) = one_placement();
+        CampaignScheduler::run(&mut c, &placement, &mut wear, 0.0);
+        CampaignScheduler::run(&mut c, &placement, &mut wear, 0.0);
+        assert_eq!(wear.max_cycles(), 2.0);
+    }
+
+    #[test]
+    fn rewarm_displacement_matches_resident_lines() {
+        let (mut c, placement, mut wear) = one_placement();
+        // Fresh cache: nothing resident, so nothing displaced or rewarmed.
+        let report = CampaignScheduler::run(&mut c, &placement, &mut wear, 0.0);
+        assert_eq!(report.lines_displaced, 0);
+        assert_eq!(report.rewarm_s, 0.0);
+        // Warm a line into a sub-array the placement covers, then reprogram.
+        let (bank, sa) = placement.layout.placements[0].pos_slot;
+        let mut led = crate::cell::timing::EnergyLedger::new();
+        let li = sa * c.slice.geom.rows_per_subarray;
+        c.slice.banks[bank].write_line(li, [9u8; 64], &mut led);
+        let report = CampaignScheduler::run(&mut c, &placement, &mut wear, 0.0);
+        assert_eq!(report.lines_displaced, 1);
+        assert!(report.rewarm_s > 0.0);
+        // Rewarm restored residency, so the next campaign displaces (and
+        // reloads) the same line again instead of under-counting to zero.
+        let again = CampaignScheduler::run(&mut c, &placement, &mut wear, 0.0);
+        assert_eq!(again.lines_displaced, 1);
+        assert!(again.rewarm_s > 0.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! The fleet layer (L4): a multi-tenant, endurance-aware serving fabric
+//! across many cache slices.
+//!
+//! The paper's end-state is a repurposed commodity LLC — which in any real
+//! deployment is many slices serving many models, not one ResNet on one
+//! replica set. This layer sits above [`crate::coordinator`] and owns the
+//! fleet-wide concerns:
+//!
+//! * [`registry`] — the tenants: model topology/width, runtime variant,
+//!   replica count, offered load, QoS deadline.
+//! * [`placer`] — endurance-aware placement: packs each replica's tiles
+//!   onto a slice via [`crate::mapping::layout`], wear-levels across
+//!   slices/banks using per-bank RRAM write-cycle counters, and refuses
+//!   placements that would exceed the
+//!   [`crate::device::reliability::EnduranceModel`] budget.
+//! * [`campaign`] — destructive weight-programming campaigns interleaved
+//!   with live traffic: drain → program → rewarm, metered through
+//!   [`crate::cache::CacheController`] and [`crate::cell::timing`].
+//! * [`router`] — [`crate::coordinator::Router`] generalized to
+//!   (tenant, replica) pairs, plus a deadline-aware admission controller.
+//! * [`sim`] — the deterministic fleet simulator behind `repro fleet-sim`:
+//!   seeded multi-tenant traffic, campaigns mid-run, and a report pinning
+//!   per-tenant p50/p99, throughput, energy, bank wear, and downtime.
+//!
+//! See ARCHITECTURE.md §fleet and EXPERIMENTS.md E12.
+
+pub mod campaign;
+pub mod placer;
+pub mod registry;
+pub mod router;
+pub mod sim;
+
+pub use campaign::{CampaignReport, CampaignScheduler};
+pub use placer::{BankWear, EndurancePlacer, EndurancePolicy, FleetPlacement, ReplicaPlacement};
+pub use registry::{ModelFamily, ModelRegistry, QosSpec, TenantSpec};
+pub use router::{AdmissionController, FleetRouter, FleetReplicaState, ReplicaHealth};
+pub use sim::{FleetReport, FleetSim, FleetSimConfig, TenantReport};

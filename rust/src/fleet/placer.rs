@@ -1,0 +1,426 @@
+//! Endurance-aware placement of tenant replicas onto a fleet of slices.
+//!
+//! Each replica's weight tiles are packed contiguously onto one slice via
+//! [`crate::mapping::layout::NetworkLayout::place_from`]. The placer
+//! tracks per-bank RRAM write-cycle wear ([`BankWear`]) and refuses any
+//! placement whose planned reprogramming campaigns would push a bank's
+//! resistance window below the [`EndurancePolicy`] criterion — endurance
+//! as a first-class scheduling input, not an afterthought (Inci et al.).
+
+use crate::cache::addr::Geometry;
+use crate::device::reliability::EnduranceModel;
+use crate::mapping::layout::NetworkLayout;
+use crate::{Error, Result};
+
+use super::registry::ModelRegistry;
+
+/// Per-bank RRAM write-cycle counters for one slice.
+#[derive(Clone, Debug)]
+pub struct BankWear {
+    /// Accumulated SET/RESET campaign cycles per bank.
+    pub cycles: Vec<f64>,
+}
+
+impl BankWear {
+    /// Fresh (unworn) wear state for `banks` banks.
+    pub fn new(banks: usize) -> BankWear {
+        BankWear { cycles: vec![0.0; banks] }
+    }
+
+    /// Record one programming campaign touching `bank`.
+    pub fn record_program(&mut self, bank: usize) {
+        self.cycles[bank] += 1.0;
+    }
+
+    /// Most-worn bank's cycle count.
+    pub fn max_cycles(&self) -> f64 {
+        self.cycles.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Worst (smallest) remaining resistance-window fraction across banks.
+    pub fn min_window_fraction(&self, model: &EnduranceModel) -> f64 {
+        self.cycles
+            .iter()
+            .map(|&c| model.window_fraction(c))
+            .fold(1.0, f64::min)
+    }
+
+    /// Are all banks still inside the policy's window criterion?
+    pub fn within(&self, policy: &EndurancePolicy) -> bool {
+        self.min_window_fraction(&policy.model) >= policy.min_window
+    }
+}
+
+/// Endurance policy the placer enforces.
+#[derive(Clone, Copy, Debug)]
+pub struct EndurancePolicy {
+    /// Device endurance model.
+    pub model: EnduranceModel,
+    /// Refuse placements whose projected window falls below this fraction.
+    pub min_window: f64,
+    /// Reprogramming campaigns each placement must have headroom for over
+    /// the deployment lifetime (e.g. daily retraining for 10 years ≈ 3653).
+    pub planned_campaigns: f64,
+}
+
+impl Default for EndurancePolicy {
+    fn default() -> Self {
+        EndurancePolicy {
+            model: EnduranceModel::default(),
+            min_window: 0.8,
+            planned_campaigns: 10.0 * 365.25,
+        }
+    }
+}
+
+/// One placed replica: a tenant's full tile layout on one slice.
+#[derive(Clone, Debug)]
+pub struct ReplicaPlacement {
+    /// Owning tenant id.
+    pub tenant: usize,
+    /// Replica index within the tenant.
+    pub replica: usize,
+    /// Slice hosting this replica.
+    pub slice: usize,
+    /// First linear slot of the placement on that slice.
+    pub start_slot: usize,
+    /// The tile layout (slots are slice-local).
+    pub layout: NetworkLayout,
+}
+
+impl ReplicaPlacement {
+    /// Banks this replica's tiles occupy (sorted, deduplicated).
+    pub fn banks(&self) -> Vec<usize> {
+        let mut banks: Vec<usize> = self
+            .layout
+            .placements
+            .iter()
+            .flat_map(|p| [p.pos_slot.0, p.neg_slot.0])
+            .collect();
+        banks.sort_unstable();
+        banks.dedup();
+        banks
+    }
+}
+
+/// The fleet-wide placement produced by [`EndurancePlacer::place`].
+#[derive(Clone, Debug)]
+pub struct FleetPlacement {
+    /// Every placed replica.
+    pub replicas: Vec<ReplicaPlacement>,
+    /// Per-slice bank wear (updated by campaigns as they run).
+    pub wear: Vec<BankWear>,
+    /// Slots consumed per slice.
+    pub slots_used: Vec<usize>,
+}
+
+impl FleetPlacement {
+    /// Number of distinct slices hosting at least one replica.
+    pub fn slices_used(&self) -> usize {
+        self.slots_used.iter().filter(|&&s| s > 0).count()
+    }
+
+    /// The placements belonging to one tenant.
+    pub fn tenant_replicas(&self, tenant: usize) -> Vec<&ReplicaPlacement> {
+        self.replicas.iter().filter(|r| r.tenant == tenant).collect()
+    }
+}
+
+/// The endurance-aware placer.
+pub struct EndurancePlacer {
+    /// Slice geometry (identical across the fleet).
+    pub geom: Geometry,
+    /// Slices available.
+    pub n_slices: usize,
+    /// Endurance policy.
+    pub policy: EndurancePolicy,
+}
+
+impl EndurancePlacer {
+    /// Placer over `n_slices` identical slices.
+    pub fn new(geom: Geometry, n_slices: usize) -> EndurancePlacer {
+        EndurancePlacer { geom, n_slices, policy: EndurancePolicy::default() }
+    }
+
+    /// Place every tenant's replicas across a fresh (unworn) fleet.
+    pub fn place(&self, registry: &ModelRegistry) -> Result<FleetPlacement> {
+        let fresh =
+            (0..self.n_slices).map(|_| BankWear::new(self.geom.banks_per_slice)).collect();
+        self.place_with_wear(registry, fresh)
+    }
+
+    /// Place every tenant's replicas across the fleet, starting from the
+    /// given per-slice wear state (e.g. carried over from a previous
+    /// deployment generation).
+    ///
+    /// Slice choice per replica: among *feasible* slices — enough free
+    /// slots AND endurance headroom on every bank the placement would
+    /// touch — prefer (1) slices not already hosting this tenant (fault
+    /// isolation), (2) least-worn (wear-leveling), (3) least-occupied,
+    /// (4) lowest index — a total order, so placement is deterministic.
+    /// Refuses with [`Error::Config`] only when no slice is feasible
+    /// (insufficient capacity, or the planned campaigns would exceed a
+    /// touched bank's endurance budget everywhere).
+    pub fn place_with_wear(
+        &self,
+        registry: &ModelRegistry,
+        mut wear: Vec<BankWear>,
+    ) -> Result<FleetPlacement> {
+        assert_eq!(wear.len(), self.n_slices, "one wear state per slice");
+        let capacity = self.geom.banks_per_slice * self.geom.subarrays_per_bank;
+        let mut slots_used = vec![0usize; self.n_slices];
+        // Campaigns already committed to each bank by replicas placed in
+        // this round: a bank straddling two replicas (contiguous packing
+        // splits banks at slot boundaries) must have headroom for *both*
+        // replicas' campaign schedules, not each in isolation.
+        let mut committed = vec![vec![0.0f64; self.geom.banks_per_slice]; self.n_slices];
+        let mut replicas: Vec<ReplicaPlacement> = Vec::new();
+        for tenant in &registry.tenants {
+            let layers = tenant.layers();
+            let need = NetworkLayout::place(&layers, self.geom.banks_per_slice, self.geom.subarrays_per_bank)
+                .map(|l| l.slots_used)
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "tenant {} ({}) does not fit a single slice",
+                        tenant.id, tenant.name
+                    ))
+                })?;
+            for replica in 0..tenant.replicas {
+                let hosted: Vec<usize> = replicas
+                    .iter()
+                    .filter(|r| r.tenant == tenant.id)
+                    .map(|r| r.slice)
+                    .collect();
+                // Feasibility of one candidate slice: room for `need`
+                // contiguous slots AND endurance headroom on every bank
+                // the placement would touch — the planned campaign
+                // schedule plus this replica's own initial programming
+                // cycle, on top of the bank's wear and whatever co-placed
+                // replicas already committed to a shared bank.
+                // (Placement is contiguous, so the touched banks are
+                // exactly the slot range start..start+need.)
+                let spb = self.geom.subarrays_per_bank;
+                let demand = self.policy.planned_campaigns + 1.0;
+                let feasible = |s: usize| -> bool {
+                    let start = slots_used[s];
+                    if start + need > capacity {
+                        return false;
+                    }
+                    let first_bank = start / spb;
+                    let last_bank = (start + need - 1) / spb;
+                    (first_bank..=last_bank).all(|bank| {
+                        self.policy
+                            .model
+                            .remaining_campaigns(wear[s].cycles[bank], self.policy.min_window)
+                            >= committed[s][bank] + demand
+                    })
+                };
+                let slice = (0..self.n_slices)
+                    .filter(|&s| feasible(s))
+                    .min_by(|&a, &b| {
+                        let key = |s: usize| {
+                            (
+                                hosted.contains(&s) as usize,
+                                // f64 wear is a sum of 1.0s — total_cmp safe.
+                                wear[s].max_cycles(),
+                                slots_used[s],
+                                s,
+                            )
+                        };
+                        let (ha, wa, ua, ia) = key(a);
+                        let (hb, wb, ub, ib) = key(b);
+                        ha.cmp(&hb)
+                            .then(wa.total_cmp(&wb))
+                            .then(ua.cmp(&ub))
+                            .then(ia.cmp(&ib))
+                    })
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "no slice can host tenant {} replica {replica}: needs {need} free \
+                             slots with endurance headroom for {:.0} more campaigns per bank \
+                             (campaigns already committed to shared banks count against the \
+                             budget; {} slices, {capacity} slots each)",
+                            tenant.id, self.policy.planned_campaigns, self.n_slices
+                        ))
+                    })?;
+                let layout = NetworkLayout::place_from(
+                    &layers,
+                    self.geom.banks_per_slice,
+                    self.geom.subarrays_per_bank,
+                    slots_used[slice],
+                )
+                .ok_or_else(|| Error::Config("placement overflow despite capacity check".into()))?;
+                let placement = ReplicaPlacement {
+                    tenant: tenant.id,
+                    replica,
+                    slice,
+                    start_slot: slots_used[slice],
+                    layout,
+                };
+                for bank in placement.banks() {
+                    committed[slice][bank] += demand;
+                }
+                slots_used[slice] += placement.layout.slots_used;
+                replicas.push(placement);
+            }
+        }
+        // Wear counters start at the initial programming: one campaign per
+        // touched bank per replica.
+        for r in &replicas {
+            for bank in r.banks() {
+                wear[r.slice].record_program(bank);
+            }
+        }
+        Ok(FleetPlacement { replicas, wear, slots_used })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::registry::ModelRegistry;
+
+    fn placer(n_slices: usize) -> EndurancePlacer {
+        EndurancePlacer::new(Geometry::default(), n_slices)
+    }
+
+    #[test]
+    fn places_synthetic_fleet_across_slices() {
+        let reg = ModelRegistry::synthetic(3);
+        let p = placer(4).place(&reg).unwrap();
+        assert_eq!(p.replicas.len(), 6, "3 tenants × 2 replicas");
+        assert!(p.slices_used() >= 4, "slices used: {}", p.slices_used());
+        for t in 0..3 {
+            assert_eq!(p.tenant_replicas(t).len(), 2);
+        }
+    }
+
+    #[test]
+    fn same_tenant_replicas_prefer_distinct_slices() {
+        let reg = ModelRegistry::synthetic(3);
+        let p = placer(4).place(&reg).unwrap();
+        for t in 0..3 {
+            let slices: Vec<usize> = p.tenant_replicas(t).iter().map(|r| r.slice).collect();
+            assert_ne!(slices[0], slices[1], "tenant {t} replicas co-located: {slices:?}");
+        }
+    }
+
+    #[test]
+    fn no_slot_overlap_within_a_slice() {
+        let reg = ModelRegistry::synthetic(4);
+        let p = placer(5).place(&reg).unwrap();
+        for s in 0..5 {
+            let mut seen = std::collections::HashSet::new();
+            for r in p.replicas.iter().filter(|r| r.slice == s) {
+                for tp in &r.layout.placements {
+                    assert!(seen.insert(tp.pos_slot), "slice {s} double-books {:?}", tp.pos_slot);
+                    assert!(seen.insert(tp.neg_slot), "slice {s} double-books {:?}", tp.neg_slot);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let reg = ModelRegistry::synthetic(3);
+        let a = placer(4).place(&reg).unwrap();
+        let b = placer(4).place(&reg).unwrap();
+        let key = |p: &FleetPlacement| -> Vec<(usize, usize, usize, usize)> {
+            p.replicas.iter().map(|r| (r.tenant, r.replica, r.slice, r.start_slot)).collect()
+        };
+        assert_eq!(key(&a), key(&b));
+    }
+
+    #[test]
+    fn refuses_when_capacity_insufficient() {
+        let reg = ModelRegistry::synthetic(3);
+        assert!(placer(2).place(&reg).is_err(), "6 replicas cannot fit 2 slices");
+    }
+
+    #[test]
+    fn refuses_when_endurance_budget_exceeded() {
+        let reg = ModelRegistry::synthetic(3);
+        let mut pl = placer(4);
+        // Demand more campaigns than a fresh bank can ever absorb.
+        pl.policy.planned_campaigns = pl.policy.model.max_campaigns(pl.policy.min_window) + 1.0;
+        let err = pl.place(&reg).unwrap_err();
+        assert!(err.to_string().contains("endurance"), "{err}");
+    }
+
+    #[test]
+    fn shared_bank_commitments_accumulate() {
+        // Two co-placed replicas must not each claim the full headroom of
+        // a bank they share. With 8 sub-arrays per bank, the 92-slot
+        // compact CNN ends mid-bank (92 % 8 = 4), so replica 1 starts in
+        // replica 0's last bank. Give each replica headroom for only ~1.5×
+        // the planned schedule: alone either fits, together the shared
+        // bank must be refused.
+        let mut reg = ModelRegistry::synthetic(2);
+        reg.tenants.remove(0); // keep only the compact CNN tenant
+        reg.tenants[0].id = 0;
+        reg.tenants[0].replicas = 2;
+        let geom = Geometry { banks_per_slice: 40, subarrays_per_bank: 8, ..Geometry::default() };
+        let mut pl = EndurancePlacer::new(geom, 1); // one slice forces co-placement
+        assert!(pl.place(&reg).is_ok(), "fits under the default campaign budget");
+        let max = pl.policy.model.max_campaigns(pl.policy.min_window);
+        pl.policy.planned_campaigns = max / 1.5;
+        let err = pl.place(&reg).unwrap_err();
+        assert!(err.to_string().contains("committed"), "{err}");
+    }
+
+    #[test]
+    fn wear_leveling_avoids_worn_slices() {
+        // Only the compact tenants (no slice-filling ResNet) so every slice
+        // is a candidate; pre-wear slice 0 heavily.
+        let mut reg = ModelRegistry::synthetic(4);
+        reg.tenants.remove(0);
+        for (i, t) in reg.tenants.iter_mut().enumerate() {
+            t.id = i;
+            t.replicas = 1;
+        }
+        let pl = placer(4);
+        let mut prior: Vec<BankWear> =
+            (0..4).map(|_| BankWear::new(pl.geom.banks_per_slice)).collect();
+        for c in prior[0].cycles.iter_mut() {
+            *c = 1e3;
+        }
+        let p = pl.place_with_wear(&reg, prior).unwrap();
+        assert!(
+            p.replicas.iter().all(|r| r.slice != 0),
+            "worn slice 0 must be avoided while fresh slices have room: {:?}",
+            p.replicas.iter().map(|r| r.slice).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn falls_back_to_feasible_slice_instead_of_failing() {
+        // Slice 0 looks best by the preference key (lower max wear) but
+        // has no endurance headroom anywhere; slice 1 carries one heavily
+        // worn bank outside the placement range and fresh banks in it.
+        // The placer must skip slice 0, not refuse the fleet.
+        let mut reg = ModelRegistry::synthetic(2);
+        reg.tenants.remove(0); // keep only the compact CNN tenant
+        reg.tenants[0].id = 0;
+        reg.tenants[0].replicas = 1;
+        let pl = placer(2);
+        let max = pl.policy.model.max_campaigns(pl.policy.min_window);
+        let mut prior: Vec<BankWear> =
+            (0..2).map(|_| BankWear::new(pl.geom.banks_per_slice)).collect();
+        for c in prior[0].cycles.iter_mut() {
+            *c = max - 1.0;
+        }
+        prior[1].cycles[79] = max + 1.0;
+        let p = pl.place_with_wear(&reg, prior).unwrap();
+        assert_eq!(p.replicas[0].slice, 1, "infeasible slice 0 skipped, not fatal");
+    }
+
+    #[test]
+    fn initial_programming_recorded_as_wear() {
+        let reg = ModelRegistry::synthetic(3);
+        let p = placer(4).place(&reg).unwrap();
+        assert!(p.wear.iter().any(|w| w.max_cycles() >= 1.0));
+        for w in &p.wear {
+            assert!(w.within(&EndurancePolicy::default()));
+        }
+    }
+}

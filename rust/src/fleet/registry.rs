@@ -1,0 +1,191 @@
+//! Model registry: the tenants a fleet serves.
+//!
+//! A *tenant* is a model plus its traffic contract — topology/width (which
+//! fixes the sub-array footprint via [`crate::mapping::layout`]), the
+//! [`crate::runtime::ModelVariant`] it executes as, how many replicas it
+//! wants, the offered load, and a QoS deadline the admission controller
+//! and the fleet report enforce.
+
+use crate::coordinator::BankScheduler;
+use crate::mapping::conv_mapper::ConvShape;
+use crate::runtime::ModelVariant;
+
+/// Quality-of-service contract for one tenant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QosSpec {
+    /// Deadline on simulated end-to-end latency (s).
+    pub deadline_s: f64,
+    /// Maximum tolerated fraction of served requests past the deadline.
+    pub max_violation_frac: f64,
+}
+
+impl Default for QosSpec {
+    fn default() -> Self {
+        QosSpec { deadline_s: 0.05, max_violation_frac: 0.01 }
+    }
+}
+
+/// Model topology family a tenant deploys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelFamily {
+    /// The full ResNet-18 topology (≈314 sub-array slots at width ≤ 16 —
+    /// essentially a whole slice).
+    Resnet18,
+    /// A compact 6-layer CNN (≈92 slots) so several tenants can share one
+    /// slice — the packing case the wear-leveling placer exists for.
+    Cnn6,
+}
+
+/// One tenant: a model plus its traffic contract.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Tenant id (index in the registry).
+    pub id: usize,
+    /// Human-readable name for reports.
+    pub name: String,
+    /// Topology family.
+    pub family: ModelFamily,
+    /// Trunk width (channel-count knob; keep ≤ 16 so channels stay within
+    /// one 128-row tile).
+    pub width: usize,
+    /// Which runtime variant the tenant's replicas execute.
+    pub variant: ModelVariant,
+    /// Replicas requested.
+    pub replicas: usize,
+    /// Offered load per replica as a fraction of one replica's service
+    /// capacity (the simulator converts this into an arrival rate once the
+    /// model's service time is known).
+    pub utilization: f64,
+    /// QoS contract.
+    pub qos: QosSpec,
+}
+
+impl TenantSpec {
+    /// The tenant's layer stack, in execution order.
+    pub fn layers(&self) -> Vec<ConvShape> {
+        match self.family {
+            ModelFamily::Resnet18 => BankScheduler::resnet18_layers(self.width),
+            ModelFamily::Cnn6 => {
+                let w = self.width;
+                vec![
+                    ConvShape { k: 3, d: 3, n: w, w: 16, stride: 1 },
+                    ConvShape { k: 3, d: w, n: w, w: 16, stride: 2 },
+                    ConvShape { k: 3, d: w, n: 2 * w, w: 8, stride: 1 },
+                    ConvShape { k: 3, d: 2 * w, n: 2 * w, w: 8, stride: 2 },
+                    ConvShape { k: 3, d: 2 * w, n: 4 * w, w: 4, stride: 1 },
+                    ConvShape { k: 1, d: 4 * w, n: 10, w: 1, stride: 1 }, // FC
+                ]
+            }
+        }
+    }
+}
+
+/// The registry of tenants in the fleet.
+#[derive(Clone, Debug, Default)]
+pub struct ModelRegistry {
+    /// Registered tenants, indexed by [`TenantSpec::id`].
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl ModelRegistry {
+    /// Empty registry.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { tenants: Vec::new() }
+    }
+
+    /// Register a tenant; its id is assigned and returned.
+    pub fn register(&mut self, mut tenant: TenantSpec) -> usize {
+        let id = self.tenants.len();
+        tenant.id = id;
+        self.tenants.push(tenant);
+        id
+    }
+
+    /// A synthetic multi-tenant fleet with distinct sizes, variants, and
+    /// QoS contracts: tenant 0 is a slice-filling ResNet-18, the rest are
+    /// compact CNNs of varying width that pack several-per-slice.
+    pub fn synthetic(n: usize) -> ModelRegistry {
+        let mut reg = ModelRegistry::new();
+        let variants = [ModelVariant::Pim, ModelVariant::PimNoise, ModelVariant::Baseline];
+        for i in 0..n {
+            let (family, width, name) = if i == 0 {
+                (ModelFamily::Resnet18, 16, "resnet18-w16".to_string())
+            } else {
+                let w = [8usize, 12, 16][(i - 1) % 3];
+                (ModelFamily::Cnn6, w, format!("cnn6-w{w}"))
+            };
+            reg.register(TenantSpec {
+                id: 0, // assigned by register()
+                name,
+                family,
+                width,
+                variant: variants[i % variants.len()],
+                replicas: 2,
+                utilization: 0.4 + 0.1 * (i % 3) as f64,
+                qos: QosSpec {
+                    deadline_s: if i == 0 { 0.05 } else { 0.02 },
+                    max_violation_frac: 0.01,
+                },
+            });
+        }
+        reg
+    }
+
+    /// Number of tenants.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Is the registry empty?
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_tenants_are_distinct() {
+        let reg = ModelRegistry::synthetic(3);
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.tenants[0].family, ModelFamily::Resnet18);
+        assert_eq!(reg.tenants[1].family, ModelFamily::Cnn6);
+        assert_ne!(reg.tenants[1].width, reg.tenants[2].width);
+        assert_ne!(reg.tenants[0].variant, reg.tenants[1].variant);
+        for (i, t) in reg.tenants.iter().enumerate() {
+            assert_eq!(t.id, i);
+            assert!(t.replicas >= 2);
+            assert!(t.utilization < 0.75, "offered load must leave headroom");
+        }
+    }
+
+    #[test]
+    fn cnn6_is_much_smaller_than_resnet18() {
+        use crate::mapping::layout::NetworkLayout;
+        let reg = ModelRegistry::synthetic(2);
+        let big = NetworkLayout::place(&reg.tenants[0].layers(), 80, 4).unwrap();
+        let small = NetworkLayout::place(&reg.tenants[1].layers(), 80, 4).unwrap();
+        assert!(small.slots_used * 3 <= big.slots_used, "{} vs {}", small.slots_used, big.slots_used);
+        assert!(small.slots_used * 3 <= 320, "three compact tenants must share a slice");
+    }
+
+    #[test]
+    fn register_assigns_sequential_ids() {
+        let mut reg = ModelRegistry::new();
+        let t = TenantSpec {
+            id: 99,
+            name: "x".into(),
+            family: ModelFamily::Cnn6,
+            width: 8,
+            variant: ModelVariant::Pim,
+            replicas: 1,
+            utilization: 0.5,
+            qos: QosSpec::default(),
+        };
+        assert_eq!(reg.register(t.clone()), 0);
+        assert_eq!(reg.register(t), 1);
+        assert_eq!(reg.tenants[1].id, 1);
+    }
+}

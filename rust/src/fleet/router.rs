@@ -1,0 +1,240 @@
+//! Fleet router + admission controller: [`crate::coordinator::Router`]
+//! generalized to (tenant, replica) pairs with per-tenant QoS deadlines.
+//!
+//! The fleet router runs against the *simulated* clock: assigning a
+//! request computes its start/completion against the chosen replica's
+//! queue, so the whole multi-tenant simulation is deterministic. The
+//! admission controller rejects requests whose projected completion
+//! cannot meet the tenant's deadline — shedding load early instead of
+//! blowing the tail.
+
+/// Serving availability of one replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Accepting traffic.
+    Serving,
+    /// Finishing in-flight work ahead of a programming campaign.
+    Draining,
+    /// Weights being reprogrammed (destructive; cannot serve).
+    Programming,
+}
+
+/// Load state of one fleet replica on the *simulated* clock — the
+/// counterpart of [`crate::coordinator::router::ReplicaState`], which
+/// tracks in-flight batches on the wall clock. Here the queue is fully
+/// described by `busy_until`, so there is no inflight counter to keep
+/// honest.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetReplicaState {
+    /// Requests served (assigned) so far.
+    pub served: u64,
+    /// Simulated time until which the replica's queue is committed.
+    pub busy_until: f64,
+}
+
+/// One (tenant, replica) serving endpoint.
+#[derive(Clone, Debug)]
+pub struct FleetReplica {
+    /// Load state on the simulated clock.
+    pub state: FleetReplicaState,
+    /// Availability.
+    pub health: ReplicaHealth,
+}
+
+impl FleetReplica {
+    fn idle() -> FleetReplica {
+        FleetReplica { state: FleetReplicaState::default(), health: ReplicaHealth::Serving }
+    }
+}
+
+/// Router over every tenant's replica set.
+pub struct FleetRouter {
+    /// Replica states, indexed `[tenant][replica]`.
+    pub tenants: Vec<Vec<FleetReplica>>,
+}
+
+impl FleetRouter {
+    /// Router with `replicas_per_tenant[t]` idle replicas for tenant `t`.
+    pub fn new(replicas_per_tenant: &[usize]) -> FleetRouter {
+        assert!(!replicas_per_tenant.is_empty());
+        FleetRouter {
+            tenants: replicas_per_tenant
+                .iter()
+                .map(|&n| {
+                    assert!(n > 0);
+                    (0..n).map(|_| FleetReplica::idle()).collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Earliest time a `tenant` request arriving at `now` could start
+    /// (None when no replica is serving).
+    pub fn earliest_start(&self, tenant: usize, now: f64) -> Option<f64> {
+        self.tenants[tenant]
+            .iter()
+            .filter(|r| r.health == ReplicaHealth::Serving)
+            .map(|r| r.state.busy_until.max(now))
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Assign one request arriving at `now` needing `service_s` of replica
+    /// time: picks the serving replica with the earliest availability
+    /// (ties by index — deterministic), queues the request behind it, and
+    /// returns `(replica, start, completion)`. `None` when every replica
+    /// is draining/programming.
+    pub fn assign(
+        &mut self,
+        tenant: usize,
+        now: f64,
+        service_s: f64,
+    ) -> Option<(usize, f64, f64)> {
+        let replicas = &mut self.tenants[tenant];
+        let idx = (0..replicas.len())
+            .filter(|&i| replicas[i].health == ReplicaHealth::Serving)
+            .min_by(|&a, &b| {
+                replicas[a]
+                    .state
+                    .busy_until
+                    .total_cmp(&replicas[b].state.busy_until)
+                    .then(a.cmp(&b))
+            })?;
+        let r = &mut replicas[idx];
+        let start = r.state.busy_until.max(now);
+        let completion = start + service_s;
+        r.state.busy_until = completion;
+        r.state.served += 1;
+        Some((idx, start, completion))
+    }
+
+    /// Change a replica's availability.
+    pub fn set_health(&mut self, tenant: usize, replica: usize, health: ReplicaHealth) {
+        self.tenants[tenant][replica].health = health;
+    }
+
+    /// Replicas of `tenant` currently accepting traffic.
+    pub fn serving_count(&self, tenant: usize) -> usize {
+        self.tenants[tenant]
+            .iter()
+            .filter(|r| r.health == ReplicaHealth::Serving)
+            .count()
+    }
+
+    /// Requests served for one tenant.
+    pub fn tenant_served(&self, tenant: usize) -> u64 {
+        self.tenants[tenant].iter().map(|r| r.state.served).sum()
+    }
+
+    /// Requests served fleet-wide.
+    pub fn total_served(&self) -> u64 {
+        (0..self.tenants.len()).map(|t| self.tenant_served(t)).sum()
+    }
+}
+
+/// Deadline-aware admission controller, one entry per tenant.
+pub struct AdmissionController {
+    /// Estimated service time per tenant request (s).
+    pub est_service_s: Vec<f64>,
+    /// Per-tenant deadline (s).
+    pub deadline_s: Vec<f64>,
+    /// Requests rejected per tenant.
+    pub rejected: Vec<u64>,
+}
+
+impl AdmissionController {
+    /// Controller from per-tenant service estimates and deadlines.
+    pub fn new(est_service_s: Vec<f64>, deadline_s: Vec<f64>) -> AdmissionController {
+        assert_eq!(est_service_s.len(), deadline_s.len());
+        let n = est_service_s.len();
+        AdmissionController { est_service_s, deadline_s, rejected: vec![0; n] }
+    }
+
+    /// Admit a `tenant` request arriving at `now` iff its projected
+    /// completion (earliest replica availability + estimated service) can
+    /// meet the deadline. Rejections are counted.
+    pub fn admit(&mut self, router: &FleetRouter, tenant: usize, now: f64) -> bool {
+        let ok = match router.earliest_start(tenant, now) {
+            Some(start) => start - now + self.est_service_s[tenant] <= self.deadline_s[tenant],
+            None => false,
+        };
+        if !ok {
+            self.rejected[tenant] += 1;
+        }
+        ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_balances_identical_replicas() {
+        let mut r = FleetRouter::new(&[3]);
+        let a = r.assign(0, 0.0, 1.0).unwrap().0;
+        let b = r.assign(0, 0.0, 1.0).unwrap().0;
+        let c = r.assign(0, 0.0, 1.0).unwrap().0;
+        let mut seen = vec![a, b, c];
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn assign_queues_behind_busy_replica() {
+        let mut r = FleetRouter::new(&[1]);
+        let (_, s1, c1) = r.assign(0, 0.0, 2.0).unwrap();
+        assert_eq!((s1, c1), (0.0, 2.0));
+        let (_, s2, c2) = r.assign(0, 1.0, 2.0).unwrap();
+        assert_eq!((s2, c2), (2.0, 4.0), "second request waits for the first");
+        // A late arrival after the queue empties starts immediately.
+        let (_, s3, _) = r.assign(0, 10.0, 2.0).unwrap();
+        assert_eq!(s3, 10.0);
+    }
+
+    #[test]
+    fn draining_replicas_are_skipped() {
+        let mut r = FleetRouter::new(&[2]);
+        r.set_health(0, 0, ReplicaHealth::Draining);
+        for _ in 0..5 {
+            assert_eq!(r.assign(0, 0.0, 1.0).unwrap().0, 1);
+        }
+        r.set_health(0, 1, ReplicaHealth::Programming);
+        assert!(r.assign(0, 0.0, 1.0).is_none(), "no serving replica left");
+        assert_eq!(r.serving_count(0), 0);
+    }
+
+    #[test]
+    fn tenants_are_independent() {
+        let mut r = FleetRouter::new(&[1, 2]);
+        let _ = r.assign(0, 0.0, 5.0);
+        // Tenant 1's replicas are untouched by tenant 0's load.
+        let (_, start, _) = r.assign(1, 0.0, 1.0).unwrap();
+        assert_eq!(start, 0.0);
+        assert_eq!(r.tenant_served(0), 1);
+        assert_eq!(r.tenant_served(1), 1);
+        assert_eq!(r.total_served(), 2);
+    }
+
+    #[test]
+    fn admission_rejects_past_deadline() {
+        let mut r = FleetRouter::new(&[1]);
+        let mut ac = AdmissionController::new(vec![1.0], vec![2.5]);
+        // Empty queue: 0 wait + 1.0 service ≤ 2.5 ⇒ admit.
+        assert!(ac.admit(&r, 0, 0.0));
+        let _ = r.assign(0, 0.0, 1.0);
+        let _ = r.assign(0, 0.0, 1.0);
+        // Queue delay 2.0 + 1.0 service > 2.5 ⇒ reject.
+        assert!(!ac.admit(&r, 0, 0.0));
+        assert_eq!(ac.rejected[0], 1);
+        // Later, the queue has drained enough.
+        assert!(ac.admit(&r, 0, 1.0));
+    }
+
+    #[test]
+    fn admission_rejects_when_all_replicas_down() {
+        let mut r = FleetRouter::new(&[1]);
+        r.set_health(0, 0, ReplicaHealth::Programming);
+        let mut ac = AdmissionController::new(vec![0.1], vec![10.0]);
+        assert!(!ac.admit(&r, 0, 0.0));
+    }
+}

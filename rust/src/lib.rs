@@ -38,12 +38,16 @@
 //!   xla-crate PJRT client can be re-attached.
 //! * [`coordinator`] — the serving layer: request router, dynamic batcher,
 //!   bank scheduler, metrics. std::thread + mpsc (offline build, no tokio).
+//! * [`fleet`] — the multi-tenant serving fabric above the coordinator:
+//!   model registry, endurance-aware wear-leveling placer, campaign
+//!   scheduler (drain → program → rewarm), fleet router + admission
+//!   control, and the deterministic `repro fleet-sim` simulator.
 //! * [`perf`] — the analytic throughput/energy/area model that reproduces
 //!   Table I and the Fig. 14 scaling study.
 //! * [`figures`] — one generator per paper table/figure.
 //!
 //! See README.md for the quickstart, ARCHITECTURE.md for the layer-by-layer
-//! data flow, and EXPERIMENTS.md for the experiment ids (E1–E11, §Perf,
+//! data flow, and EXPERIMENTS.md for the experiment ids (E1–E12, §Perf,
 //! A1–A3) cited throughout the code.
 
 #![warn(missing_docs)]
@@ -58,6 +62,7 @@ pub mod mapping;
 pub mod nn;
 pub mod runtime;
 pub mod coordinator;
+pub mod fleet;
 pub mod perf;
 pub mod figures;
 

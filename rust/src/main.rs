@@ -1,14 +1,23 @@
 //! `repro` — the NVM-in-Cache reproduction CLI (L3 leader entrypoint).
 //!
 //! Subcommands:
-//!   figures  --all | --fig {9a,9b,10,11,12,13,14,scalars} [--out DIR] [--mc N]
-//!   table1   [--artifacts DIR] [--out DIR]
-//!   table2   [--artifacts DIR] [--out DIR]           (manifest accuracies)
-//!   e2e      [--artifacts DIR] [--variant V] [--limit N]
-//!            re-measures Table II through the runtime backend on dataset.bin
-//!   serve    [--artifacts DIR] [--requests N] [--batch B] [--native]
-//!            demo serving run with the dynamic batcher + bank scheduler
-//!   info     print headline perf model numbers
+//!   figures   --all | --fig {9a,9b,10,11,12,13,14,scalars} [--out DIR] [--mc N]
+//!   table1    [--artifacts DIR] [--out DIR]
+//!   table2    [--artifacts DIR] [--out DIR]           (manifest accuracies)
+//!   e2e       [--artifacts DIR] [--variant V] [--limit N]
+//!             re-measures Table II through the runtime backend on dataset.bin
+//!   serve     [--artifacts DIR] [--requests N] [--batch B] [--native]
+//!             demo serving run with the dynamic batcher + bank scheduler
+//!   fleet-sim [--slices N] [--tenants N] [--requests N] [--seed S]
+//!             [--campaign-at FRAC] [--live] [--out DIR]
+//!             multi-tenant fleet simulation: placement, campaigns, QoS, wear
+//!             (writes DIR/fleet_sim.json; campaigns fire at FRAC of each
+//!             tenant's traffic horizon)
+//!   bench     [--quick] [--json [FILE]]
+//!             hot-path micro-benchmarks (+ fleet-sim summary); --json writes
+//!             the machine-readable perf-trajectory record (BENCH_PR3.json,
+//!             or FILE when given)
+//!   info      print headline perf model numbers
 
 use std::path::PathBuf;
 
@@ -33,10 +42,13 @@ fn main() {
         Some("e2e") => cmd_e2e(&args),
         Some("serve") => cmd_serve(&args),
         Some("cache-sim") => cmd_cache_sim(&args),
+        Some("fleet-sim") => cmd_fleet_sim(&args),
+        Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: repro <figures|table1|table2|e2e|serve|cache-sim|info> [options]\n\
+                "usage: repro <figures|table1|table2|e2e|serve|cache-sim|fleet-sim|bench|info> \
+                 [options]\n\
                  see rust/src/main.rs header for options"
             );
             std::process::exit(2);
@@ -59,7 +71,7 @@ fn artifacts(args: &Args) -> nvm_in_cache::Result<ArtifactDir> {
 fn cmd_figures(args: &Args) -> nvm_in_cache::Result<()> {
     let out = out_dir(args);
     std::fs::create_dir_all(&out)?;
-    let mc = args.get_usize("mc", 200);
+    let mc = args.get_usize("mc", 200)?;
     if args.flag("all") || args.get("fig").is_none() {
         figures::generate_all(&out, mc)?;
         return Ok(());
@@ -112,7 +124,7 @@ fn cmd_e2e(args: &Args) -> nvm_in_cache::Result<()> {
     let dir = artifacts(args)?;
     let ds = Dataset::load(&dir.path("dataset.bin")?)?;
     let batch = dir.eval_batch();
-    let limit = args.get_usize("limit", ds.n).min(ds.n);
+    let limit = args.get_usize("limit", ds.n)?.min(ds.n);
     let mut rt = default_runtime(batch)?;
     println!("platform: {}", rt.platform());
     let variants: Vec<ModelVariant> = match args.get("variant") {
@@ -162,7 +174,7 @@ fn cmd_e2e(args: &Args) -> nvm_in_cache::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
-    let n_requests = args.get_usize("requests", 500);
+    let n_requests = args.get_usize("requests", 500)?;
     let scheduler = BankScheduler::new(
         BankScheduler::resnet18_layers(16),
         Geometry::default(),
@@ -174,10 +186,10 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
     let dims = (ds.h, ds.w, ds.c);
     let native = args.flag("native");
     let eval_batch = dir.eval_batch();
-    let max_batch = args.get_usize("batch", eval_batch).min(eval_batch);
+    let max_batch = args.get_usize("batch", eval_batch)?.min(eval_batch);
     let batch_cfg = BatcherConfig {
         max_batch,
-        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)),
+        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)?),
     };
     let weights = dir.path("weights_ft.bin")?;
     let dir2 = ArtifactDir::open(dir.root.clone())?;
@@ -230,6 +242,98 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
     Ok(())
 }
 
+/// Multi-tenant fleet simulation (EXPERIMENTS.md E12): endurance-aware
+/// placement, mixed traffic, mid-run programming campaigns, QoS + wear
+/// report. Fully offline and deterministic for a given seed.
+fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
+    use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
+    let defaults = FleetSimConfig::default();
+    let config = FleetSimConfig {
+        n_slices: args.get_usize("slices", defaults.n_slices)?,
+        tenants: args.get_usize("tenants", defaults.tenants)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        requests_per_tenant: args.get_usize("requests", defaults.requests_per_tenant)?,
+        campaign_at_frac: args.get_f64("campaign-at", defaults.campaign_at_frac)?,
+        live_serving: args.flag("live"),
+    };
+    let report = FleetSim::run(&config)?;
+    print!("{}", report.render());
+    let out = out_dir(args);
+    std::fs::create_dir_all(&out)?;
+    let path = out.join("fleet_sim.json");
+    std::fs::write(&path, report.to_json().to_string())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Hot-path micro-benchmarks + the fleet-sim summary; `--json` additionally
+/// writes the machine-readable perf-trajectory record (BENCH_PR3.json).
+fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
+    use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
+    use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
+    use nvm_in_cache::pim::PimEngine;
+    use nvm_in_cache::util::bench::Bencher;
+    use nvm_in_cache::util::json::Json;
+    use nvm_in_cache::util::rng::Pcg64;
+
+    let mut b = if args.flag("quick") { Bencher::quick() } else { Bencher::default() };
+    let mut rng = Pcg64::seeded(1);
+
+    // Hot path 1: the PIM engine matmul (simulator throughput).
+    let (m, k, n) = (256usize, 256usize, 128usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.range(0.0, 1.0) as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+    let eng = PimEngine::tt();
+    b.bench_with_items(&format!("engine_pim_matmul_{m}x{k}x{n}"), (m * k * n) as f64, || {
+        eng.pim_matmul(&a, m, k, &w, n, None)
+    });
+
+    // Hot path 2: cell-accurate sub-array full 4b MAC.
+    let mut sa = nvm_in_cache::array::SubArray::new(nvm_in_cache::device::Corner::TT);
+    let weights: Vec<u8> =
+        (0..ARRAY_ROWS * ARRAY_WORDS).map(|_| rng.below(16) as u8).collect();
+    sa.load_weights(&weights);
+    let ia: Vec<u8> = (0..ARRAY_ROWS).map(|_| rng.below(16) as u8).collect();
+    b.bench_with_items("subarray_pim_mac_4b", (ARRAY_ROWS * ARRAY_WORDS) as f64, || {
+        sa.pim_mac_4b(&ia, None)
+    });
+
+    // Hot path 3: the scheduler's per-batch cost model.
+    let mut sched = BankScheduler::new(
+        BankScheduler::resnet18_layers(16),
+        Geometry::default(),
+        PimIntegration::Retained,
+    )
+    .expect("network fits the default slice");
+    sched.program_network();
+    b.bench("scheduler_batch_cost_retained", || sched.batch_cost(8));
+
+    // Hot path 4: the whole fleet simulation (small config, shared with
+    // the cargo-bench fleet section). The run is deterministic, so the
+    // last bench iteration's report IS the report — no extra run needed.
+    let fleet_cfg = FleetSimConfig::bench_quick();
+    let mut fleet_report = None;
+    b.bench(&fleet_cfg.bench_label(), || {
+        fleet_report = Some(FleetSim::run(&fleet_cfg).unwrap());
+    });
+    b.report();
+
+    let fleet_report = fleet_report.expect("bench ran at least once");
+    print!("{}", fleet_report.render());
+
+    if args.flag("json") {
+        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR3.json"));
+        let doc = Json::obj(vec![
+            ("pr", Json::Num(3.0)),
+            ("benches", b.to_json()),
+            ("fleet_sim", fleet_report.to_json()),
+        ]);
+        std::fs::write(&path, doc.to_string())?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_info() -> nvm_in_cache::Result<()> {
     let h = MacroModel::default().headline();
     println!("NVM-in-Cache macro model (paper §V-D anchors):");
@@ -255,7 +359,7 @@ fn cmd_cache_sim(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::cache::workload;
     let out = out_dir(args);
     std::fs::create_dir_all(&out)?;
-    let sweep = workload::interference_sweep(args.get_u64("seed", 42));
+    let sweep = workload::interference_sweep(args.get_u64("seed", 42)?);
     let mut csv = nvm_in_cache::util::csv::CsvWriter::new(vec![
         "trace", "mode", "pim_per_1k", "hit_rate", "amat_ns", "lines_moved",
     ]);

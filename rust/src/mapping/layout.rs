@@ -45,9 +45,23 @@ impl NetworkLayout {
         banks: usize,
         subarrays_per_bank: usize,
     ) -> Option<NetworkLayout> {
+        Self::place_from(layers, banks, subarrays_per_bank, 0)
+    }
+
+    /// Like [`NetworkLayout::place`], but allocation starts at linear slot
+    /// `start` (slot = bank·subarrays_per_bank + subarray). Lets several
+    /// networks pack onto one physical slice without overlapping, and lets
+    /// a wear-leveling placer rotate which banks a model lands on.
+    /// `slots_used` counts only the slots this placement consumed.
+    pub fn place_from(
+        layers: &[ConvShape],
+        banks: usize,
+        subarrays_per_bank: usize,
+        start: usize,
+    ) -> Option<NetworkLayout> {
         let capacity = banks * subarrays_per_bank;
         let mut placements = Vec::new();
-        let mut next = 0usize;
+        let mut next = start;
         let alloc = |next: &mut usize| -> Option<(usize, usize)> {
             if *next >= capacity {
                 return None;
@@ -79,8 +93,19 @@ impl NetworkLayout {
             placements,
             banks,
             subarrays_per_bank,
-            slots_used: next,
+            slots_used: next - start,
         })
+    }
+
+    /// First linear slot *after* this placement (where a subsequent
+    /// placement on the same slice may begin). Only meaningful right after
+    /// [`NetworkLayout::place_from`]; `None` for an empty layout.
+    pub fn end_slot(&self) -> Option<usize> {
+        self.placements
+            .iter()
+            .flat_map(|p| [p.pos_slot, p.neg_slot])
+            .map(|(b, s)| b * self.subarrays_per_bank + s + 1)
+            .max()
     }
 
     /// Tiles belonging to one layer.
@@ -144,5 +169,24 @@ mod tests {
     fn occupancy_fraction() {
         let l = NetworkLayout::place(&small_net(), 80, 4).unwrap();
         assert!((l.occupancy() - 38.0 / 320.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offset_placement_disjoint_from_base() {
+        let a = NetworkLayout::place(&small_net(), 80, 4).unwrap();
+        let b = NetworkLayout::place_from(&small_net(), 80, 4, a.end_slot().unwrap()).unwrap();
+        assert_eq!(a.slots_used, b.slots_used);
+        let mut seen = std::collections::HashSet::new();
+        for p in a.placements.iter().chain(b.placements.iter()) {
+            assert!(seen.insert(p.pos_slot));
+            assert!(seen.insert(p.neg_slot));
+        }
+        assert_eq!(b.end_slot().unwrap(), a.slots_used + b.slots_used);
+    }
+
+    #[test]
+    fn offset_placement_respects_capacity() {
+        // 38 slots needed; starting at 320-10 leaves only 10.
+        assert!(NetworkLayout::place_from(&small_net(), 80, 4, 310).is_none());
     }
 }

@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// One benchmark measurement.
@@ -49,6 +50,22 @@ impl BenchResult {
             Some(tp) => format!("{base}  {:.3e} items/s", tp),
             None => base,
         }
+    }
+
+    /// Machine-readable record (for the `BENCH_*.json` perf trajectory).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("n", Json::Num(self.summary.n as f64)),
+            ("mean_s", Json::Num(self.summary.mean)),
+            ("p50_s", Json::Num(self.summary.p50)),
+            ("p95_s", Json::Num(self.summary.p95)),
+            ("min_s", Json::Num(self.summary.min)),
+        ];
+        if let Some(tp) = self.throughput() {
+            pairs.push(("items_per_s", Json::Num(tp)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -140,6 +157,11 @@ impl Bencher {
             println!("{}", r.report_line());
         }
     }
+
+    /// All results as a JSON array (see [`BenchResult::to_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|r| r.to_json()).collect())
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +189,19 @@ mod tests {
         let r = b.bench_with_items("items", 100.0, || 1 + 1);
         assert!(r.throughput().unwrap() > 0.0);
         assert!(r.report_line().contains("items/s"));
+    }
+
+    #[test]
+    fn json_record_roundtrips() {
+        let mut b = Bencher::quick();
+        b.bench_with_items("tiny", 10.0, || 2 + 2);
+        let arr = b.to_json();
+        let s = arr.to_string();
+        let back = Json::parse(&s).unwrap();
+        let rec = &back.as_arr().unwrap()[0];
+        assert_eq!(rec.get("name").unwrap().as_str(), Some("tiny"));
+        assert!(rec.get("mean_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rec.get("items_per_s").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Hand-rolled CLI argument parser (clap is unavailable offline).
 //!
 //! Grammar: `repro <subcommand> [--flag] [--key value]... [positional]...`
+//!
+//! Malformed option values surface as [`Error::Config`] (rendered by
+//! `main` as a clean one-line message), never as a panic.
 
 use std::collections::BTreeMap;
+
+use crate::{Error, Result};
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -70,28 +75,34 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// Integer option with a default (panics with a usage message on a
-    /// non-integer value).
-    pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
-            .unwrap_or(default)
+    /// Integer option with a default; `Error::Config` on a malformed value.
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got `{v}`"))),
+        }
     }
 
-    /// Float option with a default (panics with a usage message on a
-    /// non-numeric value).
-    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")))
-            .unwrap_or(default)
+    /// Float option with a default; `Error::Config` on a malformed value.
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got `{v}`"))),
+        }
     }
 
-    /// u64 option with a default (panics with a usage message on a
-    /// non-integer value).
-    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
-            .unwrap_or(default)
+    /// u64 option with a default; `Error::Config` on a malformed value.
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got `{v}`"))),
+        }
     }
 }
 
@@ -116,8 +127,8 @@ mod tests {
     #[test]
     fn key_equals_value() {
         let a = parse("serve --port=8080 --batch-size=16");
-        assert_eq!(a.get_usize("port", 0), 8080);
-        assert_eq!(a.get_usize("batch-size", 0), 16);
+        assert_eq!(a.get_usize("port", 0).unwrap(), 8080);
+        assert_eq!(a.get_usize("batch-size", 0).unwrap(), 16);
     }
 
     #[test]
@@ -136,14 +147,26 @@ mod tests {
     #[test]
     fn typed_getters_defaults() {
         let a = parse("x");
-        assert_eq!(a.get_usize("n", 7), 7);
-        assert_eq!(a.get_f64("v", 1.5), 1.5);
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("v", 1.5).unwrap(), 1.5);
         assert_eq!(a.get_or("mode", "tt"), "tt");
     }
 
     #[test]
     fn negative_number_as_value() {
         let a = parse("f --offset -3.5");
-        assert_eq!(a.get_f64("offset", 0.0), -3.5);
+        assert_eq!(a.get_f64("offset", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn malformed_values_error_instead_of_panicking() {
+        let a = parse("serve --requests banana --rate 1.2.3 --seed -1");
+        let e = a.get_usize("requests", 5).unwrap_err();
+        assert!(e.to_string().contains("--requests expects an integer"), "{e}");
+        assert!(e.to_string().contains("banana"), "{e}");
+        assert!(a.get_f64("rate", 0.0).is_err());
+        assert!(a.get_u64("seed", 0).is_err(), "negative u64 must be rejected");
+        // Untouched keys still fall back to their defaults.
+        assert_eq!(a.get_usize("other", 9).unwrap(), 9);
     }
 }

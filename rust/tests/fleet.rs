@@ -1,0 +1,128 @@
+//! Fleet-layer integration tests: placement + campaign interleave
+//! determinism and the acceptance criteria of the multi-tenant fleet
+//! study (EXPERIMENTS.md E12).
+
+use nvm_in_cache::fleet::{
+    EndurancePlacer, FleetSim, FleetSimConfig, ModelRegistry,
+};
+
+fn config() -> FleetSimConfig {
+    FleetSimConfig { requests_per_tenant: 200, ..FleetSimConfig::default() }
+}
+
+/// Acceptance: ≥3 tenants placed across ≥4 slices, ≥1 campaign interleaved
+/// with live traffic, per-tenant p50/p99, throughput, wear within budget,
+/// campaign downtime — all present and QoS-feasible.
+#[test]
+fn fleet_sim_end_to_end_acceptance() {
+    let report = FleetSim::run(&config()).unwrap();
+    assert!(report.tenants.len() >= 3, "≥3 tenants");
+    assert!(report.slices_used >= 4, "≥4 slices: {}", report.slices_used);
+    assert!(!report.campaigns.is_empty(), "≥1 programming campaign");
+    assert!(report.downtime_s > 0.0, "campaign downtime reported");
+    assert!(report.throughput_rps > 0.0);
+    for t in &report.tenants {
+        assert!(t.served > 0, "tenant {} served nothing", t.tenant);
+        assert!(t.p50_s > 0.0 && t.p99_s >= t.p50_s, "tenant {} percentiles", t.tenant);
+        assert!(t.p99_s <= t.deadline_s + 1e-9, "admitted traffic meets the deadline");
+    }
+    assert!(report.qos_ok, "QoS-feasible");
+    assert!(report.wear_ok, "bank wear within the endurance budget");
+    // Campaigns interleaved with traffic: reprogrammed banks carry more
+    // wear than the single initial programming cycle.
+    let max_wear = report.wear.iter().map(|w| w.max_cycles()).fold(0.0, f64::max);
+    assert!(max_wear >= 2.0, "reprogramming recorded on top of initial: {max_wear}");
+}
+
+/// The whole run — placement, traffic, campaign interleave, wear — is
+/// bit-deterministic for a fixed seed.
+#[test]
+fn fleet_sim_is_deterministic() {
+    let a = FleetSim::run(&config()).unwrap();
+    let b = FleetSim::run(&config()).unwrap();
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(ta.served, tb.served, "tenant {}", ta.tenant);
+        assert_eq!(ta.rejected, tb.rejected);
+        assert_eq!(ta.violations, tb.violations);
+        assert_eq!(ta.p50_s.to_bits(), tb.p50_s.to_bits(), "p50 must be bit-equal");
+        assert_eq!(ta.p99_s.to_bits(), tb.p99_s.to_bits(), "p99 must be bit-equal");
+        assert_eq!(ta.energy_j.to_bits(), tb.energy_j.to_bits());
+    }
+    assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+    assert_eq!(a.downtime_s.to_bits(), b.downtime_s.to_bits());
+    assert_eq!(a.campaigns.len(), b.campaigns.len());
+    for (ca, cb) in a.campaigns.iter().zip(&b.campaigns) {
+        assert_eq!((ca.tenant, ca.replica, ca.slice), (cb.tenant, cb.replica, cb.slice));
+        assert_eq!(ca.drain_s.to_bits(), cb.drain_s.to_bits());
+        assert_eq!(ca.program_s.to_bits(), cb.program_s.to_bits());
+    }
+    for (wa, wb) in a.wear.iter().zip(&b.wear) {
+        assert_eq!(wa.cycles, wb.cycles);
+    }
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}
+
+/// Different seeds produce different traffic (the determinism above is not
+/// an artifact of ignoring the seed).
+#[test]
+fn fleet_sim_seed_changes_traffic() {
+    let a = FleetSim::run(&config()).unwrap();
+    let b = FleetSim::run(&FleetSimConfig { seed: 43, ..config() }).unwrap();
+    assert_ne!(
+        a.horizon_s.to_bits(),
+        b.horizon_s.to_bits(),
+        "different seeds must give different arrival processes"
+    );
+}
+
+/// Campaigns drain first: a campaign's drain time never exceeds the work
+/// queued on the replica, and downtime = drain + program + rewarm.
+#[test]
+fn campaign_downtime_decomposes() {
+    let report = FleetSim::run(&config()).unwrap();
+    for c in &report.campaigns {
+        assert!(c.drain_s >= 0.0);
+        assert!(c.program_s > 0.0, "programming a placed network takes time");
+        assert!(
+            (c.downtime_s() - (c.drain_s + c.program_s + c.rewarm_s)).abs() < 1e-15
+        );
+    }
+}
+
+/// Placement + campaign interleave is reproducible at the placer level
+/// too: same registry, same wear trajectory ⇒ same slices and offsets.
+#[test]
+fn placement_reproducible_across_runs() {
+    let reg = ModelRegistry::synthetic(3);
+    let placer = EndurancePlacer::new(
+        nvm_in_cache::cache::addr::Geometry::default(),
+        4,
+    );
+    let a = placer.place(&reg).unwrap();
+    let b = placer.place(&reg).unwrap();
+    let key = |p: &nvm_in_cache::fleet::FleetPlacement| -> Vec<(usize, usize, usize, usize)> {
+        p.replicas
+            .iter()
+            .map(|r| (r.tenant, r.replica, r.slice, r.start_slot))
+            .collect()
+    };
+    assert_eq!(key(&a), key(&b));
+    assert_eq!(a.slots_used, b.slots_used);
+}
+
+/// The live serving pass (real coordinator::Server instances) moves every
+/// request through the threaded stack.
+#[test]
+fn fleet_live_pass_serves_through_real_servers() {
+    let cfg = FleetSimConfig {
+        requests_per_tenant: 40,
+        live_serving: true,
+        ..FleetSimConfig::default()
+    };
+    let report = FleetSim::run(&cfg).unwrap();
+    let live = report.live.expect("live summary present");
+    assert_eq!(live.requests, 3 * 40);
+    assert_eq!(live.responses, live.requests, "every live request answered");
+    assert!(live.batches > 0 && live.batches <= live.requests);
+}

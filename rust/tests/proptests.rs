@@ -12,6 +12,7 @@ use nvm_in_cache::cell::{BitCell, PimParams};
 use nvm_in_cache::consts::ARRAY_ROWS;
 use nvm_in_cache::coordinator::batcher::{Batcher, BatcherConfig};
 use nvm_in_cache::coordinator::request::InferenceRequest;
+use nvm_in_cache::coordinator::Router;
 use nvm_in_cache::device::{Corner, Rram, RramState};
 use nvm_in_cache::pim::quant::{quantize_acts, quantize_weights, QuantizedActs};
 use nvm_in_cache::pim::transfer::TransferModel;
@@ -215,6 +216,88 @@ fn prop_batcher_conservation() {
             seen.extend(batch.requests.iter().map(|r| r.id));
         }
         assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+/// Property: the least-loaded router never starves a live replica under
+/// adversarial completion orders. One "stuck" replica never completes its
+/// batches; everyone else completes in an adversarial (randomly permuted)
+/// order each round. The router must (a) stop piling work onto the stuck
+/// replica and (b) keep the live replicas balanced.
+#[test]
+fn prop_router_no_starvation_adversarial_completions() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(11_000 + seed);
+        let n = 2 + rng.below(6);
+        let stuck = rng.below(n);
+        let mut r = Router::new(n);
+        let rounds = 40;
+        let per_round = n - 1; // one batch per live replica per round
+        for _ in 0..rounds {
+            let mut routed: Vec<usize> = (0..per_round).map(|_| r.route()).collect();
+            // Adversarial completion order: random permutation, and the
+            // stuck replica's batches are simply never completed.
+            rng.shuffle(&mut routed);
+            for idx in routed {
+                if idx != stuck {
+                    r.complete(idx, 1e-3 * (1 + rng.below(5)) as f64);
+                }
+            }
+        }
+        // The stuck replica accumulated at most a bounded backlog: after
+        // its first un-completed batch it always looks busier than an idle
+        // live replica, so min-inflight routing avoids it.
+        assert!(
+            r.replicas[stuck].inflight <= 1,
+            "seed {seed}: stuck replica piled up {} batches",
+            r.replicas[stuck].inflight
+        );
+        // Every live replica kept receiving work — no starvation.
+        let served: Vec<u64> =
+            (0..n).filter(|&i| i != stuck).map(|i| r.replicas[i].served).collect();
+        let min = *served.iter().min().unwrap();
+        let max = *served.iter().max().unwrap();
+        assert!(
+            min as usize >= rounds / 2,
+            "seed {seed}: a live replica starved: served {served:?}"
+        );
+        assert!(
+            max - min <= rounds as u64 / 2,
+            "seed {seed}: live replicas unbalanced: {served:?}"
+        );
+    }
+}
+
+/// Property: LRU recency order matches a reference model across mixed
+/// touch/evict sequences (evict = victimize + refill, the fill path's
+/// usage), for every way count.
+#[test]
+fn prop_lru_touch_evict_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(12_000 + seed);
+        let ways = 1 + rng.below(8);
+        let mut l = LruSet::new(ways);
+        // Reference recency order, MRU at the front.
+        let mut model: Vec<usize> = (0..ways).collect();
+        for step in 0..300 {
+            if rng.below(3) == 0 {
+                // Evict: the victim must be the reference LRU; refilling
+                // the way makes it MRU (what LlcSlice::fill does).
+                let v = l.victim();
+                assert_eq!(v, *model.last().unwrap(), "seed {seed} step {step}");
+                l.touch(v);
+                let x = model.pop().unwrap();
+                model.insert(0, x);
+            } else {
+                let w = rng.below(ways);
+                l.touch(w);
+                let pos = model.iter().position(|&m| m == w).unwrap();
+                let x = model.remove(pos);
+                model.insert(0, x);
+            }
+            assert_eq!(l.mru(), model[0], "seed {seed} step {step}");
+            assert_eq!(l.victim(), *model.last().unwrap(), "seed {seed} step {step}");
+        }
     }
 }
 

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Machine-readable perf-trajectory record for this PR: runs the hot-path
+# micro-benchmarks plus the fleet-sim summary and writes BENCH_PR3.json at
+# the repository root (so BENCH_*.json accumulates across PRs).
+#
+# Usage: scripts/bench.sh [output.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+OUT="${1:-BENCH_PR3.json}"
+
+cargo run --release --bin repro -- bench --json "$OUT"
+echo "bench: wrote $OUT"

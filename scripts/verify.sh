@@ -3,6 +3,8 @@
 #   1. release build (lib + repro bin + examples + benches)
 #   2. full test suite
 #   3. rustdoc build (crate carries #![warn(missing_docs)])
+#   4. cargo fmt --check (when the rustfmt component is installed)
+#   5. cargo clippy -- -D warnings (when the clippy component is installed)
 #
 # Run from anywhere inside the repository; fully offline.
 set -euo pipefail
@@ -17,5 +19,19 @@ cargo test -q
 
 echo "== cargo doc --no-deps =="
 cargo doc --no-deps
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --check
+else
+  echo "== cargo fmt --check: rustfmt not installed, skipping =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy -- -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== cargo clippy: clippy not installed, skipping =="
+fi
 
 echo "verify: OK"
