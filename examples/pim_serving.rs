@@ -9,7 +9,11 @@
 //!
 //! Requires the trained artifacts (weights_ft.bin + dataset.bin; see
 //! python/compile/aot.py). Run:
-//!   cargo run --release --example pim_serving [n_requests]
+//!   cargo run --release --example pim_serving [n_requests] [threads]
+//!
+//! `threads` sizes the pim::parallel worker pool the executor tiles each
+//! batch's matmuls over (default 1; predictions are bit-identical at any
+//! width — see PERFORMANCE.md).
 
 use std::time::Duration;
 
@@ -20,7 +24,8 @@ use nvm_in_cache::coordinator::{
     BankScheduler, BatcherConfig, InferenceRequest, Router, Server, ServerConfig,
 };
 use nvm_in_cache::nn::Dataset;
-use nvm_in_cache::runtime::{default_runtime, ArtifactDir, ModelVariant};
+use nvm_in_cache::pim::parallel::Parallelism;
+use nvm_in_cache::runtime::{default_runtime_par, ArtifactDir, ModelVariant};
 use nvm_in_cache::util::rng::Pcg64;
 
 fn main() -> nvm_in_cache::Result<()> {
@@ -28,6 +33,9 @@ fn main() -> nvm_in_cache::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(400);
+    let par = Parallelism::threads(
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(1),
+    );
     let dir = match ArtifactDir::open("artifacts") {
         Ok(d) => d,
         Err(e) => {
@@ -62,7 +70,7 @@ fn main() -> nvm_in_cache::Result<()> {
     let dir2 = ArtifactDir::open(dir.root.clone())?;
     let server = Server::start(
         Box::new(move || {
-            let mut rt = default_runtime(dir2.eval_batch())?;
+            let mut rt = default_runtime_par(dir2.eval_batch(), par)?;
             rt.load_variant(&dir2, ModelVariant::Pim)?;
             Ok(Box::new(RuntimeExecutor {
                 runtime: rt,
@@ -70,6 +78,7 @@ fn main() -> nvm_in_cache::Result<()> {
                 dims,
                 n_classes: 10,
                 key_counter: 0,
+                parallelism: par,
             }) as Box<dyn Executor>)
         }),
         Some(scheduler),

@@ -47,6 +47,36 @@ enum Event {
 }
 
 /// A running server.
+///
+/// # Examples
+///
+/// Serve a mock executor end-to-end (submit → batch → classify → respond):
+///
+/// ```
+/// use nvm_in_cache::coordinator::server::{Executor, Server, ServerConfig};
+/// use nvm_in_cache::coordinator::InferenceRequest;
+///
+/// struct Echo;
+/// impl Executor for Echo {
+///     fn classify(&mut self, images: &[f32], n: usize) -> nvm_in_cache::Result<Vec<u8>> {
+///         Ok((0..n).map(|i| images[i] as u8).collect())
+///     }
+///     fn image_elems(&self) -> usize {
+///         1
+///     }
+/// }
+///
+/// let server = Server::start(
+///     Box::new(|| Ok(Box::new(Echo) as Box<dyn Executor>)),
+///     None,
+///     ServerConfig::default(),
+/// );
+/// server.submit(InferenceRequest::new(0, vec![7.0]));
+/// let response = server.responses.recv().unwrap();
+/// assert_eq!(response.predicted, 7);
+/// let metrics = server.shutdown();
+/// assert_eq!(metrics.responses, 1);
+/// ```
 pub struct Server {
     tx: mpsc::Sender<Event>,
     /// Completed responses, in execution order.
@@ -204,7 +234,8 @@ impl Drop for Server {
 }
 
 /// Native-engine executor (no runtime backend): runs the Rust ResNet in a
-/// forward mode directly.
+/// forward mode directly. The worker-pool width rides on the network
+/// itself ([`crate::nn::ResNet::with_parallelism`]).
 pub struct NativeExecutor {
     /// The network.
     pub net: crate::nn::ResNet,
@@ -244,10 +275,16 @@ pub struct RuntimeExecutor {
     /// Per-batch counter feeding the PimNoise key (fresh noise per batch,
     /// reproducible per counter value).
     pub key_counter: u32,
+    /// Worker-pool width pushed to the backend before every batch —
+    /// predictions are bit-identical at any width
+    /// ([`crate::pim::parallel`]), so this only changes throughput and may
+    /// be retuned between batches.
+    pub parallelism: crate::pim::parallel::Parallelism,
 }
 
 impl Executor for RuntimeExecutor {
     fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>> {
+        self.runtime.set_parallelism(self.parallelism);
         let (h, w, c) = self.dims;
         let elems = h * w * c;
         let b = self.runtime.batch();

@@ -48,6 +48,26 @@ impl FleetReplica {
 }
 
 /// Router over every tenant's replica set.
+///
+/// # Examples
+///
+/// Assignments queue behind the earliest-available serving replica on the
+/// simulated clock:
+///
+/// ```
+/// use nvm_in_cache::fleet::{FleetRouter, ReplicaHealth};
+///
+/// let mut router = FleetRouter::new(&[2]);
+/// let (first, start, _) = router.assign(0, 0.0, 1.0).unwrap();
+/// assert_eq!(start, 0.0);
+/// let (second, _, _) = router.assign(0, 0.0, 1.0).unwrap();
+/// assert_ne!(first, second, "idle sibling picked over the busy replica");
+///
+/// // A replica under reprogramming stops receiving traffic.
+/// router.set_health(0, 0, ReplicaHealth::Programming);
+/// router.set_health(0, 1, ReplicaHealth::Programming);
+/// assert!(router.assign(0, 0.0, 1.0).is_none());
+/// ```
 pub struct FleetRouter {
     /// Replica states, indexed `[tenant][replica]`.
     pub tenants: Vec<Vec<FleetReplica>>,

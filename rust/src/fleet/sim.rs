@@ -41,6 +41,11 @@ pub struct FleetSimConfig {
     /// [`crate::coordinator::Server`] instances (threads; wall-clock, so
     /// excluded from the deterministic report fields).
     pub live_serving: bool,
+    /// Worker-pool width for the live pass's executors (`fleet-sim
+    /// --threads`). The simulated-clock report is analytic and unaffected;
+    /// live-pass predictions are bit-identical at any width
+    /// ([`crate::pim::parallel`]), so this only changes live throughput.
+    pub parallelism: crate::pim::parallel::Parallelism,
 }
 
 impl Default for FleetSimConfig {
@@ -52,6 +57,7 @@ impl Default for FleetSimConfig {
             requests_per_tenant: 400,
             campaign_at_frac: 0.5,
             live_serving: false,
+            parallelism: crate::pim::parallel::Parallelism::serial(),
         }
     }
 }
@@ -469,7 +475,11 @@ impl FleetSim {
         let horizon_s = max_completion.max(1e-12);
         let total_served: u64 = tenants.iter().map(|t| t.served).sum();
         let live = if config.live_serving {
-            Some(Self::live_pass(&registry, config.requests_per_tenant.min(64))?)
+            Some(Self::live_pass(
+                &registry,
+                config.requests_per_tenant.min(64),
+                config.parallelism,
+            )?)
         } else {
             None
         };
@@ -531,28 +541,37 @@ impl FleetSim {
     }
 
     /// Drive a small request wave through one real
-    /// [`crate::coordinator::Server`] per tenant (threads + mpsc;
-    /// wall-clock, so the numbers are integration evidence, not part of
-    /// the deterministic report).
-    fn live_pass(registry: &ModelRegistry, requests_per_tenant: usize) -> Result<LiveSummary> {
-        use crate::coordinator::server::{Executor, Server, ServerConfig};
+    /// [`crate::coordinator::Server`] per tenant, each running a PIM-mode
+    /// [`crate::coordinator::NativeExecutor`] over a synthetic network so
+    /// the wave exercises the tiled matmul path on `parallelism` workers
+    /// (threads + mpsc; wall-clock, so the numbers are integration
+    /// evidence, not part of the deterministic report).
+    fn live_pass(
+        registry: &ModelRegistry,
+        requests_per_tenant: usize,
+        parallelism: crate::pim::parallel::Parallelism,
+    ) -> Result<LiveSummary> {
+        use crate::coordinator::server::{Executor, NativeExecutor, Server, ServerConfig};
         use crate::coordinator::{BatcherConfig, InferenceRequest};
+        use crate::nn::resnet::test_params;
+        use crate::nn::{ForwardMode, ResNet};
 
-        /// Minimal deterministic executor: class = first image element.
-        struct EchoExecutor;
-        impl Executor for EchoExecutor {
-            fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>> {
-                Ok((0..n).map(|i| images[i * 4] as u8).collect())
-            }
-            fn image_elems(&self) -> usize {
-                4
-            }
-        }
-
+        const DIMS: (usize, usize, usize) = (16, 16, 3);
+        let elems = DIMS.0 * DIMS.1 * DIMS.2;
         let mut summary = LiveSummary { requests: 0, responses: 0, batches: 0 };
         for tenant in &registry.tenants {
+            let tenant_seed = tenant.id as u64;
             let server = Server::start(
-                Box::new(|| Ok(Box::new(EchoExecutor) as Box<dyn Executor>)),
+                Box::new(move || {
+                    let net = ResNet::new(test_params(8, 10, 1 + tenant_seed))
+                        .with_parallelism(parallelism);
+                    Ok(Box::new(NativeExecutor {
+                        net,
+                        mode: ForwardMode::Pim,
+                        dims: DIMS,
+                        seed: 1,
+                    }) as Box<dyn Executor>)
+                }),
                 None,
                 ServerConfig {
                     batcher: BatcherConfig {
@@ -561,11 +580,13 @@ impl FleetSim {
                     },
                 },
             );
+            let mut img_rng = Pcg64::new(0xA11CE, tenant_seed);
             for i in 0..requests_per_tenant {
-                let class = (i % 10) as f32;
+                let image: Vec<f32> =
+                    (0..elems).map(|_| img_rng.f64() as f32).collect();
                 server.submit(InferenceRequest::new(
                     (tenant.id * requests_per_tenant + i) as u64,
-                    vec![class, 0.0, 0.0, 0.0],
+                    image,
                 ));
             }
             let mut got = 0u64;

@@ -20,7 +20,9 @@
 //!   6-bit SAR ADC, and the PIM control FSM.
 //! * [`pim`] — quantization + the end-to-end analog transfer model
 //!   (weight → current → voltage → ADC code) and the PIM execution engine
-//!   that runs quantized CNN layers on simulated arrays.
+//!   that runs quantized CNN layers on simulated arrays; `pim::parallel`
+//!   tiles the MAC hot path across cores with bit-identical output
+//!   (PERFORMANCE.md).
 //! * [`cache`] — the LLC substrate: slices, banks, tags, LRU, and the
 //!   controller that arbitrates SRAM-mode traffic against PIM windows
 //!   while *retaining* cache data (the paper's headline architectural
@@ -47,8 +49,9 @@
 //! * [`figures`] — one generator per paper table/figure.
 //!
 //! See README.md for the quickstart, ARCHITECTURE.md for the layer-by-layer
-//! data flow, and EXPERIMENTS.md for the experiment ids (E1–E12, §Perf,
-//! A1–A3) cited throughout the code.
+//! data flow, EXPERIMENTS.md for the experiment ids (E1–E12, §Perf, A1–A3)
+//! cited throughout the code, and PERFORMANCE.md for the tiled parallel
+//! engine and the cross-PR perf trajectory.
 
 #![warn(missing_docs)]
 

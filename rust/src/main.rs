@@ -7,16 +7,20 @@
 //!   e2e       [--artifacts DIR] [--variant V] [--limit N]
 //!             re-measures Table II through the runtime backend on dataset.bin
 //!   serve     [--artifacts DIR] [--requests N] [--batch B] [--native]
-//!             demo serving run with the dynamic batcher + bank scheduler
+//!             [--threads T]
+//!             demo serving run with the dynamic batcher + bank scheduler;
+//!             T sizes the executor's pim::parallel worker pool
 //!   fleet-sim [--slices N] [--tenants N] [--requests N] [--seed S]
-//!             [--campaign-at FRAC] [--live] [--out DIR]
+//!             [--campaign-at FRAC] [--live] [--threads T] [--out DIR]
 //!             multi-tenant fleet simulation: placement, campaigns, QoS, wear
 //!             (writes DIR/fleet_sim.json; campaigns fire at FRAC of each
-//!             tenant's traffic horizon)
-//!   bench     [--quick] [--json [FILE]]
-//!             hot-path micro-benchmarks (+ fleet-sim summary); --json writes
-//!             the machine-readable perf-trajectory record (BENCH_PR3.json,
-//!             or FILE when given)
+//!             tenant's traffic horizon; T parallelizes the --live executors)
+//!   bench     [--quick] [--threads T] [--json [FILE]]
+//!             hot-path micro-benchmarks, serial vs T-thread tiled execution
+//!             (engine matmul + ResNet-18 stub inference), + fleet-sim
+//!             summary; --json writes the machine-readable perf-trajectory
+//!             record (BENCH_PR4.json, or FILE when given) — see
+//!             PERFORMANCE.md
 //!   info      print headline perf model numbers
 
 use std::path::PathBuf;
@@ -30,7 +34,8 @@ use nvm_in_cache::coordinator::{
 use nvm_in_cache::figures;
 use nvm_in_cache::nn::{Dataset, ForwardMode, ResNet};
 use nvm_in_cache::perf::MacroModel;
-use nvm_in_cache::runtime::{default_runtime, ArtifactDir, ModelVariant};
+use nvm_in_cache::pim::parallel::Parallelism;
+use nvm_in_cache::runtime::{default_runtime, default_runtime_par, ArtifactDir, ModelVariant};
 use nvm_in_cache::util::cli::Args;
 
 fn main() {
@@ -175,6 +180,7 @@ fn cmd_e2e(args: &Args) -> nvm_in_cache::Result<()> {
 
 fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
     let n_requests = args.get_usize("requests", 500)?;
+    let par = Parallelism::threads(args.get_usize("threads", 1)?);
     let scheduler = BankScheduler::new(
         BankScheduler::resnet18_layers(16),
         Geometry::default(),
@@ -196,7 +202,7 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
     let factory: nvm_in_cache::coordinator::server::ExecutorFactory = if native {
         Box::new(move || {
             Ok(Box::new(NativeExecutor {
-                net: ResNet::load(&weights)?,
+                net: ResNet::load(&weights)?.with_parallelism(par),
                 mode: ForwardMode::Pim,
                 dims,
                 seed: 1,
@@ -204,7 +210,7 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
         })
     } else {
         Box::new(move || {
-            let mut rt = default_runtime(dir2.eval_batch())?;
+            let mut rt = default_runtime_par(dir2.eval_batch(), par)?;
             rt.load_variant(&dir2, ModelVariant::Pim)?;
             Ok(Box::new(RuntimeExecutor {
                 runtime: rt,
@@ -212,6 +218,7 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
                 dims,
                 n_classes: 10,
                 key_counter: 0,
+                parallelism: par,
             }) as Box<dyn Executor>)
         })
     };
@@ -255,6 +262,7 @@ fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
         requests_per_tenant: args.get_usize("requests", defaults.requests_per_tenant)?,
         campaign_at_frac: args.get_f64("campaign-at", defaults.campaign_at_frac)?,
         live_serving: args.flag("live"),
+        parallelism: Parallelism::threads(args.get_usize("threads", 1)?),
     };
     let report = FleetSim::run(&config)?;
     print!("{}", report.render());
@@ -266,27 +274,48 @@ fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
     Ok(())
 }
 
-/// Hot-path micro-benchmarks + the fleet-sim summary; `--json` additionally
-/// writes the machine-readable perf-trajectory record (BENCH_PR3.json).
+/// Hot-path micro-benchmarks — each parallelizable stage serial vs
+/// `--threads T` tiled execution — plus the fleet-sim summary; `--json`
+/// additionally writes the machine-readable perf-trajectory record
+/// (BENCH_PR4.json; see PERFORMANCE.md for the format and trajectory).
 fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
     use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
+    use nvm_in_cache::nn::resnet::test_params;
     use nvm_in_cache::pim::PimEngine;
+    use nvm_in_cache::runtime::{Runtime, StubRuntime};
     use nvm_in_cache::util::bench::Bencher;
     use nvm_in_cache::util::json::Json;
     use nvm_in_cache::util::rng::Pcg64;
 
+    let threads = args.get_usize("threads", 4)?.max(1);
+    let par = Parallelism::threads(threads);
     let mut b = if args.flag("quick") { Bencher::quick() } else { Bencher::default() };
     let mut rng = Pcg64::seeded(1);
 
-    // Hot path 1: the PIM engine matmul (simulator throughput).
+    // Hot path 1: the PIM engine matmul (the E8 macro-workload shape),
+    // serial vs the tiled worker pool, with the bit-exactness of the
+    // parallel path asserted on the same inputs.
     let (m, k, n) = (256usize, 256usize, 128usize);
     let a: Vec<f32> = (0..m * k).map(|_| rng.range(0.0, 1.0) as f32).collect();
     let w: Vec<f32> = (0..k * n).map(|_| rng.range(-0.5, 0.5) as f32).collect();
     let eng = PimEngine::tt();
-    b.bench_with_items(&format!("engine_pim_matmul_{m}x{k}x{n}"), (m * k * n) as f64, || {
+    let parity_engine =
+        eng.pim_matmul(&a, m, k, &w, n, None) == eng.par_matmul(&a, m, k, &w, n, None, par);
+    // With --threads 1 the _tN names would collide with _t1 (duplicate
+    // comparison keys, degenerate speedup), so the threaded twins and the
+    // speedups only exist for threads ≥ 2.
+    let run_par = threads >= 2;
+    let name_eng_t1 = format!("engine_pim_matmul_{m}x{k}x{n}_t1");
+    let name_eng_tn = format!("engine_pim_matmul_{m}x{k}x{n}_t{threads}");
+    b.bench_with_items(&name_eng_t1, (m * k * n) as f64, || {
         eng.pim_matmul(&a, m, k, &w, n, None)
     });
+    if run_par {
+        b.bench_with_items(&name_eng_tn, (m * k * n) as f64, || {
+            eng.par_matmul(&a, m, k, &w, n, None, par)
+        });
+    }
 
     // Hot path 2: cell-accurate sub-array full 4b MAC.
     let mut sa = nvm_in_cache::array::SubArray::new(nvm_in_cache::device::Corner::TT);
@@ -308,7 +337,34 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     sched.program_network();
     b.bench("scheduler_batch_cost_retained", || sched.batch_cost(8));
 
-    // Hot path 4: the whole fleet simulation (small config, shared with
+    // Hot path 4: end-to-end ResNet-18 inference through the stub runtime
+    // (hardware-true PimHw forward, batch 8), serial vs the worker pool —
+    // the headline serving-throughput trajectory point.
+    let batch = 8usize;
+    let dims = (16usize, 16usize, 3usize);
+    let images: Vec<f32> = {
+        let mut r = Pcg64::seeded(2);
+        (0..batch * dims.0 * dims.1 * dims.2).map(|_| r.f64() as f32).collect()
+    };
+    let mut rt_serial = StubRuntime::new(batch);
+    rt_serial.load_variant_params(ModelVariant::PimHw, test_params(16, 10, 1));
+    let mut rt_par = StubRuntime::new(batch).with_parallelism(par);
+    rt_par.load_variant_params(ModelVariant::PimHw, test_params(16, 10, 1));
+    let parity_resnet = rt_serial
+        .forward(ModelVariant::PimHw, &images, dims, None)?
+        == rt_par.forward(ModelVariant::PimHw, &images, dims, None)?;
+    let name_rn_t1 = format!("resnet18_stub_infer_b{batch}_t1");
+    let name_rn_tn = format!("resnet18_stub_infer_b{batch}_t{threads}");
+    b.bench_with_items(&name_rn_t1, batch as f64, || {
+        rt_serial.classify(ModelVariant::PimHw, &images, dims, 10, None).unwrap()
+    });
+    if run_par {
+        b.bench_with_items(&name_rn_tn, batch as f64, || {
+            rt_par.classify(ModelVariant::PimHw, &images, dims, 10, None).unwrap()
+        });
+    }
+
+    // Hot path 5: the whole fleet simulation (small config, shared with
     // the cargo-bench fleet section). The run is deterministic, so the
     // last bench iteration's report IS the report — no extra run needed.
     let fleet_cfg = FleetSimConfig::bench_quick();
@@ -318,15 +374,54 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     });
     b.report();
 
+    let mean = |name: &str| {
+        b.results.iter().find(|r| r.name == name).map(|r| r.summary.mean)
+    };
+    let speedup_engine = if run_par {
+        mean(&name_eng_t1).zip(mean(&name_eng_tn)).map(|(s, p)| s / p)
+    } else {
+        None
+    };
+    let speedup_resnet = if run_par {
+        mean(&name_rn_t1).zip(mean(&name_rn_tn)).map(|(s, p)| s / p)
+    } else {
+        None
+    };
+    if let (Some(se), Some(sr)) = (speedup_engine, speedup_resnet) {
+        println!(
+            "speedup @ {threads} threads: engine matmul {se:.2}x, \
+             resnet18 stub inference {sr:.2}x (bit-identical: engine {parity_engine}, \
+             resnet {parity_resnet})"
+        );
+    }
+
     let fleet_report = fleet_report.expect("bench ran at least once");
     print!("{}", fleet_report.render());
 
     if args.flag("json") {
-        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR3.json"));
-        let doc = Json::obj(vec![
-            ("pr", Json::Num(3.0)),
-            ("benches", b.to_json()),
+        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR4.json"));
+        // Two sections (PERFORMANCE.md): `comparison` holds only
+        // deterministic fields (workload descriptors, parity verdicts, the
+        // simulated-clock fleet report) so trajectory files diff cleanly
+        // across PRs; `measured` holds the wall-clock numbers.
+        let comparison = Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("workloads", b.comparison_json()),
+            ("parity_engine_bit_identical", Json::Bool(parity_engine)),
+            ("parity_resnet_bit_identical", Json::Bool(parity_resnet)),
             ("fleet_sim", fleet_report.to_json()),
+        ]);
+        let mut measured = vec![("benches", b.to_json())];
+        if let Some(s) = speedup_engine {
+            measured.push(("speedup_engine_par_matmul", Json::Num(s)));
+        }
+        if let Some(s) = speedup_resnet {
+            measured.push(("speedup_resnet18_stub_infer", Json::Num(s)));
+        }
+        let doc = Json::obj(vec![
+            ("pr", Json::Num(4.0)),
+            ("comparison", comparison),
+            ("measured", Json::obj(measured)),
         ]);
         std::fs::write(&path, doc.to_string())?;
         println!("wrote {}", path.display());

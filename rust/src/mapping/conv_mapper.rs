@@ -111,6 +111,21 @@ impl ConvMapping {
         ow * ow * (self.submatrices * self.d_tiles * self.n_tiles) as u64
     }
 
+    /// Data-independent execution units one batched im2col run of this
+    /// layer fans out to — the (output row × 128-row block × 128-word
+    /// output tile) grid `PimEngine::par_matmul` schedules over the
+    /// [`crate::pim::parallel`] worker pool. `m_rows` is the im2col row
+    /// count (batch × output pixels); the im2col reduction dimension is
+    /// D·K², so its row blocks fold the K² submatrices and the D tiles of
+    /// this plan into one axis. The units are only joined by the digital
+    /// shift-add reduce, which is what makes row-parallel execution both
+    /// legal and bit-exact (PERFORMANCE.md). Delegates to
+    /// [`crate::pim::PimEngine::unit_count`], the grid's single owner.
+    pub fn engine_units(&self, m_rows: usize) -> usize {
+        let k_im2col = self.shape.d * self.shape.k * self.shape.k;
+        crate::pim::PimEngine::unit_count(m_rows, k_im2col, self.shape.n)
+    }
+
     /// For output pixel (oy, ox) and kernel position (ky, kx), the input
     /// pixel coordinate that feeds the submatrix — None if padding.
     pub fn input_coord(
@@ -194,6 +209,17 @@ mod tests {
         assert_eq!(ConvShape { k: 3, d: 1, n: 1, w: 16, stride: 1 }.output_width(), 16);
         assert_eq!(ConvShape { k: 3, d: 1, n: 1, w: 16, stride: 2 }.output_width(), 8);
         assert_eq!(ConvShape { k: 3, d: 1, n: 1, w: 15, stride: 2 }.output_width(), 8);
+    }
+
+    #[test]
+    fn engine_units_cover_the_layer() {
+        // 3×3×64 kernel → im2col k = 576 = 4.5 blocks → 5; n = 128 → 1
+        // tile; 10 im2col rows ⇒ 50 independent units for the pool.
+        let m = ConvMapping::plan(shape3x3());
+        assert_eq!(m.engine_units(10), 10 * 5);
+        // Wider outputs add tiles: n = 130 spans 2 output tiles.
+        let wide = ConvMapping::plan(ConvShape { k: 1, d: 64, n: 130, w: 8, stride: 1 });
+        assert_eq!(wide.engine_units(4), 4 * 1 * 2);
     }
 
     #[test]

@@ -53,6 +53,21 @@ impl NetworkLayout {
     /// networks pack onto one physical slice without overlapping, and lets
     /// a wear-leveling placer rotate which banks a model lands on.
     /// `slots_used` counts only the slots this placement consumed.
+    ///
+    /// # Examples
+    ///
+    /// Pack two copies of a one-tile layer onto the same slice without
+    /// overlap by starting the second placement at the first's end slot:
+    ///
+    /// ```
+    /// use nvm_in_cache::mapping::{ConvShape, NetworkLayout};
+    ///
+    /// let layers = [ConvShape { k: 1, d: 64, n: 64, w: 8, stride: 1 }];
+    /// let a = NetworkLayout::place_from(&layers, 8, 4, 0).unwrap();
+    /// let b = NetworkLayout::place_from(&layers, 8, 4, a.end_slot().unwrap()).unwrap();
+    /// assert_eq!(a.slots_used, 2); // one logical tile = pos + neg slot
+    /// assert_ne!(a.placements[0].pos_slot, b.placements[0].pos_slot);
+    /// ```
     pub fn place_from(
         layers: &[ConvShape],
         banks: usize,

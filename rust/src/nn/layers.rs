@@ -1,6 +1,7 @@
 //! Inference layers, matched operation-for-operation to
 //! `python/compile/model.py`.
 
+use crate::pim::parallel::Parallelism;
 use crate::pim::PimEngine;
 use crate::util::rng::Pcg64;
 
@@ -70,14 +71,21 @@ pub fn weights_to_matrix(w_hwio: &Tensor) -> Tensor {
 
 /// Dense fp32 matmul: [m,k] × [k,n] → [m,n].
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_par(a, b, Parallelism::serial())
+}
+
+/// [`matmul`] with rows fanned over the [`crate::pim::parallel`] pool —
+/// bit-identical to the serial result at any thread count.
+pub fn matmul_par(a: &Tensor, b: &Tensor, par: Parallelism) -> Tensor {
     let (m, k) = (a.shape[0], a.shape[1]);
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2);
-    Tensor::from_vec(&[m, n], PimEngine::exact_matmul(&a.data, m, k, &b.data, n))
+    Tensor::from_vec(&[m, n], PimEngine::par_exact_matmul(&a.data, m, k, &b.data, n, par))
 }
 
 /// Convolution. `engine = None` ⇒ dense fp32; otherwise the quantized PIM
-/// pipeline (with optional per-conversion noise RNG).
+/// pipeline (with optional per-conversion noise RNG). Runs on the engine's
+/// own [`Parallelism`] (dense path: serial); see [`conv2d_par`].
 pub fn conv2d(
     x: &Tensor,
     w_hwio: &Tensor,
@@ -85,22 +93,37 @@ pub fn conv2d(
     engine: Option<&PimEngine>,
     rng: Option<&mut Pcg64>,
 ) -> Tensor {
+    let par = engine.map(|e| e.parallelism).unwrap_or_default();
+    conv2d_par(x, w_hwio, stride, engine, rng, par)
+}
+
+/// [`conv2d`] on an explicit worker-pool width (both the dense and the
+/// PIM path); output is bit-identical at any thread count.
+pub fn conv2d_par(
+    x: &Tensor,
+    w_hwio: &Tensor,
+    stride: usize,
+    engine: Option<&PimEngine>,
+    rng: Option<&mut Pcg64>,
+    par: Parallelism,
+) -> Tensor {
     let k = w_hwio.shape[0];
     let cout = w_hwio.shape[3];
     let n = x.shape[0];
     let (patches, oh, ow) = im2col(x, k, stride);
     let wm = weights_to_matrix(w_hwio);
     let out2d = match engine {
-        None => matmul(&patches, &wm),
+        None => matmul_par(&patches, &wm, par),
         Some(eng) => Tensor::from_vec(
             &[patches.shape[0], cout],
-            eng.pim_matmul(
+            eng.par_matmul(
                 &patches.data,
                 patches.shape[0],
                 patches.shape[1],
                 &wm.data,
                 cout,
                 rng,
+                par,
             ),
         ),
     };
@@ -201,13 +224,27 @@ pub fn linear(
     engine: Option<&PimEngine>,
     rng: Option<&mut Pcg64>,
 ) -> Tensor {
+    let par = engine.map(|e| e.parallelism).unwrap_or_default();
+    linear_par(x, w, bias, engine, rng, par)
+}
+
+/// [`linear`] on an explicit worker-pool width; bit-identical at any
+/// thread count.
+pub fn linear_par(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    engine: Option<&PimEngine>,
+    rng: Option<&mut Pcg64>,
+    par: Parallelism,
+) -> Tensor {
     let (n, k) = (x.shape[0], x.shape[1]);
     let c = w.shape[1];
     let mut out = match engine {
-        None => matmul(x, w),
+        None => matmul_par(x, w, par),
         Some(eng) => {
             let relu_x: Vec<f32> = x.data.iter().map(|v| v.max(0.0)).collect();
-            Tensor::from_vec(&[n, c], eng.pim_matmul(&relu_x, n, k, &w.data, c, rng))
+            Tensor::from_vec(&[n, c], eng.par_matmul(&relu_x, n, k, &w.data, c, rng, par))
         }
     };
     for ni in 0..n {
@@ -294,6 +331,28 @@ mod tests {
         let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
         let y = linear(&x, &w, &[10.0, 20.0], None, None);
         assert_eq!(y.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn conv2d_par_bit_identical_both_paths() {
+        let mut rng = Pcg64::seeded(17);
+        let x = Tensor::from_vec(
+            &[2, 8, 8, 4],
+            (0..512).map(|_| rng.range(0.0, 1.0) as f32).collect(),
+        );
+        let w = Tensor::from_vec(
+            &[3, 3, 4, 8],
+            (0..288).map(|_| rng.range(-0.3, 0.3) as f32).collect(),
+        );
+        // Dense path.
+        let dense = conv2d(&x, &w, 1, None, None);
+        let dense_par = conv2d_par(&x, &w, 1, None, None, Parallelism::threads(3));
+        assert_eq!(dense.data, dense_par.data);
+        // PIM path.
+        let eng = PimEngine::tt();
+        let pim = conv2d(&x, &w, 1, Some(&eng), None);
+        let pim_par = conv2d_par(&x, &w, 1, Some(&eng), None, Parallelism::threads(3));
+        assert_eq!(pim.data, pim_par.data);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::pim::parallel::Parallelism;
 use crate::pim::PimEngine;
 use crate::util::rng::Pcg64;
 use crate::{Error, Result};
@@ -97,6 +98,9 @@ pub struct ResNet {
     pub params: Params,
     /// Stem width (channels after the first conv).
     pub width: usize,
+    /// Worker-pool width every [`ResNet::forward`] matmul is tiled over
+    /// (serial by default; output is bit-identical at any width).
+    pub parallelism: Parallelism,
 }
 
 impl ResNet {
@@ -107,7 +111,7 @@ impl ResNet {
             .get("stem/w")
             .map(|t| t.shape[3])
             .unwrap_or(16);
-        ResNet { params, width }
+        ResNet { params, width, parallelism: Parallelism::serial() }
     }
 
     /// Load from a weights.bin file.
@@ -115,11 +119,34 @@ impl ResNet {
         Ok(Self::new(Params::load(path)?))
     }
 
-    /// Forward pass: x [N,16,16,3] → logits [N,10].
+    /// Set the worker-pool width used by [`ResNet::forward`].
+    pub fn with_parallelism(mut self, par: Parallelism) -> ResNet {
+        self.parallelism = par;
+        self
+    }
+
+    /// Forward pass: x [N,16,16,3] → logits [N,10]. Runs conv/fc matmuls
+    /// on [`ResNet::parallelism`].
     pub fn forward(&self, x: &Tensor, mode: ForwardMode, seed: u64) -> Result<Tensor> {
+        self.forward_par(x, mode, seed, self.parallelism)
+    }
+
+    /// [`ResNet::forward`] on an explicit worker-pool width — every conv
+    /// and fc matmul (dense or PIM) is tiled over the
+    /// [`crate::pim::parallel`] pool; logits are bit-identical at any
+    /// thread count.
+    pub fn forward_par(
+        &self,
+        x: &Tensor,
+        mode: ForwardMode,
+        seed: u64,
+        par: Parallelism,
+    ) -> Result<Tensor> {
         let engine = match mode {
-            ForwardMode::PimHw => Some(PimEngine::tt()),
-            ForwardMode::PimHwNoise(sigma) => Some(PimEngine::tt().with_noise(sigma)),
+            ForwardMode::PimHw => Some(PimEngine::tt().with_parallelism(par)),
+            ForwardMode::PimHwNoise(sigma) => {
+                Some(PimEngine::tt().with_noise(sigma).with_parallelism(par))
+            }
             _ => None,
         };
         let emu_sigma: Option<Option<f64>> = match mode {
@@ -155,7 +182,7 @@ impl ResNet {
         };
 
         let mut local = rng_opt(&mut rng);
-        let mut h = layers::conv2d(x, p.get("stem/w")?, 1, eng, local.as_mut());
+        let mut h = layers::conv2d_par(x, p.get("stem/w")?, 1, eng, local.as_mut(), par);
         h = post(h, &mut rng);
         h = gn(&h, p.get("stem/gamma")?, p.get("stem/beta")?).relu();
 
@@ -166,16 +193,16 @@ impl ResNet {
                 let pre = format!("s{s}b{b}");
                 let idn = h.clone();
                 let mut local = rng_opt(&mut rng);
-                h = layers::conv2d(&h, p.get(&format!("{pre}/w1"))?, st, eng, local.as_mut());
+                h = layers::conv2d_par(&h, p.get(&format!("{pre}/w1"))?, st, eng, local.as_mut(), par);
                 h = post(h, &mut rng);
                 h = gn(&h, p.get(&format!("{pre}/g1"))?, p.get(&format!("{pre}/b1"))?).relu();
                 let mut local = rng_opt(&mut rng);
-                h = layers::conv2d(&h, p.get(&format!("{pre}/w2"))?, 1, eng, local.as_mut());
+                h = layers::conv2d_par(&h, p.get(&format!("{pre}/w2"))?, 1, eng, local.as_mut(), par);
                 h = post(h, &mut rng);
                 h = gn(&h, p.get(&format!("{pre}/g2"))?, p.get(&format!("{pre}/b2"))?);
                 let idn = if p.tensors.contains_key(&format!("{pre}/wd")) {
                     let mut local = rng_opt(&mut rng);
-                    let d = layers::conv2d(&idn, p.get(&format!("{pre}/wd"))?, st, eng, local.as_mut());
+                    let d = layers::conv2d_par(&idn, p.get(&format!("{pre}/wd"))?, st, eng, local.as_mut(), par);
                     post(d, &mut rng)
                 } else {
                     idn
@@ -187,7 +214,8 @@ impl ResNet {
         let mut local = rng_opt(&mut rng);
         let fc_w = p.get("fc/w")?;
         let fc_b = p.get("fc/b")?;
-        let logits = layers::linear(&pooled, fc_w, &vec![0.0; fc_b.len()], eng, local.as_mut());
+        let logits =
+            layers::linear_par(&pooled, fc_w, &vec![0.0; fc_b.len()], eng, local.as_mut(), par);
         let mut logits = post(logits, &mut rng);
         for n in 0..logits.shape[0] {
             for c in 0..logits.shape[1] {
@@ -307,6 +335,25 @@ mod tests {
         let c = net.forward(&x, ForwardMode::PimNoise(0.3), 43).unwrap();
         assert_eq!(a.data, b.data);
         assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn forward_par_bit_identical_all_modes() {
+        let net = ResNet::new(test_params(8, 10, 11));
+        let x = tiny_input(2, 12);
+        for mode in [
+            ForwardMode::Baseline,
+            ForwardMode::Pim,
+            ForwardMode::PimNoise(0.3),
+            ForwardMode::PimHw,
+            ForwardMode::PimHwNoise(0.3),
+        ] {
+            let serial = net.forward(&x, mode, 5).unwrap();
+            for t in [2usize, 7] {
+                let par = net.forward_par(&x, mode, 5, Parallelism::threads(t)).unwrap();
+                assert_eq!(serial.data, par.data, "{mode:?} threads={t}");
+            }
+        }
     }
 
     #[test]

@@ -8,14 +8,90 @@
 //! cross-checked against.
 //!
 //! Hot path: integer bit-plane accumulation + an exact ADC LUT (the analog
-//! transfer is a pure function of an integer MAC ≤ 1920).
+//! transfer is a pure function of an integer MAC ≤ 1920). The work factors
+//! into data-independent *units* — one per (output row × 128-row block ×
+//! 128-word output tile), mirroring the sub-array organization — which
+//! [`Self::par_matmul`] schedules over the [`super::parallel`] worker pool;
+//! the shift-add reduce runs in unit order, so parallel output is
+//! bit-identical to serial (PERFORMANCE.md, `rust/tests/parallel_parity.rs`).
 
-use crate::consts::ARRAY_ROWS;
+use crate::consts::{ARRAY_ROWS, ARRAY_WORDS};
 use crate::device::Corner;
 use crate::util::rng::Pcg64;
 
+use super::parallel::{self, Parallelism};
 use super::quant::{quantize_acts, quantize_weights, QuantizedActs};
 use super::transfer::{TransferModel, ADC_CODES, MAC_FULLSCALE};
+
+/// Spread mask: activation nibble bit `b` → bit 16·b, so one u64
+/// multiply-add accumulates all four bit-plane MACs at once (each plane
+/// MAC ≤ 1920 < 2¹⁶).
+const SPREAD: [u64; 16] = {
+    let mut t = [0u64; 16];
+    let mut v = 0usize;
+    while v < 16 {
+        t[v] = (v as u64 & 1)
+            | ((v as u64 >> 1) & 1) << 16
+            | ((v as u64 >> 2) & 1) << 32
+            | ((v as u64 >> 3) & 1) << 48;
+        v += 1;
+    }
+    t
+};
+
+/// The tiling grid one bank MAC decomposes into: `m` output rows ×
+/// ⌈k/128⌉ row blocks (the 128-row powerline accumulation limit) ×
+/// ⌈n/128⌉ output tiles (one sub-array's 128 word columns). Unit `u`
+/// enumerates the grid with the output tile fastest, then the row block,
+/// then the output row — the canonical reduce order.
+struct UnitGrid {
+    k: usize,
+    n: usize,
+    n_blocks: usize,
+    n_tiles: usize,
+    units: usize,
+}
+
+impl UnitGrid {
+    fn new(m: usize, k: usize, n: usize) -> UnitGrid {
+        let n_blocks = k.div_ceil(ARRAY_ROWS);
+        let n_tiles = n.div_ceil(ARRAY_WORDS);
+        UnitGrid { k, n, n_blocks, n_tiles, units: m * n_blocks * n_tiles }
+    }
+
+    /// Unit index → (output row, row block, output tile).
+    fn decompose(&self, u: usize) -> (usize, usize, usize) {
+        let ti = u % self.n_tiles;
+        let rest = u / self.n_tiles;
+        (rest / self.n_blocks, rest % self.n_blocks, ti)
+    }
+
+    /// Reduction-dimension range of row block `bi`.
+    fn k_range(&self, bi: usize) -> (usize, usize) {
+        (bi * ARRAY_ROWS, (bi * ARRAY_ROWS + ARRAY_ROWS).min(self.k))
+    }
+
+    /// Word-column range of output tile `ti`.
+    fn c_range(&self, ti: usize) -> (usize, usize) {
+        (ti * ARRAY_WORDS, (ti * ARRAY_WORDS + ARRAY_WORDS).min(self.n))
+    }
+}
+
+/// Reusable per-unit scratch: packed 4-plane powerline accumulators and
+/// the plane-recombined partial sums, one entry per word column of a
+/// tile. `packed` lives on the stack (a tile never exceeds
+/// `ARRAY_WORDS` columns); only `partial` is heap-allocated, because the
+/// parallel path sends it back over the channel.
+struct UnitScratch {
+    packed: [u64; ARRAY_WORDS],
+    partial: Vec<f32>,
+}
+
+impl UnitScratch {
+    fn new(width: usize) -> UnitScratch {
+        UnitScratch { packed: [0; ARRAY_WORDS], partial: vec![0.0; width] }
+    }
+}
 
 /// Engine configuration + precomputed state.
 #[derive(Clone, Debug)]
@@ -26,6 +102,9 @@ pub struct PimEngine {
     pub calibrated: bool,
     /// Per-conversion ADC noise sigma in code units (None = noiseless).
     pub noise_sigma_codes: Option<f64>,
+    /// Worker-pool width for [`Self::pim_matmul`] / [`Self::bank_mac`]
+    /// (serial by default; [`Self::par_matmul`] overrides per call).
+    pub parallelism: Parallelism,
     lut: Vec<f32>,
 }
 
@@ -37,6 +116,7 @@ impl PimEngine {
             transfer,
             calibrated: true,
             noise_sigma_codes: None,
+            parallelism: Parallelism::serial(),
             lut: transfer.quantize_lut(true),
         }
     }
@@ -52,6 +132,13 @@ impl PimEngine {
         self
     }
 
+    /// Set the worker-pool width used by [`Self::pim_matmul`] and
+    /// [`Self::bank_mac`]. Output is bit-identical at any width.
+    pub fn with_parallelism(mut self, par: Parallelism) -> PimEngine {
+        self.parallelism = par;
+        self
+    }
+
     /// Switch to the uncalibrated (full-VDD reference) ADC of Fig. 12.
     pub fn uncalibrated(mut self) -> PimEngine {
         self.calibrated = false;
@@ -59,88 +146,146 @@ impl PimEngine {
         self
     }
 
-    /// One unsigned bank MAC: quantized activations [m,k] × bank [k,n]
-    /// (u8 weights 0..=15), with per-(128-row block × bit-plane) ADC
-    /// quantization. Returns dequantized MAC estimates (integer units).
-    ///
-    /// Hot-path layout (EXPERIMENTS.md §Perf): all four bit-plane MACs of
-    /// a block accumulate in ONE pass over the rows, packed into a u64
-    /// (each plane MAC ≤ 1920 < 2¹⁶). The activation nibble expands to a
-    /// 4×16-bit spread mask via a 16-entry LUT, so the inner loop is one
-    /// u64 multiply-add per (row, column) — ~3.4× over the per-plane-pass
-    /// version.
-    pub fn bank_mac(&self, a: &QuantizedActs, bank: &[u8], n: usize, rng: Option<&mut Pcg64>) -> Vec<f32> {
-        let (m, k) = (a.m, a.k);
-        assert_eq!(bank.len(), k * n);
-        let lsb = MAC_FULLSCALE as f64 / ADC_CODES as f64;
-        // Spread mask: nibble bit b → bit 16·b.
-        let spread: [u64; 16] = {
-            let mut t = [0u64; 16];
-            let mut v = 0usize;
-            while v < 16 {
-                t[v] = (v as u64 & 1)
-                    | ((v as u64 >> 1) & 1) << 16
-                    | ((v as u64 >> 2) & 1) << 32
-                    | ((v as u64 >> 3) & 1) << 48;
-                v += 1;
-            }
-            t
-        };
-        let mut out = vec![0.0f32; m * n];
-        let mut packed = vec![0u64; n];
+    /// One tile unit: powerline accumulation of the unit's row block for
+    /// its word columns (all four bit-planes packed in u64), then WCC +
+    /// S&H + SAR conversion into `scratch.partial` — the plane-recombined
+    /// partial MAC of this (row, block, tile), ready for the shift-add
+    /// reduce. Pure in `(unit, rng)`: worker scheduling cannot change it.
+    fn mac_unit(
+        &self,
+        a: &QuantizedActs,
+        bank: &[u8],
+        grid: &UnitGrid,
+        u: usize,
+        rng: Option<&mut Pcg64>,
+        scratch: &mut UnitScratch,
+    ) {
+        let (i, bi, ti) = grid.decompose(u);
+        let (k0, k1) = grid.k_range(bi);
+        let (c0, c1) = grid.c_range(ti);
+        let width = c1 - c0;
+        let n = grid.n;
+        let a_row = &a.data[i * grid.k..(i + 1) * grid.k];
+        let packed = &mut scratch.packed[..width];
+        let partial = &mut scratch.partial[..width];
+        packed.fill(0);
         // (Perf note, EXPERIMENTS.md §Perf: pre-widening the bank to u64
         // was tried and reverted — 8× memory traffic lost more than the
         // widening saved. The u8 loads below widen in-register.)
-        let mut local_rng = rng.map(|r| r.fork(0x6ba7));
-        for i in 0..m {
-            let a_row = &a.data[i * k..(i + 1) * k];
-            let mut k0 = 0;
-            while k0 < k {
-                let k1 = (k0 + ARRAY_ROWS).min(k);
-                // Powerline accumulation, all four planes at once.
-                packed.iter_mut().for_each(|x| *x = 0);
-                for kk in k0..k1 {
-                    let mask = spread[a_row[kk] as usize];
-                    if mask == 0 {
-                        continue;
-                    }
-                    let w_row = &bank[kk * n..kk * n + n];
-                    for (acc, &w) in packed.iter_mut().zip(w_row) {
-                        *acc += mask * w as u64;
-                    }
-                }
-                // WCC + S&H + SAR ADC, one conversion per word column per
-                // plane; digital shift-add recombination.
-                let out_row = &mut out[i * n..(i + 1) * n];
-                match local_rng.as_mut() {
-                    None => {
-                        for (o, &p) in out_row.iter_mut().zip(packed.iter()) {
-                            *o += self.lut[(p & 0xFFFF) as usize]
-                                + 2.0 * self.lut[((p >> 16) & 0xFFFF) as usize]
-                                + 4.0 * self.lut[((p >> 32) & 0xFFFF) as usize]
-                                + 8.0 * self.lut[((p >> 48) & 0xFFFF) as usize];
-                        }
-                    }
-                    Some(r) => {
-                        let sigma = self.noise_sigma_codes.unwrap_or(0.0) * lsb;
-                        for (o, &p) in out_row.iter_mut().zip(packed.iter()) {
-                            for b in 0..4u32 {
-                                let mac = ((p >> (16 * b)) & 0xFFFF) as usize;
-                                let noise = r.normal(0.0, sigma) as f32;
-                                *o += (1u32 << b) as f32 * (self.lut[mac] + noise);
-                            }
-                        }
-                    }
-                }
-                k0 = k1;
+        for kk in k0..k1 {
+            let mask = SPREAD[a_row[kk] as usize];
+            if mask == 0 {
+                continue;
             }
+            let w_row = &bank[kk * n + c0..kk * n + c1];
+            for (acc, &w) in packed.iter_mut().zip(w_row) {
+                *acc += mask * w as u64;
+            }
+        }
+        match rng {
+            None => {
+                for (o, &p) in partial.iter_mut().zip(packed.iter()) {
+                    *o = self.lut[(p & 0xFFFF) as usize]
+                        + 2.0 * self.lut[((p >> 16) & 0xFFFF) as usize]
+                        + 4.0 * self.lut[((p >> 32) & 0xFFFF) as usize]
+                        + 8.0 * self.lut[((p >> 48) & 0xFFFF) as usize];
+                }
+            }
+            Some(r) => {
+                let lsb = MAC_FULLSCALE as f64 / ADC_CODES as f64;
+                let sigma = self.noise_sigma_codes.unwrap_or(0.0) * lsb;
+                for (o, &p) in partial.iter_mut().zip(packed.iter()) {
+                    let mut acc = 0.0f32;
+                    for b in 0..4u32 {
+                        let mac = ((p >> (16 * b)) & 0xFFFF) as usize;
+                        let noise = r.normal(0.0, sigma) as f32;
+                        acc += (1u32 << b) as f32 * (self.lut[mac] + noise);
+                    }
+                    *o = acc;
+                }
+            }
+        }
+    }
+
+    /// One unsigned bank MAC: quantized activations [m,k] × bank [k,n]
+    /// (u8 weights 0..=15), with per-(128-row block × bit-plane) ADC
+    /// quantization. Returns dequantized MAC estimates (integer units).
+    /// Runs on [`Self::parallelism`] (serial by default); see
+    /// [`Self::par_bank_mac`].
+    pub fn bank_mac(
+        &self,
+        a: &QuantizedActs,
+        bank: &[u8],
+        n: usize,
+        rng: Option<&mut Pcg64>,
+    ) -> Vec<f32> {
+        self.par_bank_mac(a, bank, n, rng, self.parallelism)
+    }
+
+    /// [`Self::bank_mac`] on an explicit worker-pool width.
+    ///
+    /// Noise streams are derived per unit — one parent draw decorrelates
+    /// successive bank calls (pos vs neg), then unit `u` reads the
+    /// independent PCG stream `(seed, u)` — so neither the thread count
+    /// nor the scheduling order can change a single draw, and the
+    /// unit-order reduce makes the output bit-identical to serial.
+    pub fn par_bank_mac(
+        &self,
+        a: &QuantizedActs,
+        bank: &[u8],
+        n: usize,
+        rng: Option<&mut Pcg64>,
+        par: Parallelism,
+    ) -> Vec<f32> {
+        let (m, k) = (a.m, a.k);
+        assert_eq!(bank.len(), k * n);
+        let grid = UnitGrid::new(m, k, n);
+        let noise_seed = rng.map(|r| {
+            let mut child = r.fork(0x6ba7);
+            child.next_u64()
+        });
+        let mut out = vec![0.0f32; m * n];
+        if grid.units == 0 {
+            return out;
+        }
+        let threads = par.thread_count().min(grid.units);
+        if threads <= 1 {
+            let mut scratch = UnitScratch::new(ARRAY_WORDS.min(n));
+            for u in 0..grid.units {
+                let mut unit_rng = noise_seed.map(|s| Pcg64::new(s, u as u64));
+                self.mac_unit(a, bank, &grid, u, unit_rng.as_mut(), &mut scratch);
+                Self::reduce_unit(&grid, u, &scratch.partial, &mut out);
+            }
+            return out;
+        }
+        let partials = parallel::run_units(threads, grid.units, |u| {
+            let (_, _, ti) = grid.decompose(u);
+            let (c0, c1) = grid.c_range(ti);
+            let mut scratch = UnitScratch::new(c1 - c0);
+            let mut unit_rng = noise_seed.map(|s| Pcg64::new(s, u as u64));
+            self.mac_unit(a, bank, &grid, u, unit_rng.as_mut(), &mut scratch);
+            scratch.partial
+        });
+        for (u, partial) in partials.iter().enumerate() {
+            Self::reduce_unit(&grid, u, partial, &mut out);
         }
         out
     }
 
+    /// Digital shift-add reduce of one unit's partial into the output —
+    /// always invoked in unit order, which fixes the f32 summation order.
+    fn reduce_unit(grid: &UnitGrid, u: usize, partial: &[f32], out: &mut [f32]) {
+        let (i, _, ti) = grid.decompose(u);
+        let (c0, c1) = grid.c_range(ti);
+        let out_row = &mut out[i * grid.n + c0..i * grid.n + c1];
+        for (o, &p) in out_row.iter_mut().zip(partial[..c1 - c0].iter()) {
+            *o += p;
+        }
+    }
+
     /// Full signed PIM matmul: quantize, run both banks, subtract in the
     /// digital domain, rescale. `a` is [m,k] (non-negative, e.g. post-ReLU);
-    /// `w` is [k,n] signed.
+    /// `w` is [k,n] signed. Runs on [`Self::parallelism`].
     pub fn pim_matmul(
         &self,
         a: &[f32],
@@ -150,11 +295,42 @@ impl PimEngine {
         n: usize,
         rng: Option<&mut Pcg64>,
     ) -> Vec<f32> {
+        self.par_matmul(a, m, k, w, n, rng, self.parallelism)
+    }
+
+    /// [`Self::pim_matmul`] on an explicit worker-pool width. Output is
+    /// bit-identical to the serial engine at any thread count.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nvm_in_cache::pim::{parallel::Parallelism, PimEngine};
+    ///
+    /// let eng = PimEngine::tt();
+    /// let a = vec![1.0f32; 2 * 200]; // 200 rows: ragged 128 + 72 blocks
+    /// let w = vec![0.5f32; 200 * 3];
+    /// let serial = eng.pim_matmul(&a, 2, 200, &w, 3, None);
+    /// let par = eng.par_matmul(&a, 2, 200, &w, 3, None, Parallelism::threads(2));
+    /// assert_eq!(serial, par, "bit-identical at any thread count");
+    /// ```
+    // One over the clippy arity threshold: the first six parameters are
+    // the established pim_matmul matmul signature, `par` is the override.
+    #[allow(clippy::too_many_arguments)]
+    pub fn par_matmul(
+        &self,
+        a: &[f32],
+        m: usize,
+        k: usize,
+        w: &[f32],
+        n: usize,
+        rng: Option<&mut Pcg64>,
+        par: Parallelism,
+    ) -> Vec<f32> {
         let qa = quantize_acts(a, m, k);
         let qw = quantize_weights(w, k, n);
         let mut rng = rng;
-        let pos = self.bank_mac(&qa, &qw.pos, n, rng.as_deref_mut());
-        let neg = self.bank_mac(&qa, &qw.neg, n, rng.as_deref_mut());
+        let pos = self.par_bank_mac(&qa, &qw.pos, n, rng.as_deref_mut(), par);
+        let neg = self.par_bank_mac(&qa, &qw.neg, n, rng.as_deref_mut(), par);
         pos.iter()
             .zip(neg.iter())
             .enumerate()
@@ -166,24 +342,63 @@ impl PimEngine {
     pub fn exact_matmul(a: &[f32], m: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; m * n];
         for i in 0..m {
-            for kk in 0..k {
-                let av = a[i * k + kk];
-                if av == 0.0 {
-                    continue;
-                }
-                let w_row = &w[kk * n..kk * n + n];
-                let out_row = &mut out[i * n..i * n + n];
-                for (o, &wv) in out_row.iter_mut().zip(w_row) {
-                    *o += av * wv;
-                }
-            }
+            Self::exact_row(a, k, w, n, i, &mut out[i * n..(i + 1) * n]);
         }
         out
+    }
+
+    /// [`Self::exact_matmul`] with rows fanned out over the worker pool.
+    /// Each output row is an independent unit with a fixed accumulation
+    /// order, so this too is bit-identical to the serial baseline.
+    pub fn par_exact_matmul(
+        a: &[f32],
+        m: usize,
+        k: usize,
+        w: &[f32],
+        n: usize,
+        par: Parallelism,
+    ) -> Vec<f32> {
+        let threads = par.thread_count().min(m);
+        if threads <= 1 {
+            return Self::exact_matmul(a, m, k, w, n);
+        }
+        let rows = parallel::run_units(threads, m, |i| {
+            let mut row = vec![0.0f32; n];
+            Self::exact_row(a, k, w, n, i, &mut row);
+            row
+        });
+        let mut out = Vec::with_capacity(m * n);
+        for row in rows {
+            out.extend_from_slice(&row);
+        }
+        out
+    }
+
+    /// One exact-matmul output row (shared by the serial and tiled paths).
+    fn exact_row(a: &[f32], k: usize, w: &[f32], n: usize, i: usize, out_row: &mut [f32]) {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let w_row = &w[kk * n..kk * n + n];
+            for (o, &wv) in out_row.iter_mut().zip(w_row) {
+                *o += av * wv;
+            }
+        }
     }
 
     /// Ops per full MAC for throughput accounting (MAC = 2 ops).
     pub fn op_count(m: usize, k: usize, n: usize) -> u64 {
         2 * m as u64 * k as u64 * n as u64
+    }
+
+    /// Number of data-independent units one `[m,k] × [k,n]` bank MAC
+    /// fans out to on the worker pool — the single source of truth for
+    /// the tiling grid (`mapping::ConvMapping::engine_units` delegates
+    /// here).
+    pub fn unit_count(m: usize, k: usize, n: usize) -> usize {
+        UnitGrid::new(m, k, n).units
     }
 }
 
@@ -295,6 +510,57 @@ mod tests {
         let x = eng.pim_matmul(&a, m, k, &w, n, Some(&mut Pcg64::seeded(1)));
         let y = eng.pim_matmul(&a, m, k, &w, n, Some(&mut Pcg64::seeded(1)));
         assert_eq!(x, y);
+    }
+
+    #[test]
+    fn par_matmul_bit_identical_to_serial() {
+        // Ragged everywhere: k spans 2 blocks (128 + 72), n spans 2 tiles
+        // (128 + 5). Noiseless and noisy, several thread counts.
+        let mut rng = Pcg64::seeded(21);
+        let (m, k, n) = (5, 200, 133);
+        let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+        for sigma in [None, Some(0.4)] {
+            let eng = match sigma {
+                None => PimEngine::tt(),
+                Some(s) => PimEngine::tt().with_noise(s),
+            };
+            let mk_rng = || sigma.map(|_| Pcg64::seeded(7));
+            let mut base_rng = mk_rng();
+            let serial = eng.pim_matmul(&a, m, k, &w, n, base_rng.as_mut());
+            for t in [2usize, 3, 7] {
+                let mut r = mk_rng();
+                let par =
+                    eng.par_matmul(&a, m, k, &w, n, r.as_mut(), Parallelism::threads(t));
+                assert_eq!(serial, par, "sigma={sigma:?} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_exact_matmul_bit_identical() {
+        let mut rng = Pcg64::seeded(33);
+        let (m, k, n) = (7, 50, 13);
+        let a = rand_mat(&mut rng, m * k, -1.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -1.0, 1.0);
+        let serial = PimEngine::exact_matmul(&a, m, k, &w, n);
+        for t in [2usize, 4] {
+            let par = PimEngine::par_exact_matmul(&a, m, k, &w, n, Parallelism::threads(t));
+            assert_eq!(serial, par, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn engine_parallelism_config_matches_explicit() {
+        let mut rng = Pcg64::seeded(55);
+        let (m, k, n) = (4, 130, 6);
+        let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+        let serial = PimEngine::tt().pim_matmul(&a, m, k, &w, n, None);
+        let threaded = PimEngine::tt()
+            .with_parallelism(Parallelism::threads(3))
+            .pim_matmul(&a, m, k, &w, n, None);
+        assert_eq!(serial, threaded);
     }
 
     #[test]

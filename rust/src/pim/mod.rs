@@ -12,11 +12,17 @@
 //! * [`engine`] — the fast vectorized PIM executor (integer bit-plane
 //!   matmuls + an ADC LUT) used by the figures, benches, and the
 //!   coordinator's non-PJRT fallback path.
+//! * [`parallel`] — the tiled worker pool (std::thread + mpsc) the engine
+//!   schedules its (row-block × bit-plane × output-tile) units on; results
+//!   are bit-identical to the serial path at any thread count. See
+//!   PERFORMANCE.md.
 
 pub mod engine;
+pub mod parallel;
 pub mod quant;
 pub mod transfer;
 
 pub use engine::PimEngine;
+pub use parallel::Parallelism;
 pub use quant::{QuantizedActs, QuantizedWeights};
 pub use transfer::TransferModel;

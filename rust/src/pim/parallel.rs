@@ -1,0 +1,175 @@
+//! Tiled parallel execution for the PIM hot path: a hand-rolled,
+//! dependency-free worker pool (std::thread + mpsc — the same offline-build
+//! constraint as `coordinator/server.rs`; rayon is unavailable).
+//!
+//! The engine's bank MAC factors into data-independent *units* — one per
+//! (output row × 128-row block × 128-word output tile); the four activation
+//! bit-planes of a unit ride together inside its packed u64 accumulator
+//! (EXPERIMENTS.md §Perf). Units execute on the pool in whatever order the
+//! workers grab them; the digital shift-add reduce then folds the per-unit
+//! partials back in *deterministic unit order*, and every unit derives its
+//! own [`crate::util::rng::Pcg64`] noise stream from its index, so the
+//! result is bit-identical to the serial engine at any thread count
+//! (pinned by `rust/tests/parallel_parity.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Worker-pool width for tiled PIM execution.
+///
+/// Serial by default, so every existing call path is unchanged until a
+/// caller opts in (`repro bench --threads N`, `StubRuntime`'s
+/// [`crate::runtime::Runtime::set_parallelism`], `fleet-sim --threads`).
+///
+/// # Examples
+///
+/// ```
+/// use nvm_in_cache::pim::parallel::Parallelism;
+///
+/// assert_eq!(Parallelism::default().thread_count(), 1);
+/// assert_eq!(Parallelism::threads(4).thread_count(), 4);
+/// assert_eq!(Parallelism::threads(0).thread_count(), 1, "clamped to ≥1");
+/// assert!(Parallelism::auto().thread_count() >= 1);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// Single-threaded execution (the default: identical to the historical
+    /// serial engine in both results and scheduling).
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// Exactly `n` worker threads (clamped to ≥ 1).
+    pub fn threads(n: usize) -> Parallelism {
+        Parallelism { threads: n.max(1) }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> Parallelism {
+        Parallelism::threads(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
+
+    /// Configured worker count (≥ 1).
+    pub fn thread_count(&self) -> usize {
+        self.threads
+    }
+
+    /// Is this the serial configuration?
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Parallelism {
+        Parallelism::serial()
+    }
+}
+
+/// Execute `f(0), f(1), …, f(n_units − 1)` on a pool of `threads` workers
+/// and return the results **in unit order** (so any reduction over them is
+/// deterministic regardless of which worker ran which unit).
+///
+/// Work is distributed dynamically through a shared atomic cursor; results
+/// travel back over an mpsc channel. With `threads ≤ 1` (or a single unit)
+/// the closure runs inline on the caller's thread — no pool, no overhead.
+///
+/// A panic inside `f` propagates to the caller when the scope joins.
+///
+/// # Examples
+///
+/// ```
+/// use nvm_in_cache::pim::parallel::run_units;
+///
+/// let squares = run_units(4, 10, |u| u * u);
+/// assert_eq!(squares, (0..10).map(|u| u * u).collect::<Vec<_>>());
+/// ```
+pub fn run_units<T, F>(threads: usize, n_units: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n_units <= 1 {
+        return (0..n_units).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n_units);
+    slots.resize_with(n_units, || None);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n_units) {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let u = next.fetch_add(1, Ordering::Relaxed);
+                if u >= n_units {
+                    break;
+                }
+                if tx.send((u, f(u))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (u, value) in rx {
+            slots[u] = Some(value);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|v| v.expect("every unit completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let serial = run_units(1, 37, |u| u as u64 * 3 + 1);
+        for t in [2, 3, 7, 16] {
+            assert_eq!(run_units(t, 37, |u| u as u64 * 3 + 1), serial, "t={t}");
+        }
+    }
+
+    #[test]
+    fn results_are_in_unit_order() {
+        // Make late units cheap and early units slow so completion order
+        // inverts submission order — the output must still be by index.
+        let out = run_units(4, 12, |u| {
+            if u < 4 {
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            }
+            u
+        });
+        assert_eq!(out, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_threads_than_units() {
+        assert_eq!(run_units(16, 3, |u| u + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_units() {
+        assert!(run_units(4, 0, |u| u).is_empty());
+        assert!(run_units(1, 0, |u| u).is_empty());
+    }
+
+    #[test]
+    fn parallelism_constructors() {
+        assert!(Parallelism::serial().is_serial());
+        assert!(!Parallelism::threads(3).is_serial());
+        assert_eq!(Parallelism::threads(3).thread_count(), 3);
+        assert!(Parallelism::auto().thread_count() >= 1);
+        assert_eq!(Parallelism::default(), Parallelism::serial());
+    }
+}

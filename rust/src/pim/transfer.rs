@@ -32,6 +32,23 @@ pub const V_SAMP_MAX: f64 = 0.655;
 pub const V_SAMP_MIN: f64 = 0.092;
 
 /// The transfer model for one corner.
+///
+/// # Examples
+///
+/// Quantize an integer MAC through the full analog pipeline (current →
+/// sampled voltage → 6-bit SAR code → MAC estimate); the calibrated ADC
+/// keeps the estimate within ~1.5 LSB (≈ 46 integer units) of the ideal:
+///
+/// ```
+/// use nvm_in_cache::pim::transfer::MAC_FULLSCALE;
+/// use nvm_in_cache::pim::TransferModel;
+///
+/// let tt = TransferModel::tt();
+/// for mac in [0.0, 480.0, 960.0, MAC_FULLSCALE as f64] {
+///     let estimate = tt.quantize_mac(mac, true);
+///     assert!((estimate - mac).abs() < 46.0, "mac={mac} estimate={estimate}");
+/// }
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct TransferModel {
     /// Process corner the model describes.

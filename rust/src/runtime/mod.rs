@@ -23,6 +23,7 @@
 //! outputs must agree with the Rust-native ground truth ([`crate::nn`] +
 //! [`crate::pim`]).
 
+use crate::pim::parallel::Parallelism;
 use crate::{Error, Result};
 
 pub mod artifact;
@@ -96,6 +97,12 @@ pub trait Runtime {
     /// [`crate::coordinator::server::RuntimeExecutor`]).
     fn batch(&self) -> usize;
 
+    /// Configure the worker-pool width used by subsequent forwards.
+    /// Outputs are bit-identical at any width ([`crate::pim::parallel`]),
+    /// so this is purely a throughput knob; backends without a native
+    /// thread pool (e.g. PJRT, which threads internally) may ignore it.
+    fn set_parallelism(&mut self, _par: Parallelism) {}
+
     /// Load (and compile, where applicable) a model variant from the
     /// artifact directory. Idempotent.
     fn load_variant(&mut self, dir: &ArtifactDir, variant: ModelVariant) -> Result<()>;
@@ -153,6 +160,14 @@ pub fn default_runtime(batch: usize) -> Result<Box<dyn Runtime>> {
     return Ok(Box::new(client::PjrtRuntime::new(batch)?));
     #[cfg(not(feature = "pjrt"))]
     Ok(Box::new(StubRuntime::new(batch)))
+}
+
+/// [`default_runtime`] with the worker-pool width applied up front (the
+/// `repro serve`/`repro bench --threads` path).
+pub fn default_runtime_par(batch: usize, par: Parallelism) -> Result<Box<dyn Runtime>> {
+    let mut rt = default_runtime(batch)?;
+    rt.set_parallelism(par);
+    Ok(rt)
 }
 
 #[cfg(test)]

@@ -28,6 +28,7 @@ use std::rc::Rc;
 
 use crate::nn::resnet::Params;
 use crate::nn::{ForwardMode, ResNet, Tensor};
+use crate::pim::parallel::Parallelism;
 use crate::pim::quant::QuantizedActs;
 use crate::pim::PimEngine;
 use crate::{Error, Result};
@@ -52,6 +53,10 @@ pub struct StubRuntime {
     by_file: HashMap<&'static str, Rc<ResNet>>,
     kernels: HashSet<String>,
     engine: PimEngine,
+    /// Worker-pool width applied to every forward and MAC tile
+    /// ([`Runtime::set_parallelism`]); outputs are bit-identical at any
+    /// width, so this only changes throughput.
+    parallelism: Parallelism,
     noise_sigma: f64,
     /// Set by [`Self::with_noise_sigma`]; a manifest `noise_sigma` never
     /// overrides an explicit caller choice.
@@ -68,6 +73,7 @@ impl StubRuntime {
             by_file: HashMap::new(),
             kernels: HashSet::new(),
             engine: PimEngine::tt(),
+            parallelism: Parallelism::serial(),
             noise_sigma: DEFAULT_NOISE_SIGMA,
             noise_sigma_overridden: false,
         }
@@ -78,6 +84,12 @@ impl StubRuntime {
     pub fn with_noise_sigma(mut self, sigma_codes: f64) -> StubRuntime {
         self.noise_sigma = sigma_codes;
         self.noise_sigma_overridden = true;
+        self
+    }
+
+    /// Builder form of [`Runtime::set_parallelism`].
+    pub fn with_parallelism(mut self, par: Parallelism) -> StubRuntime {
+        Runtime::set_parallelism(&mut self, par);
         self
     }
 
@@ -113,6 +125,11 @@ impl Runtime for StubRuntime {
 
     fn batch(&self) -> usize {
         self.batch
+    }
+
+    fn set_parallelism(&mut self, par: Parallelism) {
+        self.parallelism = par;
+        self.engine.parallelism = par;
     }
 
     fn load_variant(&mut self, dir: &ArtifactDir, variant: ModelVariant) -> Result<()> {
@@ -172,7 +189,9 @@ impl Runtime for StubRuntime {
             ModelVariant::PimHw => ForwardMode::PimHw,
         };
         let x = Tensor::from_vec(&[self.batch, h, w, c], images.to_vec());
-        Ok(net.forward(&x, mode, Self::seed_from_key(key))?.data)
+        Ok(net
+            .forward_par(&x, mode, Self::seed_from_key(key), self.parallelism)?
+            .data)
     }
 
     fn pim_mac_tile(&self, a: &[f32], w: &[f32]) -> Result<Vec<f32>> {
@@ -267,6 +286,28 @@ mod tests {
         let c = rt.forward(ModelVariant::PimNoise, &x, (16, 16, 3), Some([3, 4])).unwrap();
         assert_eq!(a, b, "same key ⇒ identical logits");
         assert_ne!(a, c, "different key ⇒ different noise");
+    }
+
+    #[test]
+    fn parallelism_is_a_pure_throughput_knob() {
+        // Same variant, same inputs: a threaded stub must produce
+        // bit-identical logits and predictions to the serial stub.
+        let x = images(2, 9);
+        let mut serial = StubRuntime::new(2);
+        serial.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 3));
+        let mut threaded = StubRuntime::new(2).with_parallelism(Parallelism::threads(4));
+        threaded.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 3));
+        let a = serial.forward(ModelVariant::PimHw, &x, (16, 16, 3), None).unwrap();
+        let b = threaded.forward(ModelVariant::PimHw, &x, (16, 16, 3), None).unwrap();
+        assert_eq!(a, b);
+        // The MAC-tile kernel path follows the configured width too.
+        serial.load_kernel_emulated("pim_mac.hlo.txt").unwrap();
+        threaded.load_kernel_emulated("pim_mac.hlo.txt").unwrap();
+        let tile = vec![1.0f32; 128 * 128];
+        assert_eq!(
+            serial.pim_mac_tile(&tile, &tile).unwrap(),
+            threaded.pim_mac_tile(&tile, &tile).unwrap()
+        );
     }
 
     #[test]

@@ -162,6 +162,39 @@ impl Bencher {
     pub fn to_json(&self) -> Json {
         Json::Arr(self.results.iter().map(|r| r.to_json()).collect())
     }
+
+    /// Deterministic workload descriptors only — the `comparison` section
+    /// of the `BENCH_*.json` trajectory. Every field is a pure function of
+    /// the benchmark definitions (name + per-iteration item count; the
+    /// adaptive iteration count and all timings are wall-clock-dependent
+    /// and belong in [`Self::to_json`]), and object keys serialize sorted,
+    /// so trajectory files diff cleanly across PRs.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nvm_in_cache::util::bench::Bencher;
+    ///
+    /// let mut b = Bencher::quick();
+    /// b.bench_with_items("add", 1.0, || 1 + 1);
+    /// let stable = b.comparison_json().to_string();
+    /// assert!(stable.contains("\"name\":\"add\""));
+    /// assert!(!stable.contains("mean_s"), "no wall-clock fields");
+    /// ```
+    pub fn comparison_json(&self) -> Json {
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    let mut pairs = vec![("name", Json::Str(r.name.clone()))];
+                    if let Some(items) = r.items_per_iter {
+                        pairs.push(("items_per_iter", Json::Num(items)));
+                    }
+                    Json::obj(pairs)
+                })
+                .collect(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +235,22 @@ mod tests {
         assert_eq!(rec.get("name").unwrap().as_str(), Some("tiny"));
         assert!(rec.get("mean_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(rec.get("items_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn comparison_json_is_run_invariant() {
+        // Two runs of the same benchmark definitions must serialize the
+        // comparison section byte-identically (BENCH_*.json diffability).
+        let run = || {
+            let mut b = Bencher::quick();
+            b.bench_with_items("mac", 64.0, || (0..64u64).sum::<u64>());
+            b.bench("plain", || 7 * 6);
+            b.comparison_json().to_string()
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(!a.contains("_s\""), "no timing fields leak: {a}");
+        assert!(!a.contains("\"n\""), "no adaptive iteration count: {a}");
     }
 
     #[test]

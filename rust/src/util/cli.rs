@@ -24,6 +24,19 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of raw arguments (excluding argv[0]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nvm_in_cache::util::cli::Args;
+    ///
+    /// let args = Args::parse(
+    ///     ["bench", "--threads", "4", "--json"].map(String::from),
+    /// );
+    /// assert_eq!(args.subcommand.as_deref(), Some("bench"));
+    /// assert_eq!(args.get_usize("threads", 1).unwrap(), 4);
+    /// assert!(args.flag("json"));
+    /// ```
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
         let mut args = Args::default();
         let mut iter = raw.into_iter().peekable();

@@ -5,6 +5,23 @@
 //! a seeded [`Pcg64`], so every figure and test is bit-reproducible.
 
 /// PCG-XSL-RR 128/64 generator (O'Neill 2014).
+///
+/// # Examples
+///
+/// Same (seed, stream) ⇒ identical draws; distinct streams are
+/// independent — the property the tiled PIM engine uses to give every
+/// execution unit its own noise stream (`pim::parallel`):
+///
+/// ```
+/// use nvm_in_cache::util::rng::Pcg64;
+///
+/// let mut a = Pcg64::new(42, 7);
+/// let mut b = Pcg64::new(42, 7);
+/// assert_eq!(a.next_u64(), b.next_u64());
+///
+/// let mut other_stream = Pcg64::new(42, 8);
+/// assert_ne!(a.next_u64(), other_stream.next_u64());
+/// ```
 #[derive(Clone, Debug)]
 pub struct Pcg64 {
     state: u128,

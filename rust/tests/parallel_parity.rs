@@ -1,0 +1,120 @@
+//! Tiled-execution parity: `pim::parallel` must be a pure throughput knob.
+//!
+//! The contract (PERFORMANCE.md): for any thread count, every layer that
+//! routes matmuls through the worker pool — the engine itself, the dense
+//! baseline, the ResNet forward, the stub runtime — produces output
+//! bit-identical to the serial path, noiseless and noisy alike. These
+//! tests pin that contract at the integration level; the unit grids and
+//! RNG-stream derivation they exercise are described in
+//! `rust/src/pim/parallel.rs`.
+
+use nvm_in_cache::nn::resnet::test_params;
+use nvm_in_cache::nn::{ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::parallel::Parallelism;
+use nvm_in_cache::pim::PimEngine;
+use nvm_in_cache::runtime::{ModelVariant, Runtime, StubRuntime};
+use nvm_in_cache::util::rng::Pcg64;
+
+const THREADS: [usize; 3] = [1, 2, 7];
+
+fn rand_mat(rng: &mut Pcg64, len: usize, lo: f64, hi: f64) -> Vec<f32> {
+    (0..len).map(|_| rng.range(lo, hi) as f32).collect()
+}
+
+/// Acceptance: `par_matmul` output is bit-identical to the serial engine
+/// for threads ∈ {1, 2, 7}, on noiseless and noisy configurations.
+#[test]
+fn par_matmul_bit_identical_noiseless_and_noisy() {
+    let mut rng = Pcg64::seeded(100);
+    // Ragged shape: k spans 3 row blocks (128 + 128 + 44), n spans 2
+    // output tiles (128 + 29).
+    let (m, k, n) = (6, 300, 157);
+    let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+    let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+    for sigma in [None, Some(0.5)] {
+        let eng = match sigma {
+            None => PimEngine::tt(),
+            Some(s) => PimEngine::tt().with_noise(s),
+        };
+        let mut serial_rng = sigma.map(|_| Pcg64::seeded(9));
+        let serial = eng.pim_matmul(&a, m, k, &w, n, serial_rng.as_mut());
+        for t in THREADS {
+            let mut par_rng = sigma.map(|_| Pcg64::seeded(9));
+            let par = eng.par_matmul(
+                &a,
+                m,
+                k,
+                &w,
+                n,
+                par_rng.as_mut(),
+                Parallelism::threads(t),
+            );
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&serial), bits(&par), "sigma={sigma:?} threads={t}");
+            // The caller-visible RNG must advance identically too, so a
+            // serial and a parallel run stay interchangeable mid-stream.
+            // (Probe on a clone: `serial_rng` itself must stay untouched
+            // for the next thread count.)
+            if let (Some(sr), Some(pr)) = (serial_rng.as_ref(), par_rng.as_mut()) {
+                let mut probe = sr.clone();
+                assert_eq!(probe.next_u64(), pr.next_u64(), "rng state diverged at t={t}");
+            }
+        }
+    }
+}
+
+/// The dense fp32 baseline path is row-parallel and bit-exact as well.
+#[test]
+fn par_exact_matmul_bit_identical() {
+    let mut rng = Pcg64::seeded(200);
+    let (m, k, n) = (9, 77, 31);
+    let a = rand_mat(&mut rng, m * k, -1.0, 1.0);
+    let w = rand_mat(&mut rng, k * n, -1.0, 1.0);
+    let serial = PimEngine::exact_matmul(&a, m, k, &w, n);
+    for t in THREADS {
+        let par = PimEngine::par_exact_matmul(&a, m, k, &w, n, Parallelism::threads(t));
+        assert_eq!(serial, par, "threads={t}");
+    }
+}
+
+/// End-to-end: the full ResNet forward (every mode, including the
+/// hardware-true noisy pipeline) is bit-identical across thread counts.
+#[test]
+fn resnet_forward_bit_identical_across_threads() {
+    let net = ResNet::new(test_params(8, 10, 42));
+    let mut rng = Pcg64::seeded(300);
+    let x = Tensor::from_vec(
+        &[2, 16, 16, 3],
+        (0..2 * 16 * 16 * 3).map(|_| rng.f64() as f32).collect(),
+    );
+    for mode in [
+        ForwardMode::Baseline,
+        ForwardMode::Pim,
+        ForwardMode::PimNoise(0.4),
+        ForwardMode::PimHw,
+        ForwardMode::PimHwNoise(0.4),
+    ] {
+        let serial = net.forward(&x, mode, 7).unwrap();
+        for t in THREADS {
+            let par = net.forward_par(&x, mode, 7, Parallelism::threads(t)).unwrap();
+            assert_eq!(serial.data, par.data, "{mode:?} threads={t}");
+        }
+    }
+}
+
+/// The stub runtime honors `set_parallelism` mid-flight without changing
+/// a single logit (the serving stack's `RuntimeExecutor` re-applies it
+/// before every batch).
+#[test]
+fn stub_runtime_set_parallelism_is_transparent() {
+    let mut rt = StubRuntime::new(2);
+    rt.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 5));
+    let mut rng = Pcg64::seeded(400);
+    let images: Vec<f32> = (0..2 * 16 * 16 * 3).map(|_| rng.f64() as f32).collect();
+    let baseline = rt.forward(ModelVariant::PimHw, &images, (16, 16, 3), None).unwrap();
+    for t in THREADS {
+        rt.set_parallelism(Parallelism::threads(t));
+        let threaded = rt.forward(ModelVariant::PimHw, &images, (16, 16, 3), None).unwrap();
+        assert_eq!(baseline, threaded, "threads={t}");
+    }
+}

@@ -109,6 +109,50 @@ fn prop_engine_block_additivity() {
     }
 }
 
+/// Property: tiled parallel execution is bit-identical to the serial
+/// engine over ragged tile boundaries — random shapes where k is NOT a
+/// multiple of 128 (partial row blocks), n is odd and may straddle the
+/// 128-word output-tile edge, with noise on or off and a random thread
+/// count. The worker pool must never change a single bit.
+#[test]
+fn prop_par_matmul_parity_ragged_tiles() {
+    use nvm_in_cache::pim::parallel::Parallelism;
+    for seed in 0..24 {
+        let mut rng = Pcg64::seeded(13_000 + seed);
+        let m = 1 + rng.below(5);
+        // k in [1, 320] skipping multiples of 128 ⇒ always a ragged block.
+        let k = {
+            let mut k = 1 + rng.below(320);
+            if k % ARRAY_ROWS == 0 {
+                k += 1;
+            }
+            k
+        };
+        let n = 1 + 2 * rng.below(80); // odd, up to 159 ⇒ can straddle 128
+        let threads = 2 + rng.below(6);
+        let noisy = rng.below(2) == 0;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range(0.0, 2.0) as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let eng = if noisy { PimEngine::tt().with_noise(0.5) } else { PimEngine::tt() };
+        let mut serial_rng = noisy.then(|| Pcg64::seeded(seed));
+        let serial = eng.pim_matmul(&a, m, k, &w, n, serial_rng.as_mut());
+        let mut par_rng = noisy.then(|| Pcg64::seeded(seed));
+        let par = eng.par_matmul(
+            &a,
+            m,
+            k,
+            &w,
+            n,
+            par_rng.as_mut(),
+            Parallelism::threads(threads),
+        );
+        assert_eq!(
+            serial, par,
+            "seed {seed}: m={m} k={k} n={n} threads={threads} noisy={noisy}"
+        );
+    }
+}
+
 /// Property: the SAR ADC equals ideal round-to-nearest for arbitrary
 /// random reference pairs (binary search correctness).
 #[test]

@@ -1,14 +1,21 @@
 #!/usr/bin/env bash
 # Machine-readable perf-trajectory record for this PR: runs the hot-path
-# micro-benchmarks plus the fleet-sim summary and writes BENCH_PR3.json at
-# the repository root (so BENCH_*.json accumulates across PRs).
+# micro-benchmarks (serial vs N-thread tiled execution) plus the fleet-sim
+# summary and writes BENCH_PR4.json at the repository root (so
+# BENCH_*.json accumulates across PRs — see PERFORMANCE.md).
 #
-# Usage: scripts/bench.sh [output.json]
+# The record has two sections: `comparison` (deterministic — workload
+# descriptors, bit-exactness parity verdicts, the simulated-clock fleet
+# report) diffs cleanly across PRs; `measured` carries the wall-clock
+# numbers for this machine.
+#
+# Usage: scripts/bench.sh [output.json] [threads]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-OUT="${1:-BENCH_PR3.json}"
+OUT="${1:-BENCH_PR4.json}"
+THREADS="${2:-4}"
 
-cargo run --release --bin repro -- bench --json "$OUT"
-echo "bench: wrote $OUT"
+cargo run --release --bin repro -- bench --json "$OUT" --threads "$THREADS"
+echo "bench: wrote $OUT (threads=$THREADS)"

@@ -2,9 +2,12 @@
 # Tier-1 verification gate for the NVM-in-Cache reproduction:
 #   1. release build (lib + repro bin + examples + benches)
 #   2. full test suite
-#   3. rustdoc build (crate carries #![warn(missing_docs)])
-#   4. cargo fmt --check (when the rustfmt component is installed)
-#   5. cargo clippy -- -D warnings (when the clippy component is installed)
+#   3. doctests, explicitly (the runnable `# Examples` on the key public
+#      APIs — PimEngine, TransferModel, place_from, FleetRouter, Server, …)
+#   4. rustdoc build with warnings denied (crate carries
+#      #![warn(missing_docs)]; broken intra-doc links fail the gate)
+#   5. cargo fmt --check (when the rustfmt component is installed)
+#   6. cargo clippy -- -D warnings (when the clippy component is installed)
 #
 # Run from anywhere inside the repository; fully offline.
 set -euo pipefail
@@ -17,8 +20,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-echo "== cargo doc --no-deps =="
-cargo doc --no-deps
+echo "== cargo test --doc =="
+cargo test --doc -q
+
+echo "== RUSTDOCFLAGS=-D warnings cargo doc --no-deps =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
