@@ -95,8 +95,14 @@ fn main() {
     // ones.
     let batch = 4;
     let mut rt = StubRuntime::new(batch);
-    rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1));
-    rt.load_variant_params(ModelVariant::Pim, test_params(8, 10, 1));
+    // load_variant_params is the compile step: each network is compiled
+    // into a weight program once (at the depth the variant reads — these
+    // fp32/emulation variants skip the 4-bit bank packing); every forward
+    // below is pure prepared execution (see ARCHITECTURE.md §program).
+    rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1))
+        .expect("compile baseline");
+    rt.load_variant_params(ModelVariant::Pim, test_params(8, 10, 1))
+        .expect("compile pim");
     println!("runtime backend: {}", rt.platform());
     let images: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.f64() as f32).collect();
     let base = rt

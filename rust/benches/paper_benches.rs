@@ -67,6 +67,12 @@ fn main() {
         b.bench_with_items(&format!("engine_pim_matmul_{m}x{k}x{n}"), macs, || {
             eng.pim_matmul(&a, m, k, &w, n, None)
         });
+        // The execute-many half of the compile-once split: same MAC on a
+        // prepared weight program (no per-call quantize/pack).
+        let program = eng.prepare(&w, k, n);
+        b.bench_with_items(&format!("engine_matmul_prepared_{m}x{k}x{n}"), macs, || {
+            eng.matmul_prepared(&a, m, &program, None)
+        });
     }
 
     println!("\n=== Cell-accurate sub-array full 4b MAC ===");

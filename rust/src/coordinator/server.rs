@@ -233,18 +233,74 @@ impl Drop for Server {
     }
 }
 
-/// Native-engine executor (no runtime backend): runs the Rust ResNet in a
-/// forward mode directly. The worker-pool width rides on the network
-/// itself ([`crate::nn::ResNet::with_parallelism`]).
+/// Native-engine executor (no runtime backend): serves a compiled weight
+/// program ([`crate::pim::program::CompiledNet`]) in a fixed forward
+/// mode. The program is compiled **once** (at construction, or shared in
+/// via [`NativeExecutor::from_program`] — e.g. across campaign rewarms in
+/// `fleet::sim`) and every batch is pure prepared execution over the
+/// executor's reusable scratch pool; the worker-pool width rides on the
+/// program ([`crate::pim::program::CompiledNet::parallelism`]).
 pub struct NativeExecutor {
-    /// The network.
-    pub net: crate::nn::ResNet,
+    /// The compiled weight program (shareable across executors/threads).
+    pub program: std::sync::Arc<crate::pim::program::CompiledNet>,
     /// Forward mode (baseline / PIM emulation / hardware-true).
     pub mode: crate::nn::ForwardMode,
     /// Image dimensions (h, w, c).
     pub dims: (usize, usize, usize),
     /// Noise seed, bumped per batch.
     pub seed: u64,
+    scratch: crate::pim::program::ScratchPool,
+}
+
+impl NativeExecutor {
+    /// Compile `net` once and wrap it in an executor. Mode-aware: only
+    /// the hardware-true modes read the quantized banks, so the other
+    /// modes compile dense-only and skip the bank quantize/pack (and its
+    /// resident memory) entirely.
+    pub fn new(
+        net: &crate::nn::ResNet,
+        mode: crate::nn::ForwardMode,
+        dims: (usize, usize, usize),
+        seed: u64,
+    ) -> Result<NativeExecutor> {
+        use crate::nn::ForwardMode;
+        use crate::pim::program::CompiledNet;
+        let program = match mode {
+            ForwardMode::PimHw | ForwardMode::PimHwNoise(_) => net.compile()?,
+            _ => CompiledNet::compile_dense(net)?,
+        };
+        Ok(Self::from_program(std::sync::Arc::new(program), mode, dims, seed))
+    }
+
+    /// Wrap an already-compiled program — the execute-many form: the same
+    /// `Arc` can back many executors and survive server teardown/rewarm
+    /// without recompiling.
+    ///
+    /// Debug builds reject a hardware-true mode paired with a dense-only
+    /// program up front: that combination would silently re-prepare every
+    /// layer on every batch (the exact pathology the program layer
+    /// removes).
+    pub fn from_program(
+        program: std::sync::Arc<crate::pim::program::CompiledNet>,
+        mode: crate::nn::ForwardMode,
+        dims: (usize, usize, usize),
+        seed: u64,
+    ) -> NativeExecutor {
+        use crate::nn::ForwardMode;
+        debug_assert!(
+            !matches!(mode, ForwardMode::PimHw | ForwardMode::PimHwNoise(_))
+                || program.fully_prepared(),
+            "hardware-true NativeExecutor requires a fully prepared program \
+             (use ResNet::compile, not CompiledNet::compile_dense)"
+        );
+        NativeExecutor {
+            program,
+            mode,
+            dims,
+            seed,
+            scratch: crate::pim::program::ScratchPool::new(),
+        }
+    }
 }
 
 impl Executor for NativeExecutor {
@@ -252,7 +308,17 @@ impl Executor for NativeExecutor {
         let (h, w, c) = self.dims;
         let x = crate::nn::Tensor::from_vec(&[n, h, w, c], images.to_vec());
         self.seed = self.seed.wrapping_add(1);
-        self.net.classify(&x, self.mode, self.seed)
+        // Unconditional: a correctly constructed executor (any mode) is
+        // prepare-free per batch — from_program rejects the hardware-true
+        // + dense-only mismatch, and the non-hw modes never read banks.
+        let before = crate::pim::program::prepare_count();
+        let preds = self.program.classify(&x, self.mode, self.seed, &mut self.scratch);
+        debug_assert_eq!(
+            crate::pim::program::prepare_count(),
+            before,
+            "steady-state serving must not re-prepare weights"
+        );
+        Ok(preds)
     }
 
     fn image_elems(&self) -> usize {
@@ -263,6 +329,11 @@ impl Executor for NativeExecutor {
 /// Executor over any [`crate::runtime::Runtime`] backend with a loaded
 /// fixed-batch model variant; short batches are zero-padded up to the
 /// backend's batch size.
+///
+/// `Runtime::load_variant` is the compile step: the backend holds one
+/// compiled program per model config across requests (the stub caches a
+/// [`crate::pim::program::CompiledNet`] per weights file), so the
+/// steady-state loop here is pure prepared execution.
 pub struct RuntimeExecutor {
     /// The backend (stub by default; PJRT behind the `pjrt` feature).
     pub runtime: Box<dyn crate::runtime::Runtime>,

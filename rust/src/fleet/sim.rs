@@ -125,6 +125,14 @@ pub struct LiveSummary {
     pub responses: u64,
     /// Batches executed.
     pub batches: u64,
+    /// Weight programs compiled — exactly one per *serving* (tenant,
+    /// replica) (replicas with an empty request share skip compiling);
+    /// the compiled program is retained across campaign rewarm segments.
+    pub compilations: u64,
+    /// Serving segments executed (each segment tears the server down and
+    /// rebuilds it from the retained program, like a campaign rewarm;
+    /// empty segments build no server and are not counted).
+    pub segments: u64,
 }
 
 /// The full fleet-simulation report.
@@ -230,8 +238,9 @@ impl FleetReport {
         if let Some(live) = &self.live {
             let _ = writeln!(
                 s,
-                "live pass: {} requests → {} responses in {} batches",
-                live.requests, live.responses, live.batches
+                "live pass: {} requests → {} responses in {} batches | \
+                 {} programs compiled once, reused over {} rewarm segments",
+                live.requests, live.responses, live.batches, live.compilations, live.segments
             );
         }
         s
@@ -281,6 +290,15 @@ impl FleetReport {
 pub struct FleetSim;
 
 impl FleetSim {
+    /// Campaign-rewarm serving segments each live-pass replica runs: the
+    /// server (threads, batcher, executor) is torn down and rebuilt
+    /// between segments while the compiled weight program is retained —
+    /// so, when every replica has requests to serve,
+    /// `compilations == Σ replicas` while
+    /// `segments == LIVE_SEGMENTS · Σ replicas`. Replicas or segments
+    /// whose request share is empty neither compile nor count.
+    pub const LIVE_SEGMENTS: usize = 2;
+
     /// Run the full simulation for `config`.
     pub fn run(config: &FleetSimConfig) -> Result<FleetReport> {
         if config.tenants == 0 {
@@ -540,17 +558,30 @@ impl FleetSim {
         report
     }
 
-    /// Drive a small request wave through one real
-    /// [`crate::coordinator::Server`] per tenant, each running a PIM-mode
-    /// [`crate::coordinator::NativeExecutor`] over a synthetic network so
-    /// the wave exercises the tiled matmul path on `parallelism` workers
-    /// (threads + mpsc; wall-clock, so the numbers are integration
-    /// evidence, not part of the deterministic report).
+    /// Drive a small request wave through real
+    /// [`crate::coordinator::Server`] instances — one per (tenant,
+    /// replica) per rewarm segment — each running a hardware-true
+    /// PimHw-mode [`crate::coordinator::NativeExecutor`] over a synthetic
+    /// network, so the wave serves *from the prepared quantized banks*
+    /// on `parallelism` workers (threads + mpsc; wall-clock, so the
+    /// numbers are integration evidence, not part of the deterministic
+    /// report).
+    ///
+    /// The compile-once / execute-many contract runs end to end here:
+    /// each serving (tenant, replica) compiles its weight program
+    /// **once** (mirroring one-time RRAM programming), then the program
+    /// is reused across [`Self::LIVE_SEGMENTS`] campaign-rewarm segments
+    /// — the server is torn down and rebuilt between segments, the
+    /// `Arc`'d program is not. `rust/tests/fleet.rs` pins
+    /// `compilations == Σ replicas < segments` for waves large enough
+    /// that every replica serves.
     fn live_pass(
         registry: &ModelRegistry,
         requests_per_tenant: usize,
         parallelism: crate::pim::parallel::Parallelism,
     ) -> Result<LiveSummary> {
+        use std::sync::Arc;
+
         use crate::coordinator::server::{Executor, NativeExecutor, Server, ServerConfig};
         use crate::coordinator::{BatcherConfig, InferenceRequest};
         use crate::nn::resnet::test_params;
@@ -558,48 +589,88 @@ impl FleetSim {
 
         const DIMS: (usize, usize, usize) = (16, 16, 3);
         let elems = DIMS.0 * DIMS.1 * DIMS.2;
-        let mut summary = LiveSummary { requests: 0, responses: 0, batches: 0 };
+        let mut summary =
+            LiveSummary { requests: 0, responses: 0, batches: 0, compilations: 0, segments: 0 };
         for tenant in &registry.tenants {
             let tenant_seed = tenant.id as u64;
-            let server = Server::start(
-                Box::new(move || {
-                    let net = ResNet::new(test_params(8, 10, 1 + tenant_seed))
-                        .with_parallelism(parallelism);
-                    Ok(Box::new(NativeExecutor {
-                        net,
-                        mode: ForwardMode::Pim,
-                        dims: DIMS,
-                        seed: 1,
-                    }) as Box<dyn Executor>)
-                }),
-                None,
-                ServerConfig {
-                    batcher: BatcherConfig {
-                        max_batch: 8,
-                        max_wait: std::time::Duration::from_millis(1),
-                    },
-                },
-            );
+            let wave = requests_per_tenant;
+            let cells = tenant.replicas * Self::LIVE_SEGMENTS;
             let mut img_rng = Pcg64::new(0xA11CE, tenant_seed);
-            for i in 0..requests_per_tenant {
-                let image: Vec<f32> =
-                    (0..elems).map(|_| img_rng.f64() as f32).collect();
-                server.submit(InferenceRequest::new(
-                    (tenant.id * requests_per_tenant + i) as u64,
-                    image,
-                ));
-            }
-            let mut got = 0u64;
-            for _ in 0..requests_per_tenant {
-                match server.responses.recv_timeout(std::time::Duration::from_secs(30)) {
-                    Ok(_) => got += 1,
-                    Err(_) => break,
+            let mut next_id = (tenant.id * wave) as u64;
+            let mut cell = 0usize;
+            for _replica in 0..tenant.replicas {
+                // This replica's request share per rewarm segment,
+                // decided up front: a replica with nothing to serve
+                // neither compiles nor counts segments (tiny waves).
+                let shares: Vec<usize> = (0..Self::LIVE_SEGMENTS)
+                    .map(|_| {
+                        let s = wave / cells + usize::from(cell < wave % cells);
+                        cell += 1;
+                        s
+                    })
+                    .collect();
+                if shares.iter().sum::<usize>() == 0 {
+                    continue;
+                }
+                // Compile once per serving (tenant, replica) — the
+                // software mirror of programming this replica's RRAM
+                // banks.
+                let program = Arc::new(
+                    ResNet::new(test_params(8, 10, 1 + tenant_seed))
+                        .with_parallelism(parallelism)
+                        .compile()?,
+                );
+                summary.compilations += 1;
+                for &n_req in &shares {
+                    if n_req == 0 {
+                        // An empty segment builds no server and counts
+                        // as no rewarm.
+                        continue;
+                    }
+                    summary.segments += 1;
+                    let seg_program = program.clone();
+                    // PimHw: every batch is served from the prepared
+                    // banks (NativeExecutor debug-asserts the loop stays
+                    // prepare-free).
+                    let server = Server::start(
+                        Box::new(move || {
+                            Ok(Box::new(NativeExecutor::from_program(
+                                seg_program,
+                                ForwardMode::PimHw,
+                                DIMS,
+                                1,
+                            )) as Box<dyn Executor>)
+                        }),
+                        None,
+                        ServerConfig {
+                            batcher: BatcherConfig {
+                                max_batch: 8,
+                                max_wait: std::time::Duration::from_millis(1),
+                            },
+                        },
+                    );
+                    for _ in 0..n_req {
+                        let image: Vec<f32> =
+                            (0..elems).map(|_| img_rng.f64() as f32).collect();
+                        server.submit(InferenceRequest::new(next_id, image));
+                        next_id += 1;
+                    }
+                    let mut got = 0u64;
+                    for _ in 0..n_req {
+                        match server
+                            .responses
+                            .recv_timeout(std::time::Duration::from_secs(30))
+                        {
+                            Ok(_) => got += 1,
+                            Err(_) => break,
+                        }
+                    }
+                    let metrics = server.shutdown();
+                    summary.requests += n_req as u64;
+                    summary.responses += got;
+                    summary.batches += metrics.batches;
                 }
             }
-            let metrics = server.shutdown();
-            summary.requests += requests_per_tenant as u64;
-            summary.responses += got;
-            summary.batches += metrics.batches;
         }
         Ok(summary)
     }

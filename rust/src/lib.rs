@@ -22,7 +22,10 @@
 //!   (weight → current → voltage → ADC code) and the PIM execution engine
 //!   that runs quantized CNN layers on simulated arrays; `pim::parallel`
 //!   tiles the MAC hot path across cores with bit-identical output
-//!   (PERFORMANCE.md).
+//!   (PERFORMANCE.md), and `pim::program` is the compile-once /
+//!   execute-many weight-program layer (prepared banks, compiled
+//!   networks) mirroring one-time RRAM programming (ARCHITECTURE.md
+//!   §program).
 //! * [`cache`] — the LLC substrate: slices, banks, tags, LRU, and the
 //!   controller that arbitrates SRAM-mode traffic against PIM windows
 //!   while *retaining* cache data (the paper's headline architectural
@@ -49,7 +52,7 @@
 //! * [`figures`] — one generator per paper table/figure.
 //!
 //! See README.md for the quickstart, ARCHITECTURE.md for the layer-by-layer
-//! data flow, EXPERIMENTS.md for the experiment ids (E1–E12, §Perf, A1–A3)
+//! data flow, EXPERIMENTS.md for the experiment ids (E1–E13, §Perf, A1–A3)
 //! cited throughout the code, and PERFORMANCE.md for the tiled parallel
 //! engine and the cross-PR perf trajectory.
 

@@ -17,10 +17,12 @@
 //!             tenant's traffic horizon; T parallelizes the --live executors)
 //!   bench     [--quick] [--threads T] [--json [FILE]]
 //!             hot-path micro-benchmarks, serial vs T-thread tiled execution
-//!             (engine matmul + ResNet-18 stub inference), + fleet-sim
-//!             summary; --json writes the machine-readable perf-trajectory
-//!             record (BENCH_PR4.json, or FILE when given) — see
-//!             PERFORMANCE.md
+//!             (engine matmul + ResNet-18 stub inference), the
+//!             prepare_vs_execute section (one-time weight-program compile
+//!             cost vs steady-state prepared execution, amortization
+//!             ratios), + fleet-sim summary; --json writes the
+//!             machine-readable perf-trajectory record (BENCH_PR5.json, or
+//!             FILE when given) — see PERFORMANCE.md
 //!   info      print headline perf model numbers
 
 use std::path::PathBuf;
@@ -201,12 +203,14 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
     let dir2 = ArtifactDir::open(dir.root.clone())?;
     let factory: nvm_in_cache::coordinator::server::ExecutorFactory = if native {
         Box::new(move || {
-            Ok(Box::new(NativeExecutor {
-                net: ResNet::load(&weights)?.with_parallelism(par),
-                mode: ForwardMode::Pim,
+            // Compile-once: the weight program is built here, before the
+            // serving loop; every batch after this is prepared execution.
+            Ok(Box::new(NativeExecutor::new(
+                &ResNet::load(&weights)?.with_parallelism(par),
+                ForwardMode::Pim,
                 dims,
-                seed: 1,
-            }) as Box<dyn Executor>)
+                1,
+            )?) as Box<dyn Executor>)
         })
     } else {
         Box::new(move || {
@@ -275,14 +279,17 @@ fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
 }
 
 /// Hot-path micro-benchmarks — each parallelizable stage serial vs
-/// `--threads T` tiled execution — plus the fleet-sim summary; `--json`
-/// additionally writes the machine-readable perf-trajectory record
-/// (BENCH_PR4.json; see PERFORMANCE.md for the format and trajectory).
+/// `--threads T` tiled execution — plus the prepare_vs_execute section
+/// (compile-once cost vs steady-state prepared execution) and the
+/// fleet-sim summary; `--json` additionally writes the machine-readable
+/// perf-trajectory record (BENCH_PR5.json; see PERFORMANCE.md for the
+/// format and trajectory).
 fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
     use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
     use nvm_in_cache::nn::resnet::test_params;
-    use nvm_in_cache::pim::PimEngine;
+    use nvm_in_cache::nn::Tensor;
+    use nvm_in_cache::pim::{program, PimEngine};
     use nvm_in_cache::runtime::{Runtime, StubRuntime};
     use nvm_in_cache::util::bench::Bencher;
     use nvm_in_cache::util::json::Json;
@@ -317,6 +324,22 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         });
     }
 
+    // prepare_vs_execute §1 (engine level): one-time weight-program cost
+    // vs steady-state prepared matmul; the one-shot pim_matmul above pays
+    // both every call. The parity gate compares against the independent
+    // straight-line specification (pim::program::spec_matmul) — not the
+    // one-shot wrapper, which shares the prepared core and would make
+    // the verdict vacuous.
+    let engine_program = eng.prepare(&w, k, n);
+    let parity_prepared_engine =
+        eng.matmul_prepared(&a, m, &engine_program, None) == program::spec_matmul(&a, m, k, &w, n);
+    let name_eng_prepare = format!("engine_prepare_{k}x{n}");
+    b.bench_with_items(&name_eng_prepare, (k * n) as f64, || eng.prepare(&w, k, n));
+    let name_eng_prepared = format!("engine_matmul_prepared_{m}x{k}x{n}_t1");
+    b.bench_with_items(&name_eng_prepared, (m * k * n) as f64, || {
+        eng.matmul_prepared(&a, m, &engine_program, None)
+    });
+
     // Hot path 2: cell-accurate sub-array full 4b MAC.
     let mut sa = nvm_in_cache::array::SubArray::new(nvm_in_cache::device::Corner::TT);
     let weights: Vec<u8> =
@@ -347,9 +370,9 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         (0..batch * dims.0 * dims.1 * dims.2).map(|_| r.f64() as f32).collect()
     };
     let mut rt_serial = StubRuntime::new(batch);
-    rt_serial.load_variant_params(ModelVariant::PimHw, test_params(16, 10, 1));
+    rt_serial.load_variant_params(ModelVariant::PimHw, test_params(16, 10, 1))?;
     let mut rt_par = StubRuntime::new(batch).with_parallelism(par);
-    rt_par.load_variant_params(ModelVariant::PimHw, test_params(16, 10, 1));
+    rt_par.load_variant_params(ModelVariant::PimHw, test_params(16, 10, 1))?;
     let parity_resnet = rt_serial
         .forward(ModelVariant::PimHw, &images, dims, None)?
         == rt_par.forward(ModelVariant::PimHw, &images, dims, None)?;
@@ -363,6 +386,30 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
             rt_par.classify(ModelVariant::PimHw, &images, dims, 10, None).unwrap()
         });
     }
+
+    // prepare_vs_execute §2 (network level): whole-ResNet compile cost vs
+    // steady-state prepared forward vs the one-shot compile-then-run
+    // forward — and the acceptance check that steady-state serving does
+    // zero weight quantization/packing after compile.
+    let net18 = nvm_in_cache::nn::ResNet::new(test_params(16, 10, 1));
+    b.bench("resnet18_compile_w16", || net18.compile().unwrap());
+    let xt = Tensor::from_vec(&[batch, dims.0, dims.1, dims.2], images.clone());
+    // Steady-state comparand: the same forward on the same tensor, minus
+    // only the compile step — NOT the stub classify (whose argmax/padding
+    // overhead would bias the saving).
+    let rn_program = net18.compile()?;
+    let mut rn_scratch = program::ScratchPool::new();
+    let name_rn_prepared = format!("resnet18_forward_prepared_b{batch}");
+    b.bench_with_items(&name_rn_prepared, batch as f64, || {
+        rn_program.forward_par(&xt, ForwardMode::PimHw, 0, Parallelism::serial(), &mut rn_scratch)
+    });
+    let name_rn_oneshot = format!("resnet18_forward_oneshot_b{batch}");
+    b.bench_with_items(&name_rn_oneshot, batch as f64, || {
+        net18.forward(&xt, ForwardMode::PimHw, 0).unwrap()
+    });
+    let prepares_before = program::prepare_count();
+    let _ = rt_serial.forward(ModelVariant::PimHw, &images, dims, None)?;
+    let steady_state_zero_prepares = program::prepare_count() == prepares_before;
 
     // Hot path 5: the whole fleet simulation (small config, shared with
     // the cargo-bench fleet section). The run is deterministic, so the
@@ -395,11 +442,36 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         );
     }
 
+    // prepare_vs_execute summary: how many steady-state calls amortize
+    // the one-time compile (compile_cost / per-call saving of prepared vs
+    // one-shot execution).
+    let amortize = |compile: Option<f64>, oneshot: Option<f64>, prepared: Option<f64>| {
+        compile.zip(oneshot.zip(prepared)).and_then(|(c, (o, p))| {
+            let saving = o - p;
+            (saving > 0.0).then_some(c / saving)
+        })
+    };
+    let engine_prepare_s = mean(&name_eng_prepare);
+    let engine_prepared_s = mean(&name_eng_prepared);
+    let engine_oneshot_s = mean(&name_eng_t1);
+    let amortize_engine = amortize(engine_prepare_s, engine_oneshot_s, engine_prepared_s);
+    let resnet_compile_s = mean("resnet18_compile_w16");
+    let resnet_prepared_s = mean(&name_rn_prepared);
+    let resnet_oneshot_s = mean(&name_rn_oneshot);
+    let amortize_resnet = amortize(resnet_compile_s, resnet_oneshot_s, resnet_prepared_s);
+    println!(
+        "prepare_vs_execute: engine amortizes after {} calls, resnet18 after {} batches \
+         (prepared bit-identical: {parity_prepared_engine}; steady-state zero prepares: \
+         {steady_state_zero_prepares})",
+        amortize_engine.map_or("n/a".into(), |x| format!("{x:.1}")),
+        amortize_resnet.map_or("n/a".into(), |x| format!("{x:.1}")),
+    );
+
     let fleet_report = fleet_report.expect("bench ran at least once");
     print!("{}", fleet_report.render());
 
     if args.flag("json") {
-        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR4.json"));
+        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR5.json"));
         // Two sections (PERFORMANCE.md): `comparison` holds only
         // deterministic fields (workload descriptors, parity verdicts, the
         // simulated-clock fleet report) so trajectory files diff cleanly
@@ -409,6 +481,8 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
             ("workloads", b.comparison_json()),
             ("parity_engine_bit_identical", Json::Bool(parity_engine)),
             ("parity_resnet_bit_identical", Json::Bool(parity_resnet)),
+            ("parity_prepared_engine_bit_identical", Json::Bool(parity_prepared_engine)),
+            ("steady_state_zero_prepares", Json::Bool(steady_state_zero_prepares)),
             ("fleet_sim", fleet_report.to_json()),
         ]);
         let mut measured = vec![("benches", b.to_json())];
@@ -418,8 +492,24 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         if let Some(s) = speedup_resnet {
             measured.push(("speedup_resnet18_stub_infer", Json::Num(s)));
         }
+        let mut pve: Vec<(&str, Json)> = Vec::new();
+        for (key, v) in [
+            ("engine_prepare_s", engine_prepare_s),
+            ("engine_matmul_prepared_s", engine_prepared_s),
+            ("engine_matmul_oneshot_s", engine_oneshot_s),
+            ("engine_amortize_calls", amortize_engine),
+            ("resnet_compile_s", resnet_compile_s),
+            ("resnet_forward_prepared_s", resnet_prepared_s),
+            ("resnet_forward_oneshot_s", resnet_oneshot_s),
+            ("resnet_amortize_batches", amortize_resnet),
+        ] {
+            if let Some(v) = v {
+                pve.push((key, Json::Num(v)));
+            }
+        }
+        measured.push(("prepare_vs_execute", Json::obj(pve)));
         let doc = Json::obj(vec![
-            ("pr", Json::Num(4.0)),
+            ("pr", Json::Num(5.0)),
             ("comparison", comparison),
             ("measured", Json::obj(measured)),
         ]);

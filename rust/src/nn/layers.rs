@@ -1,7 +1,15 @@
 //! Inference layers, matched operation-for-operation to
 //! `python/compile/model.py`.
+//!
+//! The conv/linear entry points follow the compile-once / execute-many
+//! split of [`crate::pim::program`]: [`CompiledConv`] /
+//! [`crate::pim::program::CompiledLinear`] hold a layer's reordered dense
+//! weights plus (optionally) the prepared quantized banks, and the
+//! historical one-shot functions below run the same prepared core,
+//! re-preparing per call — so both paths are bit-identical.
 
 use crate::pim::parallel::Parallelism;
+use crate::pim::program::{CompiledConv, ScratchPool};
 use crate::pim::PimEngine;
 use crate::util::rng::Pcg64;
 
@@ -9,8 +17,15 @@ use super::tensor::Tensor;
 
 /// XLA/TF 'SAME' padding split: total = max((ow−1)·s + k − w, 0),
 /// lo = total/2, hi = total − lo.
+///
+/// Degenerate inputs are defined, not panics: a zero-width input (the
+/// only way `ow` can reach 0 for `stride ≥ 1`) yields `(0, 0, 0)` — an
+/// empty output plane with no padding.
 pub fn same_padding(w: usize, k: usize, stride: usize) -> (usize, usize, usize) {
     let ow = w.div_ceil(stride);
+    if ow == 0 {
+        return (0, 0, 0);
+    }
     let total = ((ow - 1) * stride + k).saturating_sub(w);
     (ow, total / 2, total - total / 2)
 }
@@ -19,11 +34,29 @@ pub fn same_padding(w: usize, k: usize, stride: usize) -> (usize, usize, usize) 
 /// feature order (c·K·K + ky·K + kx), matching
 /// `jax.lax.conv_general_dilated_patches` as used in model.py.
 pub fn im2col(x: &Tensor, k: usize, stride: usize) -> (Tensor, usize, usize) {
+    let mut buf = Vec::new();
+    let (rows, oh, ow) = im2col_into(x, k, stride, &mut buf);
+    let kdim = x.shape[3] * k * k;
+    (Tensor::from_vec(&[rows, kdim], buf), oh, ow)
+}
+
+/// [`im2col`] into a caller-owned buffer (cleared, zero-filled, and
+/// resized to `rows × C·K·K`) — the scratch-pool form the compiled
+/// execution path reuses across layers and batches. Returns
+/// `(rows, oh, ow)` with `rows = N·OH·OW`.
+pub fn im2col_into(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    out: &mut Vec<f32>,
+) -> (usize, usize, usize) {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (oh, pad_lo_h, _) = same_padding(h, k, stride);
     let (ow, pad_lo_w, _) = same_padding(w, k, stride);
     let kdim = c * k * k;
-    let mut out = Tensor::zeros(&[n * oh * ow, kdim]);
+    let rows = n * oh * ow;
+    out.clear();
+    out.resize(rows * kdim, 0.0);
     for ni in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -40,7 +73,7 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize) -> (Tensor, usize, usize) {
                             if ix < 0 || ix >= w as isize {
                                 continue;
                             }
-                            out.data[base + ci * k * k + ky * k + kx] =
+                            out[base + ci * k * k + ky * k + kx] =
                                 x.at4(ni, iy as usize, ix as usize, ci);
                         }
                     }
@@ -48,7 +81,7 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize) -> (Tensor, usize, usize) {
             }
         }
     }
-    (out, oh, ow)
+    (rows, oh, ow)
 }
 
 /// Reorder HWIO conv weights to the im2col layout [C·K·K, OC].
@@ -99,6 +132,11 @@ pub fn conv2d(
 
 /// [`conv2d`] on an explicit worker-pool width (both the dense and the
 /// PIM path); output is bit-identical at any thread count.
+///
+/// One-shot compile-then-run over [`CompiledConv`]: re-reorders (and, on
+/// the PIM path, re-quantizes + re-packs) the weights every call.
+/// Execute-many callers should compile once ([`CompiledConv::compile`])
+/// and call [`CompiledConv::forward`].
 pub fn conv2d_par(
     x: &Tensor,
     w_hwio: &Tensor,
@@ -107,27 +145,8 @@ pub fn conv2d_par(
     rng: Option<&mut Pcg64>,
     par: Parallelism,
 ) -> Tensor {
-    let k = w_hwio.shape[0];
-    let cout = w_hwio.shape[3];
-    let n = x.shape[0];
-    let (patches, oh, ow) = im2col(x, k, stride);
-    let wm = weights_to_matrix(w_hwio);
-    let out2d = match engine {
-        None => matmul_par(&patches, &wm, par),
-        Some(eng) => Tensor::from_vec(
-            &[patches.shape[0], cout],
-            eng.par_matmul(
-                &patches.data,
-                patches.shape[0],
-                patches.shape[1],
-                &wm.data,
-                cout,
-                rng,
-                par,
-            ),
-        ),
-    };
-    Tensor::from_vec(&[n, oh, ow, cout], out2d.data)
+    let compiled = CompiledConv::compile(w_hwio, stride, x.shape[2], engine.is_some());
+    compiled.forward(x, engine, rng, par, &mut ScratchPool::new())
 }
 
 /// GroupNorm over NHWC with `groups = min(8, c)` (matches model.py).
@@ -230,6 +249,13 @@ pub fn linear(
 
 /// [`linear`] on an explicit worker-pool width; bit-identical at any
 /// thread count.
+///
+/// One-shot: the PIM path re-prepares `w` internally on every call (via
+/// [`PimEngine::par_matmul`]), without copying the dense weights the way
+/// a throwaway [`crate::pim::program::CompiledLinear`] would.
+/// Execute-many callers should compile once
+/// ([`crate::pim::program::CompiledLinear::compile`]) and call
+/// [`crate::pim::program::CompiledLinear::forward`].
 pub fn linear_par(
     x: &Tensor,
     w: &Tensor,
@@ -265,6 +291,38 @@ mod tests {
         assert_eq!(same_padding(16, 3, 2), (8, 0, 1));
         assert_eq!(same_padding(16, 1, 1), (16, 0, 0));
         assert_eq!(same_padding(8, 3, 2), (4, 0, 1));
+    }
+
+    #[test]
+    fn same_padding_degenerate_inputs_defined() {
+        // w == 0 used to underflow (ow − 1 on ow == 0) and panic in debug
+        // builds; it must return the empty-but-defined result instead.
+        assert_eq!(same_padding(0, 3, 1), (0, 0, 0));
+        assert_eq!(same_padding(0, 1, 4), (0, 0, 0));
+        // stride > w stays defined: a single output column.
+        assert_eq!(same_padding(2, 3, 5), (1, 0, 1));
+        assert_eq!(same_padding(1, 3, 7), (1, 1, 1));
+    }
+
+    #[test]
+    fn im2col_into_reuses_buffer_bit_identically() {
+        let mut rng = Pcg64::seeded(31);
+        let x1 = Tensor::from_vec(
+            &[1, 6, 6, 2],
+            (0..72).map(|_| rng.range(-1.0, 1.0) as f32).collect(),
+        );
+        let x2 = Tensor::from_vec(
+            &[1, 4, 4, 3],
+            (0..48).map(|_| rng.range(-1.0, 1.0) as f32).collect(),
+        );
+        let mut buf = Vec::new();
+        // Dirty the buffer with a larger problem first, then shrink.
+        let _ = im2col_into(&x1, 3, 1, &mut buf);
+        let (rows, oh, ow) = im2col_into(&x2, 3, 2, &mut buf);
+        let (fresh, oh2, ow2) = im2col(&x2, 3, 2);
+        assert_eq!((oh, ow), (oh2, ow2));
+        assert_eq!(buf.len(), rows * 3 * 3 * 3);
+        assert_eq!(buf, fresh.data, "reused buffer must match a fresh im2col");
     }
 
     #[test]

@@ -10,6 +10,13 @@
 //! * [`layers`] — conv (im2col), GroupNorm, ReLU, global-avg-pool, linear.
 //! * [`resnet`] — the ResNet-18-topology network + weights.bin loading.
 //! * [`dataset`] — dataset.bin loading.
+//!
+//! Execution follows the compile-once / execute-many split of
+//! [`crate::pim::program`]: [`ResNet::compile`] builds a
+//! [`crate::pim::program::CompiledNet`] once (dense im2col weights +
+//! prepared quantized banks), and the one-shot `forward`/`conv2d`/`linear`
+//! entry points are thin compile-then-run wrappers over it — bit-identical
+//! either way (`rust/tests/program_parity.rs`).
 
 pub mod dataset;
 pub mod layers;

@@ -5,11 +5,10 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::pim::parallel::Parallelism;
-use crate::pim::PimEngine;
+use crate::pim::program::{CompiledNet, ScratchPool};
 use crate::util::rng::Pcg64;
 use crate::{Error, Result};
 
-use super::layers;
 use super::tensor::Tensor;
 
 const MAGIC: u32 = 0x4E56_4D57;
@@ -125,8 +124,20 @@ impl ResNet {
         self
     }
 
+    /// Compile every layer once — dense im2col weights plus prepared
+    /// quantized banks — into a [`CompiledNet`] that executes any
+    /// [`ForwardMode`] with zero further weight preparation. The compiled
+    /// forward is bit-identical to [`ResNet::forward`] in every mode at
+    /// any thread count (`rust/tests/program_parity.rs`).
+    pub fn compile(&self) -> Result<CompiledNet> {
+        CompiledNet::compile(self)
+    }
+
     /// Forward pass: x [N,16,16,3] → logits [N,10]. Runs conv/fc matmuls
     /// on [`ResNet::parallelism`].
+    ///
+    /// One-shot compile-then-run over [`ResNet::compile`]; serving loops
+    /// should compile once and call [`CompiledNet::forward_par`] instead.
     pub fn forward(&self, x: &Tensor, mode: ForwardMode, seed: u64) -> Result<Tensor> {
         self.forward_par(x, mode, seed, self.parallelism)
     }
@@ -142,87 +153,14 @@ impl ResNet {
         seed: u64,
         par: Parallelism,
     ) -> Result<Tensor> {
-        let engine = match mode {
-            ForwardMode::PimHw => Some(PimEngine::tt().with_parallelism(par)),
-            ForwardMode::PimHwNoise(sigma) => {
-                Some(PimEngine::tt().with_noise(sigma).with_parallelism(par))
-            }
-            _ => None,
+        // Compile only what the mode reads: the fp32/emulation forwards
+        // never touch the quantized banks, so the one-shot path skips
+        // preparing them (same cost profile as the pre-program engine).
+        let program = match mode {
+            ForwardMode::PimHw | ForwardMode::PimHwNoise(_) => CompiledNet::compile(self)?,
+            _ => CompiledNet::compile_dense(self)?,
         };
-        let emu_sigma: Option<Option<f64>> = match mode {
-            ForwardMode::Pim => Some(None),
-            ForwardMode::PimNoise(s) => Some(Some(s)),
-            _ => None,
-        };
-        let transfer = crate::pim::TransferModel::tt();
-        let mut rng = Pcg64::seeded(seed);
-        let hw_noise = matches!(mode, ForwardMode::PimHwNoise(_));
-        let rng_opt = |r: &mut Pcg64| -> Option<Pcg64> {
-            if hw_noise {
-                Some(r.fork(1))
-            } else {
-                None
-            }
-        };
-        let p = &self.params;
-        let eng = engine.as_ref();
-
-        let gn = |t: &Tensor, g: &Tensor, b: &Tensor| -> Tensor {
-            layers::group_norm(t, &g.data, &b.data, 1e-5)
-        };
-        // §V-E emulation applied at each layer output (emu modes only).
-        let post = |t: Tensor, r: &mut Pcg64| -> Tensor {
-            match emu_sigma {
-                None => t,
-                Some(sigma) => {
-                    let mut local = r.fork(2);
-                    layers::adc_emulate(&t, &transfer, sigma, Some(&mut local))
-                }
-            }
-        };
-
-        let mut local = rng_opt(&mut rng);
-        let mut h = layers::conv2d_par(x, p.get("stem/w")?, 1, eng, local.as_mut(), par);
-        h = post(h, &mut rng);
-        h = gn(&h, p.get("stem/gamma")?, p.get("stem/beta")?).relu();
-
-        for (s, &nblocks) in STAGES.iter().enumerate() {
-            let stride = if s == 0 { 1 } else { 2 };
-            for b in 0..nblocks {
-                let st = if b == 0 { stride } else { 1 };
-                let pre = format!("s{s}b{b}");
-                let idn = h.clone();
-                let mut local = rng_opt(&mut rng);
-                h = layers::conv2d_par(&h, p.get(&format!("{pre}/w1"))?, st, eng, local.as_mut(), par);
-                h = post(h, &mut rng);
-                h = gn(&h, p.get(&format!("{pre}/g1"))?, p.get(&format!("{pre}/b1"))?).relu();
-                let mut local = rng_opt(&mut rng);
-                h = layers::conv2d_par(&h, p.get(&format!("{pre}/w2"))?, 1, eng, local.as_mut(), par);
-                h = post(h, &mut rng);
-                h = gn(&h, p.get(&format!("{pre}/g2"))?, p.get(&format!("{pre}/b2"))?);
-                let idn = if p.tensors.contains_key(&format!("{pre}/wd")) {
-                    let mut local = rng_opt(&mut rng);
-                    let d = layers::conv2d_par(&idn, p.get(&format!("{pre}/wd"))?, st, eng, local.as_mut(), par);
-                    post(d, &mut rng)
-                } else {
-                    idn
-                };
-                h = h.add(&idn).relu();
-            }
-        }
-        let pooled = layers::global_avg_pool(&h);
-        let mut local = rng_opt(&mut rng);
-        let fc_w = p.get("fc/w")?;
-        let fc_b = p.get("fc/b")?;
-        let logits =
-            layers::linear_par(&pooled, fc_w, &vec![0.0; fc_b.len()], eng, local.as_mut(), par);
-        let mut logits = post(logits, &mut rng);
-        for n in 0..logits.shape[0] {
-            for c in 0..logits.shape[1] {
-                logits.data[n * logits.shape[1] + c] += fc_b.data[c];
-            }
-        }
-        Ok(logits)
+        Ok(program.forward_par(x, mode, seed, par, &mut ScratchPool::new()))
     }
 
     /// Classify a batch: argmax over logits.

@@ -11,16 +11,25 @@
 //! transfer is a pure function of an integer MAC ≤ 1920). The work factors
 //! into data-independent *units* — one per (output row × 128-row block ×
 //! 128-word output tile), mirroring the sub-array organization — which
-//! [`Self::par_matmul`] schedules over the [`super::parallel`] worker pool;
-//! the shift-add reduce runs in unit order, so parallel output is
+//! [`PimEngine::par_matmul`] schedules over the [`super::parallel`] worker
+//! pool; the shift-add reduce runs in unit order, so parallel output is
 //! bit-identical to serial (PERFORMANCE.md, `rust/tests/parallel_parity.rs`).
+//!
+//! Weight handling follows the compile-once / execute-many split of
+//! [`super::program`]: [`PimEngine::prepare`] quantizes + packs a weight
+//! matrix once, [`PimEngine::matmul_prepared`] executes it any number of
+//! times, and the historical one-shot entry points (`pim_matmul`,
+//! `bank_mac`, …) are thin prepare-then-run wrappers over the same core —
+//! so prepared and one-shot output are bit-identical
+//! (`rust/tests/program_parity.rs`).
 
 use crate::consts::{ARRAY_ROWS, ARRAY_WORDS};
 use crate::device::Corner;
 use crate::util::rng::Pcg64;
 
 use super::parallel::{self, Parallelism};
-use super::quant::{quantize_acts, quantize_weights, QuantizedActs};
+use super::program::{PreparedBank, PreparedWeights};
+use super::quant::{quantize_acts, QuantizedActs};
 use super::transfer::{TransferModel, ADC_CODES, MAC_FULLSCALE};
 
 /// Spread mask: activation nibble bit `b` → bit 16·b, so one u64
@@ -154,7 +163,7 @@ impl PimEngine {
     fn mac_unit(
         &self,
         a: &QuantizedActs,
-        bank: &[u8],
+        bank: &PreparedBank,
         grid: &UnitGrid,
         u: usize,
         rng: Option<&mut Pcg64>,
@@ -164,7 +173,6 @@ impl PimEngine {
         let (k0, k1) = grid.k_range(bi);
         let (c0, c1) = grid.c_range(ti);
         let width = c1 - c0;
-        let n = grid.n;
         let a_row = &a.data[i * grid.k..(i + 1) * grid.k];
         let packed = &mut scratch.packed[..width];
         let partial = &mut scratch.partial[..width];
@@ -177,7 +185,7 @@ impl PimEngine {
             if mask == 0 {
                 continue;
             }
-            let w_row = &bank[kk * n + c0..kk * n + c1];
+            let w_row = &bank.row(ti, kk)[..width];
             for (acc, &w) in packed.iter_mut().zip(w_row) {
                 *acc += mask * w as u64;
             }
@@ -212,6 +220,10 @@ impl PimEngine {
     /// quantization. Returns dequantized MAC estimates (integer units).
     /// Runs on [`Self::parallelism`] (serial by default); see
     /// [`Self::par_bank_mac`].
+    ///
+    /// One-shot convenience: packs `bank` tile-aligned on every call.
+    /// Execute-many callers should pack once ([`PreparedBank::pack`]) and
+    /// use [`Self::bank_mac_prepared`].
     pub fn bank_mac(
         &self,
         a: &QuantizedActs,
@@ -222,13 +234,8 @@ impl PimEngine {
         self.par_bank_mac(a, bank, n, rng, self.parallelism)
     }
 
-    /// [`Self::bank_mac`] on an explicit worker-pool width.
-    ///
-    /// Noise streams are derived per unit — one parent draw decorrelates
-    /// successive bank calls (pos vs neg), then unit `u` reads the
-    /// independent PCG stream `(seed, u)` — so neither the thread count
-    /// nor the scheduling order can change a single draw, and the
-    /// unit-order reduce makes the output bit-identical to serial.
+    /// [`Self::bank_mac`] on an explicit worker-pool width (one-shot:
+    /// packs the bank, then runs the prepared core).
     pub fn par_bank_mac(
         &self,
         a: &QuantizedActs,
@@ -237,8 +244,40 @@ impl PimEngine {
         rng: Option<&mut Pcg64>,
         par: Parallelism,
     ) -> Vec<f32> {
+        assert_eq!(bank.len(), a.k * n);
+        self.par_bank_mac_prepared(a, &PreparedBank::pack(bank, a.k, n), rng, par)
+    }
+
+    /// [`Self::bank_mac`] over an already-packed bank on
+    /// [`Self::parallelism`] — the execute-many hot path: no packing, no
+    /// quantization, just the tiled unit grid.
+    pub fn bank_mac_prepared(
+        &self,
+        a: &QuantizedActs,
+        bank: &PreparedBank,
+        rng: Option<&mut Pcg64>,
+    ) -> Vec<f32> {
+        self.par_bank_mac_prepared(a, bank, rng, self.parallelism)
+    }
+
+    /// The prepared-execution core every bank-MAC path funnels into, on an
+    /// explicit worker-pool width.
+    ///
+    /// Noise streams are derived per unit — one parent draw decorrelates
+    /// successive bank calls (pos vs neg), then unit `u` reads the
+    /// independent PCG stream `(seed, u)` — so neither the thread count
+    /// nor the scheduling order can change a single draw, and the
+    /// unit-order reduce makes the output bit-identical to serial.
+    pub fn par_bank_mac_prepared(
+        &self,
+        a: &QuantizedActs,
+        bank: &PreparedBank,
+        rng: Option<&mut Pcg64>,
+        par: Parallelism,
+    ) -> Vec<f32> {
         let (m, k) = (a.m, a.k);
-        assert_eq!(bank.len(), k * n);
+        assert_eq!(bank.k(), k, "prepared bank reduction dim mismatch");
+        let n = bank.n();
         let grid = UnitGrid::new(m, k, n);
         let noise_seed = rng.map(|r| {
             let mut child = r.fork(0x6ba7);
@@ -283,9 +322,71 @@ impl PimEngine {
         }
     }
 
+    /// Compile a signed `[k,n]` weight matrix for execute-many use:
+    /// quantize into the pos/neg banks and pack them tile-aligned — the
+    /// software mirror of one-time RRAM programming. The result feeds
+    /// [`Self::matmul_prepared`] any number of times with zero further
+    /// weight work, bit-identical to [`Self::pim_matmul`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nvm_in_cache::pim::PimEngine;
+    ///
+    /// let eng = PimEngine::tt();
+    /// let a = vec![1.0f32; 2 * 200];
+    /// let w = vec![0.5f32; 200 * 3];
+    /// let program = eng.prepare(&w, 200, 3); // once
+    /// let prepared = eng.matmul_prepared(&a, 2, &program, None); // many
+    /// assert_eq!(prepared, eng.pim_matmul(&a, 2, 200, &w, 3, None));
+    /// ```
+    pub fn prepare(&self, w: &[f32], k: usize, n: usize) -> PreparedWeights {
+        assert_eq!(w.len(), k * n);
+        PreparedWeights::from_dense(w, k, n)
+    }
+
+    /// Full signed PIM matmul over a prepared weight program: quantize
+    /// the activations, run both packed banks, subtract in the digital
+    /// domain, rescale. Runs on [`Self::parallelism`]. This is the
+    /// steady-state serving hot path — no weight quantization or packing
+    /// happens here (`pim::program::prepare_count` stays flat).
+    pub fn matmul_prepared(
+        &self,
+        a: &[f32],
+        m: usize,
+        pw: &PreparedWeights,
+        rng: Option<&mut Pcg64>,
+    ) -> Vec<f32> {
+        self.par_matmul_prepared(a, m, pw, rng, self.parallelism)
+    }
+
+    /// [`Self::matmul_prepared`] on an explicit worker-pool width.
+    pub fn par_matmul_prepared(
+        &self,
+        a: &[f32],
+        m: usize,
+        pw: &PreparedWeights,
+        rng: Option<&mut Pcg64>,
+        par: Parallelism,
+    ) -> Vec<f32> {
+        let qa = quantize_acts(a, m, pw.k);
+        let mut rng = rng;
+        let pos = self.par_bank_mac_prepared(&qa, &pw.pos, rng.as_deref_mut(), par);
+        let neg = self.par_bank_mac_prepared(&qa, &pw.neg, rng.as_deref_mut(), par);
+        pos.iter()
+            .zip(neg.iter())
+            .enumerate()
+            .map(|(i, (p, q))| (p - q) * qa.scale * pw.scale[i % pw.n])
+            .collect()
+    }
+
     /// Full signed PIM matmul: quantize, run both banks, subtract in the
     /// digital domain, rescale. `a` is [m,k] (non-negative, e.g. post-ReLU);
     /// `w` is [k,n] signed. Runs on [`Self::parallelism`].
+    ///
+    /// One-shot convenience over [`Self::prepare`] +
+    /// [`Self::matmul_prepared`]: re-quantizes and re-packs `w` on every
+    /// call.
     pub fn pim_matmul(
         &self,
         a: &[f32],
@@ -326,16 +427,8 @@ impl PimEngine {
         rng: Option<&mut Pcg64>,
         par: Parallelism,
     ) -> Vec<f32> {
-        let qa = quantize_acts(a, m, k);
-        let qw = quantize_weights(w, k, n);
-        let mut rng = rng;
-        let pos = self.par_bank_mac(&qa, &qw.pos, n, rng.as_deref_mut(), par);
-        let neg = self.par_bank_mac(&qa, &qw.neg, n, rng.as_deref_mut(), par);
-        pos.iter()
-            .zip(neg.iter())
-            .enumerate()
-            .map(|(i, (p, q))| (p - q) * qa.scale * qw.scale[i % n])
-            .collect()
+        assert_eq!(w.len(), k * n);
+        self.par_matmul_prepared(a, m, &PreparedWeights::from_dense(w, k, n), rng, par)
     }
 
     /// Exact digital matmul (the "infinite ADC" bound / fp32 baseline).
@@ -533,6 +626,32 @@ mod tests {
                 let par =
                     eng.par_matmul(&a, m, k, &w, n, r.as_mut(), Parallelism::threads(t));
                 assert_eq!(serial, par, "sigma={sigma:?} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_matmul_bit_identical_to_oneshot() {
+        // Ragged shape, noiseless and noisy: the prepared program must
+        // reproduce the one-shot path bit-for-bit (and advance a caller
+        // RNG identically).
+        let mut rng = Pcg64::seeded(61);
+        let (m, k, n) = (4, 200, 133);
+        let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+        for sigma in [None, Some(0.4)] {
+            let eng = match sigma {
+                None => PimEngine::tt(),
+                Some(s) => PimEngine::tt().with_noise(s),
+            };
+            let program = eng.prepare(&w, k, n);
+            let mut r1 = sigma.map(|_| Pcg64::seeded(3));
+            let oneshot = eng.pim_matmul(&a, m, k, &w, n, r1.as_mut());
+            let mut r2 = sigma.map(|_| Pcg64::seeded(3));
+            let prepared = eng.matmul_prepared(&a, m, &program, r2.as_mut());
+            assert_eq!(oneshot, prepared, "sigma={sigma:?}");
+            if let (Some(mut r1), Some(mut r2)) = (r1, r2) {
+                assert_eq!(r1.next_u64(), r2.next_u64(), "rng state diverged");
             }
         }
     }

@@ -16,13 +16,20 @@
 //!   schedules its (row-block × bit-plane × output-tile) units on; results
 //!   are bit-identical to the serial path at any thread count. See
 //!   PERFORMANCE.md.
+//! * [`program`] — the compile-once / execute-many layer: prepared weight
+//!   programs ([`PreparedWeights`]) and whole compiled networks
+//!   ([`CompiledNet`]) mirroring one-time RRAM programming, so the
+//!   serving hot loop performs zero weight quantization/packing. See
+//!   ARCHITECTURE.md §program and PERFORMANCE.md §amortization.
 
 pub mod engine;
 pub mod parallel;
+pub mod program;
 pub mod quant;
 pub mod transfer;
 
 pub use engine::PimEngine;
 pub use parallel::Parallelism;
+pub use program::{CompiledNet, PreparedBank, PreparedWeights, ScratchPool};
 pub use quant::{QuantizedActs, QuantizedWeights};
 pub use transfer::TransferModel;

@@ -103,8 +103,13 @@ pub trait Runtime {
     /// thread pool (e.g. PJRT, which threads internally) may ignore it.
     fn set_parallelism(&mut self, _par: Parallelism) {}
 
-    /// Load (and compile, where applicable) a model variant from the
-    /// artifact directory. Idempotent.
+    /// Load and compile a model variant from the artifact directory.
+    /// Idempotent. This is the compile-once step of the
+    /// compile-once / execute-many contract: backends hold one compiled
+    /// program per model config (the stub caches a
+    /// [`crate::pim::program::CompiledNet`] per weights file; PJRT holds
+    /// an AOT executable), so [`Runtime::forward`] performs no weight
+    /// preparation per batch.
     fn load_variant(&mut self, dir: &ArtifactDir, variant: ModelVariant) -> Result<()>;
 
     /// Load an arbitrary standalone kernel artifact by file name.

@@ -22,6 +22,7 @@
 //! manifest's `noise_sigma` key when present, else the training default
 //! 0.5 (`python/compile/model.py::resnet_forward`).
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::collections::HashSet;
 use std::rc::Rc;
@@ -29,6 +30,7 @@ use std::rc::Rc;
 use crate::nn::resnet::Params;
 use crate::nn::{ForwardMode, ResNet, Tensor};
 use crate::pim::parallel::Parallelism;
+use crate::pim::program::{CompiledNet, ScratchPool};
 use crate::pim::quant::QuantizedActs;
 use crate::pim::PimEngine;
 use crate::{Error, Result};
@@ -45,18 +47,28 @@ const KNOWN_KERNELS: [&str; 1] = ["pim_mac.hlo.txt"];
 
 /// Dependency-free [`Runtime`] backend over the native [`ResNet`] +
 /// [`PimEngine`] stack.
+///
+/// [`Runtime::load_variant`] is the compile step: weights are parsed and
+/// compiled into a [`CompiledNet`] **once per model config** (weights
+/// file) at the depth the variant reads — quantized + packed banks for
+/// the hardware-true variant, dense-only for the fp32/emulation variants
+/// — then every forward is pure prepared execution: zero weight
+/// quantization/packing per batch (`rust/tests/program_parity.rs`).
 pub struct StubRuntime {
     batch: usize,
-    models: HashMap<ModelVariant, Rc<ResNet>>,
-    /// Loaded networks keyed by weights file, so the three PIM variants
-    /// sharing `weights_ft.bin` parse and hold it once.
-    by_file: HashMap<&'static str, Rc<ResNet>>,
+    models: HashMap<ModelVariant, Rc<CompiledNet>>,
+    /// Compiled programs keyed by weights file, so the three PIM variants
+    /// sharing `weights_ft.bin` parse, quantize, and pack it once.
+    by_file: HashMap<&'static str, Rc<CompiledNet>>,
     kernels: HashSet<String>,
     engine: PimEngine,
     /// Worker-pool width applied to every forward and MAC tile
     /// ([`Runtime::set_parallelism`]); outputs are bit-identical at any
     /// width, so this only changes throughput.
     parallelism: Parallelism,
+    /// Reusable per-layer buffers shared by every compiled forward
+    /// (single executor thread; never borrowed reentrantly).
+    scratch: RefCell<ScratchPool>,
     noise_sigma: f64,
     /// Set by [`Self::with_noise_sigma`]; a manifest `noise_sigma` never
     /// overrides an explicit caller choice.
@@ -74,6 +86,7 @@ impl StubRuntime {
             kernels: HashSet::new(),
             engine: PimEngine::tt(),
             parallelism: Parallelism::serial(),
+            scratch: RefCell::new(ScratchPool::new()),
             noise_sigma: DEFAULT_NOISE_SIGMA,
             noise_sigma_overridden: false,
         }
@@ -96,8 +109,29 @@ impl StubRuntime {
     /// Load a variant from in-memory parameters instead of an artifact
     /// directory — lets tests and the quickstart example exercise the full
     /// runtime path with synthetic weights, no artifacts required.
-    pub fn load_variant_params(&mut self, variant: ModelVariant, params: Params) {
-        self.models.insert(variant, Rc::new(ResNet::new(params)));
+    /// Compiles the network immediately (the same compile-once step
+    /// [`Runtime::load_variant`] performs, at the same mode-aware depth).
+    pub fn load_variant_params(&mut self, variant: ModelVariant, params: Params) -> Result<()> {
+        let program = Rc::new(Self::compile_for(&ResNet::new(params), variant)?);
+        self.models.insert(variant, program);
+        Ok(())
+    }
+
+    /// Does this variant execute through the hardware-true engine (and
+    /// therefore read the prepared quantized banks)?
+    fn needs_prepared(variant: ModelVariant) -> bool {
+        variant == ModelVariant::PimHw
+    }
+
+    /// Compile at the depth the variant reads: full (banks included) for
+    /// the hardware-true variant, dense-only for the fp32/emulation
+    /// variants — mirroring `NativeExecutor::new` / `ResNet::forward_par`.
+    fn compile_for(net: &ResNet, variant: ModelVariant) -> Result<CompiledNet> {
+        if Self::needs_prepared(variant) {
+            net.compile()
+        } else {
+            CompiledNet::compile_dense(net)
+        }
     }
 
     /// Register an emulated kernel without an artifact directory — the
@@ -142,15 +176,31 @@ impl Runtime for StubRuntime {
             }
         }
         let file = variant.weights_file();
-        let net = match self.by_file.get(file).cloned() {
-            Some(shared) => shared,
+        // Reuse the per-file program; if this variant needs the prepared
+        // banks and the cached compile was dense-only, upgrade in place
+        // from the already-reordered dense matrices (no weights
+        // re-parse) and re-point every variant sharing the old program,
+        // so exactly one copy of the network stays resident.
+        let program = match self.by_file.get(file).cloned() {
+            Some(shared) if !Self::needs_prepared(variant) || shared.fully_prepared() => shared,
+            Some(dense) => {
+                let upgraded = Rc::new(dense.prepare_banks());
+                for held in self.models.values_mut() {
+                    if Rc::ptr_eq(held, &dense) {
+                        *held = upgraded.clone();
+                    }
+                }
+                self.by_file.insert(file, upgraded.clone());
+                upgraded
+            }
             None => {
-                let loaded = Rc::new(ResNet::load(&dir.path(file)?)?);
-                self.by_file.insert(file, loaded.clone());
-                loaded
+                let net = ResNet::load(&dir.path(file)?)?;
+                let compiled = Rc::new(Self::compile_for(&net, variant)?);
+                self.by_file.insert(file, compiled.clone());
+                compiled
             }
         };
-        self.models.insert(variant, net);
+        self.models.insert(variant, program);
         Ok(())
     }
 
@@ -165,7 +215,7 @@ impl Runtime for StubRuntime {
         dims: (usize, usize, usize),
         key: Option<[u32; 2]>,
     ) -> Result<Vec<f32>> {
-        let net = self
+        let program = self
             .models
             .get(&variant)
             .ok_or_else(|| Error::Runtime(format!("{variant:?} not loaded")))?;
@@ -189,8 +239,16 @@ impl Runtime for StubRuntime {
             ModelVariant::PimHw => ForwardMode::PimHw,
         };
         let x = Tensor::from_vec(&[self.batch, h, w, c], images.to_vec());
-        Ok(net
-            .forward_par(&x, mode, Self::seed_from_key(key), self.parallelism)?
+        // Pure prepared execution: the program was quantized and packed at
+        // load time, so this allocates/prepares no weight state.
+        Ok(program
+            .forward_par(
+                &x,
+                mode,
+                Self::seed_from_key(key),
+                self.parallelism,
+                &mut self.scratch.borrow_mut(),
+            )
             .data)
     }
 
@@ -257,7 +315,7 @@ mod tests {
     #[test]
     fn forward_and_classify_via_params() {
         let mut rt = StubRuntime::new(2);
-        rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1));
+        rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1)).unwrap();
         let x = images(2, 2);
         let logits = rt.forward(ModelVariant::Baseline, &x, (16, 16, 3), None).unwrap();
         assert_eq!(logits.len(), 2 * 10);
@@ -270,7 +328,7 @@ mod tests {
     #[test]
     fn shape_mismatch_rejected() {
         let mut rt = StubRuntime::new(2);
-        rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1));
+        rt.load_variant_params(ModelVariant::Baseline, test_params(8, 10, 1)).unwrap();
         let x = images(1, 3); // half the expected batch
         assert!(rt.forward(ModelVariant::Baseline, &x, (16, 16, 3), None).is_err());
     }
@@ -278,7 +336,7 @@ mod tests {
     #[test]
     fn noise_requires_key_and_is_deterministic_in_it() {
         let mut rt = StubRuntime::new(1);
-        rt.load_variant_params(ModelVariant::PimNoise, test_params(8, 10, 5));
+        rt.load_variant_params(ModelVariant::PimNoise, test_params(8, 10, 5)).unwrap();
         let x = images(1, 4);
         assert!(rt.forward(ModelVariant::PimNoise, &x, (16, 16, 3), None).is_err());
         let a = rt.forward(ModelVariant::PimNoise, &x, (16, 16, 3), Some([1, 2])).unwrap();
@@ -294,9 +352,9 @@ mod tests {
         // bit-identical logits and predictions to the serial stub.
         let x = images(2, 9);
         let mut serial = StubRuntime::new(2);
-        serial.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 3));
+        serial.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 3)).unwrap();
         let mut threaded = StubRuntime::new(2).with_parallelism(Parallelism::threads(4));
-        threaded.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 3));
+        threaded.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 3)).unwrap();
         let a = serial.forward(ModelVariant::PimHw, &x, (16, 16, 3), None).unwrap();
         let b = threaded.forward(ModelVariant::PimHw, &x, (16, 16, 3), None).unwrap();
         assert_eq!(a, b);

@@ -126,3 +126,34 @@ fn fleet_live_pass_serves_through_real_servers() {
     assert_eq!(live.responses, live.requests, "every live request answered");
     assert!(live.batches > 0 && live.batches <= live.requests);
 }
+
+/// Compile-once / execute-many across campaign rewarms: each (tenant,
+/// replica) compiles its weight program exactly once, and the program is
+/// reused across every rewarm segment (servers are torn down and rebuilt
+/// between segments; compilations stay put).
+#[test]
+fn fleet_live_pass_compiles_once_per_tenant_replica() {
+    let reg = ModelRegistry::synthetic(3);
+    let total_replicas: u64 = reg.tenants.iter().map(|t| t.replicas as u64).sum();
+    let cfg = FleetSimConfig {
+        requests_per_tenant: 40,
+        live_serving: true,
+        ..FleetSimConfig::default()
+    };
+    let report = FleetSim::run(&cfg).unwrap();
+    let live = report.live.expect("live summary present");
+    assert_eq!(
+        live.compilations, total_replicas,
+        "exactly one compile per (tenant, replica)"
+    );
+    assert_eq!(
+        live.segments,
+        total_replicas * FleetSim::LIVE_SEGMENTS as u64,
+        "every replica served multiple rewarm segments"
+    );
+    assert!(
+        live.compilations < live.segments,
+        "programs must be reused across rewarm segments, not rebuilt per segment"
+    );
+    assert_eq!(live.responses, live.requests, "reuse must not drop requests");
+}

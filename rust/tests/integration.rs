@@ -98,12 +98,12 @@ fn serve_with_native_executor() {
     .unwrap();
     let server = Server::start(
         Box::new(move || {
-            Ok(Box::new(nvm_in_cache::coordinator::server::NativeExecutor {
-                net: ResNet::new(params),
-                mode: ForwardMode::Baseline,
-                dims: (16, 16, 3),
-                seed: 0,
-            }) as Box<dyn nvm_in_cache::coordinator::Executor>)
+            Ok(Box::new(nvm_in_cache::coordinator::server::NativeExecutor::new(
+                &ResNet::new(params),
+                ForwardMode::Baseline,
+                (16, 16, 3),
+                0,
+            )?) as Box<dyn nvm_in_cache::coordinator::Executor>)
         }),
         Some(scheduler),
         ServerConfig {

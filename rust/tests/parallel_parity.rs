@@ -108,7 +108,7 @@ fn resnet_forward_bit_identical_across_threads() {
 #[test]
 fn stub_runtime_set_parallelism_is_transparent() {
     let mut rt = StubRuntime::new(2);
-    rt.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 5));
+    rt.load_variant_params(ModelVariant::PimHw, test_params(8, 10, 5)).unwrap();
     let mut rng = Pcg64::seeded(400);
     let images: Vec<f32> = (0..2 * 16 * 16 * 3).map(|_| rng.f64() as f32).collect();
     let baseline = rt.forward(ModelVariant::PimHw, &images, (16, 16, 3), None).unwrap();

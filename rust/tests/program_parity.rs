@@ -1,0 +1,338 @@
+//! Compile-once / execute-many parity: a prepared weight program must be
+//! a pure *cost* optimization.
+//!
+//! The contract (ARCHITECTURE.md §program, PERFORMANCE.md §amortization):
+//! preparing weights once ([`PimEngine::prepare`], [`ResNet::compile`],
+//! `StubRuntime::load_variant*`) and executing many times produces output
+//! bit-identical to the historical one-shot path — noiseless and noisy, at
+//! any thread count — and the steady-state loop performs **zero** weight
+//! quantization/packing after compile (pinned via the thread-local
+//! `pim::program::prepare_count` counter; each test runs on its own
+//! thread, and all preparation happens on the calling thread, so the
+//! counter cannot race across tests).
+
+use nvm_in_cache::nn::resnet::test_params;
+use nvm_in_cache::nn::{ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::parallel::Parallelism;
+use nvm_in_cache::pim::program::{prepare_count, spec_matmul, ScratchPool};
+use nvm_in_cache::pim::PimEngine;
+use nvm_in_cache::runtime::{ModelVariant, Runtime, StubRuntime};
+use nvm_in_cache::util::rng::Pcg64;
+
+const THREADS: [usize; 3] = [1, 2, 7];
+
+fn rand_mat(rng: &mut Pcg64, len: usize, lo: f64, hi: f64) -> Vec<f32> {
+    (0..len).map(|_| rng.range(lo, hi) as f32).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Acceptance: the prepared engine matmul is bit-identical to the
+/// one-shot path for threads ∈ {1, 2, 7}, noiseless and noisy, advances
+/// a caller RNG identically, and executes with zero prepare events.
+#[test]
+fn engine_prepared_bit_identical_noiseless_and_noisy() {
+    let mut rng = Pcg64::seeded(500);
+    // Ragged shape: k spans 3 row blocks (128 + 128 + 44), n spans 2
+    // output tiles (128 + 29).
+    let (m, k, n) = (5, 300, 157);
+    let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+    let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+    for sigma in [None, Some(0.5)] {
+        let eng = match sigma {
+            None => PimEngine::tt(),
+            Some(s) => PimEngine::tt().with_noise(s),
+        };
+        let program = eng.prepare(&w, k, n);
+        let steady = prepare_count();
+        for t in THREADS {
+            let par = Parallelism::threads(t);
+            let mut r1 = sigma.map(|_| Pcg64::seeded(11));
+            let oneshot = eng.par_matmul(&a, m, k, &w, n, r1.as_mut(), par);
+            let before = prepare_count();
+            let mut r2 = sigma.map(|_| Pcg64::seeded(11));
+            let prepared = eng.par_matmul_prepared(&a, m, &program, r2.as_mut(), par);
+            assert_eq!(
+                prepare_count(),
+                before,
+                "prepared execution must not prepare (sigma={sigma:?} t={t})"
+            );
+            assert_eq!(bits(&oneshot), bits(&prepared), "sigma={sigma:?} threads={t}");
+            if let (Some(mut r1), Some(mut r2)) = (r1, r2) {
+                assert_eq!(r1.next_u64(), r2.next_u64(), "rng diverged at t={t}");
+            }
+        }
+        // The one-shot calls above prepared internally (2 banks each);
+        // the prepared calls themselves contributed nothing beyond that.
+        assert_eq!(
+            prepare_count() - steady,
+            2 * THREADS.len() as u64,
+            "exactly the one-shot calls prepared"
+        );
+    }
+}
+
+/// The wrapper-vs-core assertions above share the prepared core on both
+/// sides; this one does not: the engine (packed banks, tiled unit grid,
+/// worker pool) must match the independent straight-line specification
+/// (`pim::program::spec_matmul` — raw row-major banks, nested loops)
+/// bit-for-bit. This is the witness that the tile-aligned layout and the
+/// reduce order are actually right.
+#[test]
+fn engine_prepared_matches_independent_spec() {
+    let mut rng = Pcg64::seeded(550);
+    // Ragged in both dimensions plus single-tile and single-block cases.
+    for &(m, k, n) in &[(5usize, 300usize, 157usize), (1, 128, 128), (3, 45, 31)] {
+        let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+        let spec = spec_matmul(&a, m, k, &w, n);
+        let eng = PimEngine::tt();
+        let program = eng.prepare(&w, k, n);
+        for t in THREADS {
+            let got = eng.par_matmul_prepared(&a, m, &program, None, Parallelism::threads(t));
+            assert_eq!(bits(&spec), bits(&got), "m={m} k={k} n={n} threads={t}");
+        }
+    }
+}
+
+/// The pre-refactor (PR 4) `ResNet::forward_par` body, resurrected
+/// verbatim as the **historical reference** — built from the public
+/// one-shot layer APIs only, no `CompiledNet`. This independently
+/// restates the network choreography the compiled forward must
+/// reproduce: per-layer RNG forks (`rng_opt`), §V-E `post` placement,
+/// the downsample-only fork, and the fc bias deferred past `post`.
+/// (Engine-level fidelity of the one-shot layers it calls is pinned
+/// separately by `spec_matmul` above.)
+fn historical_forward(
+    net: &ResNet,
+    x: &Tensor,
+    mode: ForwardMode,
+    seed: u64,
+    par: Parallelism,
+) -> Tensor {
+    use nvm_in_cache::nn::layers;
+    use nvm_in_cache::nn::resnet::STAGES;
+    use nvm_in_cache::pim::TransferModel;
+
+    let engine = match mode {
+        ForwardMode::PimHw => Some(PimEngine::tt().with_parallelism(par)),
+        ForwardMode::PimHwNoise(sigma) => {
+            Some(PimEngine::tt().with_noise(sigma).with_parallelism(par))
+        }
+        _ => None,
+    };
+    let emu_sigma: Option<Option<f64>> = match mode {
+        ForwardMode::Pim => Some(None),
+        ForwardMode::PimNoise(s) => Some(Some(s)),
+        _ => None,
+    };
+    let transfer = TransferModel::tt();
+    let mut rng = Pcg64::seeded(seed);
+    let hw_noise = matches!(mode, ForwardMode::PimHwNoise(_));
+    let rng_opt = |r: &mut Pcg64| -> Option<Pcg64> {
+        if hw_noise {
+            Some(r.fork(1))
+        } else {
+            None
+        }
+    };
+    let p = &net.params;
+    let eng = engine.as_ref();
+
+    let gn = |t: &Tensor, g: &Tensor, b: &Tensor| -> Tensor {
+        layers::group_norm(t, &g.data, &b.data, 1e-5)
+    };
+    let post = |t: Tensor, r: &mut Pcg64| -> Tensor {
+        match emu_sigma {
+            None => t,
+            Some(sigma) => {
+                let mut local = r.fork(2);
+                layers::adc_emulate(&t, &transfer, sigma, Some(&mut local))
+            }
+        }
+    };
+
+    let mut local = rng_opt(&mut rng);
+    let mut h = layers::conv2d_par(x, p.get("stem/w").unwrap(), 1, eng, local.as_mut(), par);
+    h = post(h, &mut rng);
+    h = gn(&h, p.get("stem/gamma").unwrap(), p.get("stem/beta").unwrap()).relu();
+
+    for (s, &nblocks) in STAGES.iter().enumerate() {
+        let stride = if s == 0 { 1 } else { 2 };
+        for b in 0..nblocks {
+            let st = if b == 0 { stride } else { 1 };
+            let pre = format!("s{s}b{b}");
+            let get = |name: &str| p.get(&format!("{pre}/{name}")).unwrap();
+            let idn = h.clone();
+            let mut local = rng_opt(&mut rng);
+            h = layers::conv2d_par(&h, get("w1"), st, eng, local.as_mut(), par);
+            h = post(h, &mut rng);
+            h = gn(&h, get("g1"), get("b1")).relu();
+            let mut local = rng_opt(&mut rng);
+            h = layers::conv2d_par(&h, get("w2"), 1, eng, local.as_mut(), par);
+            h = post(h, &mut rng);
+            h = gn(&h, get("g2"), get("b2"));
+            let idn = if p.tensors.contains_key(&format!("{pre}/wd")) {
+                let mut local = rng_opt(&mut rng);
+                let d = layers::conv2d_par(&idn, get("wd"), st, eng, local.as_mut(), par);
+                post(d, &mut rng)
+            } else {
+                idn
+            };
+            h = h.add(&idn).relu();
+        }
+    }
+    let pooled = layers::global_avg_pool(&h);
+    let mut local = rng_opt(&mut rng);
+    let fc_w = p.get("fc/w").unwrap();
+    let fc_b = p.get("fc/b").unwrap();
+    let logits =
+        layers::linear_par(&pooled, fc_w, &vec![0.0; fc_b.len()], eng, local.as_mut(), par);
+    let mut logits = post(logits, &mut rng);
+    for n in 0..logits.shape[0] {
+        for c in 0..logits.shape[1] {
+            logits.data[n * logits.shape[1] + c] += fc_b.data[c];
+        }
+    }
+    logits
+}
+
+/// The compiled forward vs the resurrected PR-4 forward body — the
+/// network-level independent witness that the compile-once refactor
+/// preserved the historical choreography bit-for-bit (RNG forks, post
+/// placement, bias timing), in every mode, serial and threaded.
+#[test]
+fn compiled_forward_matches_historical_choreography() {
+    let net = ResNet::new(test_params(8, 10, 42));
+    let program = net.compile().unwrap();
+    let mut rng = Pcg64::seeded(650);
+    let x = Tensor::from_vec(
+        &[2, 16, 16, 3],
+        (0..2 * 16 * 16 * 3).map(|_| rng.f64() as f32).collect(),
+    );
+    let mut scratch = ScratchPool::new();
+    for mode in [
+        ForwardMode::Baseline,
+        ForwardMode::Pim,
+        ForwardMode::PimNoise(0.4),
+        ForwardMode::PimHw,
+        ForwardMode::PimHwNoise(0.4),
+    ] {
+        for t in [1usize, 3] {
+            let par = Parallelism::threads(t);
+            let want = historical_forward(&net, &x, mode, 7, par);
+            let got = program.forward_par(&x, mode, 7, par, &mut scratch);
+            assert_eq!(bits(&want.data), bits(&got.data), "{mode:?} threads={t}");
+        }
+    }
+}
+
+/// End-to-end: `ResNet::compile` → `CompiledNet::forward_par` matches the
+/// uncompiled forward in every mode (including both noisy pipelines) at
+/// every thread count, with the scratch pool reused throughout. (The
+/// uncompiled forward is itself a compile-then-run wrapper now, so this
+/// pins wrapper faithfulness; the independent historical witness is
+/// `compiled_forward_matches_historical_choreography` above.)
+#[test]
+fn resnet_compiled_bit_identical_all_modes() {
+    let net = ResNet::new(test_params(8, 10, 42));
+    let program = net.compile().unwrap();
+    assert!(program.fully_prepared());
+    let mut rng = Pcg64::seeded(600);
+    let x = Tensor::from_vec(
+        &[2, 16, 16, 3],
+        (0..2 * 16 * 16 * 3).map(|_| rng.f64() as f32).collect(),
+    );
+    let mut scratch = ScratchPool::new();
+    for mode in [
+        ForwardMode::Baseline,
+        ForwardMode::Pim,
+        ForwardMode::PimNoise(0.4),
+        ForwardMode::PimHw,
+        ForwardMode::PimHwNoise(0.4),
+    ] {
+        let oneshot = net.forward(&x, mode, 7).unwrap();
+        let before = prepare_count();
+        for t in THREADS {
+            let compiled = program.forward_par(&x, mode, 7, Parallelism::threads(t), &mut scratch);
+            assert_eq!(bits(&oneshot.data), bits(&compiled.data), "{mode:?} threads={t}");
+        }
+        assert_eq!(prepare_count(), before, "{mode:?}: compiled forwards must not prepare");
+    }
+}
+
+/// The stub runtime's cached program path: logits match a fresh
+/// uncompiled forward bit-for-bit, and the steady-state serving loop
+/// (repeated forwards after `load_variant_params`) performs zero weight
+/// preparation.
+#[test]
+fn stub_runtime_prepared_path_matches_and_is_prepare_free() {
+    let batch = 2;
+    let params = test_params(8, 10, 21);
+    let net = ResNet::new(params.clone());
+    let mut rt = StubRuntime::new(batch);
+    rt.load_variant_params(ModelVariant::PimHw, params.clone()).unwrap();
+    rt.load_variant_params(ModelVariant::Baseline, params).unwrap();
+    let mut rng = Pcg64::seeded(700);
+    let images: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.f64() as f32).collect();
+    let x = Tensor::from_vec(&[batch, 16, 16, 3], images.clone());
+
+    // References via the one-shot path first (these may prepare — they
+    // are outside the steady-state window measured below).
+    let want_hw: Vec<Vec<u32>> = THREADS
+        .iter()
+        .map(|&t| {
+            bits(&net.forward_par(&x, ForwardMode::PimHw, 0, Parallelism::threads(t)).unwrap().data)
+        })
+        .collect();
+    let want_base = bits(&net.forward(&x, ForwardMode::Baseline, 0).unwrap().data);
+
+    let steady = prepare_count();
+    for (i, &t) in THREADS.iter().enumerate() {
+        rt.set_parallelism(Parallelism::threads(t));
+        let hw = rt.forward(ModelVariant::PimHw, &images, (16, 16, 3), None).unwrap();
+        let base = rt.forward(ModelVariant::Baseline, &images, (16, 16, 3), None).unwrap();
+        assert_eq!(bits(&hw), want_hw[i], "threads={t}");
+        assert_eq!(bits(&base), want_base, "threads={t}");
+    }
+    assert_eq!(prepare_count(), steady, "serving loop must be prepare-free after load");
+}
+
+/// Hand-rolled proptest: prepared vs one-shot over ragged shapes — k not
+/// a multiple of 128 (partial row blocks), odd n that may straddle the
+/// 128-word tile edge, random thread counts, noise on or off. The
+/// prepared program must never change a single bit.
+#[test]
+fn prop_prepared_parity_ragged_shapes() {
+    use nvm_in_cache::consts::ARRAY_ROWS;
+    for seed in 0..24 {
+        let mut rng = Pcg64::seeded(20_000 + seed);
+        let m = 1 + rng.below(5);
+        let k = {
+            let mut k = 1 + rng.below(320);
+            if k % ARRAY_ROWS == 0 {
+                k += 1;
+            }
+            k
+        };
+        let n = 1 + 2 * rng.below(80); // odd, up to 159
+        let threads = 1 + rng.below(7);
+        let noisy = rng.below(2) == 0;
+        let a = rand_mat(&mut rng, m * k, 0.0, 2.0);
+        let w = rand_mat(&mut rng, k * n, -1.0, 1.0);
+        let eng = if noisy { PimEngine::tt().with_noise(0.5) } else { PimEngine::tt() };
+        let par = Parallelism::threads(threads);
+        let mut r1 = noisy.then(|| Pcg64::seeded(seed));
+        let oneshot = eng.par_matmul(&a, m, k, &w, n, r1.as_mut(), par);
+        let program = eng.prepare(&w, k, n);
+        let mut r2 = noisy.then(|| Pcg64::seeded(seed));
+        let prepared = eng.par_matmul_prepared(&a, m, &program, r2.as_mut(), par);
+        assert_eq!(
+            bits(&oneshot),
+            bits(&prepared),
+            "seed {seed}: m={m} k={k} n={n} threads={threads} noisy={noisy}"
+        );
+    }
+}

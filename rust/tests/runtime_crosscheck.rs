@@ -77,7 +77,7 @@ fn runtime_forward_matches_native() {
     let params = test_params(8, 10, 21);
     let net = ResNet::new(params.clone());
     let mut rt = StubRuntime::new(batch);
-    rt.load_variant_params(ModelVariant::Baseline, params);
+    rt.load_variant_params(ModelVariant::Baseline, params).unwrap();
     let mut rng = Pcg64::seeded(22);
     let images: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.f64() as f32).collect();
     let rt_logits = rt
@@ -100,7 +100,7 @@ fn runtime_forward_matches_native() {
 fn noise_variant_deterministic_and_mild() {
     let batch = 1;
     let mut rt = StubRuntime::new(batch);
-    rt.load_variant_params(ModelVariant::PimNoise, test_params(8, 10, 23));
+    rt.load_variant_params(ModelVariant::PimNoise, test_params(8, 10, 23)).unwrap();
     let mut rng = Pcg64::seeded(24);
     let images: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.f64() as f32).collect();
     let a = rt

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Machine-readable perf-trajectory record for this PR: runs the hot-path
 # micro-benchmarks (serial vs N-thread tiled execution) plus the fleet-sim
-# summary and writes BENCH_PR4.json at the repository root (so
+# summary and writes BENCH_PR5.json at the repository root (so
 # BENCH_*.json accumulates across PRs — see PERFORMANCE.md).
 #
 # The record has two sections: `comparison` (deterministic — workload
@@ -14,7 +14,7 @@ set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-OUT="${1:-BENCH_PR4.json}"
+OUT="${1:-BENCH_PR5.json}"
 THREADS="${2:-4}"
 
 cargo run --release --bin repro -- bench --json "$OUT" --threads "$THREADS"

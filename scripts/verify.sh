@@ -8,6 +8,9 @@
 #      #![warn(missing_docs)]; broken intra-doc links fail the gate)
 #   5. cargo fmt --check (when the rustfmt component is installed)
 #   6. cargo clippy -- -D warnings (when the clippy component is installed)
+#   7. bench_compare.sh over the two newest BENCH_PR*.json trajectory
+#      records (when ≥2 exist and python3 is available) — fails the gate
+#      on a parity regression in the deterministic comparison section
 #
 # Run from anywhere inside the repository; fully offline.
 set -euo pipefail
@@ -38,6 +41,21 @@ if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings
 else
   echo "== cargo clippy: clippy not installed, skipping =="
+fi
+
+# Guarded cross-PR parity gate: diff the two newest trajectory records.
+if command -v python3 >/dev/null 2>&1; then
+  mapfile -t BENCHES < <(ls BENCH_PR*.json 2>/dev/null | sort -V)
+  if [ "${#BENCHES[@]}" -ge 2 ]; then
+    OLD="${BENCHES[${#BENCHES[@]}-2]}"
+    NEW="${BENCHES[${#BENCHES[@]}-1]}"
+    echo "== scripts/bench_compare.sh $OLD $NEW =="
+    scripts/bench_compare.sh "$OLD" "$NEW"
+  else
+    echo "== bench_compare: fewer than two BENCH_PR*.json records, skipping =="
+  fi
+else
+  echo "== bench_compare: python3 not available, skipping =="
 fi
 
 echo "verify: OK"
