@@ -52,9 +52,10 @@
 //! * [`figures`] — one generator per paper table/figure.
 //!
 //! See README.md for the quickstart, ARCHITECTURE.md for the layer-by-layer
-//! data flow, EXPERIMENTS.md for the experiment ids (E1–E13, §Perf, A1–A3)
+//! data flow, EXPERIMENTS.md for the experiment ids (E1–E14, §Perf, A1–A3)
 //! cited throughout the code, and PERFORMANCE.md for the tiled parallel
-//! engine and the cross-PR perf trajectory.
+//! engine, the word-wide bit-plane MAC kernel, and the cross-PR perf
+//! trajectory.
 
 #![warn(missing_docs)]
 

@@ -18,10 +18,12 @@
 //!   bench     [--quick] [--threads T] [--json [FILE]]
 //!             hot-path micro-benchmarks, serial vs T-thread tiled execution
 //!             (engine matmul + ResNet-18 stub inference), the
-//!             prepare_vs_execute section (one-time weight-program compile
-//!             cost vs steady-state prepared execution, amortization
-//!             ratios), + fleet-sim summary; --json writes the
-//!             machine-readable perf-trajectory record (BENCH_PR5.json, or
+//!             simd_vs_scalar MAC-kernel race (word-wide bit-plane
+//!             popcount vs the historical scalar kernel, parity + speedup),
+//!             the prepare_vs_execute section (one-time weight-program
+//!             compile cost vs steady-state prepared execution,
+//!             amortization ratios), + fleet-sim summary; --json writes the
+//!             machine-readable perf-trajectory record (BENCH_PR6.json, or
 //!             FILE when given) — see PERFORMANCE.md
 //!   info      print headline perf model numbers
 
@@ -279,17 +281,18 @@ fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
 }
 
 /// Hot-path micro-benchmarks — each parallelizable stage serial vs
-/// `--threads T` tiled execution — plus the prepare_vs_execute section
-/// (compile-once cost vs steady-state prepared execution) and the
-/// fleet-sim summary; `--json` additionally writes the machine-readable
-/// perf-trajectory record (BENCH_PR5.json; see PERFORMANCE.md for the
-/// format and trajectory).
+/// `--threads T` tiled execution — plus the simd_vs_scalar MAC-kernel
+/// microbench, the prepare_vs_execute section (compile-once cost vs
+/// steady-state prepared execution), and the fleet-sim summary; `--json`
+/// additionally writes the machine-readable perf-trajectory record
+/// (BENCH_PR6.json; see PERFORMANCE.md for the format and trajectory).
 fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
     use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
     use nvm_in_cache::nn::resnet::test_params;
     use nvm_in_cache::nn::Tensor;
-    use nvm_in_cache::pim::{program, PimEngine};
+    use nvm_in_cache::pim::quant::quantize_acts;
+    use nvm_in_cache::pim::{program, MacKernel, PimEngine};
     use nvm_in_cache::runtime::{Runtime, StubRuntime};
     use nvm_in_cache::util::bench::Bencher;
     use nvm_in_cache::util::json::Json;
@@ -338,6 +341,40 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     let name_eng_prepared = format!("engine_matmul_prepared_{m}x{k}x{n}_t1");
     b.bench_with_items(&name_eng_prepared, (m * k * n) as f64, || {
         eng.matmul_prepared(&a, m, &engine_program, None)
+    });
+
+    // Hot path 1b: the MAC inner kernel itself — word-wide AND/popcount
+    // (MacKernel::BitPlane, the default) vs the historical scalar kernel
+    // on one fully-populated sub-array tile (128 rows × 128 word columns,
+    // m = 128 output rows), measured through the prepared single-bank
+    // path so nothing but the lane fill differs. The parity verdict races
+    // the kernels noiseless AND noisy (trailing RNG state included); the
+    // exhaustive differential suite is rust/tests/simd_parity.rs. See
+    // PERFORMANCE.md §8.
+    let (sm, sk, sn) = (ARRAY_ROWS, ARRAY_ROWS, ARRAY_WORDS);
+    let tile_a: Vec<f32> = (0..sm * sk).map(|_| rng.range(0.0, 1.0) as f32).collect();
+    let tile_w: Vec<f32> = (0..sk * sn).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+    let eng_scalar = PimEngine::tt().with_kernel(MacKernel::Scalar);
+    let tile_program = eng.prepare(&tile_w, sk, sn);
+    let tile_qa = quantize_acts(&tile_a, sm, sk);
+    let parity_simd_scalar = {
+        let noiseless = eng.bank_mac_prepared(&tile_qa, &tile_program.pos, None)
+            == eng_scalar.bank_mac_prepared(&tile_qa, &tile_program.pos, None);
+        let ne_simd = PimEngine::tt().with_noise(0.4);
+        let ne_scalar = ne_simd.clone().with_kernel(MacKernel::Scalar);
+        let (mut r1, mut r2) = (Pcg64::seeded(9), Pcg64::seeded(9));
+        let noisy = ne_simd.matmul_prepared(&tile_a, sm, &tile_program, Some(&mut r1))
+            == ne_scalar.matmul_prepared(&tile_a, sm, &tile_program, Some(&mut r2))
+            && r1.next_u64() == r2.next_u64();
+        noiseless && noisy
+    };
+    let name_mac_simd = format!("mac_kernel_simd_{sm}x{sk}x{sn}");
+    let name_mac_scalar = format!("mac_kernel_scalar_{sm}x{sk}x{sn}");
+    b.bench_with_items(&name_mac_simd, (sm * sk * sn) as f64, || {
+        eng.bank_mac_prepared(&tile_qa, &tile_program.pos, None)
+    });
+    b.bench_with_items(&name_mac_scalar, (sm * sk * sn) as f64, || {
+        eng_scalar.bank_mac_prepared(&tile_qa, &tile_program.pos, None)
     });
 
     // Hot path 2: cell-accurate sub-array full 4b MAC.
@@ -441,6 +478,14 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
              resnet {parity_resnet})"
         );
     }
+    let speedup_simd = mean(&name_mac_scalar).zip(mean(&name_mac_simd)).map(|(s, p)| s / p);
+    if let Some(s) = speedup_simd {
+        println!(
+            "simd_vs_scalar: word-wide bit-plane kernel {s:.2}x over scalar on the \
+             {sm}x{sk}x{sn} tile MAC (bit-identical incl. noise + rng state: \
+             {parity_simd_scalar})"
+        );
+    }
 
     // prepare_vs_execute summary: how many steady-state calls amortize
     // the one-time compile (compile_cost / per-call saving of prepared vs
@@ -471,7 +516,7 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     print!("{}", fleet_report.render());
 
     if args.flag("json") {
-        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR5.json"));
+        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR6.json"));
         // Two sections (PERFORMANCE.md): `comparison` holds only
         // deterministic fields (workload descriptors, parity verdicts, the
         // simulated-clock fleet report) so trajectory files diff cleanly
@@ -483,6 +528,16 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
             ("parity_resnet_bit_identical", Json::Bool(parity_resnet)),
             ("parity_prepared_engine_bit_identical", Json::Bool(parity_prepared_engine)),
             ("steady_state_zero_prepares", Json::Bool(steady_state_zero_prepares)),
+            (
+                "simd_vs_scalar",
+                Json::obj(vec![
+                    ("parity_simd_scalar_bit_identical", Json::Bool(parity_simd_scalar)),
+                    (
+                        "kernel_default_is_bit_plane",
+                        Json::Bool(MacKernel::thread_default() == MacKernel::BitPlane),
+                    ),
+                ]),
+            ),
             ("fleet_sim", fleet_report.to_json()),
         ]);
         let mut measured = vec![("benches", b.to_json())];
@@ -508,8 +563,19 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
             }
         }
         measured.push(("prepare_vs_execute", Json::obj(pve)));
+        let mut svs: Vec<(&str, Json)> = Vec::new();
+        for (key, v) in [
+            ("mac_kernel_scalar_s", mean(&name_mac_scalar)),
+            ("mac_kernel_simd_s", mean(&name_mac_simd)),
+            ("speedup_simd_vs_scalar", speedup_simd),
+        ] {
+            if let Some(v) = v {
+                svs.push((key, Json::Num(v)));
+            }
+        }
+        measured.push(("simd_vs_scalar", Json::obj(svs)));
         let doc = Json::obj(vec![
-            ("pr", Json::Num(5.0)),
+            ("pr", Json::Num(6.0)),
             ("comparison", comparison),
             ("measured", Json::obj(measured)),
         ]);

@@ -8,12 +8,19 @@
 //! cross-checked against.
 //!
 //! Hot path: integer bit-plane accumulation + an exact ADC LUT (the analog
-//! transfer is a pure function of an integer MAC ≤ 1920). The work factors
-//! into data-independent *units* — one per (output row × 128-row block ×
-//! 128-word output tile), mirroring the sub-array organization — which
-//! [`PimEngine::par_matmul`] schedules over the [`super::parallel`] worker
-//! pool; the shift-add reduce runs in unit order, so parallel output is
-//! bit-identical to serial (PERFORMANCE.md, `rust/tests/parallel_parity.rs`).
+//! transfer is a pure function of an integer MAC ≤ 1920). The inner loop
+//! is a word-wide AND/popcount kernel in the Neural Cache style
+//! ([`MacKernel::BitPlane`], PERFORMANCE.md §8): weights and activations
+//! are transposed into per-bit-plane `u64` bitmaps along the reduction
+//! dimension, so one bitwise AND + popcount covers 64 reduction rows at
+//! once; the historical byte-walking kernel stays alive as
+//! [`MacKernel::Scalar`] and the two are raced bit-for-bit by
+//! `rust/tests/simd_parity.rs`. The work factors into data-independent
+//! *units* — one per (output row × 128-row block × 128-word output tile),
+//! mirroring the sub-array organization — which [`PimEngine::par_matmul`]
+//! schedules over the [`super::parallel`] worker pool; the shift-add
+//! reduce runs in unit order, so parallel output is bit-identical to
+//! serial (PERFORMANCE.md, `rust/tests/parallel_parity.rs`).
 //!
 //! Weight handling follows the compile-once / execute-many split of
 //! [`super::program`]: [`PimEngine::prepare`] quantizes + packs a weight
@@ -23,14 +30,28 @@
 //! so prepared and one-shot output are bit-identical
 //! (`rust/tests/program_parity.rs`).
 
+use std::cell::Cell;
+
 use crate::consts::{ARRAY_ROWS, ARRAY_WORDS};
 use crate::device::Corner;
 use crate::util::rng::Pcg64;
 
 use super::parallel::{self, Parallelism};
 use super::program::{PreparedBank, PreparedWeights};
-use super::quant::{quantize_acts, QuantizedActs};
+use super::quant::{quantize_acts, PackedActPlanes, QuantizedActs};
 use super::transfer::{TransferModel, ADC_CODES, MAC_FULLSCALE};
+
+// Both kernels pack the four bit-plane MACs of one k-block into the four
+// 16-bit lanes of a u64; a geometry change that could overflow a lane
+// (worst case: all-15 activations × all-15 weights over a full block)
+// must fail the build, not wrap silently at runtime.
+const _: () = assert!(
+    ARRAY_ROWS * 15 <= u16::MAX as usize,
+    "a full row block's bit-plane MAC must fit a 16-bit recombination lane"
+);
+// The word-wide kernel slices 64-row bitmap words out of 128-row blocks;
+// block boundaries must land on word boundaries.
+const _: () = assert!(ARRAY_ROWS % 64 == 0, "row blocks must align with 64-bit plane words");
 
 /// Spread mask: activation nibble bit `b` → bit 16·b, so one u64
 /// multiply-add accumulates all four bit-plane MACs at once (each plane
@@ -47,6 +68,130 @@ const SPREAD: [u64; 16] = {
     }
     t
 };
+
+thread_local! {
+    static DEFAULT_KERNEL: Cell<MacKernel> = const { Cell::new(MacKernel::BitPlane) };
+}
+
+/// Selects the MAC inner-loop implementation of [`PimEngine::mac_unit`].
+///
+/// Both kernels compute the **same integers**: the per-(row block ×
+/// bit-plane) MAC that indexes the ADC LUT. They differ only in how the
+/// packed lane accumulators are filled, so noiseless and noisy outputs
+/// are bit-identical at any thread count — pinned forever by the
+/// differential harness `rust/tests/simd_parity.rs`, which is why the
+/// scalar kernel stays alive rather than being deleted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MacKernel {
+    /// Word-wide AND/popcount over transposed bit-plane bitmaps
+    /// ([`PreparedBank::plane_row`] × [`PackedActPlanes`]): one bitwise
+    /// op covers 64 reduction rows. The default; PERFORMANCE.md §8.
+    #[default]
+    BitPlane,
+    /// The historical kernel: walk packed nibble rows byte-by-byte,
+    /// accumulating `SPREAD[act] * weight` per column.
+    Scalar,
+}
+
+impl MacKernel {
+    /// The kernel newly constructed engines on this thread default to
+    /// ([`MacKernel::BitPlane`] unless overridden).
+    pub fn thread_default() -> MacKernel {
+        DEFAULT_KERNEL.with(|c| c.get())
+    }
+
+    /// Override the kernel that engines constructed **on this thread**
+    /// default to. This is the differential-test seam: layers that build
+    /// their own engines internally (compiled networks, the stub
+    /// runtime) can be rerun wholesale on the scalar kernel without any
+    /// extra plumbing. Worker threads only borrow already-built engines,
+    /// so the override needs to be set only on the constructing thread.
+    pub fn set_thread_default(kernel: MacKernel) {
+        DEFAULT_KERNEL.with(|c| c.set(kernel));
+    }
+
+    /// Does this kernel consume transposed activation bit-planes?
+    pub fn uses_bit_planes(&self) -> bool {
+        matches!(self, MacKernel::BitPlane)
+    }
+}
+
+/// Scalar lane fill ([`MacKernel::Scalar`]): walk the packed nibble rows
+/// of the unit's row block byte-by-byte, accumulating `SPREAD[act] · w`
+/// into each column's packed lanes. `a_row` is the activation row
+/// (length k); `packed` is the unit's `width` lane accumulators.
+///
+/// (Perf note, EXPERIMENTS.md §Perf: pre-widening the bank to u64 was
+/// tried and reverted — 8× memory traffic lost more than the widening
+/// saved. The u8 loads below widen in-register.)
+fn fill_unit_scalar(
+    a_row: &[u8],
+    bank: &PreparedBank,
+    ti: usize,
+    k0: usize,
+    k1: usize,
+    packed: &mut [u64],
+) {
+    let width = packed.len();
+    for kk in k0..k1 {
+        let mask = SPREAD[a_row[kk] as usize];
+        if mask == 0 {
+            continue;
+        }
+        let w_row = &bank.row(ti, kk)[..width];
+        for (acc, &w) in packed.iter_mut().zip(w_row) {
+            *acc += mask * w as u64;
+        }
+    }
+}
+
+/// Word-wide AND/popcount lane fill ([`MacKernel::BitPlane`], the Neural
+/// Cache formulation): for each 64-row bitmap word of the block and each
+/// weight bit-plane `bw`, add `popcount(act_plane_ba & w_plane_bw) << bw`
+/// into activation-plane lane `ba` — 64 reduction rows per bitwise op
+/// instead of one byte multiply-add each.
+///
+/// Exactness: a popcount is ≤ 64, so `count << bw` ≤ 512 and each 16-bit
+/// lane totals at most `15 · ARRAY_ROWS = 1920` over a full block (the
+/// compile-time assert above) — no cross-lane carry, and each lane holds
+/// *exactly* the integer `Σ_kk act_bit(ba,kk) · w(kk)` the scalar fill
+/// computes, because `w(kk) = Σ_bw 2^bw · w_bit(bw,kk)`. Identical lane
+/// integers ⇒ identical LUT lookups ⇒ bit-identical f32 output.
+fn fill_unit_bitplane(
+    pa: &PackedActPlanes,
+    bank: &PreparedBank,
+    i: usize,
+    ti: usize,
+    k0: usize,
+    k1: usize,
+    packed: &mut [u64],
+) {
+    let width = packed.len();
+    // ARRAY_ROWS % 64 == 0 ⇒ k0 is word-aligned; the last word's padding
+    // bits are zero in both operands.
+    let (kw0, kw1) = (k0 / 64, k1.div_ceil(64));
+    for kw in kw0..kw1 {
+        let aw = [
+            pa.word(i, 0, kw),
+            pa.word(i, 1, kw),
+            pa.word(i, 2, kw),
+            pa.word(i, 3, kw),
+        ];
+        if aw == [0, 0, 0, 0] {
+            continue;
+        }
+        for bw in 0..4 {
+            let w_row = &bank.plane_row(ti, bw, kw)[..width];
+            for (acc, &wv) in packed.iter_mut().zip(w_row) {
+                let lanes = ((aw[0] & wv).count_ones() as u64)
+                    | ((aw[1] & wv).count_ones() as u64) << 16
+                    | ((aw[2] & wv).count_ones() as u64) << 32
+                    | ((aw[3] & wv).count_ones() as u64) << 48;
+                *acc += lanes << bw;
+            }
+        }
+    }
+}
 
 /// The tiling grid one bank MAC decomposes into: `m` output rows ×
 /// ⌈k/128⌉ row blocks (the 128-row powerline accumulation limit) ×
@@ -114,11 +259,15 @@ pub struct PimEngine {
     /// Worker-pool width for [`Self::pim_matmul`] / [`Self::bank_mac`]
     /// (serial by default; [`Self::par_matmul`] overrides per call).
     pub parallelism: Parallelism,
+    /// MAC inner-loop implementation (word-wide bit-plane popcount by
+    /// default; both choices are bit-identical — see [`MacKernel`]).
+    pub kernel: MacKernel,
     lut: Vec<f32>,
 }
 
 impl PimEngine {
-    /// Engine for a corner, calibrated references, noiseless.
+    /// Engine for a corner, calibrated references, noiseless. The MAC
+    /// kernel comes from [`MacKernel::thread_default`].
     pub fn new(corner: Corner) -> PimEngine {
         let transfer = TransferModel::new(corner);
         PimEngine {
@@ -126,6 +275,7 @@ impl PimEngine {
             calibrated: true,
             noise_sigma_codes: None,
             parallelism: Parallelism::serial(),
+            kernel: MacKernel::thread_default(),
             lut: transfer.quantize_lut(true),
         }
     }
@@ -148,6 +298,29 @@ impl PimEngine {
         self
     }
 
+    /// Select the MAC inner-loop kernel. Output is bit-identical across
+    /// kernels (the differential contract of `rust/tests/simd_parity.rs`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nvm_in_cache::pim::engine::MacKernel;
+    /// use nvm_in_cache::pim::PimEngine;
+    ///
+    /// let a = vec![0.7f32; 3 * 150];
+    /// let w = vec![0.3f32; 150 * 5];
+    /// let simd = PimEngine::tt(); // default: MacKernel::BitPlane
+    /// let scalar = PimEngine::tt().with_kernel(MacKernel::Scalar);
+    /// assert_eq!(
+    ///     simd.pim_matmul(&a, 3, 150, &w, 5, None),
+    ///     scalar.pim_matmul(&a, 3, 150, &w, 5, None),
+    /// );
+    /// ```
+    pub fn with_kernel(mut self, kernel: MacKernel) -> PimEngine {
+        self.kernel = kernel;
+        self
+    }
+
     /// Switch to the uncalibrated (full-VDD reference) ADC of Fig. 12.
     pub fn uncalibrated(mut self) -> PimEngine {
         self.calibrated = false;
@@ -156,13 +329,23 @@ impl PimEngine {
     }
 
     /// One tile unit: powerline accumulation of the unit's row block for
-    /// its word columns (all four bit-planes packed in u64), then WCC +
-    /// S&H + SAR conversion into `scratch.partial` — the plane-recombined
-    /// partial MAC of this (row, block, tile), ready for the shift-add
-    /// reduce. Pure in `(unit, rng)`: worker scheduling cannot change it.
+    /// its word columns (all four activation bit-planes packed into the
+    /// 16-bit lanes of one u64 per column), then WCC + S&H + SAR
+    /// conversion into `scratch.partial` — the plane-recombined partial
+    /// MAC of this (row, block, tile), ready for the shift-add reduce.
+    /// Pure in `(unit, rng)`: worker scheduling cannot change it.
+    ///
+    /// The lane fill is kernel-selected: `pa` carries the transposed
+    /// activation bitmaps for [`MacKernel::BitPlane`]
+    /// ([`fill_unit_bitplane`]) and is `None` on the scalar path
+    /// ([`fill_unit_scalar`]). Both fills produce the **same lane
+    /// integers**, so everything downstream of the fill — LUT lookups,
+    /// noise draws, recombination — is shared code and bit-identical by
+    /// construction.
     fn mac_unit(
         &self,
         a: &QuantizedActs,
+        pa: Option<&PackedActPlanes>,
         bank: &PreparedBank,
         grid: &UnitGrid,
         u: usize,
@@ -173,22 +356,17 @@ impl PimEngine {
         let (k0, k1) = grid.k_range(bi);
         let (c0, c1) = grid.c_range(ti);
         let width = c1 - c0;
-        let a_row = &a.data[i * grid.k..(i + 1) * grid.k];
+        debug_assert!(
+            (k1 - k0) * 15 <= u16::MAX as usize,
+            "k-block of {} rows would overflow the 16-bit recombination lanes",
+            k1 - k0
+        );
         let packed = &mut scratch.packed[..width];
         let partial = &mut scratch.partial[..width];
         packed.fill(0);
-        // (Perf note, EXPERIMENTS.md §Perf: pre-widening the bank to u64
-        // was tried and reverted — 8× memory traffic lost more than the
-        // widening saved. The u8 loads below widen in-register.)
-        for kk in k0..k1 {
-            let mask = SPREAD[a_row[kk] as usize];
-            if mask == 0 {
-                continue;
-            }
-            let w_row = &bank.row(ti, kk)[..width];
-            for (acc, &w) in packed.iter_mut().zip(w_row) {
-                *acc += mask * w as u64;
-            }
+        match pa {
+            Some(planes) => fill_unit_bitplane(planes, bank, i, ti, k0, k1, packed),
+            None => fill_unit_scalar(&a.data[i * grid.k..(i + 1) * grid.k], bank, ti, k0, k1, packed),
         }
         match rng {
             None => {
@@ -249,8 +427,10 @@ impl PimEngine {
     }
 
     /// [`Self::bank_mac`] over an already-packed bank on
-    /// [`Self::parallelism`] — the execute-many hot path: no packing, no
-    /// quantization, just the tiled unit grid.
+    /// [`Self::parallelism`] — the execute-many hot path: no weight
+    /// packing, no quantization, just the tiled unit grid (plus, on the
+    /// bit-plane kernel, an O(m·k) activation-plane transpose that is
+    /// negligible against the O(m·k·n) MAC).
     pub fn bank_mac_prepared(
         &self,
         a: &QuantizedActs,
@@ -275,6 +455,22 @@ impl PimEngine {
         rng: Option<&mut Pcg64>,
         par: Parallelism,
     ) -> Vec<f32> {
+        let pa = self.kernel.uses_bit_planes().then(|| a.pack_planes());
+        self.bank_mac_core(a, pa.as_ref(), bank, rng, par)
+    }
+
+    /// The kernel-agnostic execution core: `pa` is `Some` exactly when
+    /// [`Self::kernel`] is [`MacKernel::BitPlane`] (callers running both
+    /// the pos and neg bank pack the activation planes once and pass them
+    /// to both calls).
+    fn bank_mac_core(
+        &self,
+        a: &QuantizedActs,
+        pa: Option<&PackedActPlanes>,
+        bank: &PreparedBank,
+        rng: Option<&mut Pcg64>,
+        par: Parallelism,
+    ) -> Vec<f32> {
         let (m, k) = (a.m, a.k);
         assert_eq!(bank.k(), k, "prepared bank reduction dim mismatch");
         let n = bank.n();
@@ -292,7 +488,7 @@ impl PimEngine {
             let mut scratch = UnitScratch::new(ARRAY_WORDS.min(n));
             for u in 0..grid.units {
                 let mut unit_rng = noise_seed.map(|s| Pcg64::new(s, u as u64));
-                self.mac_unit(a, bank, &grid, u, unit_rng.as_mut(), &mut scratch);
+                self.mac_unit(a, pa, bank, &grid, u, unit_rng.as_mut(), &mut scratch);
                 Self::reduce_unit(&grid, u, &scratch.partial, &mut out);
             }
             return out;
@@ -302,7 +498,7 @@ impl PimEngine {
             let (c0, c1) = grid.c_range(ti);
             let mut scratch = UnitScratch::new(c1 - c0);
             let mut unit_rng = noise_seed.map(|s| Pcg64::new(s, u as u64));
-            self.mac_unit(a, bank, &grid, u, unit_rng.as_mut(), &mut scratch);
+            self.mac_unit(a, pa, bank, &grid, u, unit_rng.as_mut(), &mut scratch);
             scratch.partial
         });
         for (u, partial) in partials.iter().enumerate() {
@@ -360,7 +556,9 @@ impl PimEngine {
         self.par_matmul_prepared(a, m, pw, rng, self.parallelism)
     }
 
-    /// [`Self::matmul_prepared`] on an explicit worker-pool width.
+    /// [`Self::matmul_prepared`] on an explicit worker-pool width. On
+    /// the bit-plane kernel the activation planes are transposed once
+    /// here and shared by the pos and neg bank runs.
     pub fn par_matmul_prepared(
         &self,
         a: &[f32],
@@ -370,9 +568,10 @@ impl PimEngine {
         par: Parallelism,
     ) -> Vec<f32> {
         let qa = quantize_acts(a, m, pw.k);
+        let pa = self.kernel.uses_bit_planes().then(|| qa.pack_planes());
         let mut rng = rng;
-        let pos = self.par_bank_mac_prepared(&qa, &pw.pos, rng.as_deref_mut(), par);
-        let neg = self.par_bank_mac_prepared(&qa, &pw.neg, rng.as_deref_mut(), par);
+        let pos = self.bank_mac_core(&qa, pa.as_ref(), &pw.pos, rng.as_deref_mut(), par);
+        let neg = self.bank_mac_core(&qa, pa.as_ref(), &pw.neg, rng.as_deref_mut(), par);
         pos.iter()
             .zip(neg.iter())
             .enumerate()
@@ -680,6 +879,43 @@ mod tests {
             .with_parallelism(Parallelism::threads(3))
             .pim_matmul(&a, m, k, &w, n, None);
         assert_eq!(serial, threaded);
+    }
+
+    #[test]
+    fn scalar_and_bitplane_kernels_bit_identical() {
+        // The full differential harness lives in
+        // rust/tests/simd_parity.rs; this is the in-module smoke test on
+        // a ragged shape (k = 128 + 72, n = 128 + 5), noiseless + noisy.
+        let mut rng = Pcg64::seeded(71);
+        let (m, k, n) = (3, 200, 133);
+        let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+        for sigma in [None, Some(0.4)] {
+            let simd = match sigma {
+                None => PimEngine::tt(),
+                Some(s) => PimEngine::tt().with_noise(s),
+            };
+            assert!(simd.kernel.uses_bit_planes(), "bit-plane kernel is the default");
+            let scalar = simd.clone().with_kernel(MacKernel::Scalar);
+            let mut r1 = sigma.map(|_| Pcg64::seeded(13));
+            let mut r2 = sigma.map(|_| Pcg64::seeded(13));
+            let x = simd.pim_matmul(&a, m, k, &w, n, r1.as_mut());
+            let y = scalar.pim_matmul(&a, m, k, &w, n, r2.as_mut());
+            assert_eq!(x, y, "sigma={sigma:?}");
+            if let (Some(mut r1), Some(mut r2)) = (r1, r2) {
+                assert_eq!(r1.next_u64(), r2.next_u64(), "rng state diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_default_kernel_scopes_new_engines() {
+        assert_eq!(MacKernel::thread_default(), MacKernel::BitPlane);
+        MacKernel::set_thread_default(MacKernel::Scalar);
+        let eng = PimEngine::tt();
+        MacKernel::set_thread_default(MacKernel::BitPlane);
+        assert_eq!(eng.kernel, MacKernel::Scalar);
+        assert_eq!(PimEngine::tt().kernel, MacKernel::BitPlane);
     }
 
     #[test]

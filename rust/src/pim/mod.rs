@@ -9,9 +9,11 @@
 //!   AOT-exported kernel HLO against this module.
 //! * [`quant`] — 4-bit activation/weight quantization and the
 //!   positive/negative weight-bank split (§IV-C).
-//! * [`engine`] — the fast vectorized PIM executor (integer bit-plane
-//!   matmuls + an ADC LUT) used by the figures, benches, and the
-//!   coordinator's non-PJRT fallback path.
+//! * [`engine`] — the fast vectorized PIM executor (word-wide AND/popcount
+//!   bit-plane matmuls + an ADC LUT, with the historical scalar kernel
+//!   kept live behind the [`MacKernel`] selector and raced bit-for-bit by
+//!   `rust/tests/simd_parity.rs`) used by the figures, benches, and the
+//!   coordinator's non-PJRT fallback path. See PERFORMANCE.md §8.
 //! * [`parallel`] — the tiled worker pool (std::thread + mpsc) the engine
 //!   schedules its (row-block × bit-plane × output-tile) units on; results
 //!   are bit-identical to the serial path at any thread count. See
@@ -28,8 +30,8 @@ pub mod program;
 pub mod quant;
 pub mod transfer;
 
-pub use engine::PimEngine;
+pub use engine::{MacKernel, PimEngine};
 pub use parallel::Parallelism;
 pub use program::{CompiledNet, PreparedBank, PreparedWeights, ScratchPool};
-pub use quant::{QuantizedActs, QuantizedWeights};
+pub use quant::{PackedActPlanes, QuantizedActs, QuantizedWeights};
 pub use transfer::TransferModel;

@@ -125,36 +125,64 @@ pub fn spec_matmul(a: &[f32], m: usize, k: usize, w: &[f32], n: usize) -> Vec<f3
         .collect()
 }
 
-/// One unsigned 4-bit weight bank packed into tile-aligned planes: for
-/// each 128-word output tile, `k` rows of [`ARRAY_WORDS`] bytes (the
-/// ragged last tile zero-padded). This is the at-rest layout the
-/// execution core reads — successive reduction rows of one tile are
-/// contiguous, mirroring how a sub-array holds its own 128 word columns.
+/// One unsigned 4-bit weight bank packed into **two** tile-aligned
+/// layouts, both built once at prepare time (the software mirror of
+/// one-time RRAM programming):
+///
+/// * **Packed nibbles** — for each 128-word output tile, `k` rows of
+///   [`ARRAY_WORDS`] bytes (the ragged last tile zero-padded). This is
+///   what the historical scalar kernel reads; successive reduction rows
+///   of one tile are contiguous, mirroring how a sub-array holds its own
+///   128 word columns.
+/// * **Transposed bit-plane bitmaps** — for each tile, each of the four
+///   weight bit-planes, and each output column, ⌈k/64⌉ `u64` words whose
+///   bit `r` is bit `plane` of the weight at reduction index `64·kw + r`
+///   ([`Self::plane_row`]). This is what the word-wide AND/popcount
+///   kernel ([`crate::pim::engine::MacKernel::BitPlane`]) reads: 64
+///   reduction rows per bitwise op instead of one byte multiply-add.
+///   Because [`ARRAY_ROWS`](crate::consts::ARRAY_ROWS) is a multiple of
+///   64, every 128-row powerline block starts on a word boundary, and
+///   padding bits (rows ≥ k, columns ≥ n) are zero in both layouts.
 #[derive(Clone, Debug)]
 pub struct PreparedBank {
     /// `n_tiles × k × ARRAY_WORDS` bytes, tile-major.
     data: Vec<u8>,
+    /// `n_tiles × 4 × ⌈k/64⌉ × ARRAY_WORDS` words: plane-major within a
+    /// tile, then reduction word, then output column.
+    planes: Vec<u64>,
     k: usize,
     n: usize,
+    k_words: usize,
 }
 
 impl PreparedBank {
     /// Pack a row-major `[k][n]` bank (values 0..=15) into tile-aligned
-    /// planes. Counts one prepare event ([`prepare_count`]).
+    /// planes — both the nibble layout and the transposed bit-plane
+    /// bitmaps. Counts one prepare event ([`prepare_count`]).
     pub fn pack(bank: &[u8], k: usize, n: usize) -> PreparedBank {
         assert_eq!(bank.len(), k * n, "bank shape mismatch");
         let n_tiles = n.div_ceil(ARRAY_WORDS);
+        let k_words = k.div_ceil(64);
         let mut data = vec![0u8; n_tiles * k * ARRAY_WORDS];
+        let mut planes = vec![0u64; n_tiles * 4 * k_words * ARRAY_WORDS];
         for ti in 0..n_tiles {
             let c0 = ti * ARRAY_WORDS;
             let c1 = (c0 + ARRAY_WORDS).min(n);
             for kk in 0..k {
+                let src = &bank[kk * n + c0..kk * n + c1];
                 let dst = (ti * k + kk) * ARRAY_WORDS;
-                data[dst..dst + (c1 - c0)].copy_from_slice(&bank[kk * n + c0..kk * n + c1]);
+                data[dst..dst + (c1 - c0)].copy_from_slice(src);
+                let (kw, bit) = (kk / 64, kk % 64);
+                for (c, &v) in src.iter().enumerate() {
+                    for b in 0..4usize {
+                        planes[((ti * 4 + b) * k_words + kw) * ARRAY_WORDS + c] |=
+                            (((v >> b) & 1) as u64) << bit;
+                    }
+                }
             }
         }
         note_prepare();
-        PreparedBank { data, k, n }
+        PreparedBank { data, planes, k, n, k_words }
     }
 
     /// Reduction dimension.
@@ -167,13 +195,30 @@ impl PreparedBank {
         self.n
     }
 
+    /// Number of 64-bit words each per-column bit-plane bitmap spans
+    /// (⌈k/64⌉).
+    pub fn k_words(&self) -> usize {
+        self.k_words
+    }
+
     /// The [`ARRAY_WORDS`]-wide row of output tile `ti` at reduction
     /// index `kk` (only the tile's live columns are meaningful; the
-    /// padding bytes are zero).
+    /// padding bytes are zero). Read by the scalar kernel.
     #[inline]
     pub fn row(&self, ti: usize, kk: usize) -> &[u8] {
         let off = (ti * self.k + kk) * ARRAY_WORDS;
         &self.data[off..off + ARRAY_WORDS]
+    }
+
+    /// The [`ARRAY_WORDS`]-wide row of bit-plane words of output tile
+    /// `ti`: one `u64` per word column, whose bit `r` is bit `plane`
+    /// (0 = LSB) of the weight at reduction index `64·kw + r`. Padding
+    /// bits and padding columns are zero. Read by the word-wide
+    /// AND/popcount kernel.
+    #[inline]
+    pub fn plane_row(&self, ti: usize, plane: usize, kw: usize) -> &[u64] {
+        let off = ((ti * 4 + plane) * self.k_words + kw) * ARRAY_WORDS;
+        &self.planes[off..off + ARRAY_WORDS]
     }
 }
 
@@ -711,6 +756,38 @@ mod tests {
                 let row = pb.row(ti, kk);
                 assert_eq!(&row[..c1 - c0], &bank[kk * n + c0..kk * n + c1]);
                 assert!(row[c1 - c0..].iter().all(|&b| b == 0), "padding is zero");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_builds_consistent_bit_planes() {
+        // The transposed bit-plane bitmaps must carry exactly the nibble
+        // data, bit for bit, including zero padding in the ragged last
+        // k-word and the ragged last tile.
+        let mut rng = Pcg64::seeded(16);
+        let (k, n) = (200, 133); // ragged: 4 k-words (3 full + 8 bits), 2 tiles
+        let bank: Vec<u8> = (0..k * n).map(|_| rng.below(16) as u8).collect();
+        let pb = PreparedBank::pack(&bank, k, n);
+        assert_eq!(pb.k_words(), k.div_ceil(64));
+        for ti in 0..n.div_ceil(ARRAY_WORDS) {
+            for b in 0..4usize {
+                for kw in 0..pb.k_words() {
+                    let row = pb.plane_row(ti, b, kw);
+                    assert_eq!(row.len(), ARRAY_WORDS);
+                    for (c, &word) in row.iter().enumerate() {
+                        for r in 0..64usize {
+                            let (kk, j) = (kw * 64 + r, ti * ARRAY_WORDS + c);
+                            let want = if kk < k && j < n {
+                                (bank[kk * n + j] >> b) & 1
+                            } else {
+                                0
+                            };
+                            let got = ((word >> r) & 1) as u8;
+                            assert_eq!(got, want, "ti={ti} b={b} kw={kw} c={c} r={r}");
+                        }
+                    }
+                }
             }
         }
     }

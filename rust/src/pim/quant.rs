@@ -76,10 +76,60 @@ pub fn quantize_weights(w: &[f32], k: usize, n: usize) -> QuantizedWeights {
     QuantizedWeights { pos, neg, k, n, scale }
 }
 
+/// Activation bit-planes transposed into `u64` words along the reduction
+/// (k) dimension — the activation-side operand of the word-wide
+/// AND/popcount MAC kernel
+/// ([`MacKernel::BitPlane`](crate::pim::engine::MacKernel)). For each of
+/// the `m` rows and each of the four bit-planes there are ⌈k/64⌉ words;
+/// bit `r` of word `kw` holds bit `plane` of the activation level at
+/// reduction index `64·kw + r` (padding bits beyond `k` are zero, so
+/// they AND away against any weight bitmap). Built per matmul call by
+/// [`QuantizedActs::pack_planes`] — an O(m·k) transpose amortized
+/// against the O(m·k·n) MAC it feeds.
+#[derive(Clone, Debug)]
+pub struct PackedActPlanes {
+    bits: Vec<u64>,
+    k_words: usize,
+}
+
+impl PackedActPlanes {
+    /// Word `kw` of row `row`'s bitmap for bit-plane `plane` (0 = LSB).
+    #[inline]
+    pub fn word(&self, row: usize, plane: usize, kw: usize) -> u64 {
+        self.bits[(row * 4 + plane) * self.k_words + kw]
+    }
+
+    /// Number of 64-bit words each per-row, per-plane bitmap spans
+    /// (⌈k/64⌉).
+    pub fn k_words(&self) -> usize {
+        self.k_words
+    }
+}
+
 impl QuantizedActs {
     /// Extract bit-plane `b` (0 = LSB) as 0/1 bytes.
     pub fn bit_plane(&self, b: u32) -> Vec<u8> {
         self.data.iter().map(|&v| (v >> b) & 1).collect()
+    }
+
+    /// Transpose the four bit-planes of every row into packed `u64`
+    /// bitmaps along the reduction dimension (see [`PackedActPlanes`]
+    /// for the layout). The words carry exactly the bits
+    /// [`Self::bit_plane`] reports byte-wise — pinned by the round-trip
+    /// property test in `rust/tests/proptests.rs`.
+    pub fn pack_planes(&self) -> PackedActPlanes {
+        let k_words = self.k.div_ceil(64);
+        let mut bits = vec![0u64; self.m * 4 * k_words];
+        for i in 0..self.m {
+            let base = i * 4 * k_words;
+            for (kk, &v) in self.data[i * self.k..(i + 1) * self.k].iter().enumerate() {
+                let (kw, r) = (kk / 64, kk % 64);
+                for b in 0..4usize {
+                    bits[base + b * k_words + kw] |= (((v >> b) & 1) as u64) << r;
+                }
+            }
+        }
+        PackedActPlanes { bits, k_words }
     }
 
     /// Level at row `i`, column `j`.
@@ -161,5 +211,67 @@ mod tests {
         assert!(q.data.iter().all(|&x| x == 0));
         let w = quantize_weights(&[0.0; 4], 2, 2);
         assert!(w.pos.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn negative_only_acts_quantize_to_zero() {
+        // Activations are non-negative by contract (post-ReLU), but a
+        // defensive caller may pass raw tensors: the max fold starts at
+        // 0.0 and the 1e-6 floor keeps the scale positive, so every
+        // negative level clamps to 0 instead of panicking or wrapping.
+        let q = quantize_acts(&[-3.0, -0.5, -1e30], 1, 3);
+        assert!(q.scale > 0.0 && q.scale.is_finite());
+        assert_eq!(q.data, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn nan_acts_quantize_to_zero_without_poisoning_scale() {
+        // f32::max ignores a NaN operand, so the scale comes from the
+        // finite values, and the saturating `as u8` cast sends the NaN
+        // level itself to 0 rather than propagating it into the banks.
+        let q = quantize_acts(&[f32::NAN, 1.0, 3.0], 1, 3);
+        assert_eq!(q.scale, 3.0 / 15.0);
+        assert_eq!(q.data, vec![0, 5, 15]);
+        // All-NaN: the 0-start fold leaves max = 0, floored to 1e-6.
+        let q = quantize_acts(&[f32::NAN; 4], 2, 2);
+        assert_eq!(q.data, vec![0, 0, 0, 0]);
+        assert!(q.scale > 0.0);
+    }
+
+    #[test]
+    fn tiny_scale_weight_columns_collapse_instead_of_exploding() {
+        // A column whose max |w| sits below the 1e-6 floor quantizes
+        // through the floored scale: its levels collapse to 0 (staying in
+        // 0..=15) instead of dividing by a denormal-tiny scale. Full-range
+        // columns in the same matrix are unaffected.
+        let w = vec![1e-12, 1.0, -1e-12, -1.0]; // [k=2][n=2]: col 0 tiny
+        let q = quantize_weights(&w, 2, 2);
+        assert!((q.scale[0] - 1e-6 / 15.0).abs() < 1e-12);
+        assert_eq!((q.pos[0], q.neg[2]), (0, 0), "tiny column collapses to 0");
+        assert_eq!((q.pos[1], q.neg[3]), (15, 15), "full column unaffected");
+        assert!(q.pos.iter().chain(q.neg.iter()).all(|&v| v <= 15));
+    }
+
+    #[test]
+    fn pack_planes_matches_bit_plane_bytes() {
+        // k = 70 crosses the 64-bit word boundary; m = 2 checks the
+        // per-row stride.
+        let a: Vec<f32> = (0..2 * 70).map(|i| (i % 16) as f32).collect();
+        let q = quantize_acts(&a, 2, 70);
+        let p = q.pack_planes();
+        assert_eq!(p.k_words(), 2);
+        for b in 0..4u32 {
+            let plane = q.bit_plane(b);
+            for i in 0..2 {
+                for kk in 0..70 {
+                    let bit = (p.word(i, b as usize, kk / 64) >> (kk % 64)) & 1;
+                    assert_eq!(bit as u8, plane[i * 70 + kk], "i={i} b={b} kk={kk}");
+                }
+                // Padding bits beyond k stay zero.
+                for r in 6..64 {
+                    assert_eq!((p.word(i, b as usize, 1) >> r) & 1, 0);
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,122 @@
+//! Helpers shared by the parity harnesses (`program_parity.rs`,
+//! `simd_parity.rs`): deterministic matrix generation, f32 → bit-pattern
+//! views, and the resurrected PR-4 `ResNet::forward_par` body that serves
+//! as the historical network-choreography reference. (Cargo only builds
+//! files directly under `tests/` as test binaries, so this directory
+//! module is shared, not a test crate of its own.)
+#![allow(dead_code)] // each test binary uses its own subset
+
+use nvm_in_cache::nn::{ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::parallel::Parallelism;
+use nvm_in_cache::pim::PimEngine;
+use nvm_in_cache::util::rng::Pcg64;
+
+pub fn rand_mat(rng: &mut Pcg64, len: usize, lo: f64, hi: f64) -> Vec<f32> {
+    (0..len).map(|_| rng.range(lo, hi) as f32).collect()
+}
+
+pub fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The pre-refactor (PR 4) `ResNet::forward_par` body, resurrected
+/// verbatim as the **historical reference** — built from the public
+/// one-shot layer APIs only, no `CompiledNet`. This independently
+/// restates the network choreography the compiled forward must
+/// reproduce: per-layer RNG forks (`rng_opt`), §V-E `post` placement,
+/// the downsample-only fork, and the fc bias deferred past `post`.
+/// (Engine-level fidelity of the one-shot layers it calls is pinned
+/// separately by `spec_matmul` parity.)
+pub fn historical_forward(
+    net: &ResNet,
+    x: &Tensor,
+    mode: ForwardMode,
+    seed: u64,
+    par: Parallelism,
+) -> Tensor {
+    use nvm_in_cache::nn::layers;
+    use nvm_in_cache::nn::resnet::STAGES;
+    use nvm_in_cache::pim::TransferModel;
+
+    let engine = match mode {
+        ForwardMode::PimHw => Some(PimEngine::tt().with_parallelism(par)),
+        ForwardMode::PimHwNoise(sigma) => {
+            Some(PimEngine::tt().with_noise(sigma).with_parallelism(par))
+        }
+        _ => None,
+    };
+    let emu_sigma: Option<Option<f64>> = match mode {
+        ForwardMode::Pim => Some(None),
+        ForwardMode::PimNoise(s) => Some(Some(s)),
+        _ => None,
+    };
+    let transfer = TransferModel::tt();
+    let mut rng = Pcg64::seeded(seed);
+    let hw_noise = matches!(mode, ForwardMode::PimHwNoise(_));
+    let rng_opt = |r: &mut Pcg64| -> Option<Pcg64> {
+        if hw_noise {
+            Some(r.fork(1))
+        } else {
+            None
+        }
+    };
+    let p = &net.params;
+    let eng = engine.as_ref();
+
+    let gn = |t: &Tensor, g: &Tensor, b: &Tensor| -> Tensor {
+        layers::group_norm(t, &g.data, &b.data, 1e-5)
+    };
+    let post = |t: Tensor, r: &mut Pcg64| -> Tensor {
+        match emu_sigma {
+            None => t,
+            Some(sigma) => {
+                let mut local = r.fork(2);
+                layers::adc_emulate(&t, &transfer, sigma, Some(&mut local))
+            }
+        }
+    };
+
+    let mut local = rng_opt(&mut rng);
+    let mut h = layers::conv2d_par(x, p.get("stem/w").unwrap(), 1, eng, local.as_mut(), par);
+    h = post(h, &mut rng);
+    h = gn(&h, p.get("stem/gamma").unwrap(), p.get("stem/beta").unwrap()).relu();
+
+    for (s, &nblocks) in STAGES.iter().enumerate() {
+        let stride = if s == 0 { 1 } else { 2 };
+        for b in 0..nblocks {
+            let st = if b == 0 { stride } else { 1 };
+            let pre = format!("s{s}b{b}");
+            let get = |name: &str| p.get(&format!("{pre}/{name}")).unwrap();
+            let idn = h.clone();
+            let mut local = rng_opt(&mut rng);
+            h = layers::conv2d_par(&h, get("w1"), st, eng, local.as_mut(), par);
+            h = post(h, &mut rng);
+            h = gn(&h, get("g1"), get("b1")).relu();
+            let mut local = rng_opt(&mut rng);
+            h = layers::conv2d_par(&h, get("w2"), 1, eng, local.as_mut(), par);
+            h = post(h, &mut rng);
+            h = gn(&h, get("g2"), get("b2"));
+            let idn = if p.tensors.contains_key(&format!("{pre}/wd")) {
+                let mut local = rng_opt(&mut rng);
+                let d = layers::conv2d_par(&idn, get("wd"), st, eng, local.as_mut(), par);
+                post(d, &mut rng)
+            } else {
+                idn
+            };
+            h = h.add(&idn).relu();
+        }
+    }
+    let pooled = layers::global_avg_pool(&h);
+    let mut local = rng_opt(&mut rng);
+    let fc_w = p.get("fc/w").unwrap();
+    let fc_b = p.get("fc/b").unwrap();
+    let logits =
+        layers::linear_par(&pooled, fc_w, &vec![0.0; fc_b.len()], eng, local.as_mut(), par);
+    let mut logits = post(logits, &mut rng);
+    for n in 0..logits.shape[0] {
+        for c in 0..logits.shape[1] {
+            logits.data[n * logits.shape[1] + c] += fc_b.data[c];
+        }
+    }
+    logits
+}

@@ -67,6 +67,48 @@ fn prop_weight_banks_reconstruct() {
     }
 }
 
+/// Property: activation bit-planes round-trip — the four `bit_plane`
+/// byte vectors reassemble every quantized level exactly, and the
+/// word-wide transposed packing (`pack_planes`, the SIMD MAC kernel's
+/// activation operand) carries exactly the same bits, over random shapes
+/// whose k crosses the 64-bit plane-word boundary. Seeds are pinned so a
+/// CI failure reproduces deterministically.
+#[test]
+fn prop_bit_plane_roundtrip_and_packed_transpose() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(14_000 + seed);
+        let m = 1 + rng.below(6);
+        let k = 1 + rng.below(200); // crosses the 64-bit word boundary
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range(0.0, 4.0) as f32).collect();
+        let q = quantize_acts(&a, m, k);
+        // Round-trip: the four planes reassemble every level.
+        let planes: Vec<Vec<u8>> = (0..4u32).map(|b| q.bit_plane(b)).collect();
+        for (idx, &lvl) in q.data.iter().enumerate() {
+            let recon = (0..4).fold(0u8, |acc, b| acc | (planes[b][idx] << b));
+            assert_eq!(recon, lvl, "seed {seed} idx {idx}");
+        }
+        // Transpose: every pack_planes bit equals its bit_plane byte.
+        let packed = q.pack_planes();
+        assert_eq!(packed.k_words(), k.div_ceil(64), "seed {seed}");
+        for i in 0..m {
+            for (b, plane) in planes.iter().enumerate() {
+                for kk in 0..k {
+                    let bit = (packed.word(i, b, kk / 64) >> (kk % 64)) & 1;
+                    assert_eq!(
+                        bit as u8, plane[i * k + kk],
+                        "seed {seed} i={i} b={b} kk={kk}"
+                    );
+                }
+                // Padding bits beyond k stay zero (they must AND away).
+                for kk in k..packed.k_words() * 64 {
+                    let bit = (packed.word(i, b, kk / 64) >> (kk % 64)) & 1;
+                    assert_eq!(bit, 0, "seed {seed} i={i} b={b} pad kk={kk}");
+                }
+            }
+        }
+    }
+}
+
 /// Property: the engine's blockwise MAC is additive over K blocks — the
 /// hardware decomposition invariant (each 128-row block quantized
 /// independently, partial sums added digitally).

@@ -1,0 +1,253 @@
+//! Differential harness for the word-wide bit-plane SIMD MAC kernel
+//! (PERFORMANCE.md §8, EXPERIMENTS.md E14).
+//!
+//! The contract: [`MacKernel::BitPlane`] — the AND/popcount kernel over
+//! transposed bit-plane bitmaps — is a pure *cost* optimization. Every
+//! output it produces must be **bit-identical** to the historical scalar
+//! kernel, to the independent straight-line specification
+//! (`pim::program::spec_matmul`), and to the resurrected PR-4 network
+//! choreography (`common::historical_forward`): noiseless and noisy, at
+//! threads {1, 2, 7}, at every execution layer (raw engine, compiled
+//! ResNet in all five forward modes, StubRuntime serving path), including
+//! the caller's trailing RNG state. The scalar kernel stays alive behind
+//! [`PimEngine::with_kernel`] / [`MacKernel::set_thread_default`]
+//! precisely so this suite can race the two implementations forever.
+//!
+//! `scripts/verify.sh` additionally runs this suite with `--release`,
+//! where u64 lane-packing bugs actually surface.
+
+use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
+use nvm_in_cache::nn::resnet::test_params;
+use nvm_in_cache::nn::{ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::engine::MacKernel;
+use nvm_in_cache::pim::parallel::Parallelism;
+use nvm_in_cache::pim::program::{spec_matmul, ScratchPool};
+use nvm_in_cache::pim::quant::QuantizedActs;
+use nvm_in_cache::pim::transfer::{TransferModel, MAC_FULLSCALE};
+use nvm_in_cache::pim::PimEngine;
+use nvm_in_cache::runtime::{ModelVariant, Runtime, StubRuntime};
+use nvm_in_cache::util::rng::Pcg64;
+
+mod common;
+use common::{bits, historical_forward, rand_mat};
+
+const THREADS: [usize; 3] = [1, 2, 7];
+
+/// Restores the thread-default kernel on drop, so a failing assertion
+/// inside a scalar-forced section cannot leak `Scalar` into later code
+/// on the same thread.
+struct KernelGuard;
+
+impl KernelGuard {
+    fn scalar() -> KernelGuard {
+        MacKernel::set_thread_default(MacKernel::Scalar);
+        KernelGuard
+    }
+}
+
+impl Drop for KernelGuard {
+    fn drop(&mut self) {
+        MacKernel::set_thread_default(MacKernel::BitPlane);
+    }
+}
+
+/// Engine level, noiseless: SIMD vs scalar vs the independent
+/// straight-line spec, over ragged multi-block/multi-tile shapes and a
+/// shared prepared program, at every thread count.
+#[test]
+fn engine_simd_scalar_spec_bit_identical() {
+    let mut rng = Pcg64::seeded(900);
+    for &(m, k, n) in &[(5usize, 300usize, 157usize), (1, 128, 128), (3, 45, 31)] {
+        let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+        let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+        let spec = spec_matmul(&a, m, k, &w, n);
+        let simd = PimEngine::tt();
+        assert_eq!(simd.kernel, MacKernel::BitPlane, "SIMD kernel is the default");
+        let scalar = simd.clone().with_kernel(MacKernel::Scalar);
+        let program = simd.prepare(&w, k, n);
+        for t in THREADS {
+            let par = Parallelism::threads(t);
+            let got_simd = simd.par_matmul_prepared(&a, m, &program, None, par);
+            let got_scalar = scalar.par_matmul_prepared(&a, m, &program, None, par);
+            assert_eq!(bits(&got_simd), bits(&got_scalar), "m={m} k={k} n={n} t={t}");
+            assert_eq!(bits(&got_simd), bits(&spec), "m={m} k={k} n={n} t={t} vs spec");
+        }
+    }
+}
+
+/// Engine level, noisy: identical outputs **and** identical trailing RNG
+/// state — the SIMD kernel must not change how many draws happen or in
+/// what order, at any thread count.
+#[test]
+fn engine_noisy_bit_identical_including_rng_state() {
+    let mut rng = Pcg64::seeded(905);
+    let (m, k, n) = (4, 300, 157);
+    let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+    let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+    let simd = PimEngine::tt().with_noise(0.5);
+    let scalar = simd.clone().with_kernel(MacKernel::Scalar);
+    let program = simd.prepare(&w, k, n);
+    for t in THREADS {
+        let par = Parallelism::threads(t);
+        let mut r1 = Pcg64::seeded(31);
+        let x = simd.par_matmul_prepared(&a, m, &program, Some(&mut r1), par);
+        let mut r2 = Pcg64::seeded(31);
+        let y = scalar.par_matmul_prepared(&a, m, &program, Some(&mut r2), par);
+        assert_eq!(bits(&x), bits(&y), "threads={t}");
+        assert_eq!(r1.next_u64(), r2.next_u64(), "trailing rng state diverged at t={t}");
+    }
+}
+
+/// Exhaustive small-shape sweep: every (m, n) ∈ 1..=9 × k ∈ {1..=9} ∪
+/// values crossing the 64-bit plane-word boundary (63, 64, 65, 127) and
+/// the 128-row block boundary (128, 129, …, 257) — SIMD vs scalar vs
+/// spec, noiseless, bit-for-bit. This is where ragged last words, ragged
+/// last blocks, and word/block boundary interactions live.
+#[test]
+fn exhaustive_small_shapes_cross_word_and_block_boundaries() {
+    let ks: Vec<usize> = (1..=9)
+        .chain([63, 64, 65, 127, 128, 129, 191, 192, 193, 255, 256, 257])
+        .collect();
+    let simd = PimEngine::tt();
+    let scalar = PimEngine::tt().with_kernel(MacKernel::Scalar);
+    let mut rng = Pcg64::seeded(910);
+    for m in 1..=9usize {
+        for &k in &ks {
+            for n in 1..=9usize {
+                let a = rand_mat(&mut rng, m * k, 0.0, 2.0);
+                let w = rand_mat(&mut rng, k * n, -1.0, 1.0);
+                let got_simd = simd.pim_matmul(&a, m, k, &w, n, None);
+                let got_scalar = scalar.pim_matmul(&a, m, k, &w, n, None);
+                let spec = spec_matmul(&a, m, k, &w, n);
+                assert_eq!(bits(&got_simd), bits(&got_scalar), "m={m} k={k} n={n}");
+                assert_eq!(bits(&got_simd), bits(&spec), "m={m} k={k} n={n} vs spec");
+            }
+        }
+    }
+}
+
+/// Saturation: all-15 activations × all-15 weights over full 128-row
+/// blocks is the worst-case popcount accumulation — every bit-plane lane
+/// reaches its ceiling (15 · 128 = 1920 = `MAC_FULLSCALE`) in every
+/// block. Both kernels must agree with each other and with the closed
+/// form, proving the 16-bit lanes hold the ceiling without wrapping.
+#[test]
+fn saturated_full_blocks_hit_lane_ceiling_without_wrap() {
+    let tm = TransferModel::tt();
+    let lut_top = tm.quantize_mac(MAC_FULLSCALE as f64, true) as f32;
+    // Same f32 expression shape as the engine's plane recombination.
+    let block = lut_top + 2.0 * lut_top + 4.0 * lut_top + 8.0 * lut_top;
+    for blocks in [1usize, 2] {
+        let (m, k, n) = (2, blocks * ARRAY_ROWS, ARRAY_WORDS + 2); // ragged tile
+        let qa = QuantizedActs { data: vec![15u8; m * k], m, k, scale: 1.0 };
+        let bank = vec![15u8; k * n];
+        let simd = PimEngine::tt();
+        let scalar = PimEngine::tt().with_kernel(MacKernel::Scalar);
+        let got_simd = simd.bank_mac(&qa, &bank, n, None);
+        let got_scalar = scalar.bank_mac(&qa, &bank, n, None);
+        assert_eq!(bits(&got_simd), bits(&got_scalar), "blocks={blocks}");
+        let mut want = 0.0f32;
+        for _ in 0..blocks {
+            want += block; // unit-order shift-add reduce
+        }
+        assert!(
+            got_simd.iter().all(|&v| v == want),
+            "blocks={blocks}: expected {want} everywhere, got {got_simd:?}"
+        );
+    }
+}
+
+/// The recombination lanes are 16 bits wide; a k-block may never produce
+/// a bit-plane MAC above `u16::MAX`. The engine enforces this at compile
+/// time (const assert) and per unit (debug_assert); this pins the two
+/// numbers the invariant hangs on, so a future geometry change fails
+/// loudly here too instead of silently wrapping the packed accumulator.
+#[test]
+fn k_block_mac_fits_the_16_bit_recombination_lanes() {
+    assert!(ARRAY_ROWS * 15 <= u16::MAX as usize);
+    assert!(ARRAY_ROWS % 64 == 0, "blocks must align with 64-bit plane words");
+    // The worst case really is reachable: MAC_FULLSCALE == 15 · rows.
+    assert_eq!(MAC_FULLSCALE as usize, ARRAY_ROWS * 15);
+}
+
+/// Network level: the compiled ResNet forward (all five modes) and the
+/// resurrected historical choreography, run on both kernels via the
+/// thread-default seam (the layers construct their own engines
+/// internally), must produce identical logits at every thread count.
+#[test]
+fn resnet_all_modes_bit_identical_across_kernels() {
+    let net = ResNet::new(test_params(8, 10, 42));
+    let program = net.compile().unwrap();
+    let mut rng = Pcg64::seeded(920);
+    let x = Tensor::from_vec(
+        &[2, 16, 16, 3],
+        (0..2 * 16 * 16 * 3).map(|_| rng.f64() as f32).collect(),
+    );
+    let mut scratch = ScratchPool::new();
+    for mode in [
+        ForwardMode::Baseline,
+        ForwardMode::Pim,
+        ForwardMode::PimNoise(0.4),
+        ForwardMode::PimHw,
+        ForwardMode::PimHwNoise(0.4),
+    ] {
+        for t in THREADS {
+            let par = Parallelism::threads(t);
+            let simd_compiled = program.forward_par(&x, mode, 7, par, &mut scratch);
+            let simd_hist = historical_forward(&net, &x, mode, 7, par);
+            assert_eq!(
+                bits(&simd_compiled.data),
+                bits(&simd_hist.data),
+                "{mode:?} t={t}: compiled vs historical (SIMD)"
+            );
+            // The compiled program holds no engine — forwards construct
+            // theirs at call time, so the guard alone flips the kernel.
+            let (scalar_compiled, scalar_hist) = {
+                let _guard = KernelGuard::scalar();
+                (
+                    program.forward_par(&x, mode, 7, par, &mut scratch),
+                    historical_forward(&net, &x, mode, 7, par),
+                )
+            };
+            assert_eq!(
+                bits(&simd_compiled.data),
+                bits(&scalar_compiled.data),
+                "{mode:?} t={t}: SIMD vs scalar (compiled)"
+            );
+            assert_eq!(
+                bits(&simd_hist.data),
+                bits(&scalar_hist.data),
+                "{mode:?} t={t}: SIMD vs scalar (historical)"
+            );
+        }
+    }
+}
+
+/// Runtime level: the StubRuntime serving path (cached compiled
+/// programs) returns identical logits on both kernels, for both the
+/// hardware-true and baseline variants, at every thread count.
+#[test]
+fn stub_runtime_bit_identical_across_kernels() {
+    let batch = 2;
+    let params = test_params(8, 10, 21);
+    let mut rng = Pcg64::seeded(930);
+    let images: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.f64() as f32).collect();
+    let run = |kernel: MacKernel, threads: usize| -> (Vec<u32>, Vec<u32>) {
+        let _guard = match kernel {
+            MacKernel::Scalar => Some(KernelGuard::scalar()),
+            MacKernel::BitPlane => None,
+        };
+        let mut rt = StubRuntime::new(batch);
+        rt.load_variant_params(ModelVariant::PimHw, params.clone()).unwrap();
+        rt.load_variant_params(ModelVariant::Baseline, params.clone()).unwrap();
+        rt.set_parallelism(Parallelism::threads(threads));
+        let hw = rt.forward(ModelVariant::PimHw, &images, (16, 16, 3), None).unwrap();
+        let base = rt.forward(ModelVariant::Baseline, &images, (16, 16, 3), None).unwrap();
+        (bits(&hw), bits(&base))
+    };
+    for t in THREADS {
+        let simd = run(MacKernel::BitPlane, t);
+        let scalar = run(MacKernel::Scalar, t);
+        assert_eq!(simd, scalar, "threads={t}");
+    }
+}

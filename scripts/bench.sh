@@ -1,20 +1,22 @@
 #!/usr/bin/env bash
 # Machine-readable perf-trajectory record for this PR: runs the hot-path
-# micro-benchmarks (serial vs N-thread tiled execution) plus the fleet-sim
-# summary and writes BENCH_PR5.json at the repository root (so
-# BENCH_*.json accumulates across PRs — see PERFORMANCE.md).
+# micro-benchmarks (serial vs N-thread tiled execution, plus the
+# simd_vs_scalar MAC-kernel race) and the fleet-sim summary, then writes
+# BENCH_PR6.json at the repository root (so BENCH_*.json accumulates
+# across PRs — see PERFORMANCE.md).
 #
 # The record has two sections: `comparison` (deterministic — workload
-# descriptors, bit-exactness parity verdicts, the simulated-clock fleet
-# report) diffs cleanly across PRs; `measured` carries the wall-clock
-# numbers for this machine.
+# descriptors, bit-exactness parity verdicts including the
+# simd_vs_scalar kernel-parity gate, the simulated-clock fleet report)
+# diffs cleanly across PRs; `measured` carries the wall-clock numbers
+# for this machine.
 #
 # Usage: scripts/bench.sh [output.json] [threads]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-OUT="${1:-BENCH_PR5.json}"
+OUT="${1:-BENCH_PR6.json}"
 THREADS="${2:-4}"
 
 cargo run --release --bin repro -- bench --json "$OUT" --threads "$THREADS"

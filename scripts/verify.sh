@@ -23,6 +23,14 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# The word-wide MAC kernel's u64 lane packing only gets exercised with
+# optimizations on (autovectorized popcounts, folded shifts); run the
+# differential suite in release too, where those bugs actually surface.
+if [ -f rust/tests/simd_parity.rs ]; then
+  echo "== cargo test --release -q --test simd_parity =="
+  cargo test --release -q --test simd_parity
+fi
+
 echo "== cargo test --doc =="
 cargo test --doc -q
 
