@@ -83,7 +83,7 @@ fn main() -> nvm_in_cache::Result<()> {
         }),
         Some(scheduler),
         ServerConfig {
-            batcher: BatcherConfig { max_batch: batch, max_wait: Duration::from_millis(4) },
+            batcher: BatcherConfig::sized(batch, Duration::from_millis(4)),
         },
     );
 

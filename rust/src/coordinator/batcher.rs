@@ -1,9 +1,13 @@
-//! Dynamic batcher: size-or-deadline batching of inference requests.
+//! Dynamic batcher: size-or-deadline and continuous (iteration-level)
+//! batching of inference requests.
 //!
 //! Classic serving tradeoff: larger batches amortize the per-invocation
 //! PIM pipeline (the 1280 ns windows are independent of how many requests
 //! share the weight-resident arrays), smaller deadlines bound tail
-//! latency. Pure data structure — the server thread drives the clock, so
+//! latency. [`BatchMode::Continuous`] sidesteps the tradeoff: requests
+//! merge into the in-flight execution at its next layer boundary
+//! ([`Batcher::take_merge`]) instead of waiting for the batch to drain.
+//! Pure data structure — the server thread drives the clock, so
 //! everything is unit-testable without sleeping.
 
 use std::collections::VecDeque;
@@ -11,18 +15,53 @@ use std::time::{Duration, Instant};
 
 use super::request::InferenceRequest;
 
+/// How batches are formed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Classic drain batching: hold requests until the batch fills or the
+    /// oldest request hits `max_wait`, then execute the whole batch to
+    /// completion before the next one forms.
+    #[default]
+    SizeOrDeadline,
+    /// Continuous (iteration-level) batching: requests never wait for
+    /// formation — whenever the in-flight execution reaches a layer
+    /// boundary with spare capacity, a merge group is cut immediately
+    /// ([`Batcher::take_merge`]) and joins the run. `max_wait` survives
+    /// only as a starvation bound when capacity is exhausted.
+    Continuous,
+}
+
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
-    /// Preferred (maximum) batch size.
+    /// Preferred (maximum) batch size. In continuous mode this caps the
+    /// total requests co-resident in the in-flight execution.
     pub max_batch: usize,
     /// Max time the oldest request may wait before forcing a flush.
     pub max_wait: Duration,
+    /// Formation discipline.
+    pub mode: BatchMode,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 50, max_wait: Duration::from_millis(5) }
+        BatcherConfig {
+            max_batch: 50,
+            max_wait: Duration::from_millis(5),
+            mode: BatchMode::SizeOrDeadline,
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// Size-or-deadline (drain) policy.
+    pub fn sized(max_batch: usize, max_wait: Duration) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait, mode: BatchMode::SizeOrDeadline }
+    }
+
+    /// Continuous (iteration-level) policy.
+    pub fn continuous(max_batch: usize, max_wait: Duration) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait, mode: BatchMode::Continuous }
     }
 }
 
@@ -94,6 +133,26 @@ impl Batcher {
         Some(Batch { requests, formed_at: now })
     }
 
+    /// Continuous-mode cut: a merge group of up to `room` requests
+    /// (further capped by `max_batch`), taken from the queue front so
+    /// global — and therefore per-tenant — FIFO order is preserved.
+    ///
+    /// Unlike [`Self::take`], no formation wait applies: the in-flight
+    /// execution just reached a layer boundary with `room` spare slots,
+    /// and holding requests back would only add latency (the weight-
+    /// stationary arrays idle either way). Returns `None` when the queue
+    /// is empty or `room == 0` — the latter is the only way a request
+    /// waits in continuous mode, bounded by the capacity freed at the
+    /// next boundary.
+    pub fn take_merge(&mut self, now: Instant, room: usize) -> Option<Batch> {
+        let n = self.queue.len().min(self.config.max_batch).min(room);
+        if n == 0 {
+            return None;
+        }
+        let requests = self.queue.drain(..n).collect();
+        Some(Batch { requests, formed_at: now })
+    }
+
     /// Time until the deadline of the oldest request (for the server's
     /// poll timeout). None when the queue is empty.
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
@@ -112,7 +171,7 @@ mod tests {
 
     #[test]
     fn cuts_at_max_batch() {
-        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let mut b = Batcher::new(BatcherConfig::sized(3, Duration::from_secs(10)));
         let now = Instant::now();
         b.push(req(1));
         b.push(req(2));
@@ -125,7 +184,7 @@ mod tests {
 
     #[test]
     fn cuts_at_deadline() {
-        let mut b = Batcher::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(1) });
+        let mut b = Batcher::new(BatcherConfig::sized(100, Duration::from_millis(1)));
         b.push(req(1));
         let later = Instant::now() + Duration::from_millis(5);
         assert!(b.ready(later));
@@ -144,7 +203,7 @@ mod tests {
 
     #[test]
     fn oversize_queue_cuts_in_chunks() {
-        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::ZERO });
+        let mut b = Batcher::new(BatcherConfig::sized(2, Duration::ZERO));
         for i in 0..5 {
             b.push(req(i));
         }
@@ -156,8 +215,37 @@ mod tests {
     }
 
     #[test]
+    fn take_merge_respects_room_and_max_batch() {
+        let mut b =
+            Batcher::new(BatcherConfig::continuous(3, Duration::from_millis(5)));
+        for i in 0..10 {
+            b.push(req(i));
+        }
+        let now = Instant::now();
+        // room below max_batch wins …
+        assert_eq!(b.take_merge(now, 2).unwrap().len(), 2);
+        // … max_batch caps a generous room …
+        assert_eq!(b.take_merge(now, 100).unwrap().len(), 3);
+        // … zero room never cuts.
+        assert!(b.take_merge(now, 0).is_none());
+        assert_eq!(b.pending(), 5);
+    }
+
+    #[test]
+    fn take_merge_cuts_immediately_without_formation_wait() {
+        // Continuous mode must not hold a lone request for max_wait.
+        let mut b =
+            Batcher::new(BatcherConfig::continuous(8, Duration::from_secs(10)));
+        b.push(req(1));
+        let now = Instant::now();
+        assert!(!b.ready(now), "size-or-deadline criteria are not met …");
+        let cut = b.take_merge(now, 8).unwrap();
+        assert_eq!(cut.len(), 1, "… but the merge cut happens anyway");
+    }
+
+    #[test]
     fn preserves_fifo_order() {
-        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::ZERO });
+        let mut b = Batcher::new(BatcherConfig::sized(3, Duration::ZERO));
         for i in 0..3 {
             b.push(req(i));
         }

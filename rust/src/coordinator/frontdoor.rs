@@ -1,0 +1,1223 @@
+//! The serving front door: open-loop load generation, admission control
+//! with backpressure, and continuous batching — on the simulated clock.
+//!
+//! This is the deployment-side sibling of [`crate::pim::parallel`]: a
+//! dependency-free event loop (hand-rolled heap, seeded
+//! [`Pcg64`] arrivals, pure `f64` time) that answers the question the
+//! kernel work cannot: *where is the knee of the latency/throughput
+//! curve, and which component is the bottleneck there?*
+//!
+//! Three pieces:
+//!
+//! 1. **Open-loop arrival processes** ([`ArrivalProcess`]): Poisson,
+//!    diurnal (sinusoidal-rate, thinned), and bursty (square-wave rate)
+//!    traces. Open-loop means arrivals do *not* slow down when the
+//!    system congests — the population of simulated users is far larger
+//!    than the fleet, so offered load is independent of latency. This is
+//!    the regime where queueing knees actually appear; closed-loop
+//!    replay (what `fleet-sim` did before this module) self-throttles
+//!    and hides them.
+//! 2. **Admission control with backpressure** ([`OverloadPolicy`]): a
+//!    bounded per-replica queue sheds overflow outright, and the `Shed`
+//!    policy additionally rejects requests whose projected completion
+//!    would blow the tenant's QoS deadline — shedding early instead of
+//!    serving answers nobody is waiting for.
+//! 3. **Continuous batching** ([`Discipline::Continuous`]): each layer
+//!    of the network owns its weight-stationary arrays
+//!    ([`BankScheduler::layer_costs`]), so while one wave occupies layer
+//!    *j* every other layer's banks idle. The simulator models each
+//!    replica as a tandem pipeline of layer stages: a new request enters
+//!    at the next stage-0 boundary instead of waiting for the whole
+//!    batch to drain, lifting per-replica throughput from `1/Σdₗ`
+//!    (drain batching — the hardware latency model is linear in batch
+//!    size, so classic batching buys *nothing*) to `1/max dₗ`. The live
+//!    twin of this model is [`super::server::Executor::step_groups`]
+//!    over [`crate::pim::program::InflightRun`].
+//!
+//! The simulator is pinned against closed-form M/D/c queueing theory
+//! ([`mdc`], Crommelin's embedded recursion + Franx's waiting-time
+//! formula): in validation mode (`max_batch = 1`, admission off) the
+//! simulated p50/p99 must land within tolerance of the analytic values —
+//! a deterministic bench gate (`comparison.serve.*`), not a plot.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+
+use super::scheduler::BankScheduler;
+
+/// Epsilon for simulated-clock comparisons that must tolerate float
+/// round-trip through event times.
+const EPS: f64 = 1e-12;
+
+/// Latency multiple (vs the lightest-load p99) that defines the knee.
+pub const KNEE_FACTOR: f64 = 3.0;
+
+/// An open-loop arrival process. All variants generate event times via
+/// exponential inter-arrivals at the peak rate, thinned to the
+/// instantaneous rate — one accept/reject draw per candidate, so a given
+/// (process, seed) pair is a fixed trace.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals.
+    Poisson {
+        /// Mean arrival rate (requests/s).
+        rate_rps: f64,
+    },
+    /// Sinusoidal day/night swing around a mean rate.
+    Diurnal {
+        /// Mean arrival rate (requests/s).
+        mean_rps: f64,
+        /// Relative swing amplitude in [0, 1): rate varies in
+        /// `mean·(1 ± swing)`.
+        swing: f64,
+        /// Period of one simulated "day" (s).
+        period_s: f64,
+    },
+    /// Square-wave bursts: `burst_mult × base` for the first
+    /// `duty` fraction of every period, `base` otherwise.
+    Burst {
+        /// Off-burst arrival rate (requests/s).
+        base_rps: f64,
+        /// Rate multiplier during a burst.
+        burst_mult: f64,
+        /// Burst period (s).
+        period_s: f64,
+        /// Fraction of the period spent bursting, in (0, 1).
+        duty: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous arrival rate at simulated time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => rate_rps,
+            ArrivalProcess::Diurnal { mean_rps, swing, period_s } => {
+                mean_rps * (1.0 + swing * (2.0 * std::f64::consts::PI * t / period_s).sin())
+            }
+            ArrivalProcess::Burst { base_rps, burst_mult, period_s, duty } => {
+                if t.rem_euclid(period_s) < duty * period_s {
+                    base_rps * burst_mult
+                } else {
+                    base_rps
+                }
+            }
+        }
+    }
+
+    /// Peak instantaneous rate (the thinning envelope).
+    pub fn peak_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => rate_rps,
+            ArrivalProcess::Diurnal { mean_rps, swing, .. } => mean_rps * (1.0 + swing),
+            ArrivalProcess::Burst { base_rps, burst_mult, .. } => base_rps * burst_mult,
+        }
+    }
+
+    /// Long-run mean rate (requests/s).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => rate_rps,
+            ArrivalProcess::Diurnal { mean_rps, .. } => mean_rps,
+            ArrivalProcess::Burst { base_rps, burst_mult, duty, .. } => {
+                base_rps * (1.0 + (burst_mult - 1.0) * duty)
+            }
+        }
+    }
+
+    /// The same temporal shape rescaled to a new long-run mean rate —
+    /// what the offered-load sweep varies.
+    pub fn with_mean(&self, mean_rps: f64) -> ArrivalProcess {
+        match *self {
+            ArrivalProcess::Poisson { .. } => ArrivalProcess::Poisson { rate_rps: mean_rps },
+            ArrivalProcess::Diurnal { swing, period_s, .. } => {
+                ArrivalProcess::Diurnal { mean_rps, swing, period_s }
+            }
+            ArrivalProcess::Burst { burst_mult, period_s, duty, .. } => ArrivalProcess::Burst {
+                base_rps: mean_rps / (1.0 + (burst_mult - 1.0) * duty),
+                burst_mult,
+                period_s,
+                duty,
+            },
+        }
+    }
+
+    /// Next arrival strictly after `t` (thinning / Lewis-Shedler): step by
+    /// an exponential at the peak rate, accept with probability
+    /// `rate(t)/peak`.
+    pub fn next(&self, mut t: f64, rng: &mut Pcg64) -> f64 {
+        let peak = self.peak_rate();
+        assert!(peak > 0.0, "arrival process needs a positive rate");
+        loop {
+            t += -(1.0 - rng.f64()).ln() / peak;
+            if rng.f64() * peak <= self.rate_at(t) {
+                return t;
+            }
+        }
+    }
+}
+
+/// One tenant class at the front door: a traffic share and a QoS
+/// deadline the admission controller projects against.
+#[derive(Clone, Debug)]
+pub struct TenantClass {
+    /// Display name.
+    pub name: String,
+    /// Relative traffic weight (normalized across classes).
+    pub weight: f64,
+    /// End-to-end QoS deadline (s); `f64::INFINITY` disables
+    /// deadline-based shedding for this class.
+    pub deadline_s: f64,
+}
+
+/// What to do with a request that cannot meet its class deadline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Reject it at admission (projected-deadline shed). Bounded-queue
+    /// overflow sheds under either policy.
+    Shed,
+    /// Admit it anyway and let it run late; only queue overflow sheds.
+    Delay,
+}
+
+/// Batch formation discipline of the simulated replicas — mirrors
+/// [`super::batcher::BatchMode`] on the simulated clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Discipline {
+    /// Size-or-deadline batches executed to completion (`n·Σdₗ` each).
+    DrainBatch,
+    /// Continuous batching: per-replica tandem pipeline of layer stages;
+    /// requests enter at stage-0 boundaries, `max_batch` caps
+    /// co-residency.
+    Continuous,
+}
+
+/// Front-door configuration.
+#[derive(Clone, Debug)]
+pub struct FrontDoorConfig {
+    /// Identical replicas in the fixed fleet.
+    pub replicas: usize,
+    /// Per-layer single-image service times (s) — the pipeline stage
+    /// profile, from [`BankScheduler::layer_costs`].
+    pub layer_latencies_s: Vec<f64>,
+    /// Max requests co-resident per replica (continuous) or per batch
+    /// (drain).
+    pub max_batch: usize,
+    /// Drain-mode formation deadline (s).
+    pub max_wait_s: f64,
+    /// Bounded-queue depth per replica; admitted-but-unstarted requests
+    /// beyond this are shed (backpressure).
+    pub queue_cap: usize,
+    /// Batch formation discipline.
+    pub discipline: Discipline,
+    /// Overload policy.
+    pub policy: OverloadPolicy,
+    /// Tenant classes sharing the door.
+    pub classes: Vec<TenantClass>,
+    /// Arrival-trace shape (rescaled per sweep point).
+    pub arrival: ArrivalProcess,
+    /// Trace seed.
+    pub seed: u64,
+    /// Arrivals simulated per load point.
+    pub requests: usize,
+    /// Per-user request rate (requests/s) — maps offered load to a
+    /// simulated user population for reporting.
+    pub user_rps: f64,
+}
+
+impl FrontDoorConfig {
+    /// Sensible defaults for a network with the given per-layer service
+    /// profile on `replicas` replicas: continuous batching, shed policy,
+    /// QoS deadline at 10× the unloaded service time.
+    pub fn for_network(layer_latencies_s: Vec<f64>, replicas: usize) -> FrontDoorConfig {
+        let total: f64 = layer_latencies_s.iter().sum();
+        FrontDoorConfig {
+            replicas,
+            layer_latencies_s,
+            max_batch: 16,
+            max_wait_s: 1e-3,
+            queue_cap: 64,
+            discipline: Discipline::Continuous,
+            policy: OverloadPolicy::Shed,
+            classes: vec![TenantClass {
+                name: "default".into(),
+                weight: 1.0,
+                deadline_s: 10.0 * total,
+            }],
+            arrival: ArrivalProcess::Poisson { rate_rps: 1.0 },
+            seed: 42,
+            requests: 3000,
+            user_rps: 0.013, // ~1.1k requests/day/user
+        }
+    }
+
+    /// Whole-network single-image service time `Σdₗ` (s).
+    pub fn service_total_s(&self) -> f64 {
+        self.layer_latencies_s.iter().sum()
+    }
+
+    /// Bottleneck stage `max dₗ` (s).
+    pub fn service_bottleneck_s(&self) -> f64 {
+        self.layer_latencies_s.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Mean seconds spent per served request in each serving component —
+/// the bottleneck attribution of one load point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ComponentBreakdown {
+    /// Waiting for co-residency room at a layer boundary (continuous) or
+    /// for batch formation (drain).
+    pub batcher_s: f64,
+    /// Waiting for a replica / its stage-0 arrays to free up.
+    pub router_s: f64,
+    /// Pure compute: the ADC-window service time `Σdₗ`.
+    pub adc_s: f64,
+    /// Inter-stage blocking inside the pipeline beyond pure service
+    /// (continuous only).
+    pub pipeline_s: f64,
+}
+
+impl ComponentBreakdown {
+    /// The dominant component by mean time.
+    pub fn bottleneck(&self) -> &'static str {
+        let pairs = [
+            ("batcher", self.batcher_s),
+            ("router", self.router_s),
+            ("adc", self.adc_s),
+            ("pipeline", self.pipeline_s),
+        ];
+        pairs
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap()
+            .0
+    }
+}
+
+/// Per-class outcome counters at one load point.
+#[derive(Clone, Debug)]
+pub struct ClassOutcome {
+    /// Class name.
+    pub name: String,
+    /// Requests admitted and served.
+    pub served: u64,
+    /// Requests shed (projected-deadline or queue overflow).
+    pub shed: u64,
+    /// Served requests that still missed the class deadline.
+    pub deadline_misses: u64,
+}
+
+/// One point of the offered-load sweep.
+#[derive(Clone, Debug)]
+pub struct LoadPoint {
+    /// Offered arrival rate (requests/s).
+    pub offered_rps: f64,
+    /// Simulated user population this rate corresponds to.
+    pub users: u64,
+    /// Requests served.
+    pub served: u64,
+    /// Requests shed at admission.
+    pub shed: u64,
+    /// Served requests past their class deadline.
+    pub deadline_misses: u64,
+    /// Served throughput over the simulated horizon (requests/s).
+    pub throughput_rps: f64,
+    /// End-to-end latency summary (s) over served requests.
+    pub latency: Summary,
+    /// Mean co-resident requests per execution (continuous) or mean cut
+    /// batch size (drain).
+    pub mean_batch: f64,
+    /// Mean per-request component times.
+    pub breakdown: ComponentBreakdown,
+    /// Per-class outcomes.
+    pub classes: Vec<ClassOutcome>,
+}
+
+/// The swept latency/throughput curve with its knee.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    /// Discipline the sweep ran under.
+    pub discipline: Discipline,
+    /// Analytic capacity of the fleet under that discipline (requests/s).
+    pub capacity_rps: f64,
+    /// The sweep points, in offered-rate order.
+    pub points: Vec<LoadPoint>,
+    /// The knee: the highest offered rate whose p99 stays within
+    /// [`KNEE_FACTOR`]× of the lightest-load p99 (0 when even the first
+    /// point blows it).
+    pub knee_rps: f64,
+    /// Index of the knee point in `points`, if any.
+    pub knee_index: Option<usize>,
+    /// Dominant component at the first post-knee point (or the last
+    /// point when nothing is past the knee).
+    pub bottleneck_past_knee: &'static str,
+}
+
+// ---------------------------------------------------------------------
+// Event loop
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrival { class: usize },
+    Flush,
+    Free,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // total_cmp keeps the heap deterministic even if a time went
+        // NaN; seq breaks exact-time ties in push order.
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Accumulators shared by both disciplines.
+#[derive(Default)]
+struct PointStats {
+    latencies: Vec<f64>,
+    batch_samples: Vec<f64>,
+    batcher_s: f64,
+    router_s: f64,
+    adc_s: f64,
+    pipeline_s: f64,
+    shed: u64,
+    served_per_class: Vec<u64>,
+    shed_per_class: Vec<u64>,
+    miss_per_class: Vec<u64>,
+    max_completion: f64,
+}
+
+/// The front door simulator.
+pub struct FrontDoor {
+    /// Configuration.
+    pub config: FrontDoorConfig,
+}
+
+impl FrontDoor {
+    /// A front door over `config`.
+    pub fn new(config: FrontDoorConfig) -> FrontDoor {
+        assert!(config.replicas > 0 && config.max_batch > 0);
+        assert!(!config.layer_latencies_s.is_empty());
+        assert!(!config.classes.is_empty());
+        FrontDoor { config }
+    }
+
+    /// Analytic capacity (requests/s) of the fleet under the configured
+    /// discipline: `c / max dₗ` for the continuous pipeline (capped by
+    /// co-residency), `c / Σdₗ` for drain batching — the hardware cost
+    /// model is linear in batch size, so classic batching adds no
+    /// throughput, only formation latency.
+    pub fn capacity_rps(&self) -> f64 {
+        let c = self.config.replicas as f64;
+        let total = self.config.service_total_s();
+        match self.config.discipline {
+            Discipline::DrainBatch => c / total,
+            Discipline::Continuous => {
+                let per_pipe =
+                    (1.0 / self.config.service_bottleneck_s()).min(self.config.max_batch as f64 / total);
+                c * per_pipe
+            }
+        }
+    }
+
+    fn pick_class(&self, rng: &mut Pcg64) -> usize {
+        if self.config.classes.len() == 1 {
+            return 0;
+        }
+        let total: f64 = self.config.classes.iter().map(|c| c.weight).sum();
+        let mut x = rng.f64() * total;
+        for (i, c) in self.config.classes.iter().enumerate() {
+            x -= c.weight;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        self.config.classes.len() - 1
+    }
+
+    /// The seeded arrival trace for `process`: `(time, class)` pairs in
+    /// time order. Open-loop: generated up front, independent of any
+    /// serving state.
+    fn gen_arrivals(&self, process: &ArrivalProcess) -> Vec<(f64, usize)> {
+        let mut rng = Pcg64::new(self.config.seed, 0x5e7e_d00d);
+        let mut class_rng = rng.fork(7);
+        let mut t = 0.0;
+        (0..self.config.requests)
+            .map(|_| {
+                t = process.next(t, &mut rng);
+                (t, self.pick_class(&mut class_rng))
+            })
+            .collect()
+    }
+
+    /// Simulate one load point at the configured arrival shape rescaled
+    /// to `offered_rps`.
+    pub fn run_point_at(&self, offered_rps: f64) -> LoadPoint {
+        let process = self.config.arrival.with_mean(offered_rps);
+        self.run_point(&process)
+    }
+
+    /// Simulate one load point for an explicit arrival process.
+    pub fn run_point(&self, process: &ArrivalProcess) -> LoadPoint {
+        let arrivals = self.gen_arrivals(process);
+        let nclasses = self.config.classes.len();
+        let mut stats = PointStats {
+            served_per_class: vec![0; nclasses],
+            shed_per_class: vec![0; nclasses],
+            miss_per_class: vec![0; nclasses],
+            ..PointStats::default()
+        };
+        match self.config.discipline {
+            Discipline::Continuous => self.run_continuous(&arrivals, &mut stats),
+            Discipline::DrainBatch => self.run_drain(&arrivals, &mut stats),
+        }
+        let served = stats.latencies.len() as u64;
+        let horizon = stats
+            .max_completion
+            .max(arrivals.last().map(|a| a.0).unwrap_or(0.0))
+            .max(EPS);
+        let latency = Summary::of(&stats.latencies);
+        let mean_batch = if stats.batch_samples.is_empty() {
+            0.0
+        } else {
+            stats.batch_samples.iter().sum::<f64>() / stats.batch_samples.len() as f64
+        };
+        let per = |x: f64| if served == 0 { 0.0 } else { x / served as f64 };
+        LoadPoint {
+            offered_rps: process.mean_rate(),
+            users: (process.mean_rate() / self.config.user_rps).round() as u64,
+            served,
+            shed: stats.shed,
+            deadline_misses: stats.miss_per_class.iter().sum(),
+            throughput_rps: served as f64 / horizon,
+            latency,
+            mean_batch,
+            breakdown: ComponentBreakdown {
+                batcher_s: per(stats.batcher_s),
+                router_s: per(stats.router_s),
+                adc_s: per(stats.adc_s),
+                pipeline_s: per(stats.pipeline_s),
+            },
+            classes: self
+                .config
+                .classes
+                .iter()
+                .enumerate()
+                .map(|(i, c)| ClassOutcome {
+                    name: c.name.clone(),
+                    served: stats.served_per_class[i],
+                    shed: stats.shed_per_class[i],
+                    deadline_misses: stats.miss_per_class[i],
+                })
+                .collect(),
+        }
+    }
+
+    /// Continuous discipline: per-replica tandem pipeline of layer
+    /// stages. Everything resolves analytically at each arrival — entry,
+    /// per-stage starts, completion — so no event heap is needed.
+    fn run_continuous(&self, arrivals: &[(f64, usize)], stats: &mut PointStats) {
+        let d = &self.config.layer_latencies_s;
+        let d_total: f64 = d.iter().sum();
+        let nl = d.len();
+        struct Pipe {
+            stage_free: Vec<f64>,
+            /// start-0 times of admitted requests, FIFO (backpressure).
+            starts: VecDeque<f64>,
+            /// last `max_batch` completion times, ascending (occupancy).
+            comps: VecDeque<f64>,
+        }
+        let mut pipes: Vec<Pipe> = (0..self.config.replicas)
+            .map(|_| Pipe {
+                stage_free: vec![0.0; nl],
+                starts: VecDeque::new(),
+                comps: VecDeque::new(),
+            })
+            .collect();
+        for &(t, class) in arrivals {
+            // Projected stage-0 entry per replica: free arrays, then
+            // co-residency room.
+            let entry = |p: &Pipe| -> (f64, f64) {
+                let base = t.max(p.stage_free[0]);
+                let occ_gate = if p.comps.len() >= self.config.max_batch {
+                    p.comps[p.comps.len() - self.config.max_batch]
+                } else {
+                    0.0
+                };
+                (base, base.max(occ_gate))
+            };
+            let r = (0..pipes.len())
+                .min_by(|&a, &b| entry(&pipes[a]).1.total_cmp(&entry(&pipes[b]).1).then(a.cmp(&b)))
+                .unwrap();
+            let (base, start0) = entry(&pipes[r]);
+            // Backpressure: admitted-but-unstarted requests on the chosen
+            // replica form its bounded queue.
+            let pipe = &mut pipes[r];
+            while pipe.starts.front().is_some_and(|&s| s <= t + EPS) {
+                pipe.starts.pop_front();
+            }
+            if pipe.starts.len() >= self.config.queue_cap {
+                stats.shed += 1;
+                stats.shed_per_class[class] += 1;
+                continue;
+            }
+            // Shed policy: projected completion vs the class deadline.
+            let deadline = self.config.classes[class].deadline_s;
+            if self.config.policy == OverloadPolicy::Shed
+                && (start0 - t) + d_total > deadline
+            {
+                stats.shed += 1;
+                stats.shed_per_class[class] += 1;
+                continue;
+            }
+            // Occupancy sample: requests still in flight when this one
+            // enters (+1 for itself).
+            let occupancy =
+                pipe.comps.iter().filter(|&&cmp| cmp > start0 + EPS).count() as f64 + 1.0;
+            // Walk the tandem stages.
+            let mut a = start0;
+            for (l, &dl) in d.iter().enumerate() {
+                let s = a.max(pipe.stage_free[l]);
+                pipe.stage_free[l] = s + dl;
+                a = s + dl;
+            }
+            let completion = a;
+            pipe.starts.push_back(start0);
+            pipe.comps.push_back(completion);
+            if pipe.comps.len() > self.config.max_batch {
+                pipe.comps.pop_front();
+            }
+            let e2e = completion - t;
+            stats.latencies.push(e2e);
+            stats.batch_samples.push(occupancy);
+            stats.router_s += base - t;
+            stats.batcher_s += start0 - base;
+            stats.adc_s += d_total;
+            stats.pipeline_s += (completion - start0) - d_total;
+            stats.served_per_class[class] += 1;
+            if e2e > deadline {
+                stats.miss_per_class[class] += 1;
+            }
+            stats.max_completion = stats.max_completion.max(completion);
+        }
+    }
+
+    /// Drain discipline: central size-or-deadline batcher over `c`
+    /// whole-batch replicas, driven by an event heap (arrivals, flush
+    /// deadlines, replica-free events).
+    fn run_drain(&self, arrivals: &[(f64, usize)], stats: &mut PointStats) {
+        let d_total = self.config.service_total_s();
+        let max_wait = self.config.max_wait_s;
+        struct Queued {
+            arrive: f64,
+            class: usize,
+        }
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        for &(t, class) in arrivals {
+            heap.push(Reverse(Event { t, seq, ev: Ev::Arrival { class } }));
+            seq += 1;
+        }
+        let mut queue: VecDeque<Queued> = VecDeque::new();
+        let mut busy = vec![0.0f64; self.config.replicas];
+        let cap = self.config.queue_cap.saturating_mul(self.config.replicas);
+
+        // Cut as many batches as policy + free replicas allow at `now`.
+        // (A macro, not a closure: it mutably borrows `heap` while the
+        // caller's `while let … heap.pop()` loop also owns it.)
+        macro_rules! try_cut {
+            ($now:expr, $force:expr) => {{
+                let now: f64 = $now;
+                loop {
+                    if queue.is_empty() {
+                        break;
+                    }
+                    let Some(r) = (0..busy.len()).find(|&r| busy[r] <= now + EPS) else {
+                        break;
+                    };
+                    let due = now >= queue[0].arrive + max_wait;
+                    if !$force && queue.len() < self.config.max_batch && !due {
+                        break;
+                    }
+                    let n = queue.len().min(self.config.max_batch);
+                    // Formation-ready time: when the cut criteria were
+                    // first satisfiable (batch filled, or oldest hit its
+                    // flush deadline). Time past `ready` waited on a
+                    // replica, not on formation.
+                    let ready = if n == self.config.max_batch {
+                        queue[n - 1].arrive
+                    } else {
+                        (queue[0].arrive + max_wait).min(now)
+                    }
+                    .min(now);
+                    let service = n as f64 * d_total;
+                    let completion = now + service;
+                    busy[r] = completion;
+                    heap.push(Reverse(Event { t: completion, seq, ev: Ev::Free }));
+                    seq += 1;
+                    for q in queue.drain(..n) {
+                        let e2e = completion - q.arrive;
+                        stats.latencies.push(e2e);
+                        stats.batch_samples.push(n as f64);
+                        let form_end = ready.max(q.arrive);
+                        stats.batcher_s += form_end - q.arrive;
+                        stats.router_s += now - form_end;
+                        stats.adc_s += service;
+                        stats.served_per_class[q.class] += 1;
+                        if e2e > self.config.classes[q.class].deadline_s {
+                            stats.miss_per_class[q.class] += 1;
+                        }
+                    }
+                    stats.max_completion = stats.max_completion.max(completion);
+                }
+            }};
+        }
+
+        while let Some(Reverse(ev)) = heap.pop() {
+            let now = ev.t;
+            match ev.ev {
+                Ev::Arrival { class } => {
+                    if queue.len() >= cap {
+                        stats.shed += 1;
+                        stats.shed_per_class[class] += 1;
+                        continue;
+                    }
+                    if self.config.policy == OverloadPolicy::Shed {
+                        // Projection: wait for the earliest replica, plus
+                        // a full-batch service per max_batch requests
+                        // already queued ahead, plus own batch service.
+                        let earliest = busy.iter().cloned().fold(f64::INFINITY, f64::min);
+                        let batches_ahead = (queue.len() / self.config.max_batch) as f64;
+                        let proj = (earliest.max(now) - now)
+                            + batches_ahead * self.config.max_batch as f64 * d_total
+                            + d_total;
+                        if proj > self.config.classes[class].deadline_s {
+                            stats.shed += 1;
+                            stats.shed_per_class[class] += 1;
+                            continue;
+                        }
+                    }
+                    queue.push_back(Queued { arrive: now, class });
+                    heap.push(Reverse(Event { t: now + max_wait, seq, ev: Ev::Flush }));
+                    seq += 1;
+                    try_cut!(now, false);
+                }
+                Ev::Flush | Ev::Free => try_cut!(now, false),
+            }
+        }
+        // Drain stragglers (possible only with max_wait = ∞-ish configs).
+        while !queue.is_empty() {
+            let r = (0..busy.len())
+                .min_by(|&a, &b| busy[a].total_cmp(&busy[b]).then(a.cmp(&b)))
+                .unwrap();
+            let now = busy[r].max(stats.max_completion.max(queue[0].arrive));
+            try_cut!(now, true);
+        }
+    }
+
+    /// Sweep offered load at `fractions` of [`Self::capacity_rps`] and
+    /// identify the knee.
+    pub fn sweep(&self, fractions: &[f64]) -> SweepReport {
+        let cap = self.capacity_rps();
+        let points: Vec<LoadPoint> =
+            fractions.iter().map(|f| self.run_point_at(f * cap)).collect();
+        let base_p99 = points.first().map(|p| p.latency.p99).unwrap_or(0.0);
+        let mut knee_index = None;
+        for (i, p) in points.iter().enumerate() {
+            if p.latency.p99 <= KNEE_FACTOR * base_p99 {
+                knee_index = Some(i);
+            } else {
+                break;
+            }
+        }
+        let knee_rps = knee_index.map(|i| points[i].offered_rps).unwrap_or(0.0);
+        let past = knee_index
+            .map(|i| (i + 1).min(points.len() - 1))
+            .unwrap_or(points.len() - 1);
+        SweepReport {
+            discipline: self.config.discipline,
+            capacity_rps: cap,
+            knee_rps,
+            knee_index,
+            bottleneck_past_knee: points[past].breakdown.bottleneck(),
+            points,
+        }
+    }
+}
+
+impl SweepReport {
+    /// Human-readable sweep table with knee and attribution.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "discipline={:?} capacity={:.0} rps knee={:.0} rps bottleneck_past_knee={}\n",
+            self.discipline, self.capacity_rps, self.knee_rps, self.bottleneck_past_knee
+        ));
+        out.push_str(
+            "offered_rps     users   served    shed  p50_ms  p99_ms  thru_rps  mean_batch  bottleneck\n",
+        );
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:>11.0} {:>9} {:>8} {:>7} {:>7.3} {:>7.3} {:>9.0} {:>11.2}  {}\n",
+                p.offered_rps,
+                p.users,
+                p.served,
+                p.shed,
+                p.latency.p50 * 1e3,
+                p.latency.p99 * 1e3,
+                p.throughput_rps,
+                p.mean_batch,
+                p.breakdown.bottleneck(),
+            ));
+        }
+        out
+    }
+
+    /// Deterministic JSON (sorted keys) for the bench trajectory.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("discipline", Json::Str(format!("{:?}", self.discipline))),
+            ("capacity_rps", Json::Num(self.capacity_rps)),
+            ("knee_rps", Json::Num(self.knee_rps)),
+            (
+                "knee_index",
+                self.knee_index.map(|i| Json::Num(i as f64)).unwrap_or(Json::Null),
+            ),
+            ("bottleneck_past_knee", Json::Str(self.bottleneck_past_knee.into())),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("offered_rps", Json::Num(p.offered_rps)),
+                                ("users", Json::Num(p.users as f64)),
+                                ("served", Json::Num(p.served as f64)),
+                                ("shed", Json::Num(p.shed as f64)),
+                                ("deadline_misses", Json::Num(p.deadline_misses as f64)),
+                                ("p50_s", Json::Num(p.latency.p50)),
+                                ("p99_s", Json::Num(p.latency.p99)),
+                                ("throughput_rps", Json::Num(p.throughput_rps)),
+                                ("mean_batch", Json::Num(p.mean_batch)),
+                                ("batcher_s", Json::Num(p.breakdown.batcher_s)),
+                                ("router_s", Json::Num(p.breakdown.router_s)),
+                                ("adc_s", Json::Num(p.breakdown.adc_s)),
+                                ("pipeline_s", Json::Num(p.breakdown.pipeline_s)),
+                                (
+                                    "bottleneck",
+                                    Json::Str(p.breakdown.bottleneck().into()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The front door for the e2e ResNet-18 profile: stage latencies from
+/// [`BankScheduler::layer_costs`] on the default slice geometry.
+pub fn resnet_front_door(width: usize, replicas: usize) -> FrontDoor {
+    let mut sched = BankScheduler::new(
+        BankScheduler::resnet18_layers(width),
+        crate::cache::addr::Geometry::default(),
+        crate::cache::controller::PimIntegration::Retained,
+    )
+    .expect("default slice fits the serving network");
+    sched.program_network();
+    let stages: Vec<f64> = sched.layer_costs(1).iter().map(|c| c.latency_s).collect();
+    FrontDoor::new(FrontDoorConfig::for_network(stages, replicas))
+}
+
+// ---------------------------------------------------------------------
+// M/D/c analytic cross-check
+// ---------------------------------------------------------------------
+
+/// Closed-form M/D/c waiting-time distribution: Crommelin's embedded
+/// recursion for the stationary queue-length distribution and Franx's
+/// finite-sum formula for `P(W ≤ x)` — the analytic pin for the
+/// simulator's validation mode (see [`queueing_crosscheck`]).
+pub mod mdc {
+    /// Stationary distribution of the number in system observed at
+    /// multiples of the (deterministic) service time `d`: with `c`
+    /// servers every customer in service at `t` departs by `t + d` and
+    /// nobody who starts after `t` does, so `L' = (L − c)⁺ + A` with
+    /// `A ~ Poisson(λd)` (Crommelin, 1932). Iterated to a fixed point.
+    pub fn stationary(lambda: f64, d: f64, c: usize) -> Vec<f64> {
+        let rho = lambda * d / c as f64;
+        assert!(rho < 1.0, "M/D/c requires rho < 1 (rho = {rho})");
+        // Poisson(λd) pmf, truncated at a negligible tail.
+        let mean = lambda * d;
+        let mut a = vec![(-mean).exp()];
+        let mut cum = a[0];
+        while 1.0 - cum > 1e-14 && a.len() < 2048 {
+            let j = a.len();
+            let next = a[j - 1] * mean / j as f64;
+            a.push(next);
+            cum += next;
+        }
+        let mut p = vec![1.0f64];
+        for _ in 0..200_000 {
+            let mut next = vec![0.0f64; p.len() + a.len()];
+            for (i, &pi) in p.iter().enumerate() {
+                if pi <= 0.0 {
+                    continue;
+                }
+                let shift = i.saturating_sub(c);
+                for (j, &aj) in a.iter().enumerate() {
+                    next[shift + j] += pi * aj;
+                }
+            }
+            // Truncate the (geometric) tail so the state space stays
+            // bounded; renormalize to keep a proper distribution.
+            while next.len() > 1 && *next.last().unwrap() < 1e-16 {
+                next.pop();
+            }
+            if next.len() > 4096 {
+                next.truncate(4096);
+            }
+            let mass: f64 = next.iter().sum();
+            for x in next.iter_mut() {
+                *x /= mass;
+            }
+            let diff: f64 = next
+                .iter()
+                .zip(p.iter().chain(std::iter::repeat(&0.0)))
+                .map(|(x, y)| (x - y).abs())
+                .sum();
+            p = next;
+            if diff < 1e-13 {
+                break;
+            }
+        }
+        p
+    }
+
+    /// `P(W ≤ x)` for the queueing delay `W` of M/D/c (Franx, 2001):
+    /// with `k` such that `(k−1)d ≤ x < kd`,
+    /// `P(W ≤ x) = Σ_{j=0}^{kc−1} Q^q_{kc−1−j} e^{−λ(kd−x)} (λ(kd−x))^j / j!`
+    /// where `Q^q_n = P((L−c)⁺ ≤ n) = P(L ≤ n+c)` is the stationary CDF
+    /// of the *queue length* (waiting customers), derived from the
+    /// system-size distribution `p` of [`stationary`].
+    ///
+    /// Derivation sketch: a customer arriving at `t` waits ≤ x iff at
+    /// most `c−1` predecessors remain at `t+x`. Observing the
+    /// predecessor-only process at epochs `s + jd` from `s = t−(kd−x)`,
+    /// each epoch removes exactly `min(·, c)` predecessors (deterministic
+    /// service), and all predecessor arrivals after `s` fall in the first
+    /// epoch — Poisson with mean `λ(kd−x)`. The condition collapses to
+    /// `(L(s)−c)⁺ + A ≤ kc−1`. (Sanity pins: continuity at `x = d` via
+    /// the stationary recursion, and `P(W ≤ 0) = P(L < c)` via PASTA.)
+    pub fn wait_cdf(lambda: f64, d: f64, c: usize, x: f64, p: &[f64]) -> f64 {
+        if x < 0.0 {
+            return 0.0;
+        }
+        let q = |n: usize| -> f64 {
+            if n + 1 >= p.len() {
+                1.0
+            } else {
+                p[..=n].iter().sum()
+            }
+        };
+        let k = (x / d).floor() as usize + 1;
+        let y = lambda * (k as f64 * d - x);
+        let mut term = (-y).exp(); // j = 0
+        let mut sum = 0.0;
+        for j in 0..k * c {
+            // Queue-length CDF at kc−1−j = system-size CDF at kc−1−j+c.
+            sum += q(k * c + c - 1 - j) * term;
+            term *= y / (j + 1) as f64;
+        }
+        sum.clamp(0.0, 1.0)
+    }
+
+    /// `q`-quantile (0 < q < 1) of the *sojourn* time `W + d` by
+    /// bisection on [`wait_cdf`].
+    pub fn latency_percentile(lambda: f64, d: f64, c: usize, q: f64) -> f64 {
+        let p = stationary(lambda, d, c);
+        let mut hi = d;
+        while wait_cdf(lambda, d, c, hi, &p) < q {
+            hi *= 2.0;
+            assert!(hi < 1e9 * d, "quantile bisection diverged");
+        }
+        let mut lo = 0.0;
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if wait_cdf(lambda, d, c, mid, &p) < q {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi) + d
+    }
+}
+
+/// The simulator-vs-theory comparison at one utilization.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueCrossCheck {
+    /// Target utilization λ·D/c.
+    pub rho: f64,
+    /// Servers.
+    pub replicas: usize,
+    /// Deterministic service time (s).
+    pub service_s: f64,
+    /// Simulated sojourn p50 (s).
+    pub sim_p50_s: f64,
+    /// Simulated sojourn p99 (s).
+    pub sim_p99_s: f64,
+    /// Analytic M/D/c sojourn p50 (s).
+    pub analytic_p50_s: f64,
+    /// Analytic M/D/c sojourn p99 (s).
+    pub analytic_p99_s: f64,
+}
+
+impl QueueCrossCheck {
+    /// Are both percentiles within `tol` relative error of theory?
+    pub fn within(&self, tol: f64) -> bool {
+        let rel = |s: f64, a: f64| (s - a).abs() / a;
+        rel(self.sim_p50_s, self.analytic_p50_s) <= tol
+            && rel(self.sim_p99_s, self.analytic_p99_s) <= tol
+    }
+
+    /// Deterministic JSON for the bench trajectory.
+    pub fn to_json(&self, tol: f64) -> Json {
+        Json::obj(vec![
+            ("rho", Json::Num(self.rho)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("service_s", Json::Num(self.service_s)),
+            ("sim_p50_s", Json::Num(self.sim_p50_s)),
+            ("sim_p99_s", Json::Num(self.sim_p99_s)),
+            ("analytic_p50_s", Json::Num(self.analytic_p50_s)),
+            ("analytic_p99_s", Json::Num(self.analytic_p99_s)),
+            ("tolerance", Json::Num(tol)),
+            ("within_tolerance", Json::Bool(self.within(tol))),
+        ])
+    }
+}
+
+/// Pin the simulator against closed-form M/D/c: validation mode strips
+/// every serving feature the theory does not model — `max_batch = 1`,
+/// zero formation wait, admission disabled — leaving exactly `c`
+/// deterministic servers behind a FIFO queue under Poisson(λ) arrivals
+/// (greedy earliest-free assignment is FIFO-equivalent when all service
+/// times are the same constant). The simulated sojourn percentiles must
+/// then match Franx's formula.
+pub fn queueing_crosscheck(
+    service_s: f64,
+    replicas: usize,
+    rho: f64,
+    requests: usize,
+    seed: u64,
+) -> QueueCrossCheck {
+    let lambda = rho * replicas as f64 / service_s;
+    let door = FrontDoor::new(FrontDoorConfig {
+        replicas,
+        layer_latencies_s: vec![service_s],
+        max_batch: 1,
+        max_wait_s: 0.0,
+        queue_cap: usize::MAX / 4,
+        discipline: Discipline::DrainBatch,
+        policy: OverloadPolicy::Delay,
+        classes: vec![TenantClass {
+            name: "validation".into(),
+            weight: 1.0,
+            deadline_s: f64::INFINITY,
+        }],
+        arrival: ArrivalProcess::Poisson { rate_rps: lambda },
+        seed,
+        requests,
+        user_rps: 1.0,
+    });
+    let point = door.run_point_at(lambda);
+    QueueCrossCheck {
+        rho,
+        replicas,
+        service_s,
+        sim_p50_s: point.latency.p50,
+        sim_p99_s: point.latency.p99,
+        analytic_p50_s: mdc::latency_percentile(lambda, service_s, replicas, 0.50),
+        analytic_p99_s: mdc::latency_percentile(lambda, service_s, replicas, 0.99),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_config(discipline: Discipline) -> FrontDoorConfig {
+        // Bottleneck stage = 1/6 of the total: continuous capacity is 6×
+        // the drain capacity.
+        let mut cfg = FrontDoorConfig::for_network(vec![4e-4, 4e-4, 4e-4, 4e-4, 4e-4, 4e-4], 4);
+        cfg.discipline = discipline;
+        cfg.requests = 1200;
+        cfg
+    }
+
+    #[test]
+    fn mdc_matches_md1_mean_wait() {
+        // M/D/1 with rho = 0.7: E[Wq] = rho·D / (2(1 − rho)).
+        let (lambda, d) = (0.7, 1.0);
+        let p = mdc::stationary(lambda, d, 1);
+        let expected = 0.7 * d / (2.0 * 0.3);
+        // E[Wq] = ∫ (1 − F(x)) dx, trapezoid.
+        let (mut mean, step) = (0.0, d / 200.0);
+        let mut x = 0.0;
+        while x < 60.0 * d {
+            let f0 = 1.0 - mdc::wait_cdf(lambda, d, 1, x, &p);
+            let f1 = 1.0 - mdc::wait_cdf(lambda, d, 1, x + step, &p);
+            mean += 0.5 * (f0 + f1) * step;
+            x += step;
+        }
+        assert!(
+            (mean - expected).abs() / expected < 0.02,
+            "E[Wq] = {mean}, Pollaczek–Khinchine says {expected}"
+        );
+    }
+
+    #[test]
+    fn mdc_cdf_is_monotone_and_proper() {
+        let p = mdc::stationary(3.0, 1.0, 4); // rho = 0.75
+        let mut prev = 0.0;
+        for i in 0..400 {
+            let x = i as f64 * 0.05;
+            let f = mdc::wait_cdf(3.0, 1.0, 4, x, &p);
+            assert!((0.0..=1.0).contains(&f));
+            assert!(f + 1e-12 >= prev, "cdf must be monotone at x = {x}");
+            prev = f;
+        }
+        assert!(prev > 0.999, "cdf must approach 1 (got {prev})");
+    }
+
+    #[test]
+    fn crosscheck_simulation_matches_theory() {
+        let cc = queueing_crosscheck(2e-3, 4, 0.8, 12_000, 42);
+        assert!(
+            cc.within(0.10),
+            "sim (p50 {}, p99 {}) vs analytic (p50 {}, p99 {})",
+            cc.sim_p50_s,
+            cc.sim_p99_s,
+            cc.analytic_p50_s,
+            cc.analytic_p99_s
+        );
+    }
+
+    #[test]
+    fn continuous_knee_beyond_drain_knee() {
+        let drain = FrontDoor::new(toy_config(Discipline::DrainBatch));
+        let cont = FrontDoor::new(toy_config(Discipline::Continuous));
+        let fr = [0.3, 0.6, 0.8, 0.9, 1.05];
+        let rd = drain.sweep(&fr);
+        let rc = cont.sweep(&fr);
+        assert!(rc.capacity_rps > 4.0 * rd.capacity_rps, "pipeline capacity ≈ 6×");
+        assert!(
+            rc.knee_rps > rd.knee_rps,
+            "continuous knee {} must sit beyond drain knee {}",
+            rc.knee_rps,
+            rd.knee_rps
+        );
+        // Above the knee the pipeline actually holds multiple requests.
+        let last = rc.points.last().unwrap();
+        assert!(last.mean_batch > 1.0, "mean co-residency = {}", last.mean_batch);
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let door = FrontDoor::new(toy_config(Discipline::Continuous));
+        let a = door.sweep(&[0.5, 0.9]).to_json().to_string();
+        let b = door.sweep(&[0.5, 0.9]).to_json().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shed_policy_bounds_the_tail_at_overload() {
+        let mut cfg = toy_config(Discipline::Continuous);
+        cfg.classes[0].deadline_s = 4.0 * cfg.service_total_s();
+        let door = FrontDoor::new(cfg);
+        let p = door.run_point_at(1.6 * door.capacity_rps());
+        assert!(p.shed > 0, "overload must shed");
+        // Everything served was projected (and landed) near the deadline.
+        let bound = 4.0 * door.config.service_total_s() + door.config.service_total_s();
+        assert!(p.latency.p99 <= bound, "p99 {} vs bound {bound}", p.latency.p99);
+    }
+
+    #[test]
+    fn delay_policy_overflow_backpressure() {
+        let mut cfg = toy_config(Discipline::Continuous);
+        cfg.policy = OverloadPolicy::Delay;
+        cfg.queue_cap = 4;
+        let door = FrontDoor::new(cfg);
+        let p = door.run_point_at(2.0 * door.capacity_rps());
+        assert!(p.shed > 0, "bounded queue must shed overflow under 2× load");
+        assert!(p.served > 0);
+    }
+
+    #[test]
+    fn arrival_processes_hit_their_mean_rate() {
+        for proc in [
+            ArrivalProcess::Poisson { rate_rps: 500.0 },
+            ArrivalProcess::Diurnal { mean_rps: 500.0, swing: 0.6, period_s: 2.0 },
+            ArrivalProcess::Burst { base_rps: 250.0, burst_mult: 5.0, period_s: 0.5, duty: 0.25 },
+        ] {
+            let mut rng = Pcg64::new(7, 1);
+            let mut t = 0.0;
+            let n = 4000;
+            for _ in 0..n {
+                t = proc.next(t, &mut rng);
+            }
+            let empirical = n as f64 / t;
+            let mean = proc.mean_rate();
+            assert!(
+                (empirical - mean).abs() / mean < 0.1,
+                "{proc:?}: empirical {empirical} vs mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn with_mean_preserves_shape_and_rescales() {
+        let b = ArrivalProcess::Burst { base_rps: 100.0, burst_mult: 4.0, period_s: 1.0, duty: 0.5 };
+        let b2 = b.with_mean(1000.0);
+        assert!((b2.mean_rate() - 1000.0).abs() < 1e-9);
+        assert!((b2.peak_rate() / b2.mean_rate() - b.peak_rate() / b.mean_rate()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attribution_sums_to_mean_latency() {
+        let door = FrontDoor::new(toy_config(Discipline::Continuous));
+        let p = door.run_point_at(0.9 * door.capacity_rps());
+        let sum = p.breakdown.batcher_s + p.breakdown.router_s + p.breakdown.adc_s
+            + p.breakdown.pipeline_s;
+        assert!(
+            (sum - p.latency.mean).abs() < 1e-9 * p.latency.mean.max(1e-12),
+            "components {sum} must reassemble the mean {}",
+            p.latency.mean
+        );
+    }
+}

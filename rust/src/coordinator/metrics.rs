@@ -78,12 +78,17 @@ impl LatencyHistogram {
     }
 
     /// Percentile `p` (0–100) over the retained samples.
+    ///
+    /// `total_cmp` sort: a single NaN sample (e.g. an upstream 0/0 in a
+    /// latency computation) sorts to the top instead of panicking the
+    /// metrics thread mid-report, so every other percentile stays
+    /// readable.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         crate::util::stats::percentile_sorted(&s, p)
     }
 }
@@ -249,6 +254,23 @@ mod tests {
         // The recency-window failure mode sat in the top ~2.5 % of the
         // stream; make sure we are nowhere near it.
         assert!(p50 < 0.75 * (n as f64 * 1e-6), "p50 biased toward recent samples");
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_percentiles() {
+        // Regression: one NaN latency used to panic the
+        // partial_cmp().unwrap() sort inside percentile(), taking the
+        // whole metrics report down. total_cmp sorts NaN above every
+        // finite sample, so mid-range percentiles stay exact.
+        let mut h = LatencyHistogram::new();
+        for i in 1..=99 {
+            h.record(i as f64 * 1e-3);
+        }
+        h.record(f64::NAN);
+        let p50 = h.percentile(50.0);
+        assert!(p50 > 0.045 && p50 < 0.056, "p50 = {p50}");
+        // The poisoned sample surfaces only at the extreme tail.
+        assert!(h.percentile(100.0).is_nan());
     }
 
     #[test]

@@ -11,15 +11,19 @@
 //! Offline build ⇒ std::thread + mpsc rather than tokio.
 
 pub mod batcher;
+pub mod frontdoor;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use batcher::{Batch, BatchMode, Batcher, BatcherConfig};
+pub use frontdoor::{
+    ArrivalProcess, Discipline, FrontDoor, FrontDoorConfig, OverloadPolicy, SweepReport,
+};
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};
 pub use router::Router;
 pub use scheduler::BankScheduler;
-pub use server::{Executor, NativeExecutor, RuntimeExecutor, Server, ServerConfig};
+pub use server::{Executor, FinishedGroup, NativeExecutor, RuntimeExecutor, Server, ServerConfig};

@@ -7,6 +7,9 @@ use std::time::Instant;
 pub struct InferenceRequest {
     /// Caller-assigned request id (echoed in the response).
     pub id: u64,
+    /// Tenant this request belongs to (0 for single-tenant servers).
+    /// The batcher's merge cut preserves FIFO order *per tenant*.
+    pub tenant: u32,
     /// Flattened NHWC image, h×w×c f32.
     pub image: Vec<f32>,
     /// Arrival timestamp (set by [`InferenceRequest::new`]).
@@ -14,9 +17,15 @@ pub struct InferenceRequest {
 }
 
 impl InferenceRequest {
-    /// A request enqueued now.
+    /// A request enqueued now (tenant 0).
     pub fn new(id: u64, image: Vec<f32>) -> InferenceRequest {
-        InferenceRequest { id, image, enqueued: Instant::now() }
+        InferenceRequest { id, tenant: 0, image, enqueued: Instant::now() }
+    }
+
+    /// Tag the request with a tenant id (builder style).
+    pub fn with_tenant(mut self, tenant: u32) -> InferenceRequest {
+        self.tenant = tenant;
+        self
     }
 }
 

@@ -30,6 +30,11 @@ impl Router {
 
     /// Choose a replica for the next batch: min inflight, ties by
     /// earliest busy_until, then by index (deterministic).
+    ///
+    /// `total_cmp` on `busy_until`: a NaN-poisoned replica (e.g. a cost
+    /// model dividing by a zero batch) sorts *after* every finite value
+    /// and is simply never preferred — the old `partial_cmp().unwrap()`
+    /// panicked the serving thread instead.
     pub fn route(&mut self) -> usize {
         let idx = (0..self.replicas.len())
             .min_by(|&a, &b| {
@@ -37,7 +42,7 @@ impl Router {
                 let rb = &self.replicas[b];
                 ra.inflight
                     .cmp(&rb.inflight)
-                    .then(ra.busy_until.partial_cmp(&rb.busy_until).unwrap())
+                    .then(ra.busy_until.total_cmp(&rb.busy_until))
                     .then(a.cmp(&b))
             })
             .unwrap();
@@ -98,6 +103,26 @@ mod tests {
         r.complete(first, 1.0);
         // first has served 1 and is free; second still inflight.
         assert_eq!(r.route(), first);
+    }
+
+    #[test]
+    fn nan_poisoned_replica_never_panics_and_loses_ties() {
+        // Regression: a replica whose busy_until went NaN used to panic
+        // the `partial_cmp().unwrap()` in route(). Under total_cmp a
+        // positive NaN orders after every finite busy_until, so routing
+        // keeps working and prefers the healthy replicas.
+        let mut r = Router::new(3);
+        r.replicas[1].busy_until = f64::NAN;
+        for _ in 0..6 {
+            let idx = r.route();
+            r.complete(idx, 0.001);
+        }
+        assert_eq!(r.total_served(), 6);
+        // All replicas have equal inflight at each route() call, so the
+        // busy_until tie-break applies: the NaN replica only gets picked
+        // once the healthy replicas carry more inflight — with
+        // route-then-complete it never does.
+        assert_eq!(r.replicas[1].served, 0, "NaN replica must lose ties");
     }
 
     #[test]

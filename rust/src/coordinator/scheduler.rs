@@ -102,42 +102,61 @@ impl BankScheduler {
         total_latency
     }
 
+    /// Per-layer simulated execution cost of `batch` images, in network
+    /// order, with no cache-arbitration side effects.
+    ///
+    /// Each layer has its *own* weight-stationary arrays, so these are
+    /// the tandem pipeline-stage service times the continuous-batching
+    /// front door ([`crate::coordinator::frontdoor`]) schedules against:
+    /// while one wave occupies layer *j*, the arrays of every other layer
+    /// are idle and can serve a later wave. [`Self::batch_cost`] is
+    /// exactly the sum of these stages (layers serial on one request).
+    pub fn layer_costs(&self, batch: usize) -> Vec<ExecutionCost> {
+        assert!(self.programmed, "program_network() first");
+        let sched = BitSerialSchedule::new(self.model.act_bits, self.model.weight_bits);
+        self.layers
+            .iter()
+            .map(|&shape| {
+                let m = ConvMapping::plan(shape);
+                let ow = shape.output_width();
+                // Per image: ow² output pixels; per pixel one invocation per
+                // (submatrix-position) chain — tiles run in parallel so the
+                // pixel latency is one schedule; pixels stream back-to-back
+                // (pipelined through the ADC windows).
+                let invocations_serial = (batch * ow * ow) as f64;
+                let lat = invocations_serial * sched.latency();
+                // Ops actually computed (×2 for pos/neg banks at equal time —
+                // both banks convert in parallel on different arrays).
+                let ops = 2.0 * shape.total_macs() as f64 * batch as f64;
+                // Energy: every (tile × pixel × side-cycle) step pays the step
+                // energy on both banks, scaled by row utilization.
+                let tiles = m.submatrices * m.d_tiles * m.n_tiles;
+                let rows_mean = (m.mean_utilization() * 128.0).max(1.0) as usize;
+                let e_step = self.model.step_energy(rows_mean);
+                let energy = invocations_serial
+                    * tiles as f64
+                    * 2.0 // pos + neg banks
+                    * sched.side_cycles as f64
+                    * e_step;
+                ExecutionCost { ops, latency_s: lat, energy_j: energy, lines_moved: 0 }
+            })
+            .collect()
+    }
+
     /// Simulated hardware cost of running `batch` images through the whole
     /// network. Layers execute serially; a layer's tiles run in parallel;
     /// each output pixel of each image is one bit-serial invocation chain.
     pub fn batch_cost(&mut self, batch: usize) -> ExecutionCost {
-        assert!(self.programmed, "program_network() first");
-        let sched = BitSerialSchedule::new(self.model.act_bits, self.model.weight_bits);
+        let per_layer = self.layer_costs(batch);
         let mut cost = ExecutionCost::default();
-        for shape in self.layers.clone() {
-            let m = ConvMapping::plan(shape);
-            let ow = shape.output_width();
-            // Per image: ow² output pixels; per pixel one invocation per
-            // (submatrix-position) chain — tiles run in parallel so the
-            // pixel latency is one schedule; pixels stream back-to-back
-            // (pipelined through the ADC windows).
-            let invocations_serial = (batch * ow * ow) as f64;
-            let lat = invocations_serial * sched.latency();
-            // Ops actually computed (×2 for pos/neg banks at equal time —
-            // both banks convert in parallel on different arrays).
-            let ops = 2.0 * shape.total_macs() as f64 * batch as f64;
-            // Energy: every (tile × pixel × side-cycle) step pays the step
-            // energy on both banks, scaled by row utilization.
-            let tiles = m.submatrices * m.d_tiles * m.n_tiles;
-            let rows_mean = (m.mean_utilization() * 128.0).max(1.0) as usize;
-            let e_step = self.model.step_energy(rows_mean);
-            let energy = invocations_serial
-                * tiles as f64
-                * 2.0 // pos + neg banks
-                * sched.side_cycles as f64
-                * e_step;
-            cost.ops += ops;
-            cost.latency_s += lat;
-            cost.energy_j += energy;
+        for (shape, lc) in self.layers.clone().into_iter().zip(per_layer) {
+            cost.ops += lc.ops;
+            cost.latency_s += lc.latency_s;
+            cost.energy_j += lc.energy_j;
             // Reserve the placed arrays for the window (cache arbitration).
             for p in self.layout.layer_tiles(self.layers.iter().position(|l| *l == shape).unwrap()) {
-                self.controller.slice.banks[p.pos_slot.0].reserve(p.pos_slot.1, 0.0, lat);
-                self.controller.slice.banks[p.neg_slot.0].reserve(p.neg_slot.1, 0.0, lat);
+                self.controller.slice.banks[p.pos_slot.0].reserve(p.pos_slot.1, 0.0, lc.latency_s);
+                self.controller.slice.banks[p.neg_slot.0].reserve(p.neg_slot.1, 0.0, lc.latency_s);
             }
         }
         // Flush/reload mode pays line movement per campaign (per batch).
@@ -209,6 +228,23 @@ mod tests {
         let t = s.program_network();
         assert!(t > 0.0);
         assert!(s.programmed);
+    }
+
+    #[test]
+    fn layer_costs_sum_to_batch_cost() {
+        let mut s = sched(PimIntegration::Retained);
+        s.program_network();
+        let per_layer = s.layer_costs(3);
+        assert_eq!(per_layer.len(), s.layers.len());
+        let total = s.batch_cost(3);
+        let sum_lat: f64 = per_layer.iter().map(|c| c.latency_s).sum();
+        let sum_ops: f64 = per_layer.iter().map(|c| c.ops).sum();
+        assert_eq!(sum_lat, total.latency_s, "stage sum must equal the serial cost");
+        assert_eq!(sum_ops, total.ops);
+        // The pipeline's bottleneck stage is what continuous batching
+        // pays per admitted wave — strictly less than the serial total.
+        let max_lat = per_layer.iter().map(|c| c.latency_s).fold(0.0, f64::max);
+        assert!(max_lat < 0.5 * total.latency_s, "no single stage dominates");
     }
 
     #[test]

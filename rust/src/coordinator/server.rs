@@ -13,10 +13,20 @@ use std::time::{Duration, Instant};
 
 use crate::Result;
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{BatchMode, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
 use super::scheduler::BankScheduler;
+
+/// A merge group that completed at a layer boundary of a stepped
+/// ([`BatchMode::Continuous`]) execution.
+#[derive(Clone, Debug)]
+pub struct FinishedGroup {
+    /// Group handle returned by [`Executor::begin_group`].
+    pub group: u64,
+    /// Predicted classes, one per image in the group.
+    pub preds: Vec<u8>,
+}
 
 /// Pluggable inference backend.
 ///
@@ -29,6 +39,27 @@ pub trait Executor {
     fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>>;
     /// Elements per image (h·w·c).
     fn image_elems(&self) -> usize;
+
+    /// Open an in-flight merge group of `n` images for continuous
+    /// batching. Returns a group handle, or `None` when this executor
+    /// cannot execute iteration-level (fixed-batch runtime backends keep
+    /// the default) — the server then degrades that group to classic
+    /// drain execution.
+    fn begin_group(&mut self, _images: &[f32], _n: usize) -> Result<Option<u64>> {
+        Ok(None)
+    }
+
+    /// Advance every in-flight group one layer boundary and return the
+    /// groups that completed at it. New groups admitted between calls
+    /// join the pipeline at the *next* boundary — that is the merge.
+    fn step_groups(&mut self) -> Result<Vec<FinishedGroup>> {
+        Ok(Vec::new())
+    }
+
+    /// Images currently co-resident across in-flight groups.
+    fn inflight_requests(&self) -> usize {
+        0
+    }
 }
 
 /// Factory that builds the executor on the server thread.
@@ -111,53 +142,146 @@ impl Server {
                     return;
                 }
             };
+            let continuous = config.batcher.mode == BatchMode::Continuous;
             let mut batcher = Batcher::new(config.batcher);
+            // Continuous mode: requests of every in-flight merge group,
+            // keyed by the executor's group handle, with the group's
+            // execution-start instant.
+            let mut groups: std::collections::HashMap<u64, (Vec<InferenceRequest>, Instant)> =
+                std::collections::HashMap::new();
+            let mut inflight_reqs = 0usize;
             let mut running = true;
-            while running || batcher.pending() > 0 {
-                let timeout = batcher
-                    .next_deadline(Instant::now())
-                    .unwrap_or(Duration::from_millis(50));
+            while running || batcher.pending() > 0 || !groups.is_empty() {
+                // Block for new work only when there is nothing to step and
+                // nothing queued; with an in-flight pipeline we poll
+                // non-blockingly so boundaries keep advancing.
+                let idle = groups.is_empty() && (!continuous || batcher.pending() == 0);
                 if running {
-                    match rx.recv_timeout(timeout) {
-                        Ok(Event::Request(r)) => {
-                            metrics_thread.lock().unwrap().requests += 1;
-                            batcher.push(r);
-                            // Drain everything already queued in the channel
-                            // before making a batching decision — otherwise a
-                            // slow executor turns every backlog into
-                            // singleton batches.
-                            loop {
-                                match rx.try_recv() {
-                                    Ok(Event::Request(r)) => {
-                                        metrics_thread.lock().unwrap().requests += 1;
-                                        batcher.push(r);
-                                    }
-                                    Ok(Event::Shutdown) => {
-                                        running = false;
-                                        break;
-                                    }
-                                    Err(_) => break,
-                                }
+                    if idle {
+                        let timeout = batcher
+                            .next_deadline(Instant::now())
+                            .unwrap_or(Duration::from_millis(50));
+                        match rx.recv_timeout(timeout) {
+                            Ok(Event::Request(r)) => {
+                                metrics_thread.lock().unwrap().requests += 1;
+                                batcher.push(r);
                             }
+                            Ok(Event::Shutdown) => running = false,
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
                         }
-                        Ok(Event::Shutdown) => running = false,
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
-                        Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
+                    }
+                    // Drain everything already queued in the channel before
+                    // making a batching decision — otherwise a slow executor
+                    // turns every backlog into singleton batches.
+                    while running {
+                        match rx.try_recv() {
+                            Ok(Event::Request(r)) => {
+                                metrics_thread.lock().unwrap().requests += 1;
+                                batcher.push(r);
+                            }
+                            Ok(Event::Shutdown) => running = false,
+                            Err(_) => break,
+                        }
                     }
                 }
-                let force = !running;
-                while let Some(batch) = batcher.take(Instant::now(), force) {
-                    Self::execute_batch(
-                        batch.requests,
-                        &mut *executor,
-                        scheduler.as_mut(),
-                        &metrics_thread,
-                        &resp_tx,
-                    );
+                if continuous {
+                    // Admit merge groups at this layer boundary, up to the
+                    // co-residency cap, then advance the pipeline one
+                    // boundary and answer whatever completed at it.
+                    let now = Instant::now();
+                    let mut room = config.batcher.max_batch.saturating_sub(inflight_reqs);
+                    while room > 0 {
+                        let Some(batch) = batcher.take_merge(now, room) else { break };
+                        let n = batch.len();
+                        let images = Self::concat_images(&batch.requests, executor.image_elems());
+                        match executor.begin_group(&images, n) {
+                            Ok(Some(gid)) => {
+                                groups.insert(gid, (batch.requests, Instant::now()));
+                                inflight_reqs += n;
+                                room = config.batcher.max_batch.saturating_sub(inflight_reqs);
+                            }
+                            Ok(None) => {
+                                // Executor cannot step (fixed-batch runtime
+                                // backend): degrade this group to drain
+                                // execution, still prepare-free.
+                                Self::execute_batch(
+                                    batch.requests,
+                                    &mut *executor,
+                                    scheduler.as_mut(),
+                                    &metrics_thread,
+                                    &resp_tx,
+                                );
+                            }
+                            Err(e) => {
+                                eprintln!("executor error: {e}");
+                                let exec_start = Instant::now();
+                                let n = batch.requests.len();
+                                Self::complete_group(
+                                    batch.requests,
+                                    vec![0u8; n],
+                                    exec_start,
+                                    scheduler.as_mut(),
+                                    &metrics_thread,
+                                    &resp_tx,
+                                );
+                            }
+                        }
+                    }
+                    if !groups.is_empty() {
+                        let finished = match executor.step_groups() {
+                            Ok(f) => f,
+                            Err(e) => {
+                                eprintln!("executor error: {e}");
+                                // Fail every in-flight group with zeroed
+                                // predictions rather than wedging callers.
+                                groups
+                                    .keys()
+                                    .map(|&gid| FinishedGroup {
+                                        group: gid,
+                                        preds: vec![0u8; groups[&gid].0.len()],
+                                    })
+                                    .collect()
+                            }
+                        };
+                        for fg in finished {
+                            if let Some((requests, exec_start)) = groups.remove(&fg.group) {
+                                inflight_reqs -= requests.len();
+                                Self::complete_group(
+                                    requests,
+                                    fg.preds,
+                                    exec_start,
+                                    scheduler.as_mut(),
+                                    &metrics_thread,
+                                    &resp_tx,
+                                );
+                            }
+                        }
+                    }
+                } else {
+                    let force = !running;
+                    while let Some(batch) = batcher.take(Instant::now(), force) {
+                        Self::execute_batch(
+                            batch.requests,
+                            &mut *executor,
+                            scheduler.as_mut(),
+                            &metrics_thread,
+                            &resp_tx,
+                        );
+                    }
                 }
             }
         });
         Server { tx, responses: resp_rx, metrics, handle: Some(handle) }
+    }
+
+    fn concat_images(requests: &[InferenceRequest], elems: usize) -> Vec<f32> {
+        let mut images = Vec::with_capacity(requests.len() * elems);
+        for r in requests {
+            assert_eq!(r.image.len(), elems, "request {} wrong image size", r.id);
+            images.extend_from_slice(&r.image);
+        }
+        images
     }
 
     fn execute_batch(
@@ -168,12 +292,7 @@ impl Server {
         resp_tx: &mpsc::Sender<InferenceResponse>,
     ) {
         let n = requests.len();
-        let elems = executor.image_elems();
-        let mut images = Vec::with_capacity(n * elems);
-        for r in &requests {
-            assert_eq!(r.image.len(), elems, "request {} wrong image size", r.id);
-            images.extend_from_slice(&r.image);
-        }
+        let images = Self::concat_images(&requests, executor.image_elems());
         let exec_start = Instant::now();
         let preds = match executor.classify(&images, n) {
             Ok(p) => p,
@@ -182,7 +301,22 @@ impl Server {
                 vec![0u8; n]
             }
         };
-        // Simulated hardware cost for this batch.
+        Self::complete_group(requests, preds, exec_start, scheduler, metrics, resp_tx);
+    }
+
+    /// Account and answer one executed group (a drain batch or a
+    /// continuous merge group): simulated hardware cost, latency records,
+    /// responses.
+    fn complete_group(
+        requests: Vec<InferenceRequest>,
+        preds: Vec<u8>,
+        exec_start: Instant,
+        scheduler: Option<&mut BankScheduler>,
+        metrics: &Arc<Mutex<Metrics>>,
+        resp_tx: &mpsc::Sender<InferenceResponse>,
+    ) {
+        let n = requests.len();
+        // Simulated hardware cost for this group.
         let (hw_lat, hw_ops, hw_energy) = match scheduler {
             Some(s) => {
                 let c = s.batch_cost(n);
@@ -240,6 +374,13 @@ impl Drop for Server {
 /// `fleet::sim`) and every batch is pure prepared execution over the
 /// executor's reusable scratch pool; the worker-pool width rides on the
 /// program ([`crate::pim::program::CompiledNet::parallelism`]).
+///
+/// Also the reference stepped executor: it implements
+/// [`Executor::begin_group`]/[`Executor::step_groups`] over
+/// [`crate::pim::program::InflightRun`], so a [`BatchMode::Continuous`]
+/// server merges new requests into the in-flight execution at layer
+/// boundaries — each group bit-identical to its solo `classify()` run
+/// and still prepare-free at every boundary.
 pub struct NativeExecutor {
     /// The compiled weight program (shareable across executors/threads).
     pub program: std::sync::Arc<crate::pim::program::CompiledNet>,
@@ -247,9 +388,15 @@ pub struct NativeExecutor {
     pub mode: crate::nn::ForwardMode,
     /// Image dimensions (h, w, c).
     pub dims: (usize, usize, usize),
-    /// Noise seed, bumped per batch.
+    /// Noise seed, bumped per batch (and per continuous merge group, so
+    /// a group stepped to completion reproduces the classify() numerics
+    /// of the same submission order exactly).
     pub seed: u64,
     scratch: crate::pim::program::ScratchPool,
+    /// In-flight continuous-batching groups, boundary-interleaved by
+    /// [`Executor::step_groups`].
+    inflight: Vec<(u64, crate::pim::program::InflightRun)>,
+    next_group: u64,
 }
 
 impl NativeExecutor {
@@ -299,6 +446,8 @@ impl NativeExecutor {
             dims,
             seed,
             scratch: crate::pim::program::ScratchPool::new(),
+            inflight: Vec::new(),
+            next_group: 0,
         }
     }
 }
@@ -323,6 +472,50 @@ impl Executor for NativeExecutor {
 
     fn image_elems(&self) -> usize {
         self.dims.0 * self.dims.1 * self.dims.2
+    }
+
+    fn begin_group(&mut self, images: &[f32], n: usize) -> Result<Option<u64>> {
+        let (h, w, c) = self.dims;
+        let x = crate::nn::Tensor::from_vec(&[n, h, w, c], images.to_vec());
+        // Same per-submission seed bump as classify(): a merge group
+        // admitted k-th reproduces the k-th solo batch bit-exactly.
+        self.seed = self.seed.wrapping_add(1);
+        let run = self.program.begin(&x, self.seed);
+        let gid = self.next_group;
+        self.next_group += 1;
+        self.inflight.push((gid, run));
+        Ok(Some(gid))
+    }
+
+    fn step_groups(&mut self) -> Result<Vec<FinishedGroup>> {
+        let before = crate::pim::program::prepare_count();
+        let mut done = Vec::new();
+        let mut keep = Vec::with_capacity(self.inflight.len());
+        for (gid, mut run) in std::mem::take(&mut self.inflight) {
+            let finished =
+                self.program
+                    .step(&mut run, self.mode, self.program.parallelism, &mut self.scratch);
+            if finished {
+                let logits = run.into_logits();
+                done.push(FinishedGroup {
+                    group: gid,
+                    preds: crate::pim::program::logits_to_classes(&logits),
+                });
+            } else {
+                keep.push((gid, run));
+            }
+        }
+        self.inflight = keep;
+        debug_assert_eq!(
+            crate::pim::program::prepare_count(),
+            before,
+            "continuous batching must stay prepare-free at every boundary"
+        );
+        Ok(done)
+    }
+
+    fn inflight_requests(&self) -> usize {
+        self.inflight.iter().map(|(_, run)| run.batch()).sum()
     }
 }
 
@@ -407,7 +600,7 @@ mod tests {
             Box::new(move || Ok(Box::new(exec) as Box<dyn Executor>)),
             None,
             ServerConfig {
-                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+                batcher: BatcherConfig::sized(4, Duration::from_millis(2)),
             },
         );
         for i in 0..10u64 {
@@ -430,6 +623,33 @@ mod tests {
     }
 
     #[test]
+    fn continuous_mode_degrades_for_non_stepping_executor() {
+        // MockExecutor keeps the default begin_group() → None, so a
+        // continuous-mode server must fall back to drain execution and
+        // still answer everything.
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let exec = MockExecutor { elems: 2, calls: calls.clone() };
+        let server = Server::start(
+            Box::new(move || Ok(Box::new(exec) as Box<dyn Executor>)),
+            None,
+            ServerConfig {
+                batcher: BatcherConfig::continuous(4, Duration::from_millis(2)),
+            },
+        );
+        for i in 0..9u64 {
+            server.submit(InferenceRequest::new(i, vec![(i % 10) as f32; 2]));
+        }
+        let mut got = 0;
+        while got < 9 {
+            let r = server.responses.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.predicted as u64, r.id % 10);
+            got += 1;
+        }
+        let m = server.shutdown();
+        assert_eq!(m.responses, 9);
+    }
+
+    #[test]
     fn shutdown_drains_pending() {
         let calls = Arc::new(Mutex::new(Vec::new()));
         let exec = MockExecutor { elems: 1, calls: calls.clone() };
@@ -437,7 +657,7 @@ mod tests {
             Box::new(move || Ok(Box::new(exec) as Box<dyn Executor>)),
             None,
             ServerConfig {
-                batcher: BatcherConfig { max_batch: 100, max_wait: Duration::from_secs(10) },
+                batcher: BatcherConfig::sized(100, Duration::from_secs(10)),
             },
         );
         for i in 0..5u64 {

@@ -643,10 +643,14 @@ impl FleetSim {
                         }),
                         None,
                         ServerConfig {
-                            batcher: BatcherConfig {
-                                max_batch: 8,
-                                max_wait: std::time::Duration::from_millis(1),
-                            },
+                            // Continuous batching end-to-end: the live pass
+                            // exercises the merged stepped-execution path
+                            // (per-group sub-batches, prepare-free steady
+                            // state) rather than drain batching.
+                            batcher: BatcherConfig::continuous(
+                                8,
+                                std::time::Duration::from_millis(1),
+                            ),
                         },
                     );
                     for _ in 0..n_req {

@@ -7,9 +7,20 @@
 //!   e2e       [--artifacts DIR] [--variant V] [--limit N]
 //!             re-measures Table II through the runtime backend on dataset.bin
 //!   serve     [--artifacts DIR] [--requests N] [--batch B] [--native]
-//!             [--threads T]
+//!             [--threads T] [--continuous]
 //!             demo serving run with the dynamic batcher + bank scheduler;
-//!             T sizes the executor's pim::parallel worker pool
+//!             T sizes the executor's pim::parallel worker pool;
+//!             --continuous merges requests into in-flight executions at
+//!             layer boundaries instead of drain batching
+//!   serve-sim [--replicas N] [--requests N] [--seed S] [--threads T]
+//!             [--arrival {poisson,diurnal,burst}] [--policy {shed,delay}]
+//!             [--discipline {both,drain,continuous}] [--queue-cap N]
+//!             [--max-batch B] [--out DIR]
+//!             continuous-batching front-door simulation: open-loop
+//!             offered-load sweep on a fixed fleet, latency/throughput
+//!             knee + per-component bottleneck attribution, M/D/c
+//!             analytic cross-check, and the merged-wave demo on the
+//!             real stepped executor (writes DIR/serve_sim.json)
 //!   fleet-sim [--slices N] [--tenants N] [--requests N] [--seed S]
 //!             [--campaign-at FRAC] [--live] [--threads T] [--out DIR]
 //!             multi-tenant fleet simulation: placement, campaigns, QoS, wear
@@ -22,9 +33,11 @@
 //!             popcount vs the historical scalar kernel, parity + speedup),
 //!             the prepare_vs_execute section (one-time weight-program
 //!             compile cost vs steady-state prepared execution,
-//!             amortization ratios), + fleet-sim summary; --json writes the
-//!             machine-readable perf-trajectory record (BENCH_PR6.json, or
-//!             FILE when given) — see PERFORMANCE.md
+//!             amortization ratios), the serve section (front-door knee
+//!             determinism, M/D/c cross-check, merged-execution parity),
+//!             + fleet-sim summary; --json writes the machine-readable
+//!             perf-trajectory record (BENCH_PR7.json, or FILE when
+//!             given) — see PERFORMANCE.md
 //!   info      print headline perf model numbers
 
 use std::path::PathBuf;
@@ -52,12 +65,13 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("cache-sim") => cmd_cache_sim(&args),
         Some("fleet-sim") => cmd_fleet_sim(&args),
+        Some("serve-sim") => cmd_serve_sim(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: repro <figures|table1|table2|e2e|serve|cache-sim|fleet-sim|bench|info> \
-                 [options]\n\
+                "usage: repro <figures|table1|table2|e2e|serve|cache-sim|fleet-sim|serve-sim|\
+                 bench|info> [options]\n\
                  see rust/src/main.rs header for options"
             );
             std::process::exit(2);
@@ -197,9 +211,16 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
     let native = args.flag("native");
     let eval_batch = dir.eval_batch();
     let max_batch = args.get_usize("batch", eval_batch)?.min(eval_batch);
-    let batch_cfg = BatcherConfig {
-        max_batch,
-        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)?),
+    let batch_cfg = if args.flag("continuous") {
+        BatcherConfig::continuous(
+            max_batch,
+            std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)?),
+        )
+    } else {
+        BatcherConfig::sized(
+            max_batch,
+            std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)?),
+        )
     };
     let weights = dir.path("weights_ft.bin")?;
     let dir2 = ArtifactDir::open(dir.root.clone())?;
@@ -280,12 +301,181 @@ fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
     Ok(())
 }
 
+/// Outcome of the merged-wave continuous-batching demo on the real
+/// stepped executor ([`nvm_in_cache::pim::program::CompiledNet::step`]).
+struct MergedDemo {
+    /// Merged stepped logits bit-identical to solo forwards, noiseless
+    /// and noisy.
+    parity: bool,
+    /// `prepare_count()` unchanged across every boundary step — merging
+    /// never recompiles weights.
+    prepares_flat: bool,
+    /// Layer boundaries the two groups shared in flight.
+    boundaries_shared: usize,
+}
+
+/// Run the merged-wave demo at one thread count: group A (batch 2)
+/// enters, computes two layer boundaries, then group B (batch 1) merges
+/// mid-flight and both step to completion interleaved. Because
+/// `quantize_acts` scales per tensor, each group keeps its own tensor
+/// and RNG — so the merged run must be *bit-identical* to two solo
+/// `forward_par` calls, in PimHw and noisy PimHwNoise modes alike, at
+/// zero weight prepares.
+fn merged_wave_demo(threads: usize) -> nvm_in_cache::Result<MergedDemo> {
+    use nvm_in_cache::nn::resnet::test_params;
+    use nvm_in_cache::nn::Tensor;
+    use nvm_in_cache::pim::program::{self, ScratchPool};
+    use nvm_in_cache::util::rng::Pcg64;
+
+    let net = ResNet::new(test_params(16, 10, 1));
+    let prog = net.compile()?;
+    let par = Parallelism::threads(threads);
+    let dims = 16 * 16 * 3;
+    let mut rng = Pcg64::seeded(31);
+    let xa: Vec<f32> = (0..2 * dims).map(|_| rng.f64() as f32).collect();
+    let xb: Vec<f32> = (0..dims).map(|_| rng.f64() as f32).collect();
+    let ta = Tensor::from_vec(&[2, 16, 16, 3], xa);
+    let tb = Tensor::from_vec(&[1, 16, 16, 3], xb);
+    let mut parity = true;
+    let mut prepares_flat = true;
+    let mut boundaries_shared = 0usize;
+    for mode in [ForwardMode::PimHw, ForwardMode::PimHwNoise(0.4)] {
+        let mut scratch = ScratchPool::new();
+        let solo_a = prog.forward_par(&ta, mode, 11, par, &mut scratch);
+        let solo_b = prog.forward_par(&tb, mode, 12, par, &mut scratch);
+        let before = program::prepare_count();
+        let mut run_a = prog.begin(&ta, 11);
+        let mut done_a = prog.step(&mut run_a, mode, par, &mut scratch);
+        if !done_a {
+            done_a = prog.step(&mut run_a, mode, par, &mut scratch);
+        }
+        // B merges while A is two boundaries deep.
+        let mut run_b = prog.begin(&tb, 12);
+        let mut done_b = false;
+        while !done_a || !done_b {
+            if !done_a {
+                done_a = prog.step(&mut run_a, mode, par, &mut scratch);
+            }
+            if !done_b {
+                done_b = prog.step(&mut run_b, mode, par, &mut scratch);
+                if !done_a {
+                    boundaries_shared += 1;
+                }
+            }
+        }
+        prepares_flat &= program::prepare_count() == before;
+        parity &= run_a.into_logits() == solo_a && run_b.into_logits() == solo_b;
+    }
+    Ok(MergedDemo { parity, prepares_flat, boundaries_shared })
+}
+
+/// Serving front-door simulation: open-loop offered-load sweep over a
+/// fixed fleet, both batch disciplines, knee + bottleneck attribution,
+/// the M/D/c analytic cross-check, and the merged-wave demo on the real
+/// stepped executor. Writes `DIR/serve_sim.json`.
+fn cmd_serve_sim(args: &Args) -> nvm_in_cache::Result<()> {
+    use nvm_in_cache::coordinator::frontdoor::{self, ArrivalProcess, Discipline, OverloadPolicy};
+    use nvm_in_cache::util::json::Json;
+
+    let replicas = args.get_usize("replicas", 4)?.max(1);
+    let requests = args.get_usize("requests", 3000)?.max(1);
+    let seed = args.get_u64("seed", 42)?;
+    let threads = args.get_usize("threads", 4)?.max(1);
+    let queue_cap = args.get_usize("queue-cap", 64)?.max(1);
+    let max_batch = args.get_usize("max-batch", 16)?.max(1);
+    let arrival = match args.get_or("arrival", "poisson") {
+        "poisson" => ArrivalProcess::Poisson { rate_rps: 1.0 },
+        "diurnal" => ArrivalProcess::Diurnal { mean_rps: 1.0, swing: 0.6, period_s: 2.0 },
+        "burst" => {
+            ArrivalProcess::Burst { base_rps: 1.0, burst_mult: 4.0, period_s: 0.5, duty: 0.25 }
+        }
+        other => {
+            return Err(nvm_in_cache::Error::Config(format!("unknown arrival `{other}`")))
+        }
+    };
+    let policy = match args.get_or("policy", "shed") {
+        "shed" => OverloadPolicy::Shed,
+        "delay" => OverloadPolicy::Delay,
+        other => return Err(nvm_in_cache::Error::Config(format!("unknown policy `{other}`"))),
+    };
+
+    let make = |discipline: Discipline| {
+        let mut door = frontdoor::resnet_front_door(16, replicas);
+        door.config.discipline = discipline;
+        door.config.policy = policy;
+        door.config.seed = seed;
+        door.config.requests = requests;
+        door.config.queue_cap = queue_cap;
+        door.config.max_batch = max_batch;
+        door.config.arrival = arrival;
+        door
+    };
+    let fractions = [0.3, 0.6, 0.85, 1.0, 1.15];
+    let which = args.get_or("discipline", "both");
+    let mut sweeps = Vec::new();
+    if which == "both" || which == "drain" {
+        sweeps.push(make(Discipline::DrainBatch).sweep(&fractions));
+    }
+    if which == "both" || which == "continuous" {
+        sweeps.push(make(Discipline::Continuous).sweep(&fractions));
+    }
+    for s in &sweeps {
+        print!("{}", s.render());
+        println!();
+    }
+
+    // Analytic pin: validation-mode simulator vs closed-form M/D/c.
+    let service = make(Discipline::DrainBatch).config.service_total_s();
+    let cc = frontdoor::queueing_crosscheck(service, replicas, 0.8, 20_000, seed);
+    println!(
+        "M/D/c cross-check (rho 0.8, c {}): sim p50/p99 {:.3}/{:.3} ms vs analytic \
+         {:.3}/{:.3} ms — within 10%: {}",
+        replicas,
+        cc.sim_p50_s * 1e3,
+        cc.sim_p99_s * 1e3,
+        cc.analytic_p50_s * 1e3,
+        cc.analytic_p99_s * 1e3,
+        cc.within(0.10),
+    );
+
+    // The live twin: continuous batching on the real stepped executor.
+    let demo = merged_wave_demo(threads)?;
+    println!(
+        "merged-wave demo (t{threads}): {} shared boundaries, bit-identical to solo: {}, \
+         zero prepares while merging: {}",
+        demo.boundaries_shared, demo.parity, demo.prepares_flat,
+    );
+
+    let out = out_dir(args);
+    std::fs::create_dir_all(&out)?;
+    let path = out.join("serve_sim.json");
+    let doc = Json::obj(vec![
+        ("replicas", Json::Num(replicas as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("sweeps", Json::Arr(sweeps.iter().map(|s| s.to_json()).collect())),
+        ("crosscheck", cc.to_json(0.10)),
+        (
+            "merged_demo",
+            Json::obj(vec![
+                ("threads", Json::Num(threads as f64)),
+                ("parity_bit_identical", Json::Bool(demo.parity)),
+                ("zero_prepares", Json::Bool(demo.prepares_flat)),
+                ("boundaries_shared", Json::Num(demo.boundaries_shared as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&path, doc.to_string())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
 /// Hot-path micro-benchmarks — each parallelizable stage serial vs
 /// `--threads T` tiled execution — plus the simd_vs_scalar MAC-kernel
 /// microbench, the prepare_vs_execute section (compile-once cost vs
 /// steady-state prepared execution), and the fleet-sim summary; `--json`
 /// additionally writes the machine-readable perf-trajectory record
-/// (BENCH_PR6.json; see PERFORMANCE.md for the format and trajectory).
+/// (BENCH_PR7.json; see PERFORMANCE.md for the format and trajectory).
 fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
     use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
@@ -515,8 +705,64 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     let fleet_report = fleet_report.expect("bench ran at least once");
     print!("{}", fleet_report.render());
 
+    // Serve section: the continuous-batching front door on the simulated
+    // clock (deterministic — everything here is a comparison gate, not a
+    // wall-clock measurement), plus the merged-wave stepped-execution
+    // demo across thread counts.
+    let serve_json = {
+        use nvm_in_cache::coordinator::frontdoor::{self, Discipline};
+        let make = |discipline: Discipline| {
+            let mut door = frontdoor::resnet_front_door(16, 4);
+            door.config.discipline = discipline;
+            door.config.requests = 3000;
+            door
+        };
+        let fractions = [0.3, 0.6, 0.85, 1.0, 1.15];
+        let drain = make(Discipline::DrainBatch).sweep(&fractions);
+        let cont = make(Discipline::Continuous).sweep(&fractions);
+        let knee_deterministic = cont.to_json().to_string()
+            == make(Discipline::Continuous).sweep(&fractions).to_json().to_string();
+        let service = make(Discipline::DrainBatch).config.service_total_s();
+        let cc = frontdoor::queueing_crosscheck(service, 4, 0.8, 20_000, 42);
+        let mut merged_parity = true;
+        let mut merged_zero_prepares = true;
+        for t in [1usize, 2, 7] {
+            let demo = merged_wave_demo(t)?;
+            merged_parity &= demo.parity;
+            merged_zero_prepares &= demo.prepares_flat;
+        }
+        let mean_batch_above_knee =
+            cont.points.last().map(|p| p.mean_batch).unwrap_or(0.0);
+        println!(
+            "serve: drain knee {:.0} rps, continuous knee {:.0} rps (capacity {:.0} vs \
+             {:.0}); crosscheck within 10%: {}; merged parity t{{1,2,7}}: {}; zero \
+             prepares: {}",
+            drain.knee_rps,
+            cont.knee_rps,
+            drain.capacity_rps,
+            cont.capacity_rps,
+            cc.within(0.10),
+            merged_parity,
+            merged_zero_prepares,
+        );
+        Json::obj(vec![
+            ("knee_deterministic", Json::Bool(knee_deterministic)),
+            ("queueing_crosscheck_within_tol", Json::Bool(cc.within(0.10))),
+            (
+                "continuous_knee_at_or_beyond_drain",
+                Json::Bool(cont.knee_rps >= drain.knee_rps),
+            ),
+            ("mean_batch_gt_1_above_knee", Json::Bool(mean_batch_above_knee > 1.0)),
+            ("merged_parity_bit_identical", Json::Bool(merged_parity)),
+            ("steady_state_zero_prepares_continuous", Json::Bool(merged_zero_prepares)),
+            ("crosscheck", cc.to_json(0.10)),
+            ("drain", drain.to_json()),
+            ("continuous", cont.to_json()),
+        ])
+    };
+
     if args.flag("json") {
-        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR6.json"));
+        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR7.json"));
         // Two sections (PERFORMANCE.md): `comparison` holds only
         // deterministic fields (workload descriptors, parity verdicts, the
         // simulated-clock fleet report) so trajectory files diff cleanly
@@ -539,6 +785,7 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
                 ]),
             ),
             ("fleet_sim", fleet_report.to_json()),
+            ("serve", serve_json),
         ]);
         let mut measured = vec![("benches", b.to_json())];
         if let Some(s) = speedup_engine {
@@ -575,7 +822,7 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         }
         measured.push(("simd_vs_scalar", Json::obj(svs)));
         let doc = Json::obj(vec![
-            ("pr", Json::Num(6.0)),
+            ("pr", Json::Num(7.0)),
             ("comparison", comparison),
             ("measured", Json::obj(measured)),
         ]);

@@ -163,21 +163,11 @@ impl ResNet {
         Ok(program.forward_par(x, mode, seed, par, &mut ScratchPool::new()))
     }
 
-    /// Classify a batch: argmax over logits.
+    /// Classify a batch: argmax over logits (`total_cmp` ordering, same
+    /// tie/NaN semantics as [`crate::pim::program::logits_to_classes`]).
     pub fn classify(&self, x: &Tensor, mode: ForwardMode, seed: u64) -> Result<Vec<u8>> {
         let logits = self.forward(x, mode, seed)?;
-        let n = logits.shape[0];
-        let c = logits.shape[1];
-        Ok((0..n)
-            .map(|i| {
-                let row = &logits.data[i * c..(i + 1) * c];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0 as u8
-            })
-            .collect())
+        Ok(crate::pim::program::logits_to_classes(&logits))
     }
 }
 

@@ -629,6 +629,10 @@ impl CompiledNet {
     /// [`ResNet::forward_par`], minus all weight preparation — so logits
     /// are bit-identical to the uncompiled path in every mode at any
     /// thread count.
+    ///
+    /// Implemented as a full drain of the boundary-stepped execution
+    /// ([`Self::begin`] / [`Self::step`]); the stepped path *is* the
+    /// forward, so continuous batching cannot drift from it.
     pub fn forward_par(
         &self,
         x: &Tensor,
@@ -637,6 +641,46 @@ impl CompiledNet {
         par: Parallelism,
         scratch: &mut ScratchPool,
     ) -> Tensor {
+        let mut run = self.begin(x, seed);
+        while !self.step(&mut run, mode, par, scratch) {}
+        run.into_logits()
+    }
+
+    /// Number of merge boundaries in one execution: stem, each residual
+    /// block, and the pool→fc head. An [`InflightRun`] is complete once
+    /// [`Self::step`] has been called this many times.
+    pub fn boundaries(&self) -> usize {
+        self.blocks.len() + 2
+    }
+
+    /// Open an in-flight execution for one admission group. The group
+    /// keeps its own activation tensor and its own RNG stream (seeded
+    /// exactly like a solo [`Self::forward_par`] call), so co-resident
+    /// groups never perturb each other's numerics — activation
+    /// quantization scales are per-tensor, which is precisely why merged
+    /// execution is per-group sub-batches rather than tensor
+    /// concatenation.
+    pub fn begin(&self, x: &Tensor, seed: u64) -> InflightRun {
+        InflightRun { h: x.clone(), rng: Pcg64::seeded(seed), boundary: 0 }
+    }
+
+    /// Advance one in-flight run by a single boundary (stem, one residual
+    /// block, or the head). Returns `true` when the run is complete and
+    /// [`InflightRun::into_logits`] may be taken.
+    ///
+    /// The per-boundary bodies replicate the solo forward statement for
+    /// statement — same engine construction, GroupNorm epsilon, §V-E
+    /// post-ADC placement, and RNG fork order — so a run stepped to
+    /// completion is bit-identical to [`Self::forward_par`] regardless of
+    /// how many other groups were admitted between its boundaries.
+    pub fn step(
+        &self,
+        run: &mut InflightRun,
+        mode: ForwardMode,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> bool {
+        assert!(run.boundary < self.boundaries(), "stepping a completed run");
         let engine = match mode {
             ForwardMode::PimHw => Some(PimEngine::tt().with_parallelism(par)),
             ForwardMode::PimHwNoise(sigma) => {
@@ -650,7 +694,6 @@ impl CompiledNet {
             _ => None,
         };
         let transfer = TransferModel::tt();
-        let mut rng = Pcg64::seeded(seed);
         let hw_noise = matches!(mode, ForwardMode::PimHwNoise(_));
         let rng_opt = |r: &mut Pcg64| -> Option<Pcg64> {
             if hw_noise {
@@ -675,41 +718,51 @@ impl CompiledNet {
             }
         };
 
-        let mut local = rng_opt(&mut rng);
-        let mut h = self.stem.forward(x, eng, local.as_mut(), par, scratch);
-        h = post(h, &mut rng);
-        h = gn(&h, &self.stem_gamma, &self.stem_beta).relu();
-
-        for blk in &self.blocks {
-            let idn = h.clone();
-            let mut local = rng_opt(&mut rng);
-            h = blk.w1.forward(&h, eng, local.as_mut(), par, scratch);
-            h = post(h, &mut rng);
-            h = gn(&h, &blk.g1, &blk.b1).relu();
-            let mut local = rng_opt(&mut rng);
-            h = blk.w2.forward(&h, eng, local.as_mut(), par, scratch);
-            h = post(h, &mut rng);
-            h = gn(&h, &blk.g2, &blk.b2);
-            let idn = match &blk.downsample {
-                Some(d) => {
-                    let mut local = rng_opt(&mut rng);
-                    let dd = d.forward(&idn, eng, local.as_mut(), par, scratch);
-                    post(dd, &mut rng)
+        let rng = &mut run.rng;
+        let nblocks = self.blocks.len();
+        match run.boundary {
+            0 => {
+                let mut local = rng_opt(rng);
+                let mut h = self.stem.forward(&run.h, eng, local.as_mut(), par, scratch);
+                h = post(h, rng);
+                run.h = gn(&h, &self.stem_gamma, &self.stem_beta).relu();
+            }
+            i if i <= nblocks => {
+                let blk = &self.blocks[i - 1];
+                let idn = run.h.clone();
+                let mut local = rng_opt(rng);
+                let mut h = blk.w1.forward(&run.h, eng, local.as_mut(), par, scratch);
+                h = post(h, rng);
+                h = gn(&h, &blk.g1, &blk.b1).relu();
+                let mut local = rng_opt(rng);
+                h = blk.w2.forward(&h, eng, local.as_mut(), par, scratch);
+                h = post(h, rng);
+                h = gn(&h, &blk.g2, &blk.b2);
+                let idn = match &blk.downsample {
+                    Some(d) => {
+                        let mut local = rng_opt(rng);
+                        let dd = d.forward(&idn, eng, local.as_mut(), par, scratch);
+                        post(dd, rng)
+                    }
+                    None => idn,
+                };
+                run.h = h.add(&idn).relu();
+            }
+            _ => {
+                let pooled = layers::global_avg_pool(&run.h);
+                let mut local = rng_opt(rng);
+                let logits = self.fc.forward(&pooled, eng, local.as_mut(), par, scratch);
+                let mut logits = post(logits, rng);
+                for n in 0..logits.shape[0] {
+                    for c in 0..logits.shape[1] {
+                        logits.data[n * logits.shape[1] + c] += self.fc_bias[c];
+                    }
                 }
-                None => idn,
-            };
-            h = h.add(&idn).relu();
-        }
-        let pooled = layers::global_avg_pool(&h);
-        let mut local = rng_opt(&mut rng);
-        let logits = self.fc.forward(&pooled, eng, local.as_mut(), par, scratch);
-        let mut logits = post(logits, &mut rng);
-        for n in 0..logits.shape[0] {
-            for c in 0..logits.shape[1] {
-                logits.data[n * logits.shape[1] + c] += self.fc_bias[c];
+                run.h = logits;
             }
         }
-        logits
+        run.boundary += 1;
+        run.boundary >= self.boundaries()
     }
 
     /// Argmax classification over [`Self::forward_par`] logits on
@@ -722,19 +775,61 @@ impl CompiledNet {
         scratch: &mut ScratchPool,
     ) -> Vec<u8> {
         let logits = self.forward_par(x, mode, seed, self.parallelism, scratch);
-        let n = logits.shape[0];
-        let c = logits.shape[1];
-        (0..n)
-            .map(|i| {
-                let row = &logits.data[i * c..(i + 1) * c];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0 as u8
-            })
-            .collect()
+        logits_to_classes(&logits)
     }
+}
+
+/// One admission group's in-flight [`CompiledNet`] execution, advanced a
+/// boundary at a time by [`CompiledNet::step`]. This is the continuous-
+/// batching seam: the server opens a run per merge group, interleaves
+/// `step` calls across co-resident runs, and new groups join between
+/// steps instead of waiting for the batch to drain.
+#[derive(Clone, Debug)]
+pub struct InflightRun {
+    /// Activations after the last completed boundary (the input before
+    /// the first step; the logits after the final one).
+    h: Tensor,
+    /// The group's private RNG stream — forked per layer in exactly the
+    /// solo-forward order, so merging never reorders noise draws.
+    rng: Pcg64,
+    /// Boundaries completed so far.
+    boundary: usize,
+}
+
+impl InflightRun {
+    /// Boundaries completed so far (0 = nothing executed yet).
+    pub fn boundary(&self) -> usize {
+        self.boundary
+    }
+
+    /// Batch rows (images) carried by this run.
+    pub fn batch(&self) -> usize {
+        self.h.shape[0]
+    }
+
+    /// Consume the run and return its logits. Only meaningful once
+    /// [`CompiledNet::step`] has returned `true`.
+    pub fn into_logits(self) -> Tensor {
+        self.h
+    }
+}
+
+/// Per-row argmax over an `[n, classes]` logits tensor. `total_cmp`
+/// ordering: a NaN logit (poisoned input) yields a defined result
+/// instead of panicking the serving thread.
+pub fn logits_to_classes(logits: &Tensor) -> Vec<u8> {
+    let n = logits.shape[0];
+    let c = logits.shape[1];
+    (0..n)
+        .map(|i| {
+            let row = &logits.data[i * c..(i + 1) * c];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0 as u8
+        })
+        .collect()
 }
 
 #[cfg(test)]

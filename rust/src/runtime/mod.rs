@@ -142,12 +142,15 @@ pub trait Runtime {
         key: Option<[u32; 2]>,
     ) -> Result<Vec<u8>> {
         let logits = self.forward(variant, images, dims, key)?;
+        // total_cmp: identical tie/NaN argmax semantics as the native
+        // paths (ResNet::classify, program::logits_to_classes), so the
+        // runtime crosscheck can never diverge on an exact logit tie.
         Ok(logits
             .chunks(n_classes)
             .map(|row| {
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .unwrap()
                     .0 as u8
             })

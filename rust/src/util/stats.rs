@@ -36,7 +36,9 @@ impl Summary {
             0.0
         };
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: same NaN hardening as LatencyHistogram::percentile —
+        // one poisoned sample must not panic a whole report.
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
             mean,
@@ -138,6 +140,15 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_survives_nan_sample() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, f64::NAN]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN sorts to the top under total_cmp");
+        assert!((s.p50 - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -107,10 +107,7 @@ fn serve_with_native_executor() {
         }),
         Some(scheduler),
         ServerConfig {
-            batcher: BatcherConfig {
-                max_batch: 4,
-                max_wait: std::time::Duration::from_millis(1),
-            },
+            batcher: BatcherConfig::sized(4, std::time::Duration::from_millis(1)),
         },
     );
     let mut rng = Pcg64::seeded(9);

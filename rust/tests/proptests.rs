@@ -287,10 +287,7 @@ fn prop_batcher_conservation() {
     for seed in 0..CASES {
         let mut rng = Pcg64::seeded(6000 + seed);
         let max_batch = 1 + rng.below(10);
-        let mut b = Batcher::new(BatcherConfig {
-            max_batch,
-            max_wait: std::time::Duration::ZERO,
-        });
+        let mut b = Batcher::new(BatcherConfig::sized(max_batch, std::time::Duration::ZERO));
         let n = 1 + rng.below(60);
         for i in 0..n {
             b.push(InferenceRequest::new(i as u64, vec![]));

@@ -1,0 +1,254 @@
+//! Continuous-batching serving tests: batcher merge-cut invariants under
+//! seeded adversarial schedules (hand-rolled randomized harness — the
+//! proptest crate is unavailable offline, see DESIGN.md §2), bit-parity
+//! of merged stepped execution against solo forwards, and the front-door
+//! simulator's determinism, knee ordering, and M/D/c analytic pin.
+
+use std::time::{Duration, Instant};
+
+use nvm_in_cache::coordinator::batcher::{BatchMode, Batcher, BatcherConfig};
+use nvm_in_cache::coordinator::frontdoor::{
+    self, ArrivalProcess, Discipline, FrontDoor, FrontDoorConfig, OverloadPolicy, TenantClass,
+};
+use nvm_in_cache::coordinator::request::InferenceRequest;
+use nvm_in_cache::nn::resnet::test_params;
+use nvm_in_cache::nn::{ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::parallel::Parallelism;
+use nvm_in_cache::pim::program::{self, ScratchPool};
+use nvm_in_cache::util::rng::Pcg64;
+
+const CASES: u64 = 40;
+
+fn req(id: u64, tenant: u32) -> InferenceRequest {
+    InferenceRequest::new(id, vec![0.0; 4]).with_tenant(tenant)
+}
+
+/// One seeded adversarial schedule: interleaved pushes (random tenants)
+/// and merge cuts (random room). Returns the cut sequence as id lists.
+fn adversarial_cuts(seed: u64) -> Vec<Vec<(u64, u32)>> {
+    let mut rng = Pcg64::seeded(0xbad5eed ^ seed);
+    let max_batch = 1 + rng.below(6);
+    let mut b = Batcher::new(BatcherConfig::continuous(max_batch, Duration::from_millis(1)));
+    assert_eq!(b.config.mode, BatchMode::Continuous);
+    let now = Instant::now();
+    let mut next_id = 0u64;
+    let mut cuts = Vec::new();
+    for _ in 0..200 {
+        if rng.below(2) == 0 {
+            for _ in 0..rng.below(4) {
+                b.push(req(next_id, rng.below(3) as u32));
+                next_id += 1;
+            }
+        } else {
+            let room = rng.below(8);
+            let pending_before = b.pending();
+            if let Some(cut) = b.take_merge(now, room) {
+                assert!(cut.len() <= room, "cut {} exceeds room {room}", cut.len());
+                assert!(
+                    cut.len() <= b.config.max_batch,
+                    "cut {} exceeds max_batch {}",
+                    cut.len(),
+                    b.config.max_batch
+                );
+                assert_eq!(
+                    cut.len(),
+                    pending_before.min(room).min(b.config.max_batch),
+                    "merge cut must take everything the caps allow"
+                );
+                cuts.push(cut.requests.iter().map(|r| (r.id, r.tenant)).collect());
+            } else {
+                assert!(
+                    room == 0 || pending_before == 0,
+                    "take_merge may only decline when room or queue is empty"
+                );
+            }
+        }
+    }
+    // Drain the tail so conservation can be checked end-to-end.
+    while let Some(cut) = b.take_merge(now, usize::MAX) {
+        cuts.push(cut.requests.iter().map(|r| (r.id, r.tenant)).collect());
+    }
+    assert_eq!(b.pending(), 0);
+    let drained: u64 = cuts.iter().map(|c| c.len() as u64).sum();
+    assert_eq!(drained, next_id, "no request lost or duplicated");
+    cuts
+}
+
+/// Property: under any schedule of pushes and merge cuts, per-tenant FIFO
+/// order is preserved, no cut exceeds `max_batch` or `room`, nothing is
+/// lost, and the whole schedule is deterministic per seed.
+#[test]
+fn prop_continuous_merge_cut_invariants() {
+    for seed in 0..CASES {
+        let cuts = adversarial_cuts(seed);
+        // Global FIFO across cuts implies per-tenant FIFO; check the
+        // stronger global property directly on ids.
+        let flat: Vec<u64> = cuts.iter().flatten().map(|&(id, _)| id).collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(flat, sorted, "seed {seed}: merge cuts reordered requests");
+        // Per-tenant FIFO, stated independently.
+        for tenant in 0..3u32 {
+            let per: Vec<u64> = cuts
+                .iter()
+                .flatten()
+                .filter(|&&(_, t)| t == tenant)
+                .map(|&(id, _)| id)
+                .collect();
+            assert!(
+                per.windows(2).all(|w| w[0] < w[1]),
+                "seed {seed}: tenant {tenant} order violated"
+            );
+        }
+        // Determinism: the same seed yields the identical cut sequence.
+        assert_eq!(cuts, adversarial_cuts(seed), "seed {seed}: schedule not deterministic");
+    }
+}
+
+/// Property: whenever the merge cut has any room, the oldest request is
+/// in it — continuous mode can never starve the queue front past a
+/// boundary with spare capacity (the deadline-flush guarantee).
+#[test]
+fn prop_continuous_never_starves_front() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0xf1f0 ^ seed);
+        let mut b = Batcher::new(BatcherConfig::continuous(4, Duration::from_secs(10)));
+        let now = Instant::now();
+        let mut next_id = 0u64;
+        for _ in 0..100 {
+            for _ in 0..1 + rng.below(3) {
+                b.push(req(next_id, 0));
+                next_id += 1;
+            }
+            let front = next_id - b.pending() as u64;
+            let room = 1 + rng.below(6);
+            let cut = b.take_merge(now, room).expect("non-empty queue, positive room");
+            assert_eq!(
+                cut.requests[0].id, front,
+                "seed {seed}: oldest request must ride the first available boundary"
+            );
+        }
+    }
+}
+
+/// Merged stepped execution is bit-identical to solo forwards — across
+/// thread counts and in the noisy hardware mode — and performs zero
+/// weight prepares at any layer boundary.
+#[test]
+fn merged_stepped_execution_matches_solo_bitwise() {
+    let net = ResNet::new(test_params(16, 10, 1));
+    let prog = net.compile().unwrap();
+    let dims = 16 * 16 * 3;
+    let mut rng = Pcg64::seeded(77);
+    let ta = Tensor::from_vec(&[2, 16, 16, 3], (0..2 * dims).map(|_| rng.f64() as f32).collect());
+    let tb = Tensor::from_vec(&[1, 16, 16, 3], (0..dims).map(|_| rng.f64() as f32).collect());
+    for threads in [1usize, 2, 7] {
+        let par = Parallelism::threads(threads);
+        for mode in [ForwardMode::PimHw, ForwardMode::PimHwNoise(0.4)] {
+            let mut scratch = ScratchPool::new();
+            let solo_a = prog.forward_par(&ta, mode, 5, par, &mut scratch);
+            let solo_b = prog.forward_par(&tb, mode, 6, par, &mut scratch);
+            let prepares = program::prepare_count();
+            let mut run_a = prog.begin(&ta, 5);
+            let mut done_a = prog.step(&mut run_a, mode, par, &mut scratch);
+            // B merges while A is one boundary deep.
+            let mut run_b = prog.begin(&tb, 6);
+            let mut done_b = false;
+            while !done_a || !done_b {
+                if !done_a {
+                    done_a = prog.step(&mut run_a, mode, par, &mut scratch);
+                }
+                if !done_b {
+                    done_b = prog.step(&mut run_b, mode, par, &mut scratch);
+                }
+            }
+            assert_eq!(
+                program::prepare_count(),
+                prepares,
+                "continuous merging must stay prepare-free (t{threads}, {mode:?})"
+            );
+            assert_eq!(
+                run_a.into_logits(),
+                solo_a,
+                "merged group A diverged from solo (t{threads}, {mode:?})"
+            );
+            assert_eq!(
+                run_b.into_logits(),
+                solo_b,
+                "merged group B diverged from solo (t{threads}, {mode:?})"
+            );
+        }
+    }
+}
+
+fn toy_door(discipline: Discipline) -> FrontDoor {
+    let mut cfg = FrontDoorConfig::for_network(vec![5e-4; 5], 3);
+    cfg.discipline = discipline;
+    cfg.requests = 1500;
+    FrontDoor::new(cfg)
+}
+
+/// The front-door sweep is a pure function of (config, seed): two runs
+/// serialize identically, and the continuous knee sits at or beyond the
+/// drain knee in absolute offered rate.
+#[test]
+fn frontdoor_sweep_deterministic_and_knee_ordered() {
+    let fractions = [0.3, 0.7, 0.95, 1.1];
+    let drain = toy_door(Discipline::DrainBatch).sweep(&fractions);
+    let cont = toy_door(Discipline::Continuous).sweep(&fractions);
+    assert_eq!(
+        cont.to_json().to_string(),
+        toy_door(Discipline::Continuous).sweep(&fractions).to_json().to_string()
+    );
+    assert!(
+        cont.knee_rps >= drain.knee_rps,
+        "continuous knee {} vs drain knee {}",
+        cont.knee_rps,
+        drain.knee_rps
+    );
+    assert!(cont.capacity_rps > drain.capacity_rps);
+    // Above its knee the pipeline really co-schedules requests.
+    assert!(cont.points.last().unwrap().mean_batch > 1.0);
+}
+
+/// Validation-mode simulator vs closed-form M/D/c at a second
+/// (c, rho) point than the in-module test.
+#[test]
+fn frontdoor_matches_mdc_analytics() {
+    let cc = frontdoor::queueing_crosscheck(1e-3, 2, 0.7, 10_000, 7);
+    assert!(
+        cc.within(0.10),
+        "sim p50/p99 {}/{} vs analytic {}/{}",
+        cc.sim_p50_s,
+        cc.sim_p99_s,
+        cc.analytic_p50_s,
+        cc.analytic_p99_s
+    );
+}
+
+/// Deadline shedding under overload: requests that cannot meet the QoS
+/// deadline are rejected at admission, bounding the served tail.
+#[test]
+fn frontdoor_shed_policy_protects_deadline() {
+    let mut cfg = FrontDoorConfig::for_network(vec![5e-4; 5], 3);
+    cfg.discipline = Discipline::Continuous;
+    cfg.policy = OverloadPolicy::Shed;
+    cfg.requests = 1500;
+    cfg.classes = vec![TenantClass {
+        name: "strict".into(),
+        weight: 1.0,
+        deadline_s: 4.0 * cfg.service_total_s(),
+    }];
+    cfg.arrival = ArrivalProcess::Burst {
+        base_rps: 1.0,
+        burst_mult: 6.0,
+        period_s: 0.2,
+        duty: 0.3,
+    };
+    let door = FrontDoor::new(cfg);
+    let p = door.run_point_at(1.4 * door.capacity_rps());
+    assert!(p.shed > 0, "bursty overload must shed");
+    assert!(p.served > 0, "but not everything");
+    let bound = 5.0 * door.config.service_total_s();
+    assert!(p.latency.p99 <= bound + 1e-9, "p99 {} vs bound {bound}", p.latency.p99);
+}

@@ -1,23 +1,48 @@
 #!/usr/bin/env bash
 # Machine-readable perf-trajectory record for this PR: runs the hot-path
 # micro-benchmarks (serial vs N-thread tiled execution, plus the
-# simd_vs_scalar MAC-kernel race) and the fleet-sim summary, then writes
-# BENCH_PR6.json at the repository root (so BENCH_*.json accumulates
-# across PRs — see PERFORMANCE.md).
+# simd_vs_scalar MAC-kernel race), the serve section (front-door knee
+# determinism, M/D/c queueing cross-check, merged-execution parity), and
+# the fleet-sim summary, then writes BENCH_PR7.json at the repository
+# root (so BENCH_*.json accumulates across PRs — see PERFORMANCE.md).
 #
 # The record has two sections: `comparison` (deterministic — workload
 # descriptors, bit-exactness parity verdicts including the
-# simd_vs_scalar kernel-parity gate, the simulated-clock fleet report)
-# diffs cleanly across PRs; `measured` carries the wall-clock numbers
-# for this machine.
+# simd_vs_scalar kernel-parity and comparison.serve gates, the
+# simulated-clock fleet/serve reports) diffs cleanly across PRs;
+# `measured` carries the wall-clock numbers for this machine.
+#
+# Provenance: after the run, the JSON is stamped with the commit and
+# toolchain that produced it ({"kind": "measured", ...}) so a snapshot
+# measured here is machine-distinguishable from a hand-authored one
+# ({"kind": "hand-authored"} or the legacy string form) — see
+# scripts/bench_compare.sh.
 #
 # Usage: scripts/bench.sh [output.json] [threads]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-OUT="${1:-BENCH_PR6.json}"
+OUT="${1:-BENCH_PR7.json}"
 THREADS="${2:-4}"
 
 cargo run --release --bin repro -- bench --json "$OUT" --threads "$THREADS"
+
+if command -v python3 >/dev/null 2>&1; then
+  GIT_HEAD="$(git rev-parse HEAD 2>/dev/null || echo unknown)"
+  RUSTC_V="$(rustc --version 2>/dev/null || echo unknown)"
+  python3 - "$OUT" "$GIT_HEAD" "$RUSTC_V" <<'EOF'
+import json, sys
+path, git_head, rustc_v = sys.argv[1], sys.argv[2], sys.argv[3]
+with open(path) as f:
+    doc = json.load(f)
+doc["provenance"] = {"kind": "measured", "git": git_head, "rustc": rustc_v}
+with open(path, "w") as f:
+    json.dump(doc, f, sort_keys=True, separators=(",", ":"))
+EOF
+  echo "bench: stamped provenance (git $GIT_HEAD)"
+else
+  echo "bench: python3 unavailable, provenance not stamped"
+fi
+
 echo "bench: wrote $OUT (threads=$THREADS)"

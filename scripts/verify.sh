@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate for the NVM-in-Cache reproduction:
 #   1. release build (lib + repro bin + examples + benches)
-#   2. full test suite
+#   2. full test suite (+ the simd_parity and serve_sim suites re-run in
+#      release, where lane-packing and numeric-crosscheck bugs surface)
 #   3. doctests, explicitly (the runnable `# Examples` on the key public
 #      APIs — PimEngine, TransferModel, place_from, FleetRouter, Server, …)
 #   4. rustdoc build with warnings denied (crate carries
@@ -29,6 +30,14 @@ cargo test -q
 if [ -f rust/tests/simd_parity.rs ]; then
   echo "== cargo test --release -q --test simd_parity =="
   cargo test --release -q --test simd_parity
+fi
+
+# Serving tests in release too: the front-door sweep + merged stepped
+# execution across thread counts are much faster with optimizations on,
+# and the M/D/c numeric cross-check must hold in both profiles.
+if [ -f rust/tests/serve_sim.rs ]; then
+  echo "== cargo test --release -q --test serve_sim =="
+  cargo test --release -q --test serve_sim
 fi
 
 echo "== cargo test --doc =="
