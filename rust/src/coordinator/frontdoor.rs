@@ -32,7 +32,11 @@
 //!    (drain batching — the hardware latency model is linear in batch
 //!    size, so classic batching buys *nothing*) to `1/max dₗ`. The live
 //!    twin of this model is [`super::server::Executor::step_groups`]
-//!    over [`crate::pim::program::InflightRun`].
+//!    over [`crate::pim::program::InflightRun`]. A shard-parallel
+//!    replica ([`crate::fleet::shard`]) drops straight into the same
+//!    tandem model: its inter-slice activation hops are extra stages
+//!    ([`FrontDoorConfig::for_shard_pipeline`]) whose time is attributed
+//!    to `transfer` rather than `adc` in the component split.
 //!
 //! The simulator is pinned against closed-form M/D/c queueing theory
 //! ([`mdc`], Crommelin's embedded recursion + Franx's waiting-time
@@ -202,8 +206,16 @@ pub struct FrontDoorConfig {
     /// Identical replicas in the fixed fleet.
     pub replicas: usize,
     /// Per-layer single-image service times (s) — the pipeline stage
-    /// profile, from [`BankScheduler::layer_costs`].
+    /// profile, from [`BankScheduler::layer_costs`]. For a shard-chain
+    /// replica this also contains the inter-slice transfer hops, flagged
+    /// by `hop_stages`.
     pub layer_latencies_s: Vec<f64>,
+    /// Indices into `layer_latencies_s` that are inter-slice activation
+    /// *hops* of a shard chain rather than compute stages. Hops behave as
+    /// ordinary tandem stages (the interconnect serializes like an array
+    /// does), but their time is attributed to `transfer` instead of `adc`
+    /// in the [`ComponentBreakdown`]. Empty for unsharded replicas.
+    pub hop_stages: Vec<usize>,
     /// Max requests co-resident per replica (continuous) or per batch
     /// (drain).
     pub max_batch: usize,
@@ -238,6 +250,7 @@ impl FrontDoorConfig {
         FrontDoorConfig {
             replicas,
             layer_latencies_s,
+            hop_stages: Vec::new(),
             max_batch: 16,
             max_wait_s: 1e-3,
             queue_cap: 64,
@@ -255,9 +268,53 @@ impl FrontDoorConfig {
         }
     }
 
-    /// Whole-network single-image service time `Σdₗ` (s).
+    /// A shard-chain replica's front door: each shard's per-layer stage
+    /// profile in `stage_groups`, with the inter-slice activation-hop
+    /// latencies `hops_s` (one per adjacent pair, e.g. from
+    /// [`crate::fleet::shard::TransferLink::latency_s`]) interleaved as
+    /// extra tandem stages flagged in `hop_stages`.
+    pub fn for_shard_pipeline(
+        stage_groups: &[Vec<f64>],
+        hops_s: &[f64],
+        replicas: usize,
+    ) -> FrontDoorConfig {
+        assert!(!stage_groups.is_empty(), "a shard chain needs at least one segment");
+        assert_eq!(
+            hops_s.len() + 1,
+            stage_groups.len(),
+            "one hop per adjacent segment pair"
+        );
+        let mut stages = Vec::new();
+        let mut hop_stages = Vec::new();
+        for (g, group) in stage_groups.iter().enumerate() {
+            stages.extend_from_slice(group);
+            if g + 1 < stage_groups.len() {
+                hop_stages.push(stages.len());
+                stages.push(hops_s[g]);
+            }
+        }
+        let base = Self::for_network(stages, replicas);
+        FrontDoorConfig { hop_stages, ..base }
+    }
+
+    /// Whole-network single-image service time `Σdₗ` (s), hops included.
     pub fn service_total_s(&self) -> f64 {
         self.layer_latencies_s.iter().sum()
+    }
+
+    /// Compute-only service time: `Σdₗ` over non-hop stages (s).
+    pub fn service_compute_s(&self) -> f64 {
+        self.layer_latencies_s
+            .iter()
+            .enumerate()
+            .filter(|(l, _)| !self.hop_stages.contains(l))
+            .map(|(_, &dl)| dl)
+            .sum()
+    }
+
+    /// Inter-slice hop time per request: `Σdₗ` over hop stages (s).
+    pub fn service_hops_s(&self) -> f64 {
+        self.hop_stages.iter().map(|&l| self.layer_latencies_s[l]).sum()
     }
 
     /// Bottleneck stage `max dₗ` (s).
@@ -275,26 +332,33 @@ pub struct ComponentBreakdown {
     pub batcher_s: f64,
     /// Waiting for a replica / its stage-0 arrays to free up.
     pub router_s: f64,
-    /// Pure compute: the ADC-window service time `Σdₗ`.
+    /// Pure compute: the ADC-window service time over compute stages.
     pub adc_s: f64,
+    /// Inter-slice activation hops of a shard chain (0 unsharded).
+    pub transfer_s: f64,
     /// Inter-stage blocking inside the pipeline beyond pure service
     /// (continuous only).
     pub pipeline_s: f64,
 }
 
 impl ComponentBreakdown {
-    /// The dominant component by mean time.
+    /// The dominant component by mean time. Defined for any inputs:
+    /// `total_cmp` gives a total order, so a NaN component (which sorts
+    /// above every finite value) is *reported* as the bottleneck rather
+    /// than poisoning the comparison — the caller sees the broken number
+    /// instead of a panic or an arbitrary answer.
     pub fn bottleneck(&self) -> &'static str {
         let pairs = [
             ("batcher", self.batcher_s),
             ("router", self.router_s),
             ("adc", self.adc_s),
+            ("transfer", self.transfer_s),
             ("pipeline", self.pipeline_s),
         ];
         pairs
             .iter()
             .max_by(|a, b| a.1.total_cmp(&b.1))
-            .unwrap()
+            .expect("pairs is a non-empty fixed array")
             .0
     }
 }
@@ -403,6 +467,7 @@ struct PointStats {
     batcher_s: f64,
     router_s: f64,
     adc_s: f64,
+    transfer_s: f64,
     pipeline_s: f64,
     shed: u64,
     served_per_class: Vec<u64>,
@@ -520,6 +585,7 @@ impl FrontDoor {
                 batcher_s: per(stats.batcher_s),
                 router_s: per(stats.router_s),
                 adc_s: per(stats.adc_s),
+                transfer_s: per(stats.transfer_s),
                 pipeline_s: per(stats.pipeline_s),
             },
             classes: self
@@ -543,6 +609,8 @@ impl FrontDoor {
     fn run_continuous(&self, arrivals: &[(f64, usize)], stats: &mut PointStats) {
         let d = &self.config.layer_latencies_s;
         let d_total: f64 = d.iter().sum();
+        let d_hops = self.config.service_hops_s();
+        let d_compute = d_total - d_hops;
         let nl = d.len();
         struct Pipe {
             stage_free: Vec<f64>,
@@ -572,7 +640,7 @@ impl FrontDoor {
             };
             let r = (0..pipes.len())
                 .min_by(|&a, &b| entry(&pipes[a]).1.total_cmp(&entry(&pipes[b]).1).then(a.cmp(&b)))
-                .unwrap();
+                .expect("new() asserts replicas > 0, so pipes is non-empty");
             let (base, start0) = entry(&pipes[r]);
             // Backpressure: admitted-but-unstarted requests on the chosen
             // replica form its bounded queue.
@@ -616,7 +684,8 @@ impl FrontDoor {
             stats.batch_samples.push(occupancy);
             stats.router_s += base - t;
             stats.batcher_s += start0 - base;
-            stats.adc_s += d_total;
+            stats.adc_s += d_compute;
+            stats.transfer_s += d_hops;
             stats.pipeline_s += (completion - start0) - d_total;
             stats.served_per_class[class] += 1;
             if e2e > deadline {
@@ -631,6 +700,8 @@ impl FrontDoor {
     /// deadlines, replica-free events).
     fn run_drain(&self, arrivals: &[(f64, usize)], stats: &mut PointStats) {
         let d_total = self.config.service_total_s();
+        let d_hops = self.config.service_hops_s();
+        let d_compute = d_total - d_hops;
         let max_wait = self.config.max_wait_s;
         struct Queued {
             arrive: f64,
@@ -686,7 +757,8 @@ impl FrontDoor {
                         let form_end = ready.max(q.arrive);
                         stats.batcher_s += form_end - q.arrive;
                         stats.router_s += now - form_end;
-                        stats.adc_s += service;
+                        stats.adc_s += n as f64 * d_compute;
+                        stats.transfer_s += n as f64 * d_hops;
                         stats.served_per_class[q.class] += 1;
                         if e2e > self.config.classes[q.class].deadline_s {
                             stats.miss_per_class[q.class] += 1;
@@ -733,7 +805,7 @@ impl FrontDoor {
         while !queue.is_empty() {
             let r = (0..busy.len())
                 .min_by(|&a, &b| busy[a].total_cmp(&busy[b]).then(a.cmp(&b)))
-                .unwrap();
+                .expect("new() asserts replicas > 0, so busy is non-empty");
             let now = busy[r].max(stats.max_completion.max(queue[0].arrive));
             try_cut!(now, true);
         }
@@ -827,6 +899,7 @@ impl SweepReport {
                                 ("batcher_s", Json::Num(p.breakdown.batcher_s)),
                                 ("router_s", Json::Num(p.breakdown.router_s)),
                                 ("adc_s", Json::Num(p.breakdown.adc_s)),
+                                ("transfer_s", Json::Num(p.breakdown.transfer_s)),
                                 ("pipeline_s", Json::Num(p.breakdown.pipeline_s)),
                                 (
                                     "bottleneck",
@@ -1040,6 +1113,7 @@ pub fn queueing_crosscheck(
     let door = FrontDoor::new(FrontDoorConfig {
         replicas,
         layer_latencies_s: vec![service_s],
+        hop_stages: Vec::new(),
         max_batch: 1,
         max_wait_s: 0.0,
         queue_cap: usize::MAX / 4,
@@ -1213,11 +1287,86 @@ mod tests {
         let door = FrontDoor::new(toy_config(Discipline::Continuous));
         let p = door.run_point_at(0.9 * door.capacity_rps());
         let sum = p.breakdown.batcher_s + p.breakdown.router_s + p.breakdown.adc_s
-            + p.breakdown.pipeline_s;
+            + p.breakdown.transfer_s + p.breakdown.pipeline_s;
         assert!(
             (sum - p.latency.mean).abs() < 1e-9 * p.latency.mean.max(1e-12),
             "components {sum} must reassemble the mean {}",
             p.latency.mean
         );
+        assert_eq!(p.breakdown.transfer_s, 0.0, "no hops without a shard chain");
+    }
+
+    #[test]
+    fn shard_pipeline_attributes_transfer_hops() {
+        // Two shard segments of two stages each, one hop between them.
+        let groups = vec![vec![4e-4, 4e-4], vec![4e-4, 4e-4]];
+        let hops = vec![1e-4];
+        let cfg = FrontDoorConfig::for_shard_pipeline(&groups, &hops, 2);
+        assert_eq!(cfg.layer_latencies_s, vec![4e-4, 4e-4, 1e-4, 4e-4, 4e-4]);
+        assert_eq!(cfg.hop_stages, vec![2]);
+        assert!((cfg.service_compute_s() - 16e-4).abs() < 1e-15);
+        assert!((cfg.service_hops_s() - 1e-4).abs() < 1e-15);
+        let door = FrontDoor::new(cfg);
+        let p = door.run_point_at(0.8 * door.capacity_rps());
+        assert!(p.served > 0);
+        // Every served request walks the hop exactly once.
+        assert!(
+            (p.breakdown.transfer_s - 1e-4).abs() < 1e-12,
+            "per-request transfer {} must equal the hop latency",
+            p.breakdown.transfer_s
+        );
+        assert!((p.breakdown.adc_s - 16e-4).abs() < 1e-12);
+        let sum = p.breakdown.batcher_s + p.breakdown.router_s + p.breakdown.adc_s
+            + p.breakdown.transfer_s + p.breakdown.pipeline_s;
+        assert!(
+            (sum - p.latency.mean).abs() < 1e-9 * p.latency.mean.max(1e-12),
+            "hop-staged components {sum} must reassemble the mean {}",
+            p.latency.mean
+        );
+        // Drain discipline splits the same way (whole-batch service).
+        let mut drain_cfg = FrontDoorConfig::for_shard_pipeline(&groups, &hops, 2);
+        drain_cfg.discipline = Discipline::DrainBatch;
+        let dp = FrontDoor::new(drain_cfg).run_point_at(10.0);
+        assert!(dp.breakdown.transfer_s > 0.0, "drain mode must also attribute hops");
+    }
+
+    #[test]
+    fn event_ordering_survives_nan_times() {
+        // A NaN event time must not wedge or panic the heap: total_cmp
+        // gives Event a genuine total order (NaN sorts above every finite
+        // time), so the heap drains deterministically.
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        for (seq, t) in [(0u64, 1.0f64), (1, f64::NAN), (2, 0.5), (3, f64::NAN)] {
+            heap.push(Reverse(Event { t, seq, ev: Ev::Free }));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|Reverse(e)| e.seq)).collect();
+        assert_eq!(order, vec![2, 0, 1, 3], "finite times first, NaNs last in seq order");
+        // And the ordering is consistent (Ord contract): reflexive
+        // equality even for NaN-carrying events.
+        let e = Event { t: f64::NAN, seq: 9, ev: Ev::Flush };
+        assert_eq!(e, e);
+        assert_eq!(e.cmp(&e), std::cmp::Ordering::Equal);
+    }
+
+    #[test]
+    fn bottleneck_is_defined_for_nan_components() {
+        let b = ComponentBreakdown {
+            batcher_s: 1.0,
+            router_s: f64::NAN,
+            adc_s: 2.0,
+            transfer_s: 0.0,
+            pipeline_s: 3.0,
+        };
+        // NaN sorts above every finite value under total_cmp, so the
+        // broken component is surfaced rather than panicking.
+        assert_eq!(b.bottleneck(), "router");
+        let ok = ComponentBreakdown {
+            batcher_s: 1.0,
+            router_s: 0.5,
+            adc_s: 2.0,
+            transfer_s: 4.0,
+            pipeline_s: 3.0,
+        };
+        assert_eq!(ok.bottleneck(), "transfer");
     }
 }

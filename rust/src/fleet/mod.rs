@@ -18,20 +18,29 @@
 //!   [`crate::cache::CacheController`] and [`crate::cell::timing`].
 //! * [`router`] — [`crate::coordinator::Router`] generalized to
 //!   (tenant, replica) pairs, plus a deadline-aware admission controller.
+//! * [`shard`] — model-parallel layer sharding: partition a network that
+//!   does not fit one slice into per-slice segments (down to
+//!   output-filter ranges for over-wide layers), cost the inter-slice
+//!   activation hops, and decide replica-parallel vs shard-parallel per
+//!   tenant. The bit-identical pipelined executor is
+//!   [`crate::pim::shard_exec`].
 //! * [`sim`] — the deterministic fleet simulator behind `repro fleet-sim`:
 //!   seeded multi-tenant traffic, campaigns mid-run, and a report pinning
-//!   per-tenant p50/p99, throughput, energy, bank wear, and downtime.
+//!   per-tenant p50/p99, throughput, energy, bank wear, downtime, and
+//!   shard-chain transfer attribution.
 //!
-//! See ARCHITECTURE.md §fleet and EXPERIMENTS.md E12.
+//! See ARCHITECTURE.md §fleet and §fleet/shard, EXPERIMENTS.md E12/E16.
 
 pub mod campaign;
 pub mod placer;
 pub mod registry;
 pub mod router;
+pub mod shard;
 pub mod sim;
 
 pub use campaign::{CampaignReport, CampaignScheduler};
 pub use placer::{BankWear, EndurancePlacer, EndurancePolicy, FleetPlacement, ReplicaPlacement};
 pub use registry::{ModelFamily, ModelRegistry, QosSpec, TenantSpec};
 pub use router::{AdmissionController, FleetRouter, FleetReplicaState, ReplicaHealth};
+pub use shard::{PlacementMode, ShardPipelineCost, ShardPlan, ShardSegment, TransferLink};
 pub use sim::{FleetReport, FleetSim, FleetSimConfig, TenantReport};

@@ -6,6 +6,13 @@
 //! placement whose planned reprogramming campaigns would push a bank's
 //! resistance window below the [`EndurancePolicy`] criterion — endurance
 //! as a first-class scheduling input, not an afterthought (Inci et al.).
+//!
+//! Since the `fleet::shard` subsystem, a replica is no longer forced to
+//! be whole: per tenant, [`crate::fleet::shard::choose_mode`] decides
+//! replica-parallel vs shard-parallel, and in shard mode each replica
+//! becomes a *chain* of [`ReplicaPlacement`]s (one per shard segment,
+//! preferably on distinct slices so the chain actually pipelines), each
+//! with its own wear accounting.
 
 use crate::cache::addr::Geometry;
 use crate::device::reliability::EnduranceModel;
@@ -13,6 +20,7 @@ use crate::mapping::layout::NetworkLayout;
 use crate::{Error, Result};
 
 use super::registry::ModelRegistry;
+use super::shard::{choose_mode, PlacementMode, ShardPlan, ShardSegment};
 
 /// Per-bank RRAM write-cycle counters for one slice.
 #[derive(Clone, Debug)]
@@ -73,14 +81,23 @@ impl Default for EndurancePolicy {
     }
 }
 
-/// One placed replica: a tenant's full tile layout on one slice.
+/// One placed replica segment: a tenant's tile layout on one slice. For
+/// replica-parallel tenants this is the whole replica (`n_shards == 1`);
+/// for shard-parallel tenants each replica is a chain of these, one per
+/// shard segment.
 #[derive(Clone, Debug)]
 pub struct ReplicaPlacement {
     /// Owning tenant id.
     pub tenant: usize,
     /// Replica index within the tenant.
     pub replica: usize,
-    /// Slice hosting this replica.
+    /// Position in the replica's shard chain (0 for unsharded).
+    pub shard: usize,
+    /// Total shards in the chain (1 for unsharded).
+    pub n_shards: usize,
+    /// Half-open range into the tenant's layer list this segment hosts.
+    pub layer_range: (usize, usize),
+    /// Slice hosting this segment.
     pub slice: usize,
     /// First linear slot of the placement on that slice.
     pub start_slot: usize,
@@ -106,12 +123,17 @@ impl ReplicaPlacement {
 /// The fleet-wide placement produced by [`EndurancePlacer::place`].
 #[derive(Clone, Debug)]
 pub struct FleetPlacement {
-    /// Every placed replica.
+    /// Every placed replica segment.
     pub replicas: Vec<ReplicaPlacement>,
     /// Per-slice bank wear (updated by campaigns as they run).
     pub wear: Vec<BankWear>,
     /// Slots consumed per slice.
     pub slots_used: Vec<usize>,
+    /// Per tenant id: the shard plan the placer committed to, `None` for
+    /// replica-parallel tenants. The fleet sim derives per-shard stage
+    /// costs and transfer links from this, so the cost model and the
+    /// placement can never disagree about where the cuts fall.
+    pub shard_plans: Vec<Option<ShardPlan>>,
 }
 
 impl FleetPlacement {
@@ -124,6 +146,26 @@ impl FleetPlacement {
     pub fn tenant_replicas(&self, tenant: usize) -> Vec<&ReplicaPlacement> {
         self.replicas.iter().filter(|r| r.tenant == tenant).collect()
     }
+
+    /// One replica's shard chain, in shard order (a single element for
+    /// replica-parallel tenants).
+    pub fn replica_chain(&self, tenant: usize, replica: usize) -> Vec<&ReplicaPlacement> {
+        let mut chain: Vec<&ReplicaPlacement> = self
+            .replicas
+            .iter()
+            .filter(|r| r.tenant == tenant && r.replica == replica)
+            .collect();
+        chain.sort_by_key(|r| r.shard);
+        chain
+    }
+
+    /// Shards per replica for one tenant (1 when replica-parallel).
+    pub fn tenant_shards(&self, tenant: usize) -> usize {
+        self.shard_plans
+            .get(tenant)
+            .and_then(|p| p.as_ref().map(ShardPlan::shards))
+            .unwrap_or(1)
+    }
 }
 
 /// The endurance-aware placer.
@@ -134,12 +176,19 @@ pub struct EndurancePlacer {
     pub n_slices: usize,
     /// Endurance policy.
     pub policy: EndurancePolicy,
+    /// Longest shard chain [`choose_mode`] may plan per replica.
+    pub max_shards: usize,
 }
 
 impl EndurancePlacer {
     /// Placer over `n_slices` identical slices.
     pub fn new(geom: Geometry, n_slices: usize) -> EndurancePlacer {
-        EndurancePlacer { geom, n_slices, policy: EndurancePolicy::default() }
+        EndurancePlacer {
+            geom,
+            n_slices,
+            policy: EndurancePolicy::default(),
+            max_shards: n_slices.clamp(1, 4),
+        }
     }
 
     /// Place every tenant's replicas across a fresh (unworn) fleet.
@@ -153,14 +202,23 @@ impl EndurancePlacer {
     /// given per-slice wear state (e.g. carried over from a previous
     /// deployment generation).
     ///
-    /// Slice choice per replica: among *feasible* slices — enough free
-    /// slots AND endurance headroom on every bank the placement would
-    /// touch — prefer (1) slices not already hosting this tenant (fault
-    /// isolation), (2) least-worn (wear-leveling), (3) least-occupied,
+    /// Slice choice per replica segment: among *feasible* slices — enough
+    /// free slots AND endurance headroom on every bank the placement
+    /// would touch — prefer (1) slices not already hosting this tenant
+    /// (fault isolation; for a shard chain this also spreads the chain's
+    /// segments across distinct slices so the pipeline actually
+    /// overlaps), (2) least-worn (wear-leveling), (3) least-occupied,
     /// (4) lowest index — a total order, so placement is deterministic.
     /// Refuses with [`Error::Config`] only when no slice is feasible
     /// (insufficient capacity, or the planned campaigns would exceed a
     /// touched bank's endurance budget everywhere).
+    ///
+    /// Per tenant, [`choose_mode`] first decides replica-parallel vs
+    /// shard-parallel: a tenant whose whole replica fits one slice and
+    /// meets its deadline places exactly as before (one segment,
+    /// `n_shards == 1`); an over-capacity or deadline-bound tenant is
+    /// split per its [`ShardPlan`] and each segment placed like a
+    /// mini-replica with its own wear/commitment accounting.
     pub fn place_with_wear(
         &self,
         registry: &ModelRegistry,
@@ -175,103 +233,143 @@ impl EndurancePlacer {
         // replicas' campaign schedules, not each in isolation.
         let mut committed = vec![vec![0.0f64; self.geom.banks_per_slice]; self.n_slices];
         let mut replicas: Vec<ReplicaPlacement> = Vec::new();
+        let mut shard_plans: Vec<Option<ShardPlan>> = Vec::new();
         for tenant in &registry.tenants {
             let layers = tenant.layers();
-            let need = NetworkLayout::place(&layers, self.geom.banks_per_slice, self.geom.subarrays_per_bank)
-                .map(|l| l.slots_used)
-                .ok_or_else(|| {
-                    Error::Config(format!(
-                        "tenant {} ({}) does not fit a single slice",
-                        tenant.id, tenant.name
-                    ))
-                })?;
-            for replica in 0..tenant.replicas {
-                let hosted: Vec<usize> = replicas
-                    .iter()
-                    .filter(|r| r.tenant == tenant.id)
-                    .map(|r| r.slice)
-                    .collect();
-                // Feasibility of one candidate slice: room for `need`
-                // contiguous slots AND endurance headroom on every bank
-                // the placement would touch — the planned campaign
-                // schedule plus this replica's own initial programming
-                // cycle, on top of the bank's wear and whatever co-placed
-                // replicas already committed to a shared bank.
-                // (Placement is contiguous, so the touched banks are
-                // exactly the slot range start..start+need.)
-                let spb = self.geom.subarrays_per_bank;
-                let demand = self.policy.planned_campaigns + 1.0;
-                let feasible = |s: usize| -> bool {
-                    let start = slots_used[s];
-                    if start + need > capacity {
-                        return false;
-                    }
-                    let first_bank = start / spb;
-                    let last_bank = (start + need - 1) / spb;
-                    (first_bank..=last_bank).all(|bank| {
-                        self.policy
-                            .model
-                            .remaining_campaigns(wear[s].cycles[bank], self.policy.min_window)
-                            >= committed[s][bank] + demand
-                    })
-                };
-                let slice = (0..self.n_slices)
-                    .filter(|&s| feasible(s))
-                    .min_by(|&a, &b| {
-                        let key = |s: usize| {
-                            (
-                                hosted.contains(&s) as usize,
-                                // f64 wear is a sum of 1.0s — total_cmp safe.
-                                wear[s].max_cycles(),
-                                slots_used[s],
-                                s,
-                            )
-                        };
-                        let (ha, wa, ua, ia) = key(a);
-                        let (hb, wb, ub, ib) = key(b);
-                        ha.cmp(&hb)
-                            .then(wa.total_cmp(&wb))
-                            .then(ua.cmp(&ub))
-                            .then(ia.cmp(&ib))
-                    })
-                    .ok_or_else(|| {
-                        Error::Config(format!(
-                            "no slice can host tenant {} replica {replica}: needs {need} free \
-                             slots with endurance headroom for {:.0} more campaigns per bank \
-                             (campaigns already committed to shared banks count against the \
-                             budget; {} slices, {capacity} slots each)",
-                            tenant.id, self.policy.planned_campaigns, self.n_slices
-                        ))
-                    })?;
-                let layout = NetworkLayout::place_from(
-                    &layers,
-                    self.geom.banks_per_slice,
-                    self.geom.subarrays_per_bank,
-                    slots_used[slice],
-                )
-                .ok_or_else(|| Error::Config("placement overflow despite capacity check".into()))?;
-                let placement = ReplicaPlacement {
-                    tenant: tenant.id,
-                    replica,
-                    slice,
-                    start_slot: slots_used[slice],
-                    layout,
-                };
-                for bank in placement.banks() {
-                    committed[slice][bank] += demand;
+            let mode = choose_mode(
+                &layers,
+                &self.geom,
+                tenant.qos.deadline_s,
+                tenant.utilization,
+                self.max_shards,
+            )
+            .map_err(|e| {
+                Error::Config(format!(
+                    "tenant {} ({}) does not fit a single slice and cannot be sharded: {e}",
+                    tenant.id, tenant.name
+                ))
+            })?;
+            // Uniform view: a replica is a chain of segments (length 1
+            // when replica-parallel).
+            let segments: Vec<ShardSegment> = match &mode {
+                PlacementMode::Replica => {
+                    let slots = NetworkLayout::place(
+                        &layers,
+                        self.geom.banks_per_slice,
+                        self.geom.subarrays_per_bank,
+                    )
+                    .expect("choose_mode returned Replica only for a fitting tenant")
+                    .next_slot();
+                    vec![ShardSegment {
+                        shard: 0,
+                        layer_range: (0, layers.len()),
+                        filter_range: None,
+                        layers: layers.clone(),
+                        slots,
+                    }]
                 }
-                slots_used[slice] += placement.layout.slots_used;
-                replicas.push(placement);
+                PlacementMode::Sharded(plan) => plan.segments.clone(),
+            };
+            let n_shards = segments.len();
+            shard_plans.push(match mode {
+                PlacementMode::Sharded(plan) => Some(plan),
+                PlacementMode::Replica => None,
+            });
+            for replica in 0..tenant.replicas {
+                for seg in &segments {
+                    let need = seg.slots;
+                    let hosted: Vec<usize> = replicas
+                        .iter()
+                        .filter(|r| r.tenant == tenant.id)
+                        .map(|r| r.slice)
+                        .collect();
+                    // Feasibility of one candidate slice: room for `need`
+                    // contiguous slots AND endurance headroom on every
+                    // bank the placement would touch — the planned
+                    // campaign schedule plus this segment's own initial
+                    // programming cycle, on top of the bank's wear and
+                    // whatever co-placed replicas already committed to a
+                    // shared bank. (Placement is contiguous, so the
+                    // touched banks are exactly start..start+need.)
+                    let spb = self.geom.subarrays_per_bank;
+                    let demand = self.policy.planned_campaigns + 1.0;
+                    let feasible = |s: usize| -> bool {
+                        let start = slots_used[s];
+                        if start + need > capacity {
+                            return false;
+                        }
+                        let first_bank = start / spb;
+                        let last_bank = (start + need - 1) / spb;
+                        (first_bank..=last_bank).all(|bank| {
+                            self.policy
+                                .model
+                                .remaining_campaigns(wear[s].cycles[bank], self.policy.min_window)
+                                >= committed[s][bank] + demand
+                        })
+                    };
+                    let slice = (0..self.n_slices)
+                        .filter(|&s| feasible(s))
+                        .min_by(|&a, &b| {
+                            let key = |s: usize| {
+                                (
+                                    hosted.contains(&s) as usize,
+                                    // f64 wear is a sum of 1.0s — total_cmp safe.
+                                    wear[s].max_cycles(),
+                                    slots_used[s],
+                                    s,
+                                )
+                            };
+                            let (ha, wa, ua, ia) = key(a);
+                            let (hb, wb, ub, ib) = key(b);
+                            ha.cmp(&hb)
+                                .then(wa.total_cmp(&wb))
+                                .then(ua.cmp(&ub))
+                                .then(ia.cmp(&ib))
+                        })
+                        .ok_or_else(|| {
+                            Error::Config(format!(
+                                "no slice can host tenant {} replica {replica} shard {}: needs \
+                                 {need} free slots with endurance headroom for {:.0} more \
+                                 campaigns per bank (campaigns already committed to shared banks \
+                                 count against the budget; {} slices, {capacity} slots each)",
+                                tenant.id, seg.shard, self.policy.planned_campaigns, self.n_slices
+                            ))
+                        })?;
+                    let layout = NetworkLayout::place_from(
+                        &seg.layers,
+                        self.geom.banks_per_slice,
+                        self.geom.subarrays_per_bank,
+                        slots_used[slice],
+                    )
+                    .ok_or_else(|| {
+                        Error::Config("placement overflow despite capacity check".into())
+                    })?;
+                    let placement = ReplicaPlacement {
+                        tenant: tenant.id,
+                        replica,
+                        shard: seg.shard,
+                        n_shards,
+                        layer_range: seg.layer_range,
+                        slice,
+                        start_slot: slots_used[slice],
+                        layout,
+                    };
+                    for bank in placement.banks() {
+                        committed[slice][bank] += demand;
+                    }
+                    slots_used[slice] += placement.layout.slots_used;
+                    replicas.push(placement);
+                }
             }
         }
         // Wear counters start at the initial programming: one campaign per
-        // touched bank per replica.
+        // touched bank per replica segment.
         for r in &replicas {
             for bank in r.banks() {
                 wear[r.slice].record_program(bank);
             }
         }
-        Ok(FleetPlacement { replicas, wear, slots_used })
+        Ok(FleetPlacement { replicas, wear, slots_used, shard_plans })
     }
 }
 
@@ -412,6 +510,35 @@ mod tests {
         prior[1].cycles[79] = max + 1.0;
         let p = pl.place_with_wear(&reg, prior).unwrap();
         assert_eq!(p.replicas[0].slice, 1, "infeasible slice 0 skipped, not fatal");
+    }
+
+    #[test]
+    fn wide_tenant_places_as_a_shard_chain() {
+        let reg = ModelRegistry::synthetic_with_wide(3);
+        let p = placer(8).place(&reg).unwrap();
+        // Synthetic tenants stay replica-parallel…
+        for t in 0..3 {
+            assert_eq!(p.tenant_shards(t), 1);
+            assert!(p.shard_plans[t].is_none());
+            assert!(p.tenant_replicas(t).iter().all(|r| r.n_shards == 1));
+        }
+        // …while the over-capacity tenant becomes a chain of 2+ segments
+        // on distinct slices, covering the layer list contiguously.
+        let wide = 3;
+        let shards = p.tenant_shards(wide);
+        assert!(shards >= 2, "wide tenant must shard");
+        let chain = p.replica_chain(wide, 0);
+        assert_eq!(chain.len(), shards);
+        let mut slices = std::collections::HashSet::new();
+        let mut next_layer = 0;
+        for (k, seg) in chain.iter().enumerate() {
+            assert_eq!(seg.shard, k);
+            assert_eq!(seg.n_shards, shards);
+            assert!(slices.insert(seg.slice), "chain segments must spread across slices");
+            assert_eq!(seg.layer_range.0, next_layer);
+            next_layer = seg.layer_range.1.max(next_layer);
+        }
+        assert_eq!(next_layer, reg.tenants[wide].layers().len());
     }
 
     #[test]

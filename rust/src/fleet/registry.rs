@@ -46,7 +46,10 @@ pub struct TenantSpec {
     /// Topology family.
     pub family: ModelFamily,
     /// Trunk width (channel-count knob; keep ≤ 16 so channels stay within
-    /// one 128-row tile).
+    /// one 128-row tile for the live executor — wider tenants are legal
+    /// for the analytic/placement path and overflow a slice, which is
+    /// exactly what forces the shard-parallel mode in
+    /// [`crate::fleet::shard`]).
     pub width: usize,
     /// Which runtime variant the tenant's replicas execute.
     pub variant: ModelVariant,
@@ -131,6 +134,33 @@ impl ModelRegistry {
         reg
     }
 
+    /// The over-capacity wide-ResNet tenant: width 24 needs ≈498
+    /// sub-array slots against a default slice's 320, so a whole replica
+    /// *cannot* be placed on any single slice — the placer must take the
+    /// shard-parallel path ([`crate::fleet::shard`]) and split its layer
+    /// stack across slices. One replica by default (the chain already
+    /// spans multiple slices) with moderate offered load.
+    pub fn wide_tenant(replicas: usize) -> TenantSpec {
+        TenantSpec {
+            id: 0, // assigned by register()
+            name: "resnet18-w24".to_string(),
+            family: ModelFamily::Resnet18,
+            width: 24,
+            variant: ModelVariant::Pim,
+            replicas,
+            utilization: 0.4,
+            qos: QosSpec { deadline_s: 0.05, max_violation_frac: 0.01 },
+        }
+    }
+
+    /// [`Self::synthetic`] plus the over-capacity [`Self::wide_tenant`]
+    /// appended — the standard mixed fleet for shard-mode scenarios.
+    pub fn synthetic_with_wide(n: usize) -> ModelRegistry {
+        let mut reg = Self::synthetic(n);
+        reg.register(Self::wide_tenant(1));
+        reg
+    }
+
     /// Number of tenants.
     pub fn len(&self) -> usize {
         self.tenants.len()
@@ -169,6 +199,20 @@ mod tests {
         let small = NetworkLayout::place(&reg.tenants[1].layers(), 80, 4).unwrap();
         assert!(small.slots_used * 3 <= big.slots_used, "{} vs {}", small.slots_used, big.slots_used);
         assert!(small.slots_used * 3 <= 320, "three compact tenants must share a slice");
+    }
+
+    #[test]
+    fn wide_tenant_overflows_a_default_slice() {
+        use crate::mapping::layout::NetworkLayout;
+        let wide = ModelRegistry::wide_tenant(1);
+        assert!(
+            NetworkLayout::place(&wide.layers(), 80, 4).is_none(),
+            "the wide tenant must not fit one slice — it exists to force sharding"
+        );
+        let reg = ModelRegistry::synthetic_with_wide(3);
+        assert_eq!(reg.len(), 4);
+        assert_eq!(reg.tenants[3].name, "resnet18-w24");
+        assert_eq!(reg.tenants[3].id, 3);
     }
 
     #[test]

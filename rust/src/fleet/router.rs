@@ -109,6 +109,25 @@ impl FleetRouter {
         now: f64,
         service_s: f64,
     ) -> Option<(usize, f64, f64)> {
+        self.assign_with_occupancy(tenant, now, service_s, service_s)
+    }
+
+    /// [`Self::assign`] for pipelined (shard-chain) replicas, where the
+    /// time a request *occupies* the replica differs from its end-to-end
+    /// latency: a shard pipeline accepts a new request every
+    /// [`crate::fleet::shard::ShardPipelineCost::cycle_s`] (the slowest
+    /// stage or hop) even though each request takes the full fill-path
+    /// `latency_s` to complete. Books the replica for `occupancy_s`
+    /// (`busy_until = start + occupancy_s`) and reports completion at
+    /// `start + service_s`. With `occupancy_s == service_s` this is
+    /// exactly [`Self::assign`].
+    pub fn assign_with_occupancy(
+        &mut self,
+        tenant: usize,
+        now: f64,
+        occupancy_s: f64,
+        service_s: f64,
+    ) -> Option<(usize, f64, f64)> {
         let replicas = &mut self.tenants[tenant];
         let idx = (0..replicas.len())
             .filter(|&i| replicas[i].health == ReplicaHealth::Serving)
@@ -122,7 +141,7 @@ impl FleetRouter {
         let r = &mut replicas[idx];
         let start = r.state.busy_until.max(now);
         let completion = start + service_s;
-        r.state.busy_until = completion;
+        r.state.busy_until = start + occupancy_s;
         r.state.served += 1;
         Some((idx, start, completion))
     }
@@ -221,6 +240,25 @@ mod tests {
         r.set_health(0, 1, ReplicaHealth::Programming);
         assert!(r.assign(0, 0.0, 1.0).is_none(), "no serving replica left");
         assert_eq!(r.serving_count(0), 0);
+    }
+
+    #[test]
+    fn occupancy_books_less_than_service() {
+        let mut r = FleetRouter::new(&[1]);
+        // Pipelined replica: each request occupies the chain for 1.0 s
+        // (its cycle time) but completes after 3.0 s (fill-path latency).
+        let (_, s1, c1) = r.assign_with_occupancy(0, 0.0, 1.0, 3.0).unwrap();
+        assert_eq!((s1, c1), (0.0, 3.0));
+        // The next request enters the pipeline one cycle later, not after
+        // the first one's full latency.
+        let (_, s2, c2) = r.assign_with_occupancy(0, 0.0, 1.0, 3.0).unwrap();
+        assert_eq!((s2, c2), (1.0, 4.0));
+        // Equal occupancy/service degenerates to plain assign.
+        let mut plain = FleetRouter::new(&[1]);
+        let a = plain.assign(0, 0.0, 2.0).unwrap();
+        let mut via = FleetRouter::new(&[1]);
+        let b = via.assign_with_occupancy(0, 0.0, 2.0, 2.0).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,625 @@
+//! Model-parallel layer sharding across cache slices: partition one
+//! network's layers (and, for over-wide layers, output-filter ranges)
+//! into segments that each fit a slice, cost the inter-slice activation
+//! hops, and decide replica-parallel vs shard-parallel per tenant.
+//!
+//! Three pieces:
+//!
+//! * [`ShardPlan`] — capacity-greedy partition of a layer list into
+//!   contiguous segments via repeated [`NetworkLayout::place_from`]
+//!   trials (PIM-DRAM-style: a single layer wider than a whole slice is
+//!   further split along its output-filter axis, so *any* layer admits).
+//! * [`TransferLink`] — the inter-slice hop cost model. The activation
+//!   tensor at the cut (`elems × act_bits` bits, packed into cache
+//!   lines) moves slice-to-slice at the cache's line-move cost
+//!   ([`OpKind::CacheLineMove`] — the same primitive
+//!   `BankScheduler::batch_cost` charges for flush/reload movement), so
+//!   hop latency/energy sit in the same unit system as the
+//!   `layer_costs` pipeline stages they interleave with.
+//! * [`ShardPipelineCost`] / [`choose_mode`] — per-shard stage costs +
+//!   hops rolled into the two numbers the fleet schedules on: `latency_s`
+//!   (end-to-end fill: one request walks every stage and hop) and
+//!   `cycle_s` (pipeline cadence: the bottleneck stage-or-hop, what a
+//!   shard chain's occupancy costs per request once the pipeline is
+//!   full). The replica-vs-shard decision: shard only when a whole
+//!   replica does not fit one slice, or when the pipelined cadence meets
+//!   a QoS deadline that a single slice's sojourn time cannot.
+//!
+//! The execution half (bit-identical pipelined stepping of a
+//! [`crate::pim::CompiledNet`]) is `pim::shard_exec`; this module is the
+//! placement/cost half the placer, router, fleet sim, and front door
+//! consume. See ARCHITECTURE.md §fleet/shard and PERFORMANCE.md §10.
+
+use crate::cache::addr::Geometry;
+use crate::cache::controller::PimIntegration;
+use crate::cell::timing::OpKind;
+use crate::coordinator::scheduler::{BankScheduler, ExecutionCost};
+use crate::mapping::conv_mapper::ConvShape;
+use crate::mapping::layout::NetworkLayout;
+use crate::perf::model::MacroModel;
+use crate::{Error, Result};
+
+/// One contiguous segment of a sharded network: the layers (or the
+/// output-filter slice of a single over-wide layer) that live together
+/// on one cache slice.
+#[derive(Clone, Debug)]
+pub struct ShardSegment {
+    /// Position in the shard chain (0 = the segment that sees the input).
+    pub shard: usize,
+    /// Half-open index range into the tenant's full layer list.
+    pub layer_range: (usize, usize),
+    /// `Some((lo, hi))` when this segment carries output filters
+    /// `lo..hi` of the single layer in `layer_range` (an over-wide layer
+    /// split along its filter axis); `None` for whole-layer segments.
+    pub filter_range: Option<(usize, usize)>,
+    /// The shapes this segment actually places (for a filter split, the
+    /// layer with `n` narrowed to the chunk).
+    pub layers: Vec<ConvShape>,
+    /// Physical slots this segment consumes on its slice (2 per tile).
+    pub slots: usize,
+}
+
+/// A partition of one network into shard segments, each guaranteed to
+/// fit an (empty) slice of the geometry it was planned for.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// The segments, in execution order.
+    pub segments: Vec<ShardSegment>,
+    /// Total slots across all segments.
+    pub total_slots: usize,
+}
+
+/// Slots a shape list needs on an empty slice, or `None` if it cannot
+/// fit even alone.
+fn slots_needed(shapes: &[ConvShape], geom: &Geometry) -> Option<usize> {
+    NetworkLayout::place(shapes, geom.banks_per_slice, geom.subarrays_per_bank)
+        .map(|l| l.next_slot())
+}
+
+impl ShardPlan {
+    /// Capacity-greedy partition: walk the layers in execution order,
+    /// extending the current segment while a trial
+    /// [`NetworkLayout::place_from`] still fits one slice, cutting when
+    /// it would overflow. A single layer that overflows an *empty* slice
+    /// is split along its output-filter (`n`) axis into the fewest
+    /// equal chunks that fit. Errors when more than `max_shards`
+    /// segments would be needed, or when a layer cannot be split finely
+    /// enough (its per-filter footprint alone exceeds a slice).
+    pub fn partition(
+        layers: &[ConvShape],
+        geom: &Geometry,
+        max_shards: usize,
+    ) -> Result<ShardPlan> {
+        if layers.is_empty() {
+            return Err(Error::Config("cannot shard an empty layer list".into()));
+        }
+        let mut segments: Vec<ShardSegment> = Vec::new();
+        let mut cur: Vec<ConvShape> = Vec::new();
+        let mut cur_start = 0usize;
+        let mut flush = |cur: &mut Vec<ConvShape>,
+                         cur_start: &mut usize,
+                         end: usize,
+                         segments: &mut Vec<ShardSegment>| {
+            if cur.is_empty() {
+                return;
+            }
+            let slots = slots_needed(cur, geom)
+                .expect("segment grown under a fits-one-slice invariant");
+            segments.push(ShardSegment {
+                shard: segments.len(),
+                layer_range: (*cur_start, end),
+                filter_range: None,
+                layers: std::mem::take(cur),
+                slots,
+            });
+            *cur_start = end;
+        };
+        for (li, &shape) in layers.iter().enumerate() {
+            if slots_needed(&[shape], geom).is_none() {
+                // Over-wide layer: flush, then filter-split it.
+                flush(&mut cur, &mut cur_start, li, &mut segments);
+                let parts = (2..=shape.n)
+                    .find(|&p| {
+                        let chunk = ConvShape { n: shape.n.div_ceil(p), ..shape };
+                        slots_needed(&[chunk], geom).is_some()
+                    })
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "layer {li} cannot be filter-split to fit a slice \
+                             (single-filter footprint exceeds capacity)"
+                        ))
+                    })?;
+                for j in 0..parts {
+                    let (lo, hi) = (j * shape.n / parts, (j + 1) * shape.n / parts);
+                    let chunk = ConvShape { n: hi - lo, ..shape };
+                    let slots = slots_needed(&[chunk], geom)
+                        .expect("chunk size chosen to fit a slice");
+                    segments.push(ShardSegment {
+                        shard: segments.len(),
+                        layer_range: (li, li + 1),
+                        filter_range: Some((lo, hi)),
+                        layers: vec![chunk],
+                        slots,
+                    });
+                }
+                cur_start = li + 1;
+                continue;
+            }
+            cur.push(shape);
+            if slots_needed(&cur, geom).is_none() {
+                // Overflowed: cut before this layer and restart from it.
+                let shape = cur.pop().expect("just pushed");
+                flush(&mut cur, &mut cur_start, li, &mut segments);
+                cur.push(shape);
+            }
+        }
+        flush(&mut cur, &mut cur_start, layers.len(), &mut segments);
+        if segments.len() > max_shards {
+            return Err(Error::Config(format!(
+                "network needs {} shards but max_shards is {max_shards}",
+                segments.len()
+            )));
+        }
+        let total_slots = segments.iter().map(|s| s.slots).sum();
+        Ok(ShardPlan { segments, total_slots })
+    }
+
+    /// Slot-balanced partition into *exactly* `n_shards` segments for a
+    /// network that may well fit one slice — the deadline-driven shard
+    /// mode, where splitting is about pipeline cadence, not capacity.
+    /// Cuts greedily at ~`total/n_shards` slot targets; errors when the
+    /// network has fewer layers than shards.
+    pub fn partition_into(
+        layers: &[ConvShape],
+        geom: &Geometry,
+        n_shards: usize,
+    ) -> Result<ShardPlan> {
+        if n_shards == 0 || n_shards > layers.len() {
+            return Err(Error::Config(format!(
+                "cannot split {} layers into {n_shards} shards",
+                layers.len()
+            )));
+        }
+        let total: usize = layers
+            .iter()
+            .map(|s| slots_needed(&[*s], geom).unwrap_or(usize::MAX))
+            .sum();
+        if total == usize::MAX {
+            // An over-wide layer present: fall back to the capacity path.
+            return Self::partition(layers, geom, n_shards);
+        }
+        let target = total.div_ceil(n_shards);
+        let mut segments: Vec<ShardSegment> = Vec::new();
+        let mut cur: Vec<ConvShape> = Vec::new();
+        let mut cur_start = 0usize;
+        let mut acc = 0usize;
+        for (li, &shape) in layers.iter().enumerate() {
+            cur.push(shape);
+            acc += slots_needed(&[shape], geom).expect("checked above");
+            let remaining_layers = layers.len() - li - 1;
+            let remaining_segs = n_shards - segments.len() - 1;
+            if (acc >= target && remaining_segs > 0) || remaining_layers == remaining_segs {
+                let slots = slots_needed(&cur, geom).ok_or_else(|| {
+                    Error::Config(format!(
+                        "balanced segment ending at layer {li} does not fit one slice"
+                    ))
+                })?;
+                segments.push(ShardSegment {
+                    shard: segments.len(),
+                    layer_range: (cur_start, li + 1),
+                    filter_range: None,
+                    layers: std::mem::take(&mut cur),
+                    slots,
+                });
+                cur_start = li + 1;
+                acc = 0;
+            }
+        }
+        debug_assert_eq!(segments.len(), n_shards);
+        let total_slots = segments.iter().map(|s| s.slots).sum();
+        Ok(ShardPlan { segments, total_slots })
+    }
+
+    /// Number of shard segments.
+    pub fn shards(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// True when the plan actually splits the network (2+ segments).
+    pub fn is_sharded(&self) -> bool {
+        self.segments.len() > 1
+    }
+
+    /// Activation elements (per image) crossing the cut between segment
+    /// `i` and segment `i+1`. For a whole-layer cut this is the last
+    /// layer's output tensor (`n × ow²`). For a cut between two filter
+    /// chunks of the *same* layer, the downstream chunk needs the
+    /// layer's full input broadcast (`d × w²`) plus the partial outputs
+    /// accumulated so far (`hi × ow²`), which ride along to be gathered
+    /// at the chain's next whole-layer consumer.
+    pub fn cut_elems(&self, i: usize) -> usize {
+        let a = &self.segments[i];
+        let b = &self.segments[i + 1];
+        let last = *a.layers.last().expect("segments are non-empty");
+        let ow = last.output_width();
+        let filter_sibling = a.layer_range == b.layer_range
+            && a.filter_range.is_some()
+            && b.filter_range.is_some();
+        if filter_sibling {
+            let (_, hi) = a.filter_range.expect("checked filter sibling");
+            last.d * last.w * last.w + hi * ow * ow
+        } else {
+            last.n * ow * ow
+        }
+    }
+
+    /// The inter-slice transfer links (one per adjacent segment pair)
+    /// for a single image at `act_bits` activation precision.
+    pub fn links(&self, model: &MacroModel, geom: &Geometry) -> Vec<TransferLink> {
+        (0..self.segments.len().saturating_sub(1))
+            .map(|i| {
+                TransferLink::for_activation(
+                    i,
+                    i + 1,
+                    self.cut_elems(i),
+                    model.act_bits,
+                    geom.line_bytes,
+                )
+            })
+            .collect()
+    }
+
+    /// Full pipeline cost of `batch` images through the shard chain:
+    /// per-segment compute stages (a [`BankScheduler`] per segment over
+    /// its own slice) plus the activation hops between them.
+    pub fn pipeline_cost(
+        &self,
+        geom: &Geometry,
+        mode: PimIntegration,
+        batch: usize,
+    ) -> Result<ShardPipelineCost> {
+        let model = MacroModel::default();
+        let mut stages = Vec::with_capacity(self.segments.len());
+        for seg in &self.segments {
+            let mut sched = BankScheduler::new(seg.layers.clone(), *geom, mode)
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "shard segment {} does not fit one slice (plan/geometry mismatch)",
+                        seg.shard
+                    ))
+                })?;
+            sched.program_network();
+            let mut stage = ExecutionCost::default();
+            for lc in sched.layer_costs(batch) {
+                stage.ops += lc.ops;
+                stage.latency_s += lc.latency_s;
+                stage.energy_j += lc.energy_j;
+            }
+            stages.push(stage);
+        }
+        let links: Vec<TransferLink> = self
+            .links(&model, geom)
+            .into_iter()
+            .map(|l| l.scaled(batch))
+            .collect();
+        let compute_lat: f64 = stages.iter().map(|s| s.latency_s).sum();
+        let compute_energy: f64 = stages.iter().map(|s| s.energy_j).sum();
+        let ops: f64 = stages.iter().map(|s| s.ops).sum();
+        let transfer_latency_s: f64 = links.iter().map(|l| l.latency_s).sum();
+        let transfer_energy_j: f64 = links.iter().map(|l| l.energy_j).sum();
+        let cycle_s = stages
+            .iter()
+            .map(|s| s.latency_s)
+            .chain(links.iter().map(|l| l.latency_s))
+            .fold(0.0f64, f64::max);
+        Ok(ShardPipelineCost {
+            stages,
+            links,
+            latency_s: compute_lat + transfer_latency_s,
+            cycle_s,
+            energy_j: compute_energy + transfer_energy_j,
+            ops,
+            transfer_latency_s,
+            transfer_energy_j,
+        })
+    }
+}
+
+/// One inter-slice activation hop: the tensor crossing a shard cut,
+/// packed into cache lines and moved at the line-move cost.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferLink {
+    /// Producing shard.
+    pub from_shard: usize,
+    /// Consuming shard.
+    pub to_shard: usize,
+    /// Activation elements crossing the cut.
+    pub elems: usize,
+    /// Payload bytes (`elems × act_bits` bits, byte-packed).
+    pub bytes: u64,
+    /// Cache lines moved (`bytes / line_bytes`, rounded up).
+    pub lines: u64,
+    /// Hop latency (s): `lines × t(CacheLineMove)`.
+    pub latency_s: f64,
+    /// Hop energy (J): `lines × e(CacheLineMove)`.
+    pub energy_j: f64,
+}
+
+impl TransferLink {
+    /// Cost one activation tensor's hop between two slices.
+    pub fn for_activation(
+        from_shard: usize,
+        to_shard: usize,
+        elems: usize,
+        act_bits: u32,
+        line_bytes: usize,
+    ) -> TransferLink {
+        let bits = elems as u64 * act_bits as u64;
+        let bytes = bits.div_ceil(8);
+        let lines = bytes.div_ceil(line_bytes as u64).max(1);
+        let (t, e) = OpKind::CacheLineMove.cost();
+        TransferLink {
+            from_shard,
+            to_shard,
+            elems,
+            bytes,
+            lines,
+            latency_s: lines as f64 * t,
+            energy_j: lines as f64 * e,
+        }
+    }
+
+    /// The same link carrying `batch` images' activations.
+    pub fn scaled(&self, batch: usize) -> TransferLink {
+        let b = batch as u64;
+        TransferLink {
+            elems: self.elems * batch,
+            bytes: self.bytes * b,
+            lines: self.lines * b,
+            latency_s: self.latency_s * batch as f64,
+            energy_j: self.energy_j * batch as f64,
+            ..*self
+        }
+    }
+}
+
+/// Cost roll-up of one request batch through a shard chain.
+#[derive(Clone, Debug)]
+pub struct ShardPipelineCost {
+    /// Per-shard compute stage cost (the tandem stages).
+    pub stages: Vec<ExecutionCost>,
+    /// Per-hop transfer cost between adjacent shards.
+    pub links: Vec<TransferLink>,
+    /// End-to-end latency of one request: every stage plus every hop
+    /// (the pipeline *fill* path — what a single request experiences).
+    pub latency_s: f64,
+    /// Pipeline cadence: the bottleneck stage-or-hop latency — what the
+    /// chain's occupancy costs per request once the pipeline is full.
+    pub cycle_s: f64,
+    /// Total energy (compute + transfer).
+    pub energy_j: f64,
+    /// MAC ops.
+    pub ops: f64,
+    /// Latency attributable to inter-slice hops alone.
+    pub transfer_latency_s: f64,
+    /// Energy attributable to inter-slice hops alone.
+    pub transfer_energy_j: f64,
+}
+
+/// How a tenant's replicas should be laid out.
+#[derive(Clone, Debug)]
+pub enum PlacementMode {
+    /// Whole replicas, each on one slice (the PR 3 default).
+    Replica,
+    /// Shard-parallel: each replica is a chain of segments across
+    /// slices, served as a pipeline.
+    Sharded(ShardPlan),
+}
+
+impl PlacementMode {
+    /// Shard count (1 for replica-parallel).
+    pub fn shards(&self) -> usize {
+        match self {
+            PlacementMode::Replica => 1,
+            PlacementMode::Sharded(p) => p.shards(),
+        }
+    }
+}
+
+/// M/M/1-flavored sojourn-time estimate: service plus the utilization
+/// wait `ρ/(1−ρ)` of the occupancy each request holds. `occupancy_s` is
+/// the time a request keeps the resource busy (the full service for a
+/// single slice; the pipeline cycle for a shard chain), `latency_s` the
+/// time it takes to come back.
+fn sojourn(latency_s: f64, occupancy_s: f64, utilization: f64) -> f64 {
+    if utilization >= 1.0 {
+        return f64::INFINITY;
+    }
+    latency_s + occupancy_s * utilization / (1.0 - utilization)
+}
+
+/// The replica-vs-shard decision for one tenant: shard only when (a) a
+/// whole replica does not fit one slice, or (b) it fits but its
+/// single-slice sojourn time misses the QoS deadline while some
+/// pipelined split's sojourn (end-to-end latency + cadence-scaled wait)
+/// meets it. Otherwise replica-parallel wins (sharding costs hops and
+/// slices without buying anything).
+pub fn choose_mode(
+    layers: &[ConvShape],
+    geom: &Geometry,
+    deadline_s: f64,
+    utilization: f64,
+    max_shards: usize,
+) -> Result<PlacementMode> {
+    let fits = NetworkLayout::place(layers, geom.banks_per_slice, geom.subarrays_per_bank)
+        .is_some();
+    if !fits {
+        return Ok(PlacementMode::Sharded(ShardPlan::partition(layers, geom, max_shards)?));
+    }
+    // Fits one slice: estimate whether a single slice meets the deadline.
+    let mut whole = BankScheduler::new(layers.to_vec(), *geom, PimIntegration::Retained)
+        .expect("placement feasibility just verified");
+    whole.program_network();
+    let svc = whole.batch_cost(1).latency_s;
+    if sojourn(svc, svc, utilization) <= deadline_s {
+        return Ok(PlacementMode::Replica);
+    }
+    // Deadline-driven: the smallest split whose pipelined sojourn makes it.
+    for n in 2..=max_shards.min(layers.len()) {
+        let Ok(plan) = ShardPlan::partition_into(layers, geom, n) else { continue };
+        let Ok(cost) = plan.pipeline_cost(geom, PimIntegration::Retained, 1) else { continue };
+        if sojourn(cost.latency_s, cost.cycle_s, utilization) <= deadline_s {
+            return Ok(PlacementMode::Sharded(plan));
+        }
+    }
+    // No split helps either; keep the simple layout.
+    Ok(PlacementMode::Replica)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wide_layers() -> Vec<ConvShape> {
+        BankScheduler::resnet18_layers(24)
+    }
+
+    #[test]
+    fn wide_resnet_overflows_one_slice_and_partitions() {
+        let geom = Geometry::default();
+        let layers = wide_layers();
+        assert!(slots_needed(&layers, &geom).is_none(), "w24 must overflow one slice");
+        let plan = ShardPlan::partition(&layers, &geom, 4).unwrap();
+        assert!(plan.is_sharded());
+        let capacity = geom.banks_per_slice * geom.subarrays_per_bank;
+        for seg in &plan.segments {
+            assert!(seg.slots <= capacity, "segment {} overflows", seg.shard);
+            assert!(!seg.layers.is_empty());
+        }
+        // Segments tile the layer list contiguously.
+        let mut next = 0;
+        for seg in &plan.segments {
+            assert_eq!(seg.layer_range.0, next);
+            next = seg.layer_range.1.max(next);
+        }
+        assert_eq!(next, layers.len());
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        let geom = Geometry::default();
+        let a = ShardPlan::partition(&wide_layers(), &geom, 4).unwrap();
+        let b = ShardPlan::partition(&wide_layers(), &geom, 4).unwrap();
+        assert_eq!(a.shards(), b.shards());
+        assert_eq!(a.total_slots, b.total_slots);
+        for (x, y) in a.segments.iter().zip(b.segments.iter()) {
+            assert_eq!(x.layer_range, y.layer_range);
+            assert_eq!(x.slots, y.slots);
+        }
+    }
+
+    #[test]
+    fn over_wide_single_layer_filter_splits() {
+        // On the tiny geometry (8 slots) a 3×3 64→64 layer needs far
+        // more than one slice; partition must split its filters.
+        let geom = Geometry::tiny();
+        let layers = vec![ConvShape { k: 3, d: 64, n: 64, w: 8, stride: 1 }];
+        let plan = ShardPlan::partition(&layers, &geom, 64).unwrap();
+        assert!(plan.shards() >= 2);
+        let mut covered = 0;
+        for seg in &plan.segments {
+            let (lo, hi) = seg.filter_range.expect("filter-split segments");
+            assert_eq!(lo, covered, "filter chunks must be contiguous");
+            covered = hi;
+            assert_eq!(seg.layers[0].n, hi - lo);
+        }
+        assert_eq!(covered, 64);
+    }
+
+    #[test]
+    fn transfer_link_packs_lines() {
+        // 1000 elems × 4 bits = 500 bytes = 8 lines of 64 B.
+        let l = TransferLink::for_activation(0, 1, 1000, 4, 64);
+        assert_eq!(l.bytes, 500);
+        assert_eq!(l.lines, 8);
+        let (t, e) = OpKind::CacheLineMove.cost();
+        assert!((l.latency_s - 8.0 * t).abs() < 1e-18);
+        assert!((l.energy_j - 8.0 * e).abs() < 1e-18);
+        let s = l.scaled(3);
+        assert_eq!(s.lines, 24);
+        assert!((s.latency_s - 3.0 * l.latency_s).abs() < 1e-18);
+    }
+
+    #[test]
+    fn pipeline_cost_decomposes() {
+        let geom = Geometry::default();
+        let plan = ShardPlan::partition(&wide_layers(), &geom, 4).unwrap();
+        let cost = plan.pipeline_cost(&geom, PimIntegration::Retained, 1).unwrap();
+        assert_eq!(cost.stages.len(), plan.shards());
+        assert_eq!(cost.links.len(), plan.shards() - 1);
+        assert!(cost.transfer_latency_s > 0.0);
+        let stage_sum: f64 = cost.stages.iter().map(|s| s.latency_s).sum();
+        assert!((cost.latency_s - (stage_sum + cost.transfer_latency_s)).abs() < 1e-15);
+        // Cadence is the bottleneck, strictly under the serial total.
+        assert!(cost.cycle_s < cost.latency_s);
+        assert!(cost.cycle_s >= cost.latency_s / (plan.shards() + 1) as f64);
+    }
+
+    #[test]
+    fn sharded_stage_costs_match_unsharded_layer_costs() {
+        // The same layers, split or not, must charge the same compute:
+        // sharding adds hops, never changes a layer's stage cost.
+        let geom = Geometry::default();
+        let layers = BankScheduler::resnet18_layers(16);
+        let mut whole =
+            BankScheduler::new(layers.clone(), geom, PimIntegration::Retained).unwrap();
+        whole.program_network();
+        let whole_lat: f64 = whole.layer_costs(1).iter().map(|c| c.latency_s).sum();
+        let plan = ShardPlan::partition_into(&layers, &geom, 3).unwrap();
+        let cost = plan.pipeline_cost(&geom, PimIntegration::Retained, 1).unwrap();
+        let stage_sum: f64 = cost.stages.iter().map(|s| s.latency_s).sum();
+        assert!((stage_sum - whole_lat).abs() / whole_lat < 1e-12);
+    }
+
+    #[test]
+    fn choose_mode_shards_only_when_needed() {
+        let geom = Geometry::default();
+        // Width 16 fits and meets its deadline comfortably: replica.
+        let fitting = BankScheduler::resnet18_layers(16);
+        let mode = choose_mode(&fitting, &geom, 0.05, 0.4, 4).unwrap();
+        assert!(matches!(mode, PlacementMode::Replica));
+        // Width 24 cannot fit: sharded regardless of deadline.
+        let mode = choose_mode(&wide_layers(), &geom, 10.0, 0.1, 4).unwrap();
+        match mode {
+            PlacementMode::Sharded(p) => assert!(p.is_sharded()),
+            PlacementMode::Replica => panic!("over-capacity tenant must shard"),
+        }
+    }
+
+    #[test]
+    fn choose_mode_can_shard_for_deadline() {
+        let geom = Geometry::default();
+        let fitting = BankScheduler::resnet18_layers(16);
+        let mut whole =
+            BankScheduler::new(fitting.clone(), geom, PimIntegration::Retained).unwrap();
+        whole.program_network();
+        let svc = whole.batch_cost(1).latency_s;
+        // A deadline between the pipelined sojourn and the single-slice
+        // sojourn at high utilization forces the deadline-driven branch.
+        let util = 0.9;
+        let single = svc + svc * util / (1.0 - util);
+        let deadline = single * 0.6;
+        let mode = choose_mode(&fitting, &geom, deadline, util, 6).unwrap();
+        if let PlacementMode::Sharded(p) = &mode {
+            let cost = p.pipeline_cost(&geom, PimIntegration::Retained, 1).unwrap();
+            let pipelined =
+                cost.latency_s + cost.cycle_s * util / (1.0 - util);
+            assert!(pipelined <= deadline, "chosen split must meet the deadline");
+        }
+        // Either outcome is legal only if consistent with the rule; a
+        // replica answer here would mean no split met the deadline, but
+        // the bottleneck cycle shrinks ~linearly with shard count, so a
+        // split must exist.
+        assert!(matches!(mode, PlacementMode::Sharded(_)), "pipelining should rescue QoS");
+    }
+}

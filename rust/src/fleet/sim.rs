@@ -46,18 +46,25 @@ pub struct FleetSimConfig {
     /// live-pass predictions are bit-identical at any width
     /// ([`crate::pim::parallel`]), so this only changes live throughput.
     pub parallelism: crate::pim::parallel::Parallelism,
+    /// Also register the over-capacity wide-ResNet tenant
+    /// ([`ModelRegistry::wide_tenant`]), whose replica cannot fit one
+    /// slice — forcing the placer onto the shard-parallel path so the
+    /// report exercises chain routing and per-hop transfer attribution
+    /// (`fleet-sim --no-wide` disables it).
+    pub wide_tenant: bool,
 }
 
 impl Default for FleetSimConfig {
     fn default() -> Self {
         FleetSimConfig {
-            n_slices: 4,
+            n_slices: 8,
             tenants: 3,
             seed: 42,
             requests_per_tenant: 400,
             campaign_at_frac: 0.5,
             live_serving: false,
             parallelism: crate::pim::parallel::Parallelism::serial(),
+            wide_tenant: true,
         }
     }
 }
@@ -74,8 +81,11 @@ impl FleetSimConfig {
     /// never lag a config change.
     pub fn bench_label(&self) -> String {
         format!(
-            "fleet_sim_{}t_{}s_{}req",
-            self.tenants, self.n_slices, self.requests_per_tenant
+            "fleet_sim_{}t{}_{}s_{}req",
+            self.tenants,
+            if self.wide_tenant { "+w" } else { "" },
+            self.n_slices,
+            self.requests_per_tenant
         )
     }
 }
@@ -107,6 +117,16 @@ pub struct TenantReport {
     pub ops: f64,
     /// QoS deadline (s), echoed for the report.
     pub deadline_s: f64,
+    /// Shard segments per replica (1 when replica-parallel).
+    pub shards: usize,
+    /// Slices hosting replica 0's shard chain, in shard order (empty when
+    /// replica-parallel — the whole replica lives on one slice).
+    pub shard_slices: Vec<usize>,
+    /// Per-request inter-slice activation-hop latency (s); 0 unsharded.
+    pub transfer_s: f64,
+    /// Total inter-slice transfer energy attributed to this tenant (J);
+    /// already included in `energy_j`, broken out for attribution.
+    pub transfer_energy_j: f64,
 }
 
 impl TenantReport {
@@ -204,6 +224,21 @@ impl FleetReport {
                 t.energy_j * 1e3,
             );
         }
+        for t in &self.tenants {
+            if t.shards > 1 {
+                let _ = writeln!(
+                    s,
+                    "  {} shard chain: {} shards on slices {:?} | hop transfer \
+                     {:.4} ms/req ({:.2}% of p50) | {:.4} mJ total",
+                    t.name,
+                    t.shards,
+                    t.shard_slices,
+                    t.transfer_s * 1e3,
+                    100.0 * t.transfer_s / t.p50_s.max(1e-30),
+                    t.transfer_energy_j * 1e3,
+                );
+            }
+        }
         let _ = writeln!(
             s,
             "campaigns: {} | downtime {:.3} ms total",
@@ -277,6 +312,9 @@ impl FleetReport {
                                 ("p99_s", Json::Num(t.p99_s)),
                                 ("mean_s", Json::Num(t.mean_s)),
                                 ("energy_j", Json::Num(t.energy_j)),
+                                ("shards", Json::Num(t.shards as f64)),
+                                ("transfer_s", Json::Num(t.transfer_s)),
+                                ("transfer_energy_j", Json::Num(t.transfer_energy_j)),
                             ])
                         })
                         .collect(),
@@ -308,32 +346,63 @@ impl FleetSim {
             return Err(crate::Error::Config("fleet-sim needs at least 1 slice".into()));
         }
         let geom = Geometry::default();
-        let registry = ModelRegistry::synthetic(config.tenants);
-        // Per-tenant service cost model (layers placed on a reference
-        // slice; batch cost is linear in batch, so batch-1 cost is the
-        // per-request unit).
-        let mut svc_s = Vec::new();
-        let mut energy_req = Vec::new();
-        let mut ops_req = Vec::new();
-        for tenant in &registry.tenants {
-            let mut sched =
-                BankScheduler::new(tenant.layers(), geom, PimIntegration::Retained)
-                    .ok_or_else(|| {
-                        crate::Error::Config(format!(
-                            "tenant {} does not fit the reference slice",
-                            tenant.id
-                        ))
-                    })?;
-            sched.program_network();
-            let c1 = sched.batch_cost(1);
-            svc_s.push(c1.latency_s);
-            energy_req.push(c1.energy_j);
-            ops_req.push(c1.ops);
-        }
+        let registry = if config.wide_tenant {
+            ModelRegistry::synthetic_with_wide(config.tenants)
+        } else {
+            ModelRegistry::synthetic(config.tenants)
+        };
 
-        // Endurance-aware placement.
+        // Endurance-aware placement *first*: the placer (via
+        // [`crate::fleet::shard::choose_mode`]) decides replica- vs
+        // shard-parallel per tenant, and the committed shard plans drive
+        // the cost model below — so costs and placement cannot disagree
+        // about where the cuts fall.
         let placer = EndurancePlacer::new(geom, config.n_slices);
         let mut fleet = placer.place(&registry)?;
+
+        // Per-tenant per-request cost model. Replica-parallel tenants:
+        // whole-network batch-1 cost on a reference slice. Shard-parallel
+        // tenants: the chain's pipeline cost — end-to-end `latency_s`
+        // (every stage + every hop) is what a request experiences, while
+        // `cycle_s` (the bottleneck stage-or-hop) is what a request
+        // *occupies* the chain for once the pipeline is full.
+        let mut svc_s = Vec::new();
+        let mut occ_s = Vec::new();
+        let mut energy_req = Vec::new();
+        let mut ops_req = Vec::new();
+        let mut transfer_req_s = Vec::new();
+        let mut transfer_req_j = Vec::new();
+        for tenant in &registry.tenants {
+            match &fleet.shard_plans[tenant.id] {
+                Some(plan) => {
+                    let cost = plan.pipeline_cost(&geom, PimIntegration::Retained, 1)?;
+                    svc_s.push(cost.latency_s);
+                    occ_s.push(cost.cycle_s);
+                    energy_req.push(cost.energy_j);
+                    ops_req.push(cost.ops);
+                    transfer_req_s.push(cost.transfer_latency_s);
+                    transfer_req_j.push(cost.transfer_energy_j);
+                }
+                None => {
+                    let mut sched =
+                        BankScheduler::new(tenant.layers(), geom, PimIntegration::Retained)
+                            .ok_or_else(|| {
+                                crate::Error::Config(format!(
+                                    "tenant {} does not fit the reference slice",
+                                    tenant.id
+                                ))
+                            })?;
+                    sched.program_network();
+                    let c1 = sched.batch_cost(1);
+                    svc_s.push(c1.latency_s);
+                    occ_s.push(c1.latency_s);
+                    energy_req.push(c1.energy_j);
+                    ops_req.push(c1.ops);
+                    transfer_req_s.push(0.0);
+                    transfer_req_j.push(0.0);
+                }
+            }
+        }
 
         // Physical slices + initial weight programming (wear for this is
         // already recorded by the placer).
@@ -396,6 +465,7 @@ impl FleetSim {
         let mut violations = vec![0u64; registry.len()];
         let mut tenant_energy = vec![0.0f64; registry.len()];
         let mut tenant_ops = vec![0.0f64; registry.len()];
+        let mut tenant_transfer_j = vec![0.0f64; registry.len()];
         let mut campaigns: Vec<CampaignReport> = Vec::new();
         let mut max_completion = 0.0f64;
         let mut fired = vec![false; registry.len()];
@@ -408,18 +478,23 @@ impl FleetSim {
             for t in 0..registry.len() {
                 if !fired[t] && time >= campaign_time[t] {
                     fired[t] = true;
-                    let report = Self::fire_campaign(
+                    let reports = Self::fire_campaign(
                         t,
                         &mut fleet,
                         &mut controllers,
                         &mut router,
                         campaign_time[t],
                     );
-                    total_energy += report.energy_j;
-                    let end = campaign_time[t] + report.downtime_s();
+                    total_energy += reports.iter().map(|r| r.energy_j).sum::<f64>();
+                    // Chain segments on distinct slices reprogram
+                    // concurrently: the replica is down for the slowest
+                    // segment, not the sum.
+                    let down =
+                        reports.iter().map(|r| r.downtime_s()).fold(0.0f64, f64::max);
+                    let end = campaign_time[t] + down;
                     restore_at[t] = Some(end);
                     max_completion = max_completion.max(end);
-                    campaigns.push(report);
+                    campaigns.extend(reports);
                 }
                 if let Some(end) = restore_at[t] {
                     if time >= end {
@@ -432,9 +507,12 @@ impl FleetSim {
                 continue;
             }
             // admit() guarantees a Serving replica exists, so assign()
-            // cannot return None here.
+            // cannot return None here. Sharded tenants book the chain for
+            // the pipeline cycle only, while completion reflects the full
+            // fill-path latency (occ_s == svc_s for unsharded tenants, so
+            // this degenerates to plain assign()).
             if let Some((_replica, _start, completion)) =
-                router.assign(tenant, time, svc_s[tenant])
+                router.assign_with_occupancy(tenant, time, occ_s[tenant], svc_s[tenant])
             {
                 let latency = completion - time;
                 latencies[tenant].push(latency);
@@ -444,6 +522,7 @@ impl FleetSim {
                     (latency > registry.tenants[tenant].qos.deadline_s + 1e-9) as u64;
                 tenant_energy[tenant] += energy_req[tenant];
                 tenant_ops[tenant] += ops_req[tenant];
+                tenant_transfer_j[tenant] += transfer_req_j[tenant];
                 max_completion = max_completion.max(completion);
             }
         }
@@ -453,11 +532,12 @@ impl FleetSim {
         for t in 0..registry.len() {
             if !fired[t] {
                 fired[t] = true;
-                let report =
+                let reports =
                     Self::fire_campaign(t, &mut fleet, &mut controllers, &mut router, campaign_time[t]);
-                total_energy += report.energy_j;
-                max_completion = max_completion.max(campaign_time[t] + report.downtime_s());
-                campaigns.push(report);
+                total_energy += reports.iter().map(|r| r.energy_j).sum::<f64>();
+                let down = reports.iter().map(|r| r.downtime_s()).fold(0.0f64, f64::max);
+                max_completion = max_completion.max(campaign_time[t] + down);
+                campaigns.extend(reports);
             }
             router.set_health(t, 0, ReplicaHealth::Serving);
         }
@@ -469,6 +549,12 @@ impl FleetSim {
             let stats = Summary::of(&latencies[t.id]);
             total_energy += tenant_energy[t.id];
             total_ops += tenant_ops[t.id];
+            let shards = fleet.tenant_shards(t.id);
+            let shard_slices: Vec<usize> = if shards > 1 {
+                fleet.replica_chain(t.id, 0).iter().map(|r| r.slice).collect()
+            } else {
+                Vec::new()
+            };
             tenants.push(TenantReport {
                 tenant: t.id,
                 name: t.name.clone(),
@@ -482,6 +568,10 @@ impl FleetSim {
                 energy_j: tenant_energy[t.id],
                 ops: tenant_ops[t.id],
                 deadline_s: t.qos.deadline_s,
+                shards,
+                shard_slices,
+                transfer_s: transfer_req_s[t.id],
+                transfer_energy_j: tenant_transfer_j[t.id],
             });
         }
         let qos_ok = tenants
@@ -518,26 +608,29 @@ impl FleetSim {
         })
     }
 
-    /// Take one tenant's replica 0 into its drain → program → rewarm
-    /// campaign at simulated time `now`, while its siblings keep serving.
+    /// Take one tenant's replica 0 — its whole shard chain, for a
+    /// shard-parallel tenant — into its drain → program → rewarm campaign
+    /// at simulated time `now`, while its siblings keep serving.
     ///
-    /// On return the replica is left in [`ReplicaHealth::Programming`]
-    /// (the drain itself completes within this call — its duration is the
-    /// queued work, already accounted in the report); the caller restores
-    /// it to Serving once the clock passes `now + downtime`.
+    /// Returns one [`CampaignReport`] per chain segment (a single report
+    /// for replica-parallel tenants). Segments live on distinct slices
+    /// and reprogram concurrently, so the replica's downtime is the
+    /// *slowest* segment's, not the sum; each report carries the shared
+    /// drain. On return the replica is left in
+    /// [`ReplicaHealth::Programming`] (the drain itself completes within
+    /// this call — its duration is the queued work, already accounted in
+    /// the reports); the caller restores it to Serving once the clock
+    /// passes `now + max downtime`.
     fn fire_campaign(
         tenant: usize,
         fleet: &mut FleetPlacement,
         controllers: &mut [CacheController],
         router: &mut FleetRouter,
         now: f64,
-    ) -> CampaignReport {
-        let placement = fleet
-            .replicas
-            .iter()
-            .find(|r| r.tenant == tenant && r.replica == 0)
-            .cloned()
-            .expect("replica 0 placed");
+    ) -> Vec<CampaignReport> {
+        let chain: Vec<_> =
+            fleet.replica_chain(tenant, 0).into_iter().cloned().collect();
+        assert!(!chain.is_empty(), "replica 0 placed");
         // The drain phase completes within this synchronous call (its
         // duration is the queued work, reported as drain_s), so the
         // replica goes straight to Programming; the Draining state is for
@@ -545,17 +638,24 @@ impl FleetSim {
         let busy = router.tenants[tenant][0].state.busy_until;
         let drain = (busy - now).max(0.0);
         router.set_health(tenant, 0, ReplicaHealth::Programming);
-        let report = CampaignScheduler::run(
-            &mut controllers[placement.slice],
-            &placement,
-            &mut fleet.wear[placement.slice],
-            drain,
-        );
-        // Unavailable until the campaign completes — both via health (the
-        // router skips Programming replicas) and via busy_until (anything
-        // assigned right after restoration queues behind the rewarm).
-        router.tenants[tenant][0].state.busy_until = now + report.downtime_s();
-        report
+        let reports: Vec<CampaignReport> = chain
+            .iter()
+            .map(|placement| {
+                CampaignScheduler::run(
+                    &mut controllers[placement.slice],
+                    placement,
+                    &mut fleet.wear[placement.slice],
+                    drain,
+                )
+            })
+            .collect();
+        // Unavailable until the whole chain completes — both via health
+        // (the router skips Programming replicas) and via busy_until
+        // (anything assigned right after restoration queues behind the
+        // rewarm).
+        let downtime = reports.iter().map(|r| r.downtime_s()).fold(0.0f64, f64::max);
+        router.tenants[tenant][0].state.busy_until = now + downtime;
+        reports
     }
 
     /// Drive a small request wave through real
@@ -691,8 +791,8 @@ mod tests {
     #[test]
     fn sim_serves_all_tenants() {
         let report = FleetSim::run(&quick_config()).unwrap();
-        assert_eq!(report.tenants.len(), 3);
-        assert!(report.slices_used >= 4);
+        assert_eq!(report.tenants.len(), 4, "3 synthetic + the wide tenant");
+        assert!(report.slices_used >= 8);
         for t in &report.tenants {
             assert!(t.served > 0, "tenant {} served nothing", t.tenant);
             assert!(t.p99_s >= t.p50_s);
@@ -702,9 +802,50 @@ mod tests {
     }
 
     #[test]
+    fn wide_tenant_is_sharded_with_transfer_attribution() {
+        let report = FleetSim::run(&quick_config()).unwrap();
+        let wide = report.tenants.iter().find(|t| t.name == "resnet18-w24").unwrap();
+        assert!(wide.shards >= 2, "over-capacity tenant must serve sharded");
+        assert!(wide.served > 0, "the sharded chain must actually serve");
+        assert_eq!(wide.shard_slices.len(), wide.shards);
+        let distinct: std::collections::HashSet<_> = wide.shard_slices.iter().collect();
+        assert_eq!(distinct.len(), wide.shards, "chain must spread across slices");
+        assert!(wide.transfer_s > 0.0, "per-hop transfer latency must be attributed");
+        assert!(wide.transfer_energy_j > 0.0);
+        assert!(
+            wide.transfer_energy_j < wide.energy_j,
+            "transfer is a breakout of total energy, not an addition"
+        );
+        // Every replica-parallel tenant reports no transfer.
+        for t in report.tenants.iter().filter(|t| t.shards == 1) {
+            assert_eq!(t.transfer_s, 0.0);
+            assert_eq!(t.transfer_energy_j, 0.0);
+            assert!(t.shard_slices.is_empty());
+        }
+        let text = report.render();
+        assert!(text.contains("shard chain"), "render must show the chain:\n{text}");
+    }
+
+    #[test]
+    fn no_wide_flag_restores_the_replica_only_fleet() {
+        let config = FleetSimConfig { wide_tenant: false, ..quick_config() };
+        let report = FleetSim::run(&config).unwrap();
+        assert_eq!(report.tenants.len(), 3);
+        assert!(report.tenants.iter().all(|t| t.shards == 1));
+        assert_eq!(report.campaigns.len(), 3);
+        assert!(!report.render().contains("shard chain"));
+    }
+
+    #[test]
     fn sim_runs_campaigns_with_downtime() {
         let report = FleetSim::run(&quick_config()).unwrap();
-        assert_eq!(report.campaigns.len(), 3, "one campaign per tenant");
+        let wide_shards =
+            report.tenants.iter().find(|t| t.name == "resnet18-w24").unwrap().shards;
+        assert_eq!(
+            report.campaigns.len(),
+            3 + wide_shards,
+            "one campaign per replica-0 segment"
+        );
         assert!(report.downtime_s > 0.0);
         for c in &report.campaigns {
             assert!(c.program_s > 0.0);
@@ -726,10 +867,23 @@ mod tests {
     fn sim_report_renders_and_serializes() {
         let report = FleetSim::run(&quick_config()).unwrap();
         let text = report.render();
-        assert!(text.contains("fleet: 3 tenants"));
-        assert!(text.contains("campaigns: 3"));
+        assert!(text.contains("fleet: 4 tenants"));
+        assert!(text.contains(&format!("campaigns: {}", report.campaigns.len())));
         let json = report.to_json();
         assert!(json.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
-        assert_eq!(json.get("campaigns").unwrap().as_f64(), Some(3.0));
+        assert_eq!(
+            json.get("campaigns").unwrap().as_f64(),
+            Some(report.campaigns.len() as f64)
+        );
+        // Shard/transfer attribution round-trips through JSON.
+        let tenants = match json.get("tenants").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("tenants must serialize as an array: {other:?}"),
+        };
+        let max_shards = tenants
+            .iter()
+            .filter_map(|t| t.get("shards").and_then(|s| s.as_f64()))
+            .fold(0.0f64, f64::max);
+        assert!(max_shards >= 2.0, "the wide tenant's shard count must serialize");
     }
 }

@@ -22,10 +22,17 @@
 //!             analytic cross-check, and the merged-wave demo on the
 //!             real stepped executor (writes DIR/serve_sim.json)
 //!   fleet-sim [--slices N] [--tenants N] [--requests N] [--seed S]
-//!             [--campaign-at FRAC] [--live] [--threads T] [--out DIR]
-//!             multi-tenant fleet simulation: placement, campaigns, QoS, wear
-//!             (writes DIR/fleet_sim.json; campaigns fire at FRAC of each
-//!             tenant's traffic horizon; T parallelizes the --live executors)
+//!             [--campaign-at FRAC] [--live] [--no-wide] [--threads T]
+//!             [--out DIR]
+//!             multi-tenant fleet simulation: placement (replica- or
+//!             shard-parallel per tenant), campaigns, QoS, wear, and
+//!             shard-chain transfer attribution. By default the fleet
+//!             includes an over-capacity wide-ResNet tenant served as a
+//!             pipelined shard chain (--no-wide restores the
+//!             replica-only fleet; --slices defaults to 8 so the chain
+//!             has room). Writes DIR/fleet_sim.json; campaigns fire at
+//!             FRAC of each tenant's traffic horizon; T parallelizes
+//!             the --live executors
 //!   bench     [--quick] [--threads T] [--json [FILE]]
 //!             hot-path micro-benchmarks, serial vs T-thread tiled execution
 //!             (engine matmul + ResNet-18 stub inference), the
@@ -35,8 +42,10 @@
 //!             compile cost vs steady-state prepared execution,
 //!             amortization ratios), the serve section (front-door knee
 //!             determinism, M/D/c cross-check, merged-execution parity),
+//!             the shard section (pipelined shard-executor parity,
+//!             over-capacity placement, hop-transfer attribution),
 //!             + fleet-sim summary; --json writes the machine-readable
-//!             perf-trajectory record (BENCH_PR7.json, or FILE when
+//!             perf-trajectory record (BENCH_PR8.json, or FILE when
 //!             given) — see PERFORMANCE.md
 //!   info      print headline perf model numbers
 
@@ -276,8 +285,9 @@ fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
     Ok(())
 }
 
-/// Multi-tenant fleet simulation (EXPERIMENTS.md E12): endurance-aware
-/// placement, mixed traffic, mid-run programming campaigns, QoS + wear
+/// Multi-tenant fleet simulation (EXPERIMENTS.md E12/E16): endurance-aware
+/// placement (replica- or shard-parallel per tenant), mixed traffic,
+/// mid-run programming campaigns, QoS + wear + shard-chain transfer
 /// report. Fully offline and deterministic for a given seed.
 fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
@@ -290,6 +300,7 @@ fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
         campaign_at_frac: args.get_f64("campaign-at", defaults.campaign_at_frac)?,
         live_serving: args.flag("live"),
         parallelism: Parallelism::threads(args.get_usize("threads", 1)?),
+        wide_tenant: !args.flag("no-wide"),
     };
     let report = FleetSim::run(&config)?;
     print!("{}", report.render());
@@ -473,9 +484,11 @@ fn cmd_serve_sim(args: &Args) -> nvm_in_cache::Result<()> {
 /// Hot-path micro-benchmarks — each parallelizable stage serial vs
 /// `--threads T` tiled execution — plus the simd_vs_scalar MAC-kernel
 /// microbench, the prepare_vs_execute section (compile-once cost vs
-/// steady-state prepared execution), and the fleet-sim summary; `--json`
-/// additionally writes the machine-readable perf-trajectory record
-/// (BENCH_PR7.json; see PERFORMANCE.md for the format and trajectory).
+/// steady-state prepared execution), the shard section (pipelined
+/// shard-executor parity, over-capacity placement, hop-transfer
+/// attribution), and the fleet-sim summary; `--json` additionally writes
+/// the machine-readable perf-trajectory record (BENCH_PR8.json; see
+/// PERFORMANCE.md for the format and trajectory).
 fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
     use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
@@ -761,8 +774,98 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         ])
     };
 
+    // Shard section: model-parallel pipelined execution across slices
+    // (PERFORMANCE.md §10). Three deterministic gates: (1) the pipelined
+    // shard executor is bit-identical (logits + trailing RNG state) to
+    // the solo forward across shard/thread counts and noise modes;
+    // (2) the default fleet places AND serves the over-capacity tenant
+    // as a shard chain; (3) the hop-staged front door's per-component
+    // attribution — transfer included — reassembles mean latency. Plus
+    // the analytic w24 chain numbers (fill latency, cadence, hop share).
+    let shard_json = {
+        use nvm_in_cache::coordinator::frontdoor::{FrontDoor, FrontDoorConfig};
+        use nvm_in_cache::fleet::ShardPlan;
+        use nvm_in_cache::pim::ShardedExecutor;
+
+        let net = nvm_in_cache::nn::ResNet::new(test_params(8, 10, 3)).compile()?;
+        let mut srng = Pcg64::seeded(88);
+        let shard_inputs: Vec<(Tensor, u64)> = (0..3)
+            .map(|i| {
+                let n = 1 + (i % 2);
+                let x: Vec<f32> = (0..n * 16 * 16 * 3).map(|_| srng.f64() as f32).collect();
+                (Tensor::from_vec(&[n, 16, 16, 3], x), 700 + i as u64)
+            })
+            .collect();
+        let mut shard_parity = true;
+        for shards in [2usize, 3] {
+            let ex = ShardedExecutor::balanced(&net, shards)?;
+            for t in [1usize, 2] {
+                let par_t = Parallelism::threads(t);
+                for mode in [ForwardMode::PimHw, ForwardMode::PimHwNoise(0.4)] {
+                    let mut scratch = program::ScratchPool::new();
+                    let (runs, trace) =
+                        ex.forward_pipelined(&shard_inputs, mode, par_t, &mut scratch);
+                    shard_parity &= trace.max_concurrent == shards;
+                    for ((x, seed), run) in shard_inputs.iter().zip(runs) {
+                        let solo = net.forward_run(x, mode, *seed, par_t, &mut scratch);
+                        shard_parity &= run.rng_fingerprint() == solo.rng_fingerprint();
+                        let (got, want) = (run.into_logits(), solo.into_logits());
+                        shard_parity &= got
+                            .data
+                            .iter()
+                            .zip(want.data.iter())
+                            .all(|(p, q)| p.to_bits() == q.to_bits());
+                    }
+                }
+            }
+        }
+
+        // Gate 2 reads the fleet bench report above (default config, so
+        // the wide tenant is present).
+        let wide = fleet_report.tenants.iter().find(|t| t.name == "resnet18-w24");
+        let overcapacity_placed = wide.is_some_and(|t| t.shards >= 2 && t.served > 0);
+
+        // Gate 3 + chain numbers: the w24 partition's committed stage and
+        // hop costs dropped into the hop-staged front door at 70% load.
+        let geom = Geometry::default();
+        let plan = ShardPlan::partition(&BankScheduler::resnet18_layers(24), &geom, 4)?;
+        let cost = plan.pipeline_cost(&geom, PimIntegration::Retained, 1)?;
+        let groups: Vec<Vec<f64>> = cost.stages.iter().map(|s| vec![s.latency_s]).collect();
+        let hops: Vec<f64> = cost.links.iter().map(|l| l.latency_s).collect();
+        let mut door = FrontDoor::new(FrontDoorConfig::for_shard_pipeline(&groups, &hops, 2));
+        door.config.requests = 2000;
+        let point = door.run_point_at(0.7 * door.capacity_rps());
+        let bd = &point.breakdown;
+        let components = bd.batcher_s + bd.router_s + bd.adc_s + bd.transfer_s + bd.pipeline_s;
+        let attribution_sums = bd.transfer_s > 0.0
+            && point.served > 0
+            && (components - point.latency.mean).abs() <= 1e-9 * point.latency.mean.max(1e-12);
+
+        println!(
+            "shard: pipeline parity s{{2,3}}×t{{1,2}} (noiseless+noisy): {shard_parity}; \
+             over-capacity tenant placed+served: {overcapacity_placed}; w24 chain {} shards, \
+             fill {:.3} ms, cadence {:.3} ms, hop share {:.2}%; transfer attribution sums: \
+             {attribution_sums}",
+            plan.shards(),
+            cost.latency_s * 1e3,
+            cost.cycle_s * 1e3,
+            100.0 * cost.transfer_latency_s / cost.latency_s,
+        );
+        Json::obj(vec![
+            ("shard_parity_bit_identical", Json::Bool(shard_parity)),
+            ("overcapacity_tenant_placed", Json::Bool(overcapacity_placed)),
+            ("pipeline_transfer_attribution_sums", Json::Bool(attribution_sums)),
+            ("w24_shards", Json::Num(plan.shards() as f64)),
+            ("w24_fill_latency_s", Json::Num(cost.latency_s)),
+            ("w24_cycle_s", Json::Num(cost.cycle_s)),
+            ("w24_transfer_latency_s", Json::Num(cost.transfer_latency_s)),
+            ("w24_transfer_energy_j", Json::Num(cost.transfer_energy_j)),
+            ("frontdoor_transfer_s", Json::Num(bd.transfer_s)),
+        ])
+    };
+
     if args.flag("json") {
-        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR7.json"));
+        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR8.json"));
         // Two sections (PERFORMANCE.md): `comparison` holds only
         // deterministic fields (workload descriptors, parity verdicts, the
         // simulated-clock fleet report) so trajectory files diff cleanly
@@ -786,6 +889,7 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
             ),
             ("fleet_sim", fleet_report.to_json()),
             ("serve", serve_json),
+            ("shard", shard_json),
         ]);
         let mut measured = vec![("benches", b.to_json())];
         if let Some(s) = speedup_engine {
@@ -822,7 +926,7 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         }
         measured.push(("simd_vs_scalar", Json::obj(svs)));
         let doc = Json::obj(vec![
-            ("pr", Json::Num(7.0)),
+            ("pr", Json::Num(8.0)),
             ("comparison", comparison),
             ("measured", Json::obj(measured)),
         ]);

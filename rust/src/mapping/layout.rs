@@ -64,7 +64,7 @@ impl NetworkLayout {
     ///
     /// let layers = [ConvShape { k: 1, d: 64, n: 64, w: 8, stride: 1 }];
     /// let a = NetworkLayout::place_from(&layers, 8, 4, 0).unwrap();
-    /// let b = NetworkLayout::place_from(&layers, 8, 4, a.end_slot().unwrap()).unwrap();
+    /// let b = NetworkLayout::place_from(&layers, 8, 4, a.next_slot()).unwrap();
     /// assert_eq!(a.slots_used, 2); // one logical tile = pos + neg slot
     /// assert_ne!(a.placements[0].pos_slot, b.placements[0].pos_slot);
     /// ```
@@ -115,12 +115,24 @@ impl NetworkLayout {
     /// First linear slot *after* this placement (where a subsequent
     /// placement on the same slice may begin). Only meaningful right after
     /// [`NetworkLayout::place_from`]; `None` for an empty layout.
+    ///
+    /// Prefer [`NetworkLayout::next_slot`] when chaining placements — it
+    /// handles the empty-layout edge without an `unwrap`.
     pub fn end_slot(&self) -> Option<usize> {
         self.placements
             .iter()
             .flat_map(|p| [p.pos_slot, p.neg_slot])
             .map(|(b, s)| b * self.subarrays_per_bank + s + 1)
             .max()
+    }
+
+    /// Non-`Option` sibling of [`NetworkLayout::end_slot`] for chained
+    /// `place_from` calls (shard segments packing onto one slice): the
+    /// first linear slot a subsequent placement may begin at, or `0` for
+    /// an empty layout (an empty placement consumed nothing, so the whole
+    /// slice is still free from slot 0).
+    pub fn next_slot(&self) -> usize {
+        self.end_slot().unwrap_or(0)
     }
 
     /// Tiles belonging to one layer.
@@ -189,14 +201,26 @@ mod tests {
     #[test]
     fn offset_placement_disjoint_from_base() {
         let a = NetworkLayout::place(&small_net(), 80, 4).unwrap();
-        let b = NetworkLayout::place_from(&small_net(), 80, 4, a.end_slot().unwrap()).unwrap();
+        let b = NetworkLayout::place_from(&small_net(), 80, 4, a.next_slot()).unwrap();
         assert_eq!(a.slots_used, b.slots_used);
         let mut seen = std::collections::HashSet::new();
         for p in a.placements.iter().chain(b.placements.iter()) {
             assert!(seen.insert(p.pos_slot));
             assert!(seen.insert(p.neg_slot));
         }
-        assert_eq!(b.end_slot().unwrap(), a.slots_used + b.slots_used);
+        assert_eq!(b.next_slot(), a.slots_used + b.slots_used);
+    }
+
+    #[test]
+    fn empty_layout_next_slot_is_zero() {
+        let l = NetworkLayout::place(&[], 80, 4).unwrap();
+        assert_eq!(l.placements.len(), 0);
+        assert_eq!(l.slots_used, 0);
+        assert_eq!(l.end_slot(), None);
+        assert_eq!(l.next_slot(), 0);
+        // A non-empty layout agrees with end_slot().
+        let a = NetworkLayout::place(&small_net(), 80, 4).unwrap();
+        assert_eq!(a.next_slot(), a.end_slot().unwrap());
     }
 
     #[test]

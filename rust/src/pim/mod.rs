@@ -23,15 +23,24 @@
 //!   ([`CompiledNet`]) mirroring one-time RRAM programming, so the
 //!   serving hot loop performs zero weight quantization/packing. See
 //!   ARCHITECTURE.md §program and PERFORMANCE.md §amortization.
+//! * [`shard_exec`] — the pipelined shard executor: drives contiguous
+//!   boundary segments of one [`CompiledNet`] as a software pipeline
+//!   (shard K runs micro-batch i while shard K−1 runs i+1),
+//!   bit-identical to the unsharded forward because every
+//!   [`program::InflightRun`] carries its own activations and RNG
+//!   stream. The placement/cost half lives in `fleet::shard`. See
+//!   ARCHITECTURE.md §fleet/shard and PERFORMANCE.md §10.
 
 pub mod engine;
 pub mod parallel;
 pub mod program;
 pub mod quant;
+pub mod shard_exec;
 pub mod transfer;
 
 pub use engine::{MacKernel, PimEngine};
 pub use parallel::Parallelism;
 pub use program::{CompiledNet, PreparedBank, PreparedWeights, ScratchPool};
+pub use shard_exec::{PipelineTrace, ShardedExecutor};
 pub use quant::{PackedActPlanes, QuantizedActs, QuantizedWeights};
 pub use transfer::TransferModel;

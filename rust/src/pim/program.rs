@@ -646,6 +646,25 @@ impl CompiledNet {
         run.into_logits()
     }
 
+    /// Like [`Self::forward_par`] but returns the completed
+    /// [`InflightRun`] instead of just its logits, so callers (the shard
+    /// parity harness, `pim::shard_exec` tests) can also compare the
+    /// trailing RNG state via [`InflightRun::rng_fingerprint`] — proving
+    /// two execution schedules drew *exactly* the same noise stream, not
+    /// merely the same outputs.
+    pub fn forward_run(
+        &self,
+        x: &Tensor,
+        mode: ForwardMode,
+        seed: u64,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> InflightRun {
+        let mut run = self.begin(x, seed);
+        while !self.step(&mut run, mode, par, scratch) {}
+        run
+    }
+
     /// Number of merge boundaries in one execution: stem, each residual
     /// block, and the pool→fc head. An [`InflightRun`] is complete once
     /// [`Self::step`] has been called this many times.
@@ -811,6 +830,16 @@ impl InflightRun {
     /// [`CompiledNet::step`] has returned `true`.
     pub fn into_logits(self) -> Tensor {
         self.h
+    }
+
+    /// Fingerprint of the run's private RNG stream position: the next
+    /// u64 the stream *would* draw (the stream itself is not advanced).
+    /// Two runs with equal logits **and** equal fingerprints consumed
+    /// identical noise-draw sequences — the bit-identity witness used by
+    /// `rust/tests/shard_parity.rs` to pin sharded pipelined execution
+    /// against the unsharded forward.
+    pub fn rng_fingerprint(&self) -> u64 {
+        self.rng.clone().next_u64()
     }
 }
 

@@ -1,0 +1,287 @@
+//! Pipelined execution of one [`CompiledNet`] split into boundary
+//! segments across cache slices (the `pim`-side half of `fleet::shard`).
+//!
+//! A shard is a *residence* concept: shard K owns the prepared weight
+//! banks for a contiguous range of merge boundaries (stem, residual
+//! blocks, head — see [`CompiledNet::boundaries`]), living on its own
+//! slice. Execution-wise, nothing new is needed beyond the PR 7 stepped
+//! API: an [`InflightRun`] carries its *own* activations and its *own*
+//! RNG stream (forked per layer in solo-forward order), so a run handed
+//! from shard K−1 to shard K and interleaved with other micro-batches
+//! draws exactly the noise stream a solo [`CompiledNet::forward_par`]
+//! would have drawn. Bit-identity of the sharded pipeline is therefore
+//! by construction, and `rust/tests/shard_parity.rs` pins it (outputs
+//! *and* trailing RNG state) across shard counts and thread counts.
+//!
+//! [`ShardedExecutor::forward_pipelined`] runs the classic software
+//! pipeline: on tick t, shard K executes micro-batch t−K while shard
+//! K−1 executes micro-batch t−K+1. The returned [`PipelineTrace`]
+//! records which (shard, micro-batch) pairs ran concurrently on each
+//! tick — the witness that overlap actually happened (fill for the
+//! first `shards−1` ticks, steady state at `shards` concurrent
+//! segments, drain at the tail).
+//!
+//! The analytic cost side (what a hop between slices costs, where the
+//! cut should fall, replica- vs shard-parallel placement) lives in
+//! `fleet::shard`; this module is purely the numerics-preserving
+//! executor.
+
+use crate::nn::{ForwardMode, Tensor};
+use crate::{Error, Result};
+
+use super::parallel::Parallelism;
+use super::program::{CompiledNet, InflightRun, ScratchPool};
+
+/// One entry of a [`PipelineTrace`] tick: `(shard, micro_batch)` ran.
+pub type TraceEntry = (usize, usize);
+
+/// Record of which segments executed on which pipeline tick.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineTrace {
+    /// Per tick, the `(shard, micro_batch)` segments that executed, in
+    /// ascending shard order.
+    pub ticks: Vec<Vec<TraceEntry>>,
+    /// Largest number of shards busy on a single tick (equals the shard
+    /// count once the pipeline reaches steady state).
+    pub max_concurrent: usize,
+}
+
+impl PipelineTrace {
+    /// Total ticks the pipeline ran (fill + steady state + drain). For
+    /// `m` micro-batches over `s` shards this is `m + s − 1` — versus
+    /// `m · s` segment-times for unpipelined sequential execution.
+    pub fn len(&self) -> usize {
+        self.ticks.len()
+    }
+
+    /// True when no tick was recorded (no inputs).
+    pub fn is_empty(&self) -> bool {
+        self.ticks.is_empty()
+    }
+}
+
+/// Drives per-shard [`CompiledNet::begin`]/[`CompiledNet::step`]
+/// segments of one compiled network, either one segment at a time
+/// ([`ShardedExecutor::step_segment`], the building block the fleet's
+/// live serving path uses per slice) or as a full software pipeline over
+/// a stream of micro-batches ([`ShardedExecutor::forward_pipelined`]).
+#[derive(Clone, Debug)]
+pub struct ShardedExecutor<'a> {
+    net: &'a CompiledNet,
+    /// Boundary indices where a new shard begins; strictly increasing,
+    /// each in `1..boundaries()`. `cuts.len() + 1` shards.
+    cuts: Vec<usize>,
+}
+
+impl<'a> ShardedExecutor<'a> {
+    /// Executor over explicit cut points. `cuts[i]` is the first
+    /// boundary owned by shard `i+1`; an empty list is the degenerate
+    /// single-shard executor (useful as a pipeline-harness baseline).
+    pub fn new(net: &'a CompiledNet, cuts: &[usize]) -> Result<ShardedExecutor<'a>> {
+        let b = net.boundaries();
+        for (i, &c) in cuts.iter().enumerate() {
+            if c == 0 || c >= b {
+                return Err(Error::Config(format!(
+                    "shard cut {c} outside 1..{b} (network has {b} boundaries)"
+                )));
+            }
+            if i > 0 && cuts[i - 1] >= c {
+                return Err(Error::Config(format!(
+                    "shard cuts must be strictly increasing (got {} then {c})",
+                    cuts[i - 1]
+                )));
+            }
+        }
+        Ok(ShardedExecutor { net, cuts: cuts.to_vec() })
+    }
+
+    /// Executor with `n_shards` near-equal boundary segments (the last
+    /// shard absorbs the remainder). Errors when the network has fewer
+    /// boundaries than shards.
+    pub fn balanced(net: &'a CompiledNet, n_shards: usize) -> Result<ShardedExecutor<'a>> {
+        let b = net.boundaries();
+        if n_shards == 0 || n_shards > b {
+            return Err(Error::Config(format!(
+                "cannot split {b} boundaries into {n_shards} shards"
+            )));
+        }
+        let cuts: Vec<usize> = (1..n_shards).map(|k| k * b / n_shards).collect();
+        Self::new(net, &cuts)
+    }
+
+    /// The compiled network this executor shards.
+    pub fn net(&self) -> &CompiledNet {
+        self.net
+    }
+
+    /// Number of shards (segments).
+    pub fn shards(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    /// Half-open boundary range `[start, end)` owned by shard `k`.
+    pub fn segment(&self, k: usize) -> (usize, usize) {
+        assert!(k < self.shards(), "shard {k} out of range");
+        let start = if k == 0 { 0 } else { self.cuts[k - 1] };
+        let end = if k == self.cuts.len() { self.net.boundaries() } else { self.cuts[k] };
+        (start, end)
+    }
+
+    /// Advance `run` through every boundary shard `k` owns. The run must
+    /// arrive exactly at the shard's first boundary (runs flow through
+    /// the chain in order); returns `true` when the whole network is
+    /// complete and [`InflightRun::into_logits`] may be taken.
+    pub fn step_segment(
+        &self,
+        k: usize,
+        run: &mut InflightRun,
+        mode: ForwardMode,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> bool {
+        let (start, end) = self.segment(k);
+        assert_eq!(
+            run.boundary(),
+            start,
+            "micro-batch arrived at shard {k} with boundary {} (expected {start})",
+            run.boundary()
+        );
+        let mut finished = false;
+        while run.boundary() < end {
+            finished = self.net.step(run, mode, par, scratch);
+        }
+        finished
+    }
+
+    /// Software-pipelined forward over a stream of `(input, seed)`
+    /// micro-batches: on each tick every occupied shard advances its
+    /// resident micro-batch one segment and hands it downstream, and a
+    /// new micro-batch is admitted into shard 0 — so shard K runs
+    /// micro-batch i while shard K−1 runs micro-batch i+1. Completed
+    /// runs are returned in input order, each bit-identical (logits and
+    /// RNG stream) to a solo `forward_par(x_i, mode, seed_i, …)`.
+    pub fn forward_pipelined(
+        &self,
+        inputs: &[(Tensor, u64)],
+        mode: ForwardMode,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> (Vec<InflightRun>, PipelineTrace) {
+        let n_shards = self.shards();
+        let mut slots: Vec<Option<(usize, InflightRun)>> = vec![None; n_shards];
+        let mut done: Vec<Option<InflightRun>> = (0..inputs.len()).map(|_| None).collect();
+        let mut next_in = 0;
+        let mut trace = PipelineTrace::default();
+        loop {
+            // Admit the next micro-batch into the (free) head shard.
+            if next_in < inputs.len() && slots[0].is_none() {
+                let (x, seed) = &inputs[next_in];
+                slots[0] = Some((next_in, self.net.begin(x, *seed)));
+                next_in += 1;
+            }
+            if slots.iter().all(Option::is_none) {
+                break;
+            }
+            // One tick: advance every occupied shard. Walking shards in
+            // reverse drains downstream slots before upstream runs move
+            // into them, so each run advances exactly one segment per
+            // tick.
+            let mut tick: Vec<TraceEntry> = Vec::new();
+            for k in (0..n_shards).rev() {
+                if let Some((idx, mut run)) = slots[k].take() {
+                    let finished = self.step_segment(k, &mut run, mode, par, scratch);
+                    tick.push((k, idx));
+                    if finished {
+                        done[idx] = Some(run);
+                    } else {
+                        slots[k + 1] = Some((idx, run));
+                    }
+                }
+            }
+            tick.reverse();
+            trace.max_concurrent = trace.max_concurrent.max(tick.len());
+            trace.ticks.push(tick);
+        }
+        let runs = done
+            .into_iter()
+            .map(|r| r.expect("pipeline drained: every admitted micro-batch completed"))
+            .collect();
+        (runs, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::resnet::test_params;
+    use crate::nn::ResNet;
+    use crate::util::rng::Pcg64;
+
+    fn tiny_net() -> CompiledNet {
+        ResNet::new(test_params(8, 10, 3)).compile().unwrap()
+    }
+
+    fn rand_input(rng: &mut Pcg64, n: usize) -> Tensor {
+        Tensor::from_vec(
+            &[n, 16, 16, 3],
+            (0..n * 16 * 16 * 3).map(|_| rng.f64() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn segments_tile_the_boundary_range() {
+        let net = tiny_net();
+        let b = net.boundaries();
+        for shards in 1..=b {
+            let ex = ShardedExecutor::balanced(&net, shards).unwrap();
+            assert_eq!(ex.shards(), shards);
+            let mut expect_start = 0;
+            for k in 0..shards {
+                let (s, e) = ex.segment(k);
+                assert_eq!(s, expect_start);
+                assert!(e > s, "shard {k} empty");
+                expect_start = e;
+            }
+            assert_eq!(expect_start, b);
+        }
+    }
+
+    #[test]
+    fn invalid_cuts_rejected() {
+        let net = tiny_net();
+        let b = net.boundaries();
+        assert!(ShardedExecutor::new(&net, &[0]).is_err());
+        assert!(ShardedExecutor::new(&net, &[b]).is_err());
+        assert!(ShardedExecutor::new(&net, &[2, 2]).is_err());
+        assert!(ShardedExecutor::new(&net, &[3, 1]).is_err());
+        assert!(ShardedExecutor::balanced(&net, 0).is_err());
+        assert!(ShardedExecutor::balanced(&net, b + 1).is_err());
+        assert!(ShardedExecutor::new(&net, &[]).is_ok());
+    }
+
+    #[test]
+    fn pipeline_overlaps_and_matches_solo_forward() {
+        let net = tiny_net();
+        let ex = ShardedExecutor::balanced(&net, 2).unwrap();
+        let mut rng = Pcg64::seeded(77);
+        let inputs: Vec<(Tensor, u64)> =
+            (0..4).map(|i| (rand_input(&mut rng, 1 + (i % 2)), 900 + i as u64)).collect();
+        let par = Parallelism::threads(1);
+        let mut scratch = ScratchPool::new();
+        let (runs, trace) =
+            ex.forward_pipelined(&inputs, ForwardMode::PimHwNoise(0.4), par, &mut scratch);
+        // Steady state reached: both shards busy on some tick, and the
+        // tick count is m + s − 1.
+        assert_eq!(trace.max_concurrent, 2);
+        assert_eq!(trace.len(), inputs.len() + ex.shards() - 1);
+        for (i, ((x, seed), run)) in inputs.iter().zip(runs).enumerate() {
+            let solo =
+                net.forward_run(x, ForwardMode::PimHwNoise(0.4), *seed, par, &mut scratch);
+            assert_eq!(run.rng_fingerprint(), solo.rng_fingerprint(), "rng diverged at {i}");
+            let (a, b) = (run.into_logits(), solo.into_logits());
+            assert_eq!(a.shape, b.shape);
+            let eq = a.data.iter().zip(b.data.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "logits diverged at micro-batch {i}");
+        }
+    }
+}

@@ -32,6 +32,16 @@ fn fleet_sim_end_to_end_acceptance() {
     // wear than the single initial programming cycle.
     let max_wear = report.wear.iter().map(|w| w.max_cycles()).fold(0.0, f64::max);
     assert!(max_wear >= 2.0, "reprogramming recorded on top of initial: {max_wear}");
+    // PR 8 acceptance: the over-capacity tenant is placed as a shard
+    // chain, actually serves, and its per-hop transfer cost is visible.
+    let wide = report
+        .tenants
+        .iter()
+        .find(|t| t.name == "resnet18-w24")
+        .expect("the default fleet includes the over-capacity tenant");
+    assert!(wide.shards >= 2, "over-capacity tenant must run sharded");
+    assert!(wide.served > 0, "the shard chain must serve traffic");
+    assert!(wide.transfer_s > 0.0 && wide.transfer_energy_j > 0.0);
 }
 
 /// The whole run — placement, traffic, campaign interleave, wear — is
@@ -122,7 +132,8 @@ fn fleet_live_pass_serves_through_real_servers() {
     };
     let report = FleetSim::run(&cfg).unwrap();
     let live = report.live.expect("live summary present");
-    assert_eq!(live.requests, 3 * 40);
+    // 3 synthetic tenants + the default wide tenant.
+    assert_eq!(live.requests, 4 * 40);
     assert_eq!(live.responses, live.requests, "every live request answered");
     assert!(live.batches > 0 && live.batches <= live.requests);
 }
@@ -133,7 +144,8 @@ fn fleet_live_pass_serves_through_real_servers() {
 /// between segments; compilations stay put).
 #[test]
 fn fleet_live_pass_compiles_once_per_tenant_replica() {
-    let reg = ModelRegistry::synthetic(3);
+    // Mirror the default fleet: synthetic tenants + the wide tenant.
+    let reg = ModelRegistry::synthetic_with_wide(3);
     let total_replicas: u64 = reg.tenants.iter().map(|t| t.replicas as u64).sum();
     let cfg = FleetSimConfig {
         requests_per_tenant: 40,

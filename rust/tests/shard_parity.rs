@@ -1,0 +1,200 @@
+//! Differential suite pinning model-parallel sharded execution
+//! bit-identical to the solo forward path (ISSUE 8 acceptance;
+//! EXPERIMENTS.md E16).
+//!
+//! Three angles:
+//!
+//! * Fixed shard counts {2, 3} × thread counts {1, 2, 7}, noiseless
+//!   (`PimHw`) and noisy (`PimHwNoise`), logits *and* trailing RNG
+//!   fingerprints compared bit-for-bit against `CompiledNet::forward_run`.
+//! * Proptest-style randomized cut points: seeded random strictly
+//!   increasing cut sets must conserve the outputs regardless of where
+//!   the pipeline is severed (the seed is in every assert message, so a
+//!   failure is replayable).
+//! * Placer invariants on the default wide fleet: the over-capacity
+//!   tenant shards across distinct slices, fitting tenants stay
+//!   replica-parallel, and per-bank wear stays within the endurance
+//!   budget for every placed segment.
+
+use nvm_in_cache::cache::addr::Geometry;
+use nvm_in_cache::fleet::{EndurancePlacer, EndurancePolicy, ModelRegistry};
+use nvm_in_cache::nn::resnet::test_params;
+use nvm_in_cache::nn::{ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::program::{CompiledNet, ScratchPool};
+use nvm_in_cache::pim::{Parallelism, ShardedExecutor};
+use nvm_in_cache::util::rng::Pcg64;
+
+/// Thread counts every parity claim is checked at (serial, the smallest
+/// real pool, and an uneven count that exercises remainder tiling).
+const THREADS: [usize; 3] = [1, 2, 7];
+
+fn tiny_net() -> CompiledNet {
+    ResNet::new(test_params(8, 10, 3)).compile().unwrap()
+}
+
+fn rand_input(rng: &mut Pcg64, n: usize) -> Tensor {
+    Tensor::from_vec(&[n, 16, 16, 3], (0..n * 16 * 16 * 3).map(|_| rng.f64() as f32).collect())
+}
+
+/// Assert one pipelined run equals its solo reference, bits and RNG.
+fn assert_run_matches_solo(
+    net: &CompiledNet,
+    inputs: &[(Tensor, u64)],
+    runs: Vec<nvm_in_cache::pim::program::InflightRun>,
+    mode: ForwardMode,
+    par: Parallelism,
+    ctx: &str,
+) {
+    let mut scratch = ScratchPool::new();
+    for (i, ((x, seed), run)) in inputs.iter().zip(runs).enumerate() {
+        let solo = net.forward_run(x, mode, *seed, par, &mut scratch);
+        assert_eq!(
+            run.rng_fingerprint(),
+            solo.rng_fingerprint(),
+            "RNG stream diverged at micro-batch {i} ({ctx})"
+        );
+        let (a, b) = (run.into_logits(), solo.into_logits());
+        assert_eq!(a.shape, b.shape, "shape diverged at micro-batch {i} ({ctx})");
+        let eq = a.data.iter().zip(b.data.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(eq, "logits diverged at micro-batch {i} ({ctx})");
+    }
+}
+
+/// The tentpole parity matrix: shard counts {2, 3} × threads {1, 2, 7},
+/// noiseless and noisy, every micro-batch bit-identical to solo.
+#[test]
+fn sharded_pipeline_bit_identical_across_shards_and_threads() {
+    let net = tiny_net();
+    assert!(net.boundaries() >= 3, "test net must admit a 3-way split");
+    let mut rng = Pcg64::seeded(2024);
+    let inputs: Vec<(Tensor, u64)> =
+        (0..4).map(|i| (rand_input(&mut rng, 1 + (i % 2)), 5000 + i as u64)).collect();
+    for shards in [2usize, 3] {
+        let ex = ShardedExecutor::balanced(&net, shards).unwrap();
+        for threads in THREADS {
+            let par = Parallelism::threads(threads);
+            for mode in [ForwardMode::PimHw, ForwardMode::PimHwNoise(0.4)] {
+                let mut scratch = ScratchPool::new();
+                let (runs, trace) = ex.forward_pipelined(&inputs, mode, par, &mut scratch);
+                assert_eq!(
+                    trace.max_concurrent, shards,
+                    "pipeline never reached steady state at {shards} shards"
+                );
+                assert_eq!(
+                    trace.len(),
+                    inputs.len() + shards - 1,
+                    "pipelining must take m + s − 1 ticks, not m · s"
+                );
+                let ctx = format!("{shards} shards, {threads} threads, {mode:?}");
+                assert_run_matches_solo(&net, &inputs, runs, mode, par, &ctx);
+            }
+        }
+    }
+}
+
+/// The degenerate single-shard executor (no cuts) is exactly the solo
+/// forward — the baseline the pipeline harness is anchored to.
+#[test]
+fn single_shard_executor_degenerates_to_solo() {
+    let net = tiny_net();
+    let ex = ShardedExecutor::new(&net, &[]).unwrap();
+    let mut rng = Pcg64::seeded(7);
+    let inputs = vec![(rand_input(&mut rng, 2), 71u64), (rand_input(&mut rng, 1), 72u64)];
+    let par = Parallelism::threads(2);
+    let mut scratch = ScratchPool::new();
+    let (runs, trace) =
+        ex.forward_pipelined(&inputs, ForwardMode::PimHwNoise(0.4), par, &mut scratch);
+    assert_eq!(trace.max_concurrent, 1, "one shard cannot overlap");
+    assert_run_matches_solo(
+        &net,
+        &inputs,
+        runs,
+        ForwardMode::PimHwNoise(0.4),
+        par,
+        "degenerate single shard",
+    );
+}
+
+/// Proptest-style: random strictly increasing cut sets conserve the
+/// outputs. Every case's seed appears in the assert context, so any
+/// failure replays with a one-line filter.
+#[test]
+fn random_cut_points_conserve_outputs() {
+    const CASES: u64 = 12;
+    let net = tiny_net();
+    let b = net.boundaries();
+    for case in 0..CASES {
+        let mut rng = Pcg64::seeded(0xC0DE + case);
+        // 1..=3 cuts drawn without replacement from 1..b, sorted.
+        let n_cuts = 1 + (rng.below(3) as usize).min(b - 2);
+        let mut cuts: Vec<usize> = Vec::new();
+        while cuts.len() < n_cuts {
+            let c = 1 + rng.below((b - 1) as u64) as usize;
+            if !cuts.contains(&c) {
+                cuts.push(c);
+            }
+        }
+        cuts.sort_unstable();
+        let ex = ShardedExecutor::new(&net, &cuts).unwrap();
+        let batch = 1 + rng.below(2) as usize;
+        let inputs = vec![(rand_input(&mut rng, batch), 9000 + case)];
+        let par = Parallelism::threads(2);
+        let mut scratch = ScratchPool::new();
+        let (runs, _) =
+            ex.forward_pipelined(&inputs, ForwardMode::PimHwNoise(0.4), par, &mut scratch);
+        let ctx = format!("case {case}, cuts {cuts:?}, batch {batch}");
+        assert_run_matches_solo(&net, &inputs, runs, ForwardMode::PimHwNoise(0.4), par, &ctx);
+    }
+}
+
+/// Placer invariants on the default wide fleet (the `repro fleet-sim`
+/// configuration): the over-capacity tenant becomes a chain of segments
+/// on distinct slices, every fitting tenant stays replica-parallel, no
+/// slice overflows, and wear stays inside the endurance budget.
+#[test]
+fn placer_invariants_hold_for_the_wide_fleet() {
+    let geom = Geometry::default();
+    let reg = ModelRegistry::synthetic_with_wide(3);
+    let placement = EndurancePlacer::new(geom, 8).place(&reg).unwrap();
+    let capacity = geom.banks_per_slice * geom.subarrays_per_bank;
+
+    // Fitting tenants are untouched by the shard machinery.
+    for t in 0..3 {
+        assert_eq!(placement.tenant_shards(t), 1, "tenant {t} must stay replica-parallel");
+        assert!(placement.tenant_replicas(t).iter().all(|r| r.n_shards == 1));
+    }
+
+    // The wide tenant shards, and each replica's chain spreads across
+    // distinct slices covering the layer list contiguously.
+    let wide = reg
+        .tenants
+        .iter()
+        .find(|t| t.name == "resnet18-w24")
+        .expect("wide tenant present")
+        .id;
+    let shards = placement.tenant_shards(wide);
+    assert!(shards >= 2, "over-capacity tenant must shard");
+    for replica in 0..reg.tenants[wide].replicas {
+        let chain = placement.replica_chain(wide, replica);
+        assert_eq!(chain.len(), shards);
+        let mut slices = std::collections::HashSet::new();
+        let mut next_layer = 0;
+        for (k, seg) in chain.iter().enumerate() {
+            assert_eq!(seg.shard, k, "chain out of order");
+            assert!(slices.insert(seg.slice), "chain segments must land on distinct slices");
+            assert_eq!(seg.layer_range.0, next_layer, "segments must tile the layer list");
+            next_layer = seg.layer_range.1.max(next_layer);
+        }
+        assert_eq!(next_layer, reg.tenants[wide].layers().len());
+    }
+
+    // Physical sanity: no slice overflows, and the post-initial-programming
+    // wear of every slice — shard segments included — is within budget.
+    for (s, &used) in placement.slots_used.iter().enumerate() {
+        assert!(used <= capacity, "slice {s} overcommitted: {used}/{capacity}");
+    }
+    let policy = EndurancePolicy::default();
+    for (s, w) in placement.wear.iter().enumerate() {
+        assert!(w.within(&policy), "slice {s} outside the endurance window");
+    }
+}

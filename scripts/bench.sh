@@ -2,9 +2,11 @@
 # Machine-readable perf-trajectory record for this PR: runs the hot-path
 # micro-benchmarks (serial vs N-thread tiled execution, plus the
 # simd_vs_scalar MAC-kernel race), the serve section (front-door knee
-# determinism, M/D/c queueing cross-check, merged-execution parity), and
-# the fleet-sim summary, then writes BENCH_PR7.json at the repository
-# root (so BENCH_*.json accumulates across PRs — see PERFORMANCE.md).
+# determinism, M/D/c queueing cross-check, merged-execution parity), the
+# shard section (pipelined shard-executor parity, over-capacity
+# placement, hop-transfer attribution), and the fleet-sim summary, then
+# writes BENCH_PR8.json at the repository root (so BENCH_*.json
+# accumulates across PRs — see PERFORMANCE.md).
 #
 # The record has two sections: `comparison` (deterministic — workload
 # descriptors, bit-exactness parity verdicts including the
@@ -23,7 +25,7 @@ set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-OUT="${1:-BENCH_PR7.json}"
+OUT="${1:-BENCH_PR8.json}"
 THREADS="${2:-4}"
 
 cargo run --release --bin repro -- bench --json "$OUT" --threads "$THREADS"

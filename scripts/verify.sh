@@ -40,6 +40,15 @@ if [ -f rust/tests/serve_sim.rs ]; then
   cargo test --release -q --test serve_sim
 fi
 
+# Shard-parity differential suite in release too: the pipelined shard
+# executor races the solo forward bit-for-bit (logits + RNG stream)
+# across shard/thread counts, and the heavy noisy-mode matrix is only
+# tolerable with optimizations on.
+if [ -f rust/tests/shard_parity.rs ]; then
+  echo "== cargo test --release -q --test shard_parity =="
+  cargo test --release -q --test shard_parity
+fi
+
 echo "== cargo test --doc =="
 cargo test --doc -q
 
