@@ -1,0 +1,113 @@
+"""Pure-jnp oracle for the quantized transformer block on PIM banks.
+
+This is the *functional specification* of the attention workload mapping
+(ARCHITECTURE.md section pim/attn): the weight-stationary matmuls of a
+pre-norm transformer block — fused QKV projection, attention output
+projection W_O, both FFN layers, and the mean-pool classifier head — run
+through the 4-bit PIM MAC pipeline (`ref.pim_mac`, one pos and one neg
+bank per weight matrix), while the *dynamic* matmuls Q.K^T and A.V —
+activation x activation, which would cost an RRAM write campaign per
+request if banked — stay exact digital in every mode.
+
+The Rust straight-line witness (`rust/src/pim/attn.rs::spec_attn`)
+restates this choreography scalar-for-scalar against the exact ADC LUT;
+`CompiledTransformer` must match *it* bit-for-bit (enforced by
+`rust/tests/transformer_parity.rs`). This file is the cross-language
+doc-spec of the same block, mirroring `ref.py`'s role for the MAC core.
+"""
+
+import jax.numpy as jnp
+
+from . import ref
+
+ACT_LEVELS = 15.0  # 4-bit unsigned activation codes
+W_LEVELS = 15.0  # 4-bit weight magnitude per pos/neg bank
+
+
+def quantize_acts(a):
+    """Per-tensor unsigned 4-bit activation quantization
+    (`rust/src/pim/quant.rs::quantize_acts`): scale = max/15 (floored at
+    1e-6), codes = round(a/scale) clipped to [0, 15]. The PIM path clips
+    inputs at zero *before* this (unsigned lanes — the ReLU-before-bank
+    convention), which the callers below apply explicitly."""
+    scale = jnp.maximum(jnp.max(a), 1e-6) / ACT_LEVELS
+    return jnp.clip(jnp.round(a / scale), 0.0, ACT_LEVELS), scale
+
+
+def quantize_weights(w):
+    """Signed weights to pos/neg 4-bit banks with per-column scales
+    (`quant.rs::quantize_weights`): s[j] = max_i |w[i,j]| / 15,
+    q = clip(round(w/s), -15, 15), split by sign."""
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-6) / W_LEVELS
+    q = jnp.clip(jnp.round(w / scale), -W_LEVELS, W_LEVELS)
+    return jnp.maximum(q, 0.0), jnp.maximum(-q, 0.0), scale
+
+
+def bank_linear(x, w, b, corner: str = "TT"):
+    """One weight-stationary linear on prepared banks: clip the input at
+    zero, quantize, run pos and neg banks through the full per-bit-plane
+    ADC pipeline, recombine as (pos - neg) * a_scale * w_scale[j], add
+    the digital fp32 bias. Mirrors `pim::program::spec_matmul` plus the
+    bias placement of `spec_attn`'s `mm`."""
+    qa, a_scale = quantize_acts(jnp.maximum(x, 0.0))
+    pos, neg, w_scale = quantize_weights(w)
+    mac = ref.pim_mac(qa, pos, corner) - ref.pim_mac(qa, neg, corner)
+    return mac * a_scale * w_scale[None, :] + b[None, :]
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise layer norm over the last axis (`nn/transformer.rs`),
+    population variance, then gamma/beta affine."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attn_context(qkv, n_heads, causal: bool):
+    """Multi-head scaled-dot-product attention from a fused QKV buffer
+    [S, 3D] — the *dynamic* core (`pim/attn.rs::attn_context`): per head,
+    scores = Q.K^T / sqrt(d_h) (exact digital — both operands change per
+    request), optional causal -inf mask, row softmax, context = A.V,
+    heads re-concatenated. No quantization, no banks, no noise draws."""
+    s, d3 = qkv.shape
+    d = d3 // 3
+    dh = d // n_heads
+    out = []
+    for h in range(n_heads):
+        q = qkv[:, h * dh : (h + 1) * dh]
+        k = qkv[:, d + h * dh : d + (h + 1) * dh]
+        v = qkv[:, 2 * d + h * dh : 2 * d + (h + 1) * dh]
+        scores = (q @ k.T) / jnp.sqrt(float(dh))
+        if causal:
+            mask = jnp.triu(jnp.ones((s, s), bool), k=1)
+            scores = jnp.where(mask, -jnp.inf, scores)
+        a = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+        a = a / jnp.sum(a, axis=-1, keepdims=True)
+        out.append(a @ v)
+    return jnp.concatenate(out, axis=-1)
+
+
+def transformer_block(h, p, n_heads, causal: bool, corner: str = "TT"):
+    """One pre-norm block on a [S, D] sequence: LN -> fused QKV (banks)
+    -> attention (digital) -> W_O (banks) -> residual; LN -> FF1 (banks)
+    -> ReLU -> FF2 (banks) -> residual. `p` holds g1/b1, wqkv/bqkv,
+    wo/bo, g2/b2, wf1/bf1, wf2/bf2 — the `t{i}/...` parameter names of
+    `nn::transformer::test_tfm_params`."""
+    a = layer_norm(h, p["g1"], p["b1"])
+    qkv = bank_linear(a, p["wqkv"], p["bqkv"], corner)
+    ctx = attn_context(qkv, n_heads, causal)
+    h = h + bank_linear(ctx, p["wo"], p["bo"], corner)
+    f = layer_norm(h, p["g2"], p["b2"])
+    f = jnp.maximum(bank_linear(f, p["wf1"], p["bf1"], corner), 0.0)
+    return h + bank_linear(f, p["wf2"], p["bf2"], corner)
+
+
+def transformer_forward(x, blocks, head_w, head_b, n_heads, causal=False, corner="TT"):
+    """The full classifier on one [S, D] sequence: stacked blocks, mean
+    pool over the sequence axis, bank linear head with digital bias —
+    the jnp restatement of `spec_attn` (hardware-true, noiseless)."""
+    h = x
+    for p in blocks:
+        h = transformer_block(h, p, n_heads, causal, corner)
+    pooled = jnp.mean(h, axis=0, keepdims=True)
+    return bank_linear(pooled, head_w, head_b, corner)

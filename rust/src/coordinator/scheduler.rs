@@ -83,6 +83,32 @@ impl BankScheduler {
         layers
     }
 
+    /// The transformer-block layer-cost profile: the weight-stationary
+    /// matmuls of [`crate::nn::transformer::TfmConfig`]-shaped encoder
+    /// blocks (fused QKV, attention output projection, and the 2-layer
+    /// FFN with `d_ff = 2·d_model`, per block, then the pooled
+    /// classifier head), folded as 1×1 convs the conv mapper places
+    /// like any FC layer. The 16-token sequence is framed 4×4 so each
+    /// token is one output pixel — 16 bit-serial invocation chains per
+    /// sequence, matching `ow²` in [`Self::layer_costs`].
+    ///
+    /// The two dynamic attention matmuls (Q·Kᵀ, A·V) are deliberately
+    /// absent: they have no stationary operand, execute digitally in
+    /// every mode ([`crate::pim::attn`]), and therefore occupy no banks
+    /// and pay no bit-serial windows.
+    pub fn transformer_layers(d_model: usize, n_blocks: usize) -> Vec<ConvShape> {
+        let d_ff = 2 * d_model;
+        let mut layers = Vec::with_capacity(4 * n_blocks + 1);
+        for _ in 0..n_blocks {
+            layers.push(ConvShape { k: 1, d: d_model, n: 3 * d_model, w: 4, stride: 1 }); // QKV
+            layers.push(ConvShape { k: 1, d: d_model, n: d_model, w: 4, stride: 1 }); // Wo
+            layers.push(ConvShape { k: 1, d: d_model, n: d_ff, w: 4, stride: 1 }); // FF1
+            layers.push(ConvShape { k: 1, d: d_ff, n: d_model, w: 4, stride: 1 }); // FF2
+        }
+        layers.push(ConvShape { k: 1, d: d_model, n: 10, w: 1, stride: 1 }); // head
+        layers
+    }
+
     /// Program all layer weights into their assigned arrays (one-time cost;
     /// destructive to resident cache data — metered by the controller).
     pub fn program_network(&mut self) -> f64 {
@@ -196,6 +222,30 @@ mod tests {
         let s = sched(PimIntegration::Retained);
         assert!(s.layout.occupancy() <= 1.0);
         assert!(s.layout.placements.len() > 20, "ResNet-18 has many tiles");
+    }
+
+    #[test]
+    fn transformer_layers_fit_and_cost() {
+        let layers = BankScheduler::transformer_layers(64, 2);
+        assert_eq!(layers.len(), 4 * 2 + 1);
+        let mut s = BankScheduler::new(layers, Geometry::default(), PimIntegration::Retained)
+            .expect("default LLC slice must fit the tiny transformer");
+        assert!(s.layout.occupancy() <= 1.0);
+        s.program_network();
+        let per_layer = s.layer_costs(1);
+        assert!(per_layer.iter().all(|c| c.latency_s > 0.0 && c.energy_j > 0.0));
+        // QKV is the widest matmul of a block, so it must dominate the
+        // block's per-stage cost profile.
+        assert!(per_layer[0].ops > per_layer[1].ops);
+        // The wider geometry costs strictly more per sequence.
+        let mut b = BankScheduler::new(
+            BankScheduler::transformer_layers(128, 2),
+            Geometry::default(),
+            PimIntegration::Retained,
+        )
+        .expect("default LLC slice must fit the base transformer");
+        b.program_network();
+        assert!(b.batch_cost(1).ops > s.batch_cost(1).ops);
     }
 
     #[test]

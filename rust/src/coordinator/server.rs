@@ -367,23 +367,29 @@ impl Drop for Server {
     }
 }
 
-/// Native-engine executor (no runtime backend): serves a compiled weight
-/// program ([`crate::pim::program::CompiledNet`]) in a fixed forward
-/// mode. The program is compiled **once** (at construction, or shared in
-/// via [`NativeExecutor::from_program`] — e.g. across campaign rewarms in
-/// `fleet::sim`) and every batch is pure prepared execution over the
-/// executor's reusable scratch pool; the worker-pool width rides on the
-/// program ([`crate::pim::program::CompiledNet::parallelism`]).
+/// Native-engine executor (no runtime backend): serves any compiled
+/// weight program behind [`crate::pim::program::SteppedProgram`] — a
+/// [`crate::pim::program::CompiledNet`] by default, or a
+/// [`crate::pim::attn::CompiledTransformer`] via
+/// [`NativeExecutor::from_program`] — in a fixed forward mode. The
+/// program is compiled **once** (at construction, or shared in via
+/// `from_program` — e.g. across campaign rewarms in `fleet::sim`) and
+/// every batch is pure prepared execution over the executor's reusable
+/// scratch pool; the worker-pool width rides on the program
+/// ([`crate::pim::program::SteppedProgram::parallelism`]).
 ///
 /// Also the reference stepped executor: it implements
 /// [`Executor::begin_group`]/[`Executor::step_groups`] over
 /// [`crate::pim::program::InflightRun`], so a [`BatchMode::Continuous`]
 /// server merges new requests into the in-flight execution at layer
 /// boundaries — each group bit-identical to its solo `classify()` run
-/// and still prepare-free at every boundary.
-pub struct NativeExecutor {
+/// and still prepare-free at every boundary. Both workload families
+/// ride the same merge loop: a transformer executor's `dims` are
+/// `(seq_len, d_model, 1)` and each "image" is one token sequence.
+pub struct NativeExecutor<P: crate::pim::program::SteppedProgram = crate::pim::program::CompiledNet>
+{
     /// The compiled weight program (shareable across executors/threads).
-    pub program: std::sync::Arc<crate::pim::program::CompiledNet>,
+    pub program: std::sync::Arc<P>,
     /// Forward mode (baseline / PIM emulation / hardware-true).
     pub mode: crate::nn::ForwardMode,
     /// Image dimensions (h, w, c).
@@ -418,27 +424,33 @@ impl NativeExecutor {
         };
         Ok(Self::from_program(std::sync::Arc::new(program), mode, dims, seed))
     }
+}
 
+impl<P: crate::pim::program::SteppedProgram> NativeExecutor<P> {
     /// Wrap an already-compiled program — the execute-many form: the same
     /// `Arc` can back many executors and survive server teardown/rewarm
-    /// without recompiling.
+    /// without recompiling. Generic over [`SteppedProgram`]
+    /// implementations, so transformer programs serve through the exact
+    /// same front door as CNNs.
     ///
     /// Debug builds reject a hardware-true mode paired with a dense-only
     /// program up front: that combination would silently re-prepare every
     /// layer on every batch (the exact pathology the program layer
     /// removes).
+    ///
+    /// [`SteppedProgram`]: crate::pim::program::SteppedProgram
     pub fn from_program(
-        program: std::sync::Arc<crate::pim::program::CompiledNet>,
+        program: std::sync::Arc<P>,
         mode: crate::nn::ForwardMode,
         dims: (usize, usize, usize),
         seed: u64,
-    ) -> NativeExecutor {
+    ) -> NativeExecutor<P> {
         use crate::nn::ForwardMode;
         debug_assert!(
             !matches!(mode, ForwardMode::PimHw | ForwardMode::PimHwNoise(_))
                 || program.fully_prepared(),
             "hardware-true NativeExecutor requires a fully prepared program \
-             (use ResNet::compile, not CompiledNet::compile_dense)"
+             (compile with bank preparation, not compile_dense)"
         );
         NativeExecutor {
             program,
@@ -452,7 +464,7 @@ impl NativeExecutor {
     }
 }
 
-impl Executor for NativeExecutor {
+impl<P: crate::pim::program::SteppedProgram> Executor for NativeExecutor<P> {
     fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<u8>> {
         let (h, w, c) = self.dims;
         let x = crate::nn::Tensor::from_vec(&[n, h, w, c], images.to_vec());
@@ -492,9 +504,8 @@ impl Executor for NativeExecutor {
         let mut done = Vec::new();
         let mut keep = Vec::with_capacity(self.inflight.len());
         for (gid, mut run) in std::mem::take(&mut self.inflight) {
-            let finished =
-                self.program
-                    .step(&mut run, self.mode, self.program.parallelism, &mut self.scratch);
+            let par = self.program.parallelism();
+            let finished = self.program.step(&mut run, self.mode, par, &mut self.scratch);
             if finished {
                 let logits = run.into_logits();
                 done.push(FinishedGroup {

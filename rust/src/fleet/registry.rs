@@ -34,6 +34,13 @@ pub enum ModelFamily {
     /// A compact 6-layer CNN (≈92 slots) so several tenants can share one
     /// slice — the packing case the wear-leveling placer exists for.
     Cnn6,
+    /// A small quantized transformer encoder
+    /// ([`crate::nn::transformer::TfmConfig`]-shaped, 2 blocks): the
+    /// weight-stationary matmuls (QKV, output projection, FFN, head)
+    /// occupy banks via
+    /// [`BankScheduler::transformer_layers`]; the dynamic attention
+    /// matmuls are digital and occupy nothing. `width` is `d_model`.
+    Transformer,
 }
 
 /// One tenant: a model plus its traffic contract.
@@ -45,11 +52,13 @@ pub struct TenantSpec {
     pub name: String,
     /// Topology family.
     pub family: ModelFamily,
-    /// Trunk width (channel-count knob; keep ≤ 16 so channels stay within
-    /// one 128-row tile for the live executor — wider tenants are legal
-    /// for the analytic/placement path and overflow a slice, which is
-    /// exactly what forces the shard-parallel mode in
-    /// [`crate::fleet::shard`]).
+    /// Trunk width. For CNN families this is the channel-count knob
+    /// (keep ≤ 16 so channels stay within one 128-row tile for the live
+    /// executor — wider tenants are legal for the analytic/placement
+    /// path and overflow a slice, which is exactly what forces the
+    /// shard-parallel mode in [`crate::fleet::shard`]). For
+    /// [`ModelFamily::Transformer`] it is `d_model` (64 or 128 for the
+    /// standard tenants).
     pub width: usize,
     /// Which runtime variant the tenant's replicas execute.
     pub variant: ModelVariant,
@@ -79,6 +88,7 @@ impl TenantSpec {
                     ConvShape { k: 1, d: 4 * w, n: 10, w: 1, stride: 1 }, // FC
                 ]
             }
+            ModelFamily::Transformer => BankScheduler::transformer_layers(self.width, 2),
         }
     }
 }
@@ -161,6 +171,38 @@ impl ModelRegistry {
         reg
     }
 
+    /// A transformer tenant at `d_model` ∈ {64, 128} — the standard
+    /// second-family tenants (`tfm-tiny-d64`, `tfm-base-d128`). Both
+    /// fit comfortably on one slice (their bank-resident layers are 1×1
+    /// matmuls), so they place replica-parallel and pack alongside the
+    /// compact CNNs.
+    pub fn tfm_tenant(d_model: usize, replicas: usize) -> TenantSpec {
+        let name = match d_model {
+            64 => "tfm-tiny-d64".to_string(),
+            128 => "tfm-base-d128".to_string(),
+            d => format!("tfm-d{d}"),
+        };
+        TenantSpec {
+            id: 0, // assigned by register()
+            name,
+            family: ModelFamily::Transformer,
+            width: d_model,
+            variant: ModelVariant::Pim,
+            replicas,
+            utilization: 0.35,
+            qos: QosSpec { deadline_s: 0.03, max_violation_frac: 0.01 },
+        }
+    }
+
+    /// Append the two standard transformer tenants, making this a mixed
+    /// CNN+transformer fleet (the default `fleet-sim` scenario;
+    /// `--no-tfm` skips this).
+    pub fn with_transformers(mut self) -> ModelRegistry {
+        self.register(Self::tfm_tenant(64, 2));
+        self.register(Self::tfm_tenant(128, 1));
+        self
+    }
+
     /// Number of tenants.
     pub fn len(&self) -> usize {
         self.tenants.len()
@@ -213,6 +255,34 @@ mod tests {
         assert_eq!(reg.len(), 4);
         assert_eq!(reg.tenants[3].name, "resnet18-w24");
         assert_eq!(reg.tenants[3].id, 3);
+    }
+
+    #[test]
+    fn transformer_tenants_round_trip_and_fit_one_slice() {
+        use crate::mapping::layout::NetworkLayout;
+        let reg = ModelRegistry::synthetic_with_wide(3).with_transformers();
+        assert_eq!(reg.len(), 6, "3 synthetic + wide + 2 transformers");
+        let tiny = &reg.tenants[4];
+        let base = &reg.tenants[5];
+        assert_eq!(tiny.name, "tfm-tiny-d64");
+        assert_eq!(base.name, "tfm-base-d128");
+        assert_eq!((tiny.id, base.id), (4, 5));
+        assert_eq!(tiny.family, ModelFamily::Transformer);
+        // 4 bank-resident layers per block × 2 blocks + head.
+        assert_eq!(tiny.layers().len(), 9);
+        // Unlike the wide CNN tenant, both transformer geometries place
+        // replica-parallel: a whole replica fits one slice.
+        for t in [tiny, base] {
+            assert!(
+                NetworkLayout::place(&t.layers(), 80, 4).is_some(),
+                "{} must fit one slice",
+                t.name
+            );
+        }
+        // The base geometry is strictly larger.
+        let small = NetworkLayout::place(&tiny.layers(), 80, 4).unwrap();
+        let big = NetworkLayout::place(&base.layers(), 80, 4).unwrap();
+        assert!(big.slots_used > small.slots_used);
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub struct FleetSimConfig {
     /// report exercises chain routing and per-hop transfer attribution
     /// (`fleet-sim --no-wide` disables it).
     pub wide_tenant: bool,
+    /// Also register the two standard transformer tenants
+    /// ([`ModelRegistry::with_transformers`]: `tfm-tiny-d64`,
+    /// `tfm-base-d128`), making the default scenario a mixed
+    /// CNN+transformer fleet with per-tenant attribution for both
+    /// families (`fleet-sim --no-tfm` disables it).
+    pub transformer_tenants: bool,
 }
 
 impl Default for FleetSimConfig {
@@ -65,6 +71,7 @@ impl Default for FleetSimConfig {
             live_serving: false,
             parallelism: crate::pim::parallel::Parallelism::serial(),
             wide_tenant: true,
+            transformer_tenants: true,
         }
     }
 }
@@ -81,9 +88,10 @@ impl FleetSimConfig {
     /// never lag a config change.
     pub fn bench_label(&self) -> String {
         format!(
-            "fleet_sim_{}t{}_{}s_{}req",
+            "fleet_sim_{}t{}{}_{}s_{}req",
             self.tenants,
             if self.wide_tenant { "+w" } else { "" },
+            if self.transformer_tenants { "+tfm" } else { "" },
             self.n_slices,
             self.requests_per_tenant
         )
@@ -351,6 +359,8 @@ impl FleetSim {
         } else {
             ModelRegistry::synthetic(config.tenants)
         };
+        let registry =
+            if config.transformer_tenants { registry.with_transformers() } else { registry };
 
         // Endurance-aware placement *first*: the placer (via
         // [`crate::fleet::shard::choose_mode`]) decides replica- vs
@@ -685,14 +695,34 @@ impl FleetSim {
         use crate::coordinator::server::{Executor, NativeExecutor, Server, ServerConfig};
         use crate::coordinator::{BatcherConfig, InferenceRequest};
         use crate::nn::resnet::test_params;
-        use crate::nn::{ForwardMode, ResNet};
+        use crate::nn::transformer::{test_tfm_params, TfmConfig};
+        use crate::nn::{ForwardMode, ResNet, Transformer};
+        use crate::pim::attn::CompiledTransformer;
+        use crate::pim::program::CompiledNet;
+
+        use super::registry::ModelFamily;
+
+        /// The compiled program a live replica serves — either workload
+        /// family, behind the same generic [`NativeExecutor`].
+        #[derive(Clone)]
+        enum LiveProgram {
+            Cnn(Arc<CompiledNet>),
+            Tfm(Arc<CompiledTransformer>),
+        }
 
         const DIMS: (usize, usize, usize) = (16, 16, 3);
-        let elems = DIMS.0 * DIMS.1 * DIMS.2;
         let mut summary =
             LiveSummary { requests: 0, responses: 0, batches: 0, compilations: 0, segments: 0 };
         for tenant in &registry.tenants {
             let tenant_seed = tenant.id as u64;
+            // Per-tenant payload geometry: CNN tenants submit 16×16×3
+            // frames; transformer tenants submit seq_len × d_model token
+            // sequences framed as (seq_len, d_model, 1).
+            let dims = match tenant.family {
+                ModelFamily::Transformer => (16usize, tenant.width, 1usize),
+                _ => DIMS,
+            };
+            let elems = dims.0 * dims.1 * dims.2;
             let wave = requests_per_tenant;
             let cells = tenant.replicas * Self::LIVE_SEGMENTS;
             let mut img_rng = Pcg64::new(0xA11CE, tenant_seed);
@@ -714,12 +744,27 @@ impl FleetSim {
                 }
                 // Compile once per serving (tenant, replica) — the
                 // software mirror of programming this replica's RRAM
-                // banks.
-                let program = Arc::new(
-                    ResNet::new(test_params(8, 10, 1 + tenant_seed))
-                        .with_parallelism(parallelism)
-                        .compile()?,
-                );
+                // banks. Both families compile to prepared banks; the
+                // transformer's dynamic attention matmuls stay digital
+                // and need no preparation.
+                let program = match tenant.family {
+                    ModelFamily::Transformer => {
+                        let cfg = TfmConfig {
+                            d_model: tenant.width,
+                            n_heads: (tenant.width / 16).max(1),
+                            d_ff: 2 * tenant.width,
+                            ..TfmConfig::tiny()
+                        };
+                        let t = Transformer::new(test_tfm_params(cfg, 1 + tenant_seed), cfg)
+                            .with_parallelism(parallelism);
+                        LiveProgram::Tfm(Arc::new(t.compile()?))
+                    }
+                    _ => LiveProgram::Cnn(Arc::new(
+                        ResNet::new(test_params(8, 10, 1 + tenant_seed))
+                            .with_parallelism(parallelism)
+                            .compile()?,
+                    )),
+                };
                 summary.compilations += 1;
                 for &n_req in &shares {
                     if n_req == 0 {
@@ -734,12 +779,22 @@ impl FleetSim {
                     // prepare-free).
                     let server = Server::start(
                         Box::new(move || {
-                            Ok(Box::new(NativeExecutor::from_program(
-                                seg_program,
-                                ForwardMode::PimHw,
-                                DIMS,
-                                1,
-                            )) as Box<dyn Executor>)
+                            Ok(match seg_program {
+                                LiveProgram::Cnn(p) => Box::new(NativeExecutor::from_program(
+                                    p,
+                                    ForwardMode::PimHw,
+                                    dims,
+                                    1,
+                                ))
+                                    as Box<dyn Executor>,
+                                LiveProgram::Tfm(p) => Box::new(NativeExecutor::from_program(
+                                    p,
+                                    ForwardMode::PimHw,
+                                    dims,
+                                    1,
+                                ))
+                                    as Box<dyn Executor>,
+                            })
                         }),
                         None,
                         ServerConfig {
@@ -791,7 +846,11 @@ mod tests {
     #[test]
     fn sim_serves_all_tenants() {
         let report = FleetSim::run(&quick_config()).unwrap();
-        assert_eq!(report.tenants.len(), 4, "3 synthetic + the wide tenant");
+        assert_eq!(
+            report.tenants.len(),
+            6,
+            "3 synthetic + the wide tenant + 2 transformer tenants"
+        );
         assert!(report.slices_used >= 8);
         for t in &report.tenants {
             assert!(t.served > 0, "tenant {} served nothing", t.tenant);
@@ -799,6 +858,33 @@ mod tests {
             assert!(t.energy_j > 0.0);
         }
         assert!(report.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn transformer_tenants_serve_replica_parallel_with_attribution() {
+        let report = FleetSim::run(&quick_config()).unwrap();
+        let tfm: Vec<_> =
+            report.tenants.iter().filter(|t| t.name.starts_with("tfm-")).collect();
+        assert_eq!(tfm.len(), 2, "both standard transformer tenants must run");
+        for t in &tfm {
+            assert!(t.served > 0, "{} served nothing", t.name);
+            assert_eq!(t.shards, 1, "{} fits one slice — replica-parallel", t.name);
+            assert!(t.p50_s > 0.0 && t.p99_s >= t.p50_s);
+            assert!(t.energy_j > 0.0, "{} needs per-tenant energy attribution", t.name);
+            assert!(t.ops > 0.0);
+        }
+        // The wider geometry costs more per request.
+        let tiny = tfm.iter().find(|t| t.name == "tfm-tiny-d64").unwrap();
+        let base = tfm.iter().find(|t| t.name == "tfm-base-d128").unwrap();
+        assert!(base.energy_j / base.served.max(1) as f64 > tiny.energy_j / tiny.served.max(1) as f64);
+    }
+
+    #[test]
+    fn no_tfm_flag_restores_the_cnn_only_fleet() {
+        let config = FleetSimConfig { transformer_tenants: false, ..quick_config() };
+        let report = FleetSim::run(&config).unwrap();
+        assert_eq!(report.tenants.len(), 4);
+        assert!(report.tenants.iter().all(|t| !t.name.starts_with("tfm-")));
     }
 
     #[test]
@@ -830,9 +916,9 @@ mod tests {
     fn no_wide_flag_restores_the_replica_only_fleet() {
         let config = FleetSimConfig { wide_tenant: false, ..quick_config() };
         let report = FleetSim::run(&config).unwrap();
-        assert_eq!(report.tenants.len(), 3);
+        assert_eq!(report.tenants.len(), 5, "3 synthetic + 2 transformers");
         assert!(report.tenants.iter().all(|t| t.shards == 1));
-        assert_eq!(report.campaigns.len(), 3);
+        assert_eq!(report.campaigns.len(), 5);
         assert!(!report.render().contains("shard chain"));
     }
 
@@ -843,8 +929,8 @@ mod tests {
             report.tenants.iter().find(|t| t.name == "resnet18-w24").unwrap().shards;
         assert_eq!(
             report.campaigns.len(),
-            3 + wide_shards,
-            "one campaign per replica-0 segment"
+            5 + wide_shards,
+            "one campaign per replica-0 segment (3 CNN + 2 tfm + wide chain)"
         );
         assert!(report.downtime_s > 0.0);
         for c in &report.campaigns {
@@ -867,7 +953,7 @@ mod tests {
     fn sim_report_renders_and_serializes() {
         let report = FleetSim::run(&quick_config()).unwrap();
         let text = report.render();
-        assert!(text.contains("fleet: 4 tenants"));
+        assert!(text.contains("fleet: 6 tenants"));
         assert!(text.contains(&format!("campaigns: {}", report.campaigns.len())));
         let json = report.to_json();
         assert!(json.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);

@@ -34,7 +34,8 @@
 //!   multi-bit scheduling, digital shift-add / positive-negative-bank
 //!   subtraction post-processing.
 //! * [`nn`] — a small digital-exact inference stack (tensors, conv/bn/fc,
-//!   the ResNet-18 topology) used as the fp32 baseline and as the ground
+//!   the ResNet-18 topology, and a quantized transformer encoder —
+//!   `nn::transformer`) used as the fp32 baseline and as the ground
 //!   truth every runtime backend is cross-checked against.
 //! * [`runtime`] — the model-execution seam: the [`runtime::Runtime`]
 //!   trait, the in-tree [`runtime::StubRuntime`] backend (digital-exact

@@ -22,17 +22,21 @@
 //!             analytic cross-check, and the merged-wave demo on the
 //!             real stepped executor (writes DIR/serve_sim.json)
 //!   fleet-sim [--slices N] [--tenants N] [--requests N] [--seed S]
-//!             [--campaign-at FRAC] [--live] [--no-wide] [--threads T]
-//!             [--out DIR]
+//!             [--campaign-at FRAC] [--live] [--no-wide] [--no-tfm]
+//!             [--threads T] [--out DIR]
 //!             multi-tenant fleet simulation: placement (replica- or
 //!             shard-parallel per tenant), campaigns, QoS, wear, and
 //!             shard-chain transfer attribution. By default the fleet
 //!             includes an over-capacity wide-ResNet tenant served as a
 //!             pipelined shard chain (--no-wide restores the
 //!             replica-only fleet; --slices defaults to 8 so the chain
-//!             has room). Writes DIR/fleet_sim.json; campaigns fire at
-//!             FRAC of each tenant's traffic horizon; T parallelizes
-//!             the --live executors
+//!             has room) AND the two quantized transformer tenants
+//!             (tfm-tiny-d64, tfm-base-d128) so mixed CNN+transformer
+//!             serving with per-tenant attribution is the standard
+//!             scenario (--no-tfm restores the CNN-only fleet). Writes
+//!             DIR/fleet_sim.json; campaigns fire at FRAC of each
+//!             tenant's traffic horizon; T parallelizes the --live
+//!             executors
 //!   bench     [--quick] [--threads T] [--json [FILE]]
 //!             hot-path micro-benchmarks, serial vs T-thread tiled execution
 //!             (engine matmul + ResNet-18 stub inference), the
@@ -44,8 +48,12 @@
 //!             determinism, M/D/c cross-check, merged-execution parity),
 //!             the shard section (pipelined shard-executor parity,
 //!             over-capacity placement, hop-transfer attribution),
+//!             the transformer section (compiled attention block vs
+//!             spec_attn parity across kernels/threads/modes, mixed
+//!             CNN+transformer fleet gate, attention steady-state
+//!             zero-prepare gate),
 //!             + fleet-sim summary; --json writes the machine-readable
-//!             perf-trajectory record (BENCH_PR8.json, or FILE when
+//!             perf-trajectory record (BENCH_PR9.json, or FILE when
 //!             given) — see PERFORMANCE.md
 //!   info      print headline perf model numbers
 
@@ -301,6 +309,7 @@ fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
         live_serving: args.flag("live"),
         parallelism: Parallelism::threads(args.get_usize("threads", 1)?),
         wide_tenant: !args.flag("no-wide"),
+        transformer_tenants: !args.flag("no-tfm"),
     };
     let report = FleetSim::run(&config)?;
     print!("{}", report.render());
@@ -864,8 +873,93 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         ])
     };
 
+    // Transformer section: the quantized attention-block workload on
+    // prepared banks (PERFORMANCE.md §11, EXPERIMENTS.md E17). Three
+    // deterministic gates: (1) the compiled transformer is bit-identical
+    // — logits and trailing RNG state — across MAC kernels
+    // {BitPlane, Scalar} × threads {1, 2}, noiseless and noisy (every
+    // forward here IS the stepped begin/step path), and matches the
+    // straight-line `spec_attn` in the noiseless hardware mode;
+    // (2) the default fleet report above serves both transformer tenants
+    // alongside the CNNs with per-tenant attribution; (3) attention
+    // steady state performs zero weight prepares — the dynamic Q·Kᵀ/A·V
+    // matmuls are digital and never touch the banks.
+    let transformer_json = {
+        use nvm_in_cache::nn::transformer::test_tfm_params;
+        use nvm_in_cache::nn::{TfmConfig, Transformer};
+        use nvm_in_cache::pim::program::ScratchPool;
+        use nvm_in_cache::pim::spec_attn;
+
+        let cfg = TfmConfig::tiny();
+        let tfm = Transformer::new(test_tfm_params(cfg, 5), cfg);
+        let prog = tfm.compile()?;
+        let mut trng = Pcg64::seeded(21);
+        let x: Vec<f32> = (0..2 * cfg.input_elems()).map(|_| trng.f64() as f32).collect();
+        let xt = Tensor::from_vec(&[2, cfg.seq_len, cfg.d_model], x);
+        let spec = spec_attn(&tfm, &xt)?;
+        let bits = |t: &Tensor, u: &Tensor| {
+            t.data.len() == u.data.len()
+                && t.data.iter().zip(u.data.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        };
+
+        let mut attn_parity = true;
+        let mut attn_zero_prepares = true;
+        for mode in [ForwardMode::PimHw, ForwardMode::PimHwNoise(0.4)] {
+            let mut reference: Option<(Tensor, u64)> = None;
+            for kernel in [MacKernel::BitPlane, MacKernel::Scalar] {
+                MacKernel::set_thread_default(kernel);
+                for t in [1usize, 2] {
+                    let par_t = Parallelism::threads(t);
+                    let mut scratch = ScratchPool::new();
+                    let before = program::prepare_count();
+                    let run = prog.forward_run(&xt, mode, 33, par_t, &mut scratch);
+                    attn_zero_prepares &= program::prepare_count() == before;
+                    let fp = run.rng_fingerprint();
+                    let logits = run.into_logits();
+                    match &reference {
+                        None => reference = Some((logits, fp)),
+                        Some((want, want_fp)) => {
+                            attn_parity &= bits(&logits, want) && fp == *want_fp;
+                        }
+                    }
+                }
+            }
+            if mode == ForwardMode::PimHw {
+                if let Some((want, _)) = &reference {
+                    attn_parity &= bits(want, &spec);
+                }
+            }
+        }
+        MacKernel::set_thread_default(MacKernel::BitPlane);
+
+        let tfm_tenants: Vec<_> =
+            fleet_report.tenants.iter().filter(|t| t.name.starts_with("tfm-")).collect();
+        let mixed_fleet_served = tfm_tenants.len() == 2
+            && tfm_tenants.iter().all(|t| t.served > 0)
+            && fleet_report
+                .tenants
+                .iter()
+                .any(|t| !t.name.starts_with("tfm-") && t.served > 0);
+
+        println!(
+            "transformer: attn parity k{{bitplane,scalar}}×t{{1,2}} (noiseless+noisy, \
+             stepped, vs spec): {attn_parity}; mixed CNN+transformer fleet served \
+             ({} tfm tenants): {mixed_fleet_served}; attention steady-state zero \
+             prepares: {attn_zero_prepares}",
+            tfm_tenants.len(),
+        );
+        Json::obj(vec![
+            ("attn_parity_bit_identical", Json::Bool(attn_parity)),
+            ("mixed_fleet_served", Json::Bool(mixed_fleet_served)),
+            ("steady_state_zero_prepares_attn", Json::Bool(attn_zero_prepares)),
+            ("d_model", Json::Num(cfg.d_model as f64)),
+            ("n_heads", Json::Num(cfg.n_heads as f64)),
+            ("boundaries", Json::Num(prog.boundaries() as f64)),
+        ])
+    };
+
     if args.flag("json") {
-        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR8.json"));
+        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR9.json"));
         // Two sections (PERFORMANCE.md): `comparison` holds only
         // deterministic fields (workload descriptors, parity verdicts, the
         // simulated-clock fleet report) so trajectory files diff cleanly
@@ -890,6 +984,7 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
             ("fleet_sim", fleet_report.to_json()),
             ("serve", serve_json),
             ("shard", shard_json),
+            ("transformer", transformer_json),
         ]);
         let mut measured = vec![("benches", b.to_json())];
         if let Some(s) = speedup_engine {
@@ -926,7 +1021,7 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         }
         measured.push(("simd_vs_scalar", Json::obj(svs)));
         let doc = Json::obj(vec![
-            ("pr", Json::Num(8.0)),
+            ("pr", Json::Num(9.0)),
             ("comparison", comparison),
             ("measured", Json::obj(measured)),
         ]);

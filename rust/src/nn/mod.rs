@@ -9,6 +9,11 @@
 //! * [`tensor`] — minimal NHWC tensor.
 //! * [`layers`] — conv (im2col), GroupNorm, ReLU, global-avg-pool, linear.
 //! * [`resnet`] — the ResNet-18-topology network + weights.bin loading.
+//! * [`transformer`] — the second workload family: a small quantized
+//!   pre-LN encoder (fused QKV, multi-head attention with an
+//!   integer-friendly softmax, 2-layer FFN) whose weight-stationary
+//!   matmuls compile to prepared banks via
+//!   [`crate::pim::attn::CompiledTransformer`].
 //! * [`dataset`] — dataset.bin loading.
 //!
 //! Execution follows the compile-once / execute-many split of
@@ -22,7 +27,9 @@ pub mod dataset;
 pub mod layers;
 pub mod resnet;
 pub mod tensor;
+pub mod transformer;
 
 pub use dataset::Dataset;
 pub use resnet::{ForwardMode, ResNet};
 pub use tensor::Tensor;
+pub use transformer::{TfmConfig, Transformer};

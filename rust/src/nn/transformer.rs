@@ -1,0 +1,361 @@
+//! Quantized transformer block workload (the second model family).
+//!
+//! A small pre-LN encoder: per block a fused QKV projection,
+//! scaled-dot-product attention with an integer-friendly softmax, an
+//! output projection, and a 2-layer ReLU FFN, each wrapped in
+//! residual + layernorm; a mean-pool + linear head produces logits.
+//! Every *weight-stationary* matmul (QKV, output projection, both FFN
+//! layers, the head) compiles to [`crate::pim::program::CompiledLinear`]
+//! prepared banks via [`crate::pim::attn::CompiledTransformer`] —
+//! exactly the `ResNet` → `CompiledNet` story. The two *dynamic*
+//! attention matmuls (Q·Kᵀ and A·V, whose operands are both produced at
+//! inference time) execute digitally in every mode: the 6T-2R banks are
+//! weight-stationary, so there is nothing to prepare and the
+//! steady-state zero-prepare guarantee extends to attention unchanged.
+//!
+//! [`softmax_rows`] is the integer-friendly piece: its outputs live in
+//! [0, 1], so the unsigned 4-bit activation quantizer
+//! ([`crate::pim::quant::quantize_acts`]) sees attention weights at
+//! full dynamic range without a signed split. Bank *inputs* that can go
+//! negative (layernorm outputs, attention context, the pooled head
+//! input) are clipped at 0 by the unsigned activation lane — the same
+//! `max(0.0)` the compiled CNN path applies — which the digital-exact
+//! specification [`crate::pim::attn::spec_attn`] replicates bit for bit.
+
+use std::collections::BTreeMap;
+
+use crate::pim::attn::CompiledTransformer;
+use crate::pim::parallel::Parallelism;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+use super::resnet::Params;
+use super::tensor::Tensor;
+use super::ForwardMode;
+
+/// Transformer geometry. All matmul shapes derive from this; the
+/// defaults mirror the registered fleet tenants (`tfm-tiny-d64`,
+/// `tfm-base-d128`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TfmConfig {
+    /// Tokens per sequence.
+    pub seq_len: usize,
+    /// Residual-stream width.
+    pub d_model: usize,
+    /// Attention heads (`d_model % n_heads == 0`).
+    pub n_heads: usize,
+    /// FFN hidden width (2·d_model for the standard tenants).
+    pub d_ff: usize,
+    /// Encoder blocks.
+    pub n_blocks: usize,
+    /// Classifier outputs from the mean-pooled head.
+    pub n_classes: usize,
+    /// Apply a causal (lower-triangular) attention mask.
+    pub causal: bool,
+}
+
+impl TfmConfig {
+    /// The `tfm-tiny-d64` tenant geometry: 16 tokens, d_model 64,
+    /// 4 heads, 2 blocks.
+    pub fn tiny() -> TfmConfig {
+        TfmConfig {
+            seq_len: 16,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 128,
+            n_blocks: 2,
+            n_classes: 10,
+            causal: false,
+        }
+    }
+
+    /// The `tfm-base-d128` tenant geometry: 16 tokens, d_model 128,
+    /// 8 heads, 2 blocks.
+    pub fn base() -> TfmConfig {
+        TfmConfig { d_model: 128, n_heads: 8, d_ff: 256, ..Self::tiny() }
+    }
+
+    /// Per-head key/query width.
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Input elements per sequence (`seq_len · d_model`).
+    pub fn input_elems(&self) -> usize {
+        self.seq_len * self.d_model
+    }
+}
+
+/// Row-wise layernorm over the last dimension: `rows` rows of width `d`,
+/// f64 mean/variance accumulation (same numeric style as
+/// [`crate::nn::layers::group_norm`]), epsilon 1e-5, per-feature
+/// gamma/beta. Shared verbatim by the compiled transformer and
+/// [`crate::pim::attn::spec_attn`], so the normalization itself can
+/// never be a parity divergence.
+pub fn layer_norm(x: &[f32], rows: usize, d: usize, gamma: &[f32], beta: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(gamma.len(), d);
+    assert_eq!(beta.len(), d);
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mut sum = 0.0f64;
+        for &v in row {
+            sum += v as f64;
+        }
+        let mean = sum / d as f64;
+        let mut sq = 0.0f64;
+        for &v in row {
+            let dv = v as f64 - mean;
+            sq += dv * dv;
+        }
+        let inv = 1.0 / (sq / d as f64 + 1e-5).sqrt();
+        for j in 0..d {
+            out[r * d + j] =
+                ((row[j] as f64 - mean) * inv) as f32 * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+/// In-place row softmax with integer-friendly, NaN-safe semantics:
+/// per row subtract the `total_cmp` max, exponentiate, normalize. Rows
+/// whose max is not finite — fully `-inf`-masked rows (e.g. the causal
+/// mask on a single-token prefix) or NaN-poisoned rows — and rows whose
+/// exp-sum fails to normalize fall back to the uniform `1/cols`
+/// distribution instead of emitting NaN, mirroring the defined-result
+/// policy of [`crate::pim::program::logits_to_classes`]. Outputs always
+/// lie in [0, 1], the full range of the unsigned 4-bit activation
+/// quantizer.
+pub fn softmax_rows(scores: &mut [f32], cols: usize) {
+    assert!(cols > 0 && scores.len() % cols == 0);
+    for row in scores.chunks_mut(cols) {
+        let max = row.iter().copied().max_by(f32::total_cmp).unwrap();
+        if !max.is_finite() {
+            row.fill(1.0 / cols as f32);
+            continue;
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        if sum.is_finite() && sum > 0.0 {
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        } else {
+            row.fill(1.0 / cols as f32);
+        }
+    }
+}
+
+/// The transformer model: a parameter store plus its geometry, mirroring
+/// [`crate::nn::ResNet`]. Compile once with [`Self::compile`] for
+/// serving; [`Self::forward`] is the one-shot convenience.
+pub struct Transformer {
+    /// Weights and norm parameters (names `t{block}/…`, `head/…`).
+    pub params: Params,
+    /// Geometry the parameter shapes are validated against at compile.
+    pub cfg: TfmConfig,
+    /// Worker-pool width every forward matmul is tiled over (serial by
+    /// default; output is bit-identical at any width).
+    pub parallelism: Parallelism,
+}
+
+impl Transformer {
+    /// Wrap a parameter store.
+    pub fn new(params: Params, cfg: TfmConfig) -> Transformer {
+        assert_eq!(cfg.d_model % cfg.n_heads, 0, "d_model must split across heads");
+        Transformer { params, cfg, parallelism: Parallelism::serial() }
+    }
+
+    /// Set the worker-pool width used by [`Self::forward`].
+    pub fn with_parallelism(mut self, par: Parallelism) -> Transformer {
+        self.parallelism = par;
+        self
+    }
+
+    /// Compile every weight-stationary layer once — dense weights plus
+    /// prepared quantized banks — into a
+    /// [`CompiledTransformer`] that executes any [`ForwardMode`] with
+    /// zero further weight preparation
+    /// (`rust/tests/transformer_parity.rs`).
+    pub fn compile(&self) -> Result<CompiledTransformer> {
+        CompiledTransformer::compile(self)
+    }
+
+    /// Forward pass: x `[N, seq_len, d_model]` (or any layout with
+    /// `N·seq_len·d_model` elements) → logits `[N, n_classes]`.
+    ///
+    /// One-shot compile-then-run over [`Self::compile`]; serving loops
+    /// should compile once and call
+    /// [`CompiledTransformer::forward_par`] instead.
+    pub fn forward(&self, x: &Tensor, mode: ForwardMode, seed: u64) -> Result<Tensor> {
+        use crate::pim::program::ScratchPool;
+        // Compile only what the mode reads, like `ResNet::forward_par`.
+        let program = match mode {
+            ForwardMode::PimHw | ForwardMode::PimHwNoise(_) => self.compile()?,
+            _ => CompiledTransformer::compile_dense(self)?,
+        };
+        Ok(program.forward_par(x, mode, seed, self.parallelism, &mut ScratchPool::new()))
+    }
+
+    /// Argmax classification over [`Self::forward`] logits.
+    pub fn classify(&self, x: &Tensor, mode: ForwardMode, seed: u64) -> Result<Vec<u8>> {
+        let logits = self.forward(x, mode, seed)?;
+        Ok(crate::pim::program::logits_to_classes(&logits))
+    }
+}
+
+/// Synthetic transformer params for tests (He-like init, deterministic)
+/// — the transformer sibling of
+/// [`crate::nn::resnet::test_params`]. Linear weights draw
+/// `N(0, √(2/fan_in))`, the head `N(0, √(1/d_model))`, biases a small
+/// `N(0, 0.02)` so the bias-add paths are exercised, gammas 1, betas 0.
+pub fn test_tfm_params(cfg: TfmConfig, seed: u64) -> Params {
+    let mut rng = Pcg64::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    let d = cfg.d_model;
+    let lin = |rng: &mut Pcg64, k: usize, n: usize| {
+        let std = (2.0 / k as f64).sqrt();
+        Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.normal(0.0, std) as f32).collect())
+    };
+    let bias = |rng: &mut Pcg64, n: usize| {
+        Tensor::from_vec(&[n], (0..n).map(|_| rng.normal(0.0, 0.02) as f32).collect())
+    };
+    for b in 0..cfg.n_blocks {
+        let pre = format!("t{b}");
+        tensors.insert(format!("{pre}/wqkv"), lin(&mut rng, d, 3 * d));
+        tensors.insert(format!("{pre}/bqkv"), bias(&mut rng, 3 * d));
+        tensors.insert(format!("{pre}/wo"), lin(&mut rng, d, d));
+        tensors.insert(format!("{pre}/bo"), bias(&mut rng, d));
+        tensors.insert(format!("{pre}/g1"), Tensor::from_vec(&[d], vec![1.0; d]));
+        tensors.insert(format!("{pre}/b1"), Tensor::from_vec(&[d], vec![0.0; d]));
+        tensors.insert(format!("{pre}/wf1"), lin(&mut rng, d, cfg.d_ff));
+        tensors.insert(format!("{pre}/bf1"), bias(&mut rng, cfg.d_ff));
+        tensors.insert(format!("{pre}/wf2"), lin(&mut rng, cfg.d_ff, d));
+        tensors.insert(format!("{pre}/bf2"), bias(&mut rng, d));
+        tensors.insert(format!("{pre}/g2"), Tensor::from_vec(&[d], vec![1.0; d]));
+        tensors.insert(format!("{pre}/b2"), Tensor::from_vec(&[d], vec![0.0; d]));
+    }
+    tensors.insert(
+        "head/w".into(),
+        Tensor::from_vec(
+            &[d, cfg.n_classes],
+            (0..d * cfg.n_classes)
+                .map(|_| rng.normal(0.0, (1.0 / d as f64).sqrt()) as f32)
+                .collect(),
+        ),
+    );
+    tensors.insert(
+        "head/b".into(),
+        Tensor::from_vec(&[cfg.n_classes], vec![0.0; cfg.n_classes]),
+    );
+    Params { tensors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_is_a_distribution() {
+        let mut s = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut s, 3);
+        for row in s.chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!(row.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        // Larger score → larger weight.
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn softmax_all_equal_rows_are_uniform() {
+        let mut s = vec![5.0f32; 8];
+        softmax_rows(&mut s, 4);
+        for &v in &s {
+            assert!((v - 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_neg_inf_masking_zeroes_positions() {
+        let mut s = vec![0.0f32, f32::NEG_INFINITY, 0.0];
+        softmax_rows(&mut s, 3);
+        assert_eq!(s[1], 0.0);
+        assert!((s[0] - 0.5).abs() < 1e-6 && (s[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_fully_masked_and_nan_rows_fall_back_to_uniform() {
+        let mut masked = vec![f32::NEG_INFINITY; 4];
+        softmax_rows(&mut masked, 4);
+        assert!(masked.iter().all(|&v| (v - 0.25).abs() < 1e-6));
+        let mut poisoned = vec![1.0f32, f32::NAN, 2.0, 0.5];
+        softmax_rows(&mut poisoned, 4);
+        assert!(poisoned.iter().all(|v| v.is_finite()), "NaN must not escape");
+        assert!(poisoned.iter().all(|&v| (v - 0.25).abs() < 1e-6));
+    }
+
+    #[test]
+    fn softmax_single_token_rows_are_one() {
+        let mut s = vec![-3.2f32, 9.9, f32::NEG_INFINITY];
+        softmax_rows(&mut s, 1);
+        // Width-1 rows: finite scores normalize to exactly 1; a fully
+        // masked single token takes the uniform fallback, also 1.
+        assert_eq!(s, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let x: Vec<f32> = (0..32).map(|i| i as f32 * 0.3 - 4.0).collect();
+        let g = vec![1.0f32; 16];
+        let b = vec![0.0f32; 16];
+        let y = layer_norm(&x, 2, 16, &g, &b);
+        for row in y.chunks(16) {
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn test_params_cover_all_blocks() {
+        let cfg = TfmConfig::tiny();
+        let p = test_tfm_params(cfg, 1);
+        for b in 0..cfg.n_blocks {
+            for suffix in ["wqkv", "bqkv", "wo", "bo", "g1", "b1", "wf1", "bf1", "wf2", "bf2", "g2", "b2"]
+            {
+                assert!(p.tensors.contains_key(&format!("t{b}/{suffix}")), "t{b}/{suffix}");
+            }
+        }
+        assert_eq!(p.get("head/w").unwrap().shape, vec![64, 10]);
+        assert_eq!(p.get("t0/wqkv").unwrap().shape, vec![64, 192]);
+    }
+
+    #[test]
+    fn forward_shapes_all_modes() {
+        let cfg = TfmConfig { seq_len: 4, d_model: 16, n_heads: 2, d_ff: 32, ..TfmConfig::tiny() };
+        let t = Transformer::new(test_tfm_params(cfg, 3), cfg);
+        let mut rng = Pcg64::seeded(7);
+        let x = Tensor::from_vec(
+            &[2, cfg.seq_len, cfg.d_model],
+            (0..2 * cfg.input_elems()).map(|_| rng.f64() as f32).collect(),
+        );
+        for mode in [
+            ForwardMode::Baseline,
+            ForwardMode::Pim,
+            ForwardMode::PimNoise(0.3),
+            ForwardMode::PimHw,
+            ForwardMode::PimHwNoise(0.3),
+        ] {
+            let y = t.forward(&x, mode, 11).unwrap();
+            assert_eq!(y.shape, vec![2, cfg.n_classes]);
+            assert!(y.data.iter().all(|v| v.is_finite()), "{mode:?}");
+        }
+    }
+}

@@ -1,0 +1,677 @@
+//! Compiled transformer programs on prepared banks — the attention
+//! sibling of [`super::program`].
+//!
+//! [`CompiledTransformer`] mirrors [`CompiledNet`](super::CompiledNet)
+//! exactly: every **weight-stationary** matmul (the fused QKV
+//! projection, the attention output projection, both FFN layers, and
+//! the pooled classifier head) is a
+//! [`CompiledLinear`] whose banks are quantized and packed once at
+//! compile, so steady-state serving performs zero weight preparation.
+//! The two **dynamic** attention matmuls (Q·Kᵀ and A·V) have no
+//! stationary operand — both sides are produced at inference time — so
+//! they execute digitally ([`PimEngine::exact_matmul`]) in *every*
+//! mode, the standard mapping for weight-stationary analog PIM
+//! substrates: programming attention scores into RRAM per token would
+//! burn a bank write-cycle budget per inference and break the
+//! zero-prepare steady state (`comparison.transformer.
+//! steady_state_zero_prepares_attn` pins this).
+//!
+//! Execution is boundary-stepped ([`SteppedProgram`]): one boundary per
+//! encoder block plus the pooled head. The RNG fork discipline per
+//! boundary is the [`CompiledNet::step`](super::CompiledNet::step)
+//! discipline verbatim — `fork(1)` per prepared linear in hardware-noise
+//! modes, `fork(2)` per §V-E post-ADC emulation — and the dynamic
+//! attention matmuls draw nothing, so logits *and* trailing RNG state
+//! are bit-identical across stepped/merged/pipelined schedules
+//! (`rust/tests/transformer_parity.rs`).
+//!
+//! [`spec_attn`] is the straight-line digital-exact specification of
+//! the noiseless hardware-true forward (the transformer counterpart of
+//! [`spec_matmul`]); [`spec_attn_dense`] is the fp32 witness for the
+//! Baseline mode. Both share [`layer_norm`], [`softmax_rows`],
+//! [`attn_context`], and [`mean_pool_seq`] with the compiled path, so a
+//! parity failure always localizes to a bank matmul.
+
+use crate::nn::layers;
+use crate::nn::transformer::{layer_norm, softmax_rows, TfmConfig, Transformer};
+use crate::nn::{ForwardMode, Tensor};
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+use super::parallel::Parallelism;
+use super::program::{
+    spec_matmul, CompiledLinear, InflightRun, PreparedWeights, ScratchPool, SteppedProgram,
+};
+use super::{PimEngine, TransferModel};
+
+/// One encoder block's compiled layers + norm parameters.
+#[derive(Clone, Debug)]
+pub struct CompiledAttnBlock {
+    /// Parameter prefix (`t{block}`), for reports.
+    pub name: String,
+    /// Fused QKV projection `[d, 3d]` (bank-resident).
+    pub qkv: CompiledLinear,
+    /// Attention output projection `[d, d]` (bank-resident).
+    pub wo: CompiledLinear,
+    /// Pre-attention layernorm gamma.
+    pub g1: Vec<f32>,
+    /// Pre-attention layernorm beta.
+    pub b1: Vec<f32>,
+    /// FFN expansion `[d, d_ff]` (bank-resident).
+    pub ff1: CompiledLinear,
+    /// FFN contraction `[d_ff, d]` (bank-resident).
+    pub ff2: CompiledLinear,
+    /// Pre-FFN layernorm gamma.
+    pub g2: Vec<f32>,
+    /// Pre-FFN layernorm beta.
+    pub b2: Vec<f32>,
+}
+
+/// A whole transformer compiled for execute-many serving — pure data
+/// (`Send + Sync`), shareable across replicas and servers like
+/// [`CompiledNet`](super::CompiledNet). Built once via
+/// [`Transformer::compile`]; executed via the [`SteppedProgram`]
+/// surface, so [`crate::coordinator::server::NativeExecutor`] and
+/// [`crate::pim::shard_exec::ShardedExecutor`] serve it unchanged.
+#[derive(Clone, Debug)]
+pub struct CompiledTransformer {
+    /// Geometry every boundary body derives its shapes from.
+    pub cfg: TfmConfig,
+    /// Encoder blocks in execution order.
+    pub blocks: Vec<CompiledAttnBlock>,
+    /// Mean-pool classifier head (compiled with a zero bias; see
+    /// [`Self::head_bias`]).
+    pub head: CompiledLinear,
+    /// The real head bias, added after the §V-E post-ADC step exactly
+    /// as [`CompiledNet::fc_bias`](super::CompiledNet::fc_bias) is.
+    pub head_bias: Vec<f32>,
+    /// Worker-pool width [`Self::forward`] and [`Self::classify`] run
+    /// on (copied from the source [`Transformer`] at compile).
+    pub parallelism: Parallelism,
+}
+
+impl CompiledTransformer {
+    /// Compile every weight-stationary layer: dense weights plus
+    /// prepared quantized banks, so any [`ForwardMode`] executes
+    /// prepare-free.
+    pub fn compile(t: &Transformer) -> Result<CompiledTransformer> {
+        Self::compile_with(t, true)
+    }
+
+    /// Compile the dense layers only (no bank preparation) — what the
+    /// one-shot fp32/emulation forwards use.
+    pub fn compile_dense(t: &Transformer) -> Result<CompiledTransformer> {
+        Self::compile_with(t, false)
+    }
+
+    fn compile_with(t: &Transformer, prepare: bool) -> Result<CompiledTransformer> {
+        let cfg = t.cfg;
+        let p = &t.params;
+        let d = cfg.d_model;
+        let lin = |name: &str, k: usize, n: usize, bias: &str| -> Result<CompiledLinear> {
+            let w = p.get(name)?;
+            if w.shape != [k, n] {
+                return Err(Error::Artifact(format!(
+                    "{name}: shape {:?}, expected [{k}, {n}]",
+                    w.shape
+                )));
+            }
+            let b = p.get(bias)?;
+            Ok(CompiledLinear::compile(w, &b.data, prepare))
+        };
+        let mut blocks = Vec::with_capacity(cfg.n_blocks);
+        for bi in 0..cfg.n_blocks {
+            let pre = format!("t{bi}");
+            blocks.push(CompiledAttnBlock {
+                name: pre.clone(),
+                qkv: lin(&format!("{pre}/wqkv"), d, 3 * d, &format!("{pre}/bqkv"))?,
+                wo: lin(&format!("{pre}/wo"), d, d, &format!("{pre}/bo"))?,
+                g1: p.get(&format!("{pre}/g1"))?.data.clone(),
+                b1: p.get(&format!("{pre}/b1"))?.data.clone(),
+                ff1: lin(&format!("{pre}/wf1"), d, cfg.d_ff, &format!("{pre}/bf1"))?,
+                ff2: lin(&format!("{pre}/wf2"), cfg.d_ff, d, &format!("{pre}/bf2"))?,
+                g2: p.get(&format!("{pre}/g2"))?.data.clone(),
+                b2: p.get(&format!("{pre}/b2"))?.data.clone(),
+            });
+        }
+        let head_w = p.get("head/w")?;
+        let head_b = p.get("head/b")?;
+        let head = CompiledLinear::compile(head_w, &vec![0.0; head_b.len()], prepare);
+        Ok(CompiledTransformer {
+            cfg,
+            blocks,
+            head,
+            head_bias: head_b.data.clone(),
+            parallelism: t.parallelism,
+        })
+    }
+
+    /// Upgrade a dense-only compile to a fully prepared one (layers that
+    /// already carry banks are kept as-is) — the transformer mirror of
+    /// [`CompiledNet::prepare_banks`](super::CompiledNet::prepare_banks).
+    pub fn prepare_banks(&self) -> CompiledTransformer {
+        let lin = |l: &CompiledLinear| -> CompiledLinear {
+            let mut l = l.clone();
+            if l.prepared.is_none() {
+                l.prepared = Some(PreparedWeights::from_dense(
+                    &l.dense.data,
+                    l.dense.shape[0],
+                    l.dense.shape[1],
+                ));
+            }
+            l
+        };
+        CompiledTransformer {
+            cfg: self.cfg,
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| CompiledAttnBlock {
+                    name: b.name.clone(),
+                    qkv: lin(&b.qkv),
+                    wo: lin(&b.wo),
+                    g1: b.g1.clone(),
+                    b1: b.b1.clone(),
+                    ff1: lin(&b.ff1),
+                    ff2: lin(&b.ff2),
+                    g2: b.g2.clone(),
+                    b2: b.b2.clone(),
+                })
+                .collect(),
+            head: lin(&self.head),
+            head_bias: self.head_bias.clone(),
+            parallelism: self.parallelism,
+        }
+    }
+
+    /// Do all weight-stationary layers carry prepared banks?
+    pub fn fully_prepared(&self) -> bool {
+        self.head.prepared.is_some()
+            && self.blocks.iter().all(|b| {
+                b.qkv.prepared.is_some()
+                    && b.wo.prepared.is_some()
+                    && b.ff1.prepared.is_some()
+                    && b.ff2.prepared.is_some()
+            })
+    }
+
+    /// Number of merge boundaries: one per encoder block plus the
+    /// pooled head.
+    pub fn boundaries(&self) -> usize {
+        self.blocks.len() + 1
+    }
+
+    /// Forward on [`Self::parallelism`] with a throwaway scratch pool.
+    pub fn forward(&self, x: &Tensor, mode: ForwardMode, seed: u64) -> Tensor {
+        self.forward_par(x, mode, seed, self.parallelism, &mut ScratchPool::new())
+    }
+
+    /// The prepared-execution forward — a full drain of
+    /// [`Self::begin`] / [`Self::step`], so the stepped path *is* the
+    /// forward and continuous batching cannot drift from it.
+    pub fn forward_par(
+        &self,
+        x: &Tensor,
+        mode: ForwardMode,
+        seed: u64,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> Tensor {
+        let mut run = self.begin(x, seed);
+        while !self.step(&mut run, mode, par, scratch) {}
+        run.into_logits()
+    }
+
+    /// Like [`Self::forward_par`] but returns the completed
+    /// [`InflightRun`] so callers can also compare the trailing RNG
+    /// state via [`InflightRun::rng_fingerprint`].
+    pub fn forward_run(
+        &self,
+        x: &Tensor,
+        mode: ForwardMode,
+        seed: u64,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> InflightRun {
+        let mut run = self.begin(x, seed);
+        while !self.step(&mut run, mode, par, scratch) {}
+        run
+    }
+
+    /// Open an in-flight execution. `x` may arrive as `[n, s, d]` or as
+    /// the executor's NHWC framing (`[n, s, d, 1]`) — any layout with
+    /// `n·seq_len·d_model` elements reshapes to the canonical
+    /// `[n, s, d]` activation tensor.
+    pub fn begin(&self, x: &Tensor, seed: u64) -> InflightRun {
+        let n = x.shape[0];
+        let (s, d) = (self.cfg.seq_len, self.cfg.d_model);
+        assert_eq!(x.data.len(), n * s * d, "input elements vs [n, seq_len, d_model]");
+        InflightRun {
+            h: Tensor::from_vec(&[n, s, d], x.data.clone()),
+            rng: Pcg64::seeded(seed),
+            boundary: 0,
+        }
+    }
+
+    /// Advance one in-flight run by a single boundary (one encoder
+    /// block, or the pooled head). Engine construction, layernorm
+    /// epsilon, §V-E post-ADC placement, and RNG fork order replicate
+    /// [`CompiledNet::step`](super::CompiledNet::step) statement for
+    /// statement; the dynamic attention matmuls sit between the QKV and
+    /// output-projection bank calls and draw no randomness.
+    pub fn step(
+        &self,
+        run: &mut InflightRun,
+        mode: ForwardMode,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> bool {
+        assert!(run.boundary < self.boundaries(), "stepping a completed run");
+        let engine = match mode {
+            ForwardMode::PimHw => Some(PimEngine::tt().with_parallelism(par)),
+            ForwardMode::PimHwNoise(sigma) => {
+                Some(PimEngine::tt().with_noise(sigma).with_parallelism(par))
+            }
+            _ => None,
+        };
+        let emu_sigma: Option<Option<f64>> = match mode {
+            ForwardMode::Pim => Some(None),
+            ForwardMode::PimNoise(s) => Some(Some(s)),
+            _ => None,
+        };
+        let transfer = TransferModel::tt();
+        let hw_noise = matches!(mode, ForwardMode::PimHwNoise(_));
+        let rng_opt = |r: &mut Pcg64| -> Option<Pcg64> {
+            if hw_noise {
+                Some(r.fork(1))
+            } else {
+                None
+            }
+        };
+        let eng = engine.as_ref();
+        // §V-E emulation applied at each bank-layer output (emu modes
+        // only); the dynamic attention matmuls are digital and take no
+        // post step, exactly as the residual adds and norms don't.
+        let post = |t: Tensor, r: &mut Pcg64| -> Tensor {
+            match emu_sigma {
+                None => t,
+                Some(sigma) => {
+                    let mut local = r.fork(2);
+                    layers::adc_emulate(&t, &transfer, sigma, Some(&mut local))
+                }
+            }
+        };
+
+        let rng = &mut run.rng;
+        let cfg = &self.cfg;
+        let (s, d) = (cfg.seq_len, cfg.d_model);
+        let nblocks = self.blocks.len();
+        match run.boundary {
+            i if i < nblocks => {
+                let blk = &self.blocks[i];
+                let n = run.h.shape[0];
+                let rows = n * s;
+                // Attention sublayer (pre-LN).
+                let a = layer_norm(&run.h.data, rows, d, &blk.g1, &blk.b1);
+                let a = Tensor::from_vec(&[rows, d], a);
+                let mut local = rng_opt(rng);
+                let qkv = blk.qkv.forward(&a, eng, local.as_mut(), par, scratch);
+                let qkv = post(qkv, rng);
+                let ctx = attn_context(&qkv.data, n, cfg);
+                let ctx = Tensor::from_vec(&[rows, d], ctx);
+                let mut local = rng_opt(rng);
+                let proj = blk.wo.forward(&ctx, eng, local.as_mut(), par, scratch);
+                let proj = post(proj, rng);
+                let h1: Vec<f32> =
+                    run.h.data.iter().zip(proj.data.iter()).map(|(x, p)| x + p).collect();
+                // FFN sublayer (pre-LN).
+                let f = layer_norm(&h1, rows, d, &blk.g2, &blk.b2);
+                let f = Tensor::from_vec(&[rows, d], f);
+                let mut local = rng_opt(rng);
+                let f = blk.ff1.forward(&f, eng, local.as_mut(), par, scratch);
+                let f = post(f, rng).relu();
+                let mut local = rng_opt(rng);
+                let f = blk.ff2.forward(&f, eng, local.as_mut(), par, scratch);
+                let f = post(f, rng);
+                let out: Vec<f32> =
+                    h1.iter().zip(f.data.iter()).map(|(x, p)| x + p).collect();
+                run.h = Tensor::from_vec(&[n, s, d], out);
+            }
+            _ => {
+                let n = run.h.shape[0];
+                let pooled = mean_pool_seq(&run.h.data, n, s, d);
+                let pooled = Tensor::from_vec(&[n, d], pooled);
+                let mut local = rng_opt(rng);
+                let logits = self.head.forward(&pooled, eng, local.as_mut(), par, scratch);
+                let mut logits = post(logits, rng);
+                let nc = logits.shape[1];
+                for ni in 0..n {
+                    for c in 0..nc {
+                        logits.data[ni * nc + c] += self.head_bias[c];
+                    }
+                }
+                run.h = logits;
+            }
+        }
+        run.boundary += 1;
+        run.boundary >= self.boundaries()
+    }
+
+    /// Argmax classification over [`Self::forward_par`] logits on
+    /// [`Self::parallelism`], reusing the caller's scratch pool.
+    pub fn classify(
+        &self,
+        x: &Tensor,
+        mode: ForwardMode,
+        seed: u64,
+        scratch: &mut ScratchPool,
+    ) -> Vec<u8> {
+        let logits = self.forward_par(x, mode, seed, self.parallelism, scratch);
+        super::program::logits_to_classes(&logits)
+    }
+}
+
+impl SteppedProgram for CompiledTransformer {
+    fn boundaries(&self) -> usize {
+        CompiledTransformer::boundaries(self)
+    }
+
+    fn parallelism(&self) -> Parallelism {
+        self.parallelism
+    }
+
+    fn fully_prepared(&self) -> bool {
+        CompiledTransformer::fully_prepared(self)
+    }
+
+    fn begin(&self, x: &Tensor, seed: u64) -> InflightRun {
+        CompiledTransformer::begin(self, x, seed)
+    }
+
+    fn step(
+        &self,
+        run: &mut InflightRun,
+        mode: ForwardMode,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> bool {
+        CompiledTransformer::step(self, run, mode, par, scratch)
+    }
+}
+
+/// Multi-head scaled-dot-product attention context from a fused QKV
+/// activation `[n·s, 3d]`: per (sequence, head), scores = Q·Kᵀ/√d_h
+/// (digital [`PimEngine::exact_matmul`] — both operands are dynamic),
+/// optional causal `-inf` mask, [`softmax_rows`], then context = A·V,
+/// heads re-concatenated to `[n·s, d]`. Serial and deterministic: no
+/// RNG draws, no bank prepares, no thread-count dependence — shared
+/// verbatim by [`CompiledTransformer::step`] and [`spec_attn`].
+pub fn attn_context(qkv: &[f32], n: usize, cfg: &TfmConfig) -> Vec<f32> {
+    let (s, d, nh) = (cfg.seq_len, cfg.d_model, cfg.n_heads);
+    let dh = cfg.head_dim();
+    assert_eq!(qkv.len(), n * s * 3 * d);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = vec![0.0f32; n * s * d];
+    let mut q = vec![0.0f32; s * dh];
+    let mut kt = vec![0.0f32; dh * s];
+    let mut v = vec![0.0f32; s * dh];
+    for b in 0..n {
+        for hh in 0..nh {
+            for t in 0..s {
+                let base = (b * s + t) * 3 * d + hh * dh;
+                for j in 0..dh {
+                    q[t * dh + j] = qkv[base + j];
+                    kt[j * s + t] = qkv[base + d + j];
+                    v[t * dh + j] = qkv[base + 2 * d + j];
+                }
+            }
+            let mut scores = PimEngine::exact_matmul(&q, s, dh, &kt, s);
+            for sc in scores.iter_mut() {
+                *sc *= scale;
+            }
+            if cfg.causal {
+                for t in 0..s {
+                    for u in t + 1..s {
+                        scores[t * s + u] = f32::NEG_INFINITY;
+                    }
+                }
+            }
+            softmax_rows(&mut scores, s);
+            let c = PimEngine::exact_matmul(&scores, s, s, &v, dh);
+            for t in 0..s {
+                for j in 0..dh {
+                    ctx[(b * s + t) * d + hh * dh + j] = c[t * dh + j];
+                }
+            }
+        }
+    }
+    ctx
+}
+
+/// Mean-pool the sequence axis of an `[n, s, d]` activation buffer to
+/// `[n, d]` — the transformer head's
+/// [`layers::global_avg_pool`] analogue, same `+= x·scale`
+/// accumulation order.
+pub fn mean_pool_seq(h: &[f32], n: usize, s: usize, d: usize) -> Vec<f32> {
+    assert_eq!(h.len(), n * s * d);
+    let scale = 1.0 / s as f32;
+    let mut out = vec![0.0f32; n * d];
+    for b in 0..n {
+        for t in 0..s {
+            for j in 0..d {
+                out[b * d + j] += h[(b * s + t) * d + j] * scale;
+            }
+        }
+    }
+    out
+}
+
+/// Straight-line executable **specification** of the noiseless
+/// hardware-true transformer forward — the network-level counterpart of
+/// [`spec_matmul`], which it calls for every bank matmul (with the
+/// unsigned-lane `max(0.0)` input clip the compiled PIM path applies).
+/// Dynamic attention runs through the same [`attn_context`] as the
+/// compiled path. `CompiledTransformer::forward(x, PimHw, _)` must match
+/// this bit for bit at any thread count and on either MAC kernel.
+pub fn spec_attn(t: &Transformer, x: &Tensor) -> Result<Tensor> {
+    spec_forward(t, x, true)
+}
+
+/// The dense fp32 witness: the same straight-line choreography with
+/// exact digital matmuls and no activation clip — what
+/// `ForwardMode::Baseline` must match bit for bit.
+pub fn spec_attn_dense(t: &Transformer, x: &Tensor) -> Result<Tensor> {
+    spec_forward(t, x, false)
+}
+
+fn spec_forward(t: &Transformer, x: &Tensor, pim: bool) -> Result<Tensor> {
+    let cfg = t.cfg;
+    let p = &t.params;
+    let n = x.shape[0];
+    let (s, d) = (cfg.seq_len, cfg.d_model);
+    assert_eq!(x.data.len(), n * s * d, "input elements vs [n, seq_len, d_model]");
+    let rows = n * s;
+    let mm = |input: &[f32], m: usize, w: &Tensor, bias: &[f32]| -> Vec<f32> {
+        let (k, c) = (w.shape[0], w.shape[1]);
+        let mut out = if pim {
+            let clipped: Vec<f32> = input.iter().map(|v| v.max(0.0)).collect();
+            spec_matmul(&clipped, m, k, &w.data, c)
+        } else {
+            PimEngine::exact_matmul(input, m, k, &w.data, c)
+        };
+        for r in 0..m {
+            for j in 0..c {
+                out[r * c + j] += bias[j];
+            }
+        }
+        out
+    };
+    let mut h = x.data.clone();
+    for bi in 0..cfg.n_blocks {
+        let pre = format!("t{bi}");
+        let a = layer_norm(
+            &h,
+            rows,
+            d,
+            &p.get(&format!("{pre}/g1"))?.data,
+            &p.get(&format!("{pre}/b1"))?.data,
+        );
+        let qkv = mm(
+            &a,
+            rows,
+            p.get(&format!("{pre}/wqkv"))?,
+            &p.get(&format!("{pre}/bqkv"))?.data,
+        );
+        let ctx = attn_context(&qkv, n, &cfg);
+        let proj =
+            mm(&ctx, rows, p.get(&format!("{pre}/wo"))?, &p.get(&format!("{pre}/bo"))?.data);
+        let h1: Vec<f32> = h.iter().zip(proj.iter()).map(|(x, p)| x + p).collect();
+        let f = layer_norm(
+            &h1,
+            rows,
+            d,
+            &p.get(&format!("{pre}/g2"))?.data,
+            &p.get(&format!("{pre}/b2"))?.data,
+        );
+        let mut f = mm(
+            &f,
+            rows,
+            p.get(&format!("{pre}/wf1"))?,
+            &p.get(&format!("{pre}/bf1"))?.data,
+        );
+        for v in f.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let f = mm(
+            &f,
+            rows,
+            p.get(&format!("{pre}/wf2"))?,
+            &p.get(&format!("{pre}/bf2"))?.data,
+        );
+        h = h1.iter().zip(f.iter()).map(|(x, p)| x + p).collect();
+    }
+    let pooled = mean_pool_seq(&h, n, s, d);
+    let head_w = p.get("head/w")?;
+    let head_b = p.get("head/b")?;
+    let nc = head_b.len();
+    // The compiled head carries a zero bias (the real bias lands after
+    // the §V-E post step); the `+= 0.0` is kept to normalize any `-0.0`
+    // matmul output identically.
+    let mut logits = mm(&pooled, n, head_w, &vec![0.0; nc]);
+    for r in 0..n {
+        for j in 0..nc {
+            logits[r * nc + j] += head_b.data[j];
+        }
+    }
+    Ok(Tensor::from_vec(&[n, nc], logits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::transformer::test_tfm_params;
+    use crate::pim::program::prepare_count;
+
+    fn tiny_cfg() -> TfmConfig {
+        TfmConfig { seq_len: 4, d_model: 16, n_heads: 2, d_ff: 32, ..TfmConfig::tiny() }
+    }
+
+    fn tiny_tfm(seed: u64) -> Transformer {
+        let cfg = tiny_cfg();
+        Transformer::new(test_tfm_params(cfg, seed), cfg)
+    }
+
+    fn rand_x(n: usize, cfg: TfmConfig, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        Tensor::from_vec(
+            &[n, cfg.seq_len, cfg.d_model],
+            (0..n * cfg.input_elems()).map(|_| rng.f64() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn compiled_pimhw_matches_spec_bit_for_bit() {
+        let t = tiny_tfm(1);
+        let prog = t.compile().unwrap();
+        assert!(prog.fully_prepared());
+        let x = rand_x(2, t.cfg, 9);
+        let got = prog.forward(&x, ForwardMode::PimHw, 7);
+        let want = spec_attn(&t, &x).unwrap();
+        assert_eq!(got.shape, want.shape);
+        for (g, w) in got.data.iter().zip(want.data.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn compiled_baseline_matches_dense_witness_bit_for_bit() {
+        let t = tiny_tfm(2);
+        let prog = CompiledTransformer::compile_dense(&t).unwrap();
+        let x = rand_x(2, t.cfg, 10);
+        let got = prog.forward(&x, ForwardMode::Baseline, 0);
+        let want = spec_attn_dense(&t, &x).unwrap();
+        for (g, w) in got.data.iter().zip(want.data.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn steady_state_execution_is_prepare_free() {
+        let t = tiny_tfm(3);
+        let prog = t.compile().unwrap();
+        let x = rand_x(1, t.cfg, 11);
+        let _ = prog.forward(&x, ForwardMode::PimHw, 0);
+        let before = prepare_count();
+        for seed in 0..3 {
+            let _ = prog.forward(&x, ForwardMode::PimHw, seed);
+            let _ = prog.forward(&x, ForwardMode::PimHwNoise(0.4), seed);
+        }
+        assert_eq!(prepare_count(), before, "attention serving must not re-prepare");
+    }
+
+    #[test]
+    fn noiseless_run_draws_no_rng_fingerprint_is_seed() {
+        let t = tiny_tfm(4);
+        let prog = t.compile().unwrap();
+        let x = rand_x(1, t.cfg, 12);
+        let mut scratch = ScratchPool::new();
+        let run = prog.forward_run(&x, ForwardMode::PimHw, 77, Parallelism::serial(), &mut scratch);
+        assert_eq!(run.rng_fingerprint(), Pcg64::seeded(77).next_u64());
+    }
+
+    #[test]
+    fn causal_mask_only_attends_backwards() {
+        let mut cfg = tiny_cfg();
+        cfg.causal = true;
+        // A causal context for token t must be independent of tokens
+        // after t: perturb only the last token's K/V lanes and check
+        // every earlier position's context is untouched.
+        let qkv: Vec<f32> = {
+            let mut rng = Pcg64::seeded(14);
+            (0..cfg.seq_len * 3 * cfg.d_model).map(|_| rng.f64() as f32).collect()
+        };
+        let base = attn_context(&qkv, 1, &cfg);
+        let mut poked = qkv.clone();
+        // Perturb only the last token's K and V lanes.
+        let last = (cfg.seq_len - 1) * 3 * cfg.d_model;
+        for v in poked[last + cfg.d_model..last + 3 * cfg.d_model].iter_mut() {
+            *v += 1.0;
+        }
+        let got = attn_context(&poked, 1, &cfg);
+        let d = cfg.d_model;
+        assert_eq!(&base[..(cfg.seq_len - 1) * d], &got[..(cfg.seq_len - 1) * d]);
+        // And without the mask the earlier positions *do* move.
+        cfg.causal = false;
+        let open = attn_context(&poked, 1, &cfg);
+        assert_ne!(&base[..d], &open[..d]);
+    }
+
+    #[test]
+    fn mean_pool_matches_manual_mean() {
+        let h: Vec<f32> = (0..2 * 3 * 4).map(|i| i as f32).collect();
+        let p = mean_pool_seq(&h, 2, 3, 4);
+        assert_eq!(p.len(), 8);
+        assert!((p[0] - (0.0 + 4.0 + 8.0) / 3.0).abs() < 1e-6);
+        assert!((p[7] - (15.0 + 19.0 + 23.0) / 3.0).abs() < 1e-6);
+    }
+}

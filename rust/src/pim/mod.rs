@@ -23,6 +23,13 @@
 //!   ([`CompiledNet`]) mirroring one-time RRAM programming, so the
 //!   serving hot loop performs zero weight quantization/packing. See
 //!   ARCHITECTURE.md §program and PERFORMANCE.md §amortization.
+//! * [`attn`] — the transformer sibling of [`program`]: compiled
+//!   encoder blocks ([`CompiledAttnBlock`]) and whole transformer
+//!   programs ([`CompiledTransformer`]) whose weight-stationary matmuls
+//!   run on prepared banks while the dynamic attention matmuls
+//!   (Q·Kᵀ, A·V) execute digitally in every mode, plus the
+//!   straight-line [`spec_attn`] specification the compiled path is
+//!   pinned against bit-for-bit (`rust/tests/transformer_parity.rs`).
 //! * [`shard_exec`] — the pipelined shard executor: drives contiguous
 //!   boundary segments of one [`CompiledNet`] as a software pipeline
 //!   (shard K runs micro-batch i while shard K−1 runs i+1),
@@ -31,6 +38,7 @@
 //!   stream. The placement/cost half lives in `fleet::shard`. See
 //!   ARCHITECTURE.md §fleet/shard and PERFORMANCE.md §10.
 
+pub mod attn;
 pub mod engine;
 pub mod parallel;
 pub mod program;
@@ -38,9 +46,10 @@ pub mod quant;
 pub mod shard_exec;
 pub mod transfer;
 
+pub use attn::{spec_attn, spec_attn_dense, CompiledAttnBlock, CompiledTransformer};
 pub use engine::{MacKernel, PimEngine};
 pub use parallel::Parallelism;
-pub use program::{CompiledNet, PreparedBank, PreparedWeights, ScratchPool};
+pub use program::{CompiledNet, PreparedBank, PreparedWeights, ScratchPool, SteppedProgram};
 pub use shard_exec::{PipelineTrace, ShardedExecutor};
 pub use quant::{PackedActPlanes, QuantizedActs, QuantizedWeights};
 pub use transfer::TransferModel;

@@ -806,13 +806,15 @@ impl CompiledNet {
 #[derive(Clone, Debug)]
 pub struct InflightRun {
     /// Activations after the last completed boundary (the input before
-    /// the first step; the logits after the final one).
-    h: Tensor,
+    /// the first step; the logits after the final one). Crate-visible so
+    /// sibling [`SteppedProgram`] implementations (`pim::attn`) can
+    /// construct and advance runs with the same representation.
+    pub(crate) h: Tensor,
     /// The group's private RNG stream — forked per layer in exactly the
     /// solo-forward order, so merging never reorders noise draws.
-    rng: Pcg64,
+    pub(crate) rng: Pcg64,
     /// Boundaries completed so far.
-    boundary: usize,
+    pub(crate) boundary: usize,
 }
 
 impl InflightRun {
@@ -859,6 +861,122 @@ pub fn logits_to_classes(logits: &Tensor) -> Vec<u8> {
                 .0 as u8
         })
         .collect()
+}
+
+/// Boundary-stepped compiled program: the contract between a compiled
+/// workload and the serving layers. Anything implementing it is served
+/// unchanged by the continuous-batching executor
+/// ([`crate::coordinator::server::NativeExecutor`]) and the pipelined
+/// shard executor ([`crate::pim::shard_exec::ShardedExecutor`]) — both
+/// are generic over this trait, defaulting to [`CompiledNet`].
+///
+/// Implementations: [`CompiledNet`] (the CIFAR-10 ResNet family) and
+/// [`crate::pim::attn::CompiledTransformer`] (the quantized transformer
+/// block family). The contract mirrors the `CompiledNet` inherent API
+/// exactly: a run opened by [`Self::begin`] and advanced by
+/// [`Self::step`] to [`Self::boundaries`] completions must be
+/// bit-identical (logits + trailing RNG state) to a solo
+/// [`Self::forward_par`] drain, so merged/pipelined execution can never
+/// drift from the reference forward.
+pub trait SteppedProgram: Send + Sync {
+    /// Number of merge boundaries in one execution; an [`InflightRun`]
+    /// is complete once [`Self::step`] has been called this many times.
+    fn boundaries(&self) -> usize;
+
+    /// Worker-pool width the program was compiled with (what
+    /// [`Self::classify`] and executor defaults run on).
+    fn parallelism(&self) -> Parallelism;
+
+    /// Do all layers carry prepared banks (⇒ every mode, including the
+    /// hardware-true ones, executes with zero weight preparation)?
+    fn fully_prepared(&self) -> bool;
+
+    /// Open an in-flight execution for one admission group, with the
+    /// group's own activations and private RNG stream.
+    fn begin(&self, x: &Tensor, seed: u64) -> InflightRun;
+
+    /// Advance one in-flight run by a single boundary. Returns `true`
+    /// when the run is complete and [`InflightRun::into_logits`] may be
+    /// taken.
+    fn step(
+        &self,
+        run: &mut InflightRun,
+        mode: ForwardMode,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> bool;
+
+    /// Full drain of [`Self::begin`] / [`Self::step`]: the reference
+    /// forward every merged or pipelined schedule is pinned against.
+    fn forward_par(
+        &self,
+        x: &Tensor,
+        mode: ForwardMode,
+        seed: u64,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> Tensor {
+        let mut run = self.begin(x, seed);
+        while !self.step(&mut run, mode, par, scratch) {}
+        run.into_logits()
+    }
+
+    /// Like [`Self::forward_par`] but returns the completed
+    /// [`InflightRun`], so callers can also compare the trailing RNG
+    /// state via [`InflightRun::rng_fingerprint`].
+    fn forward_run(
+        &self,
+        x: &Tensor,
+        mode: ForwardMode,
+        seed: u64,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> InflightRun {
+        let mut run = self.begin(x, seed);
+        while !self.step(&mut run, mode, par, scratch) {}
+        run
+    }
+
+    /// Argmax classification over [`Self::forward_par`] logits on
+    /// [`Self::parallelism`], reusing the caller's scratch pool.
+    fn classify(
+        &self,
+        x: &Tensor,
+        mode: ForwardMode,
+        seed: u64,
+        scratch: &mut ScratchPool,
+    ) -> Vec<u8> {
+        let logits = self.forward_par(x, mode, seed, self.parallelism(), scratch);
+        logits_to_classes(&logits)
+    }
+}
+
+impl SteppedProgram for CompiledNet {
+    fn boundaries(&self) -> usize {
+        CompiledNet::boundaries(self)
+    }
+
+    fn parallelism(&self) -> Parallelism {
+        self.parallelism
+    }
+
+    fn fully_prepared(&self) -> bool {
+        CompiledNet::fully_prepared(self)
+    }
+
+    fn begin(&self, x: &Tensor, seed: u64) -> InflightRun {
+        CompiledNet::begin(self, x, seed)
+    }
+
+    fn step(
+        &self,
+        run: &mut InflightRun,
+        mode: ForwardMode,
+        par: Parallelism,
+        scratch: &mut ScratchPool,
+    ) -> bool {
+        CompiledNet::step(self, run, mode, par, scratch)
+    }
 }
 
 #[cfg(test)]

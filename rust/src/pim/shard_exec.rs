@@ -1,4 +1,6 @@
-//! Pipelined execution of one [`CompiledNet`] split into boundary
+//! Pipelined execution of one compiled program ([`SteppedProgram`]; a
+//! [`CompiledNet`] by default, or a transformer via
+//! [`crate::pim::attn::CompiledTransformer`]) split into boundary
 //! segments across cache slices (the `pim`-side half of `fleet::shard`).
 //!
 //! A shard is a *residence* concept: shard K owns the prepared weight
@@ -30,7 +32,7 @@ use crate::nn::{ForwardMode, Tensor};
 use crate::{Error, Result};
 
 use super::parallel::Parallelism;
-use super::program::{CompiledNet, InflightRun, ScratchPool};
+use super::program::{CompiledNet, InflightRun, ScratchPool, SteppedProgram};
 
 /// One entry of a [`PipelineTrace`] tick: `(shard, micro_batch)` ran.
 pub type TraceEntry = (usize, usize);
@@ -60,24 +62,27 @@ impl PipelineTrace {
     }
 }
 
-/// Drives per-shard [`CompiledNet::begin`]/[`CompiledNet::step`]
-/// segments of one compiled network, either one segment at a time
-/// ([`ShardedExecutor::step_segment`], the building block the fleet's
-/// live serving path uses per slice) or as a full software pipeline over
-/// a stream of micro-batches ([`ShardedExecutor::forward_pipelined`]).
+/// Drives per-shard [`SteppedProgram::begin`]/[`SteppedProgram::step`]
+/// segments of one compiled program — any [`SteppedProgram`]
+/// (a [`CompiledNet`] by default, or a
+/// [`crate::pim::attn::CompiledTransformer`]) — either one segment at a
+/// time ([`ShardedExecutor::step_segment`], the building block the
+/// fleet's live serving path uses per slice) or as a full software
+/// pipeline over a stream of micro-batches
+/// ([`ShardedExecutor::forward_pipelined`]).
 #[derive(Clone, Debug)]
-pub struct ShardedExecutor<'a> {
-    net: &'a CompiledNet,
+pub struct ShardedExecutor<'a, P: SteppedProgram = CompiledNet> {
+    net: &'a P,
     /// Boundary indices where a new shard begins; strictly increasing,
     /// each in `1..boundaries()`. `cuts.len() + 1` shards.
     cuts: Vec<usize>,
 }
 
-impl<'a> ShardedExecutor<'a> {
+impl<'a, P: SteppedProgram> ShardedExecutor<'a, P> {
     /// Executor over explicit cut points. `cuts[i]` is the first
     /// boundary owned by shard `i+1`; an empty list is the degenerate
     /// single-shard executor (useful as a pipeline-harness baseline).
-    pub fn new(net: &'a CompiledNet, cuts: &[usize]) -> Result<ShardedExecutor<'a>> {
+    pub fn new(net: &'a P, cuts: &[usize]) -> Result<ShardedExecutor<'a, P>> {
         let b = net.boundaries();
         for (i, &c) in cuts.iter().enumerate() {
             if c == 0 || c >= b {
@@ -98,7 +103,7 @@ impl<'a> ShardedExecutor<'a> {
     /// Executor with `n_shards` near-equal boundary segments (the last
     /// shard absorbs the remainder). Errors when the network has fewer
     /// boundaries than shards.
-    pub fn balanced(net: &'a CompiledNet, n_shards: usize) -> Result<ShardedExecutor<'a>> {
+    pub fn balanced(net: &'a P, n_shards: usize) -> Result<ShardedExecutor<'a, P>> {
         let b = net.boundaries();
         if n_shards == 0 || n_shards > b {
             return Err(Error::Config(format!(
@@ -109,8 +114,8 @@ impl<'a> ShardedExecutor<'a> {
         Self::new(net, &cuts)
     }
 
-    /// The compiled network this executor shards.
-    pub fn net(&self) -> &CompiledNet {
+    /// The compiled program this executor shards.
+    pub fn net(&self) -> &P {
         self.net
     }
 

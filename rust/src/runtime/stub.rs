@@ -28,7 +28,8 @@ use std::collections::HashSet;
 use std::rc::Rc;
 
 use crate::nn::resnet::Params;
-use crate::nn::{ForwardMode, ResNet, Tensor};
+use crate::nn::{ForwardMode, ResNet, Tensor, Transformer};
+use crate::pim::attn::CompiledTransformer;
 use crate::pim::parallel::Parallelism;
 use crate::pim::program::{CompiledNet, ScratchPool};
 use crate::pim::quant::QuantizedActs;
@@ -57,6 +58,10 @@ const KNOWN_KERNELS: [&str; 1] = ["pim_mac.hlo.txt"];
 pub struct StubRuntime {
     batch: usize,
     models: HashMap<ModelVariant, Rc<CompiledNet>>,
+    /// Transformer programs, loaded via
+    /// [`Self::load_transformer_params`] — the second workload family,
+    /// served through the same variant → mode mapping.
+    tfm_models: HashMap<ModelVariant, Rc<CompiledTransformer>>,
     /// Compiled programs keyed by weights file, so the three PIM variants
     /// sharing `weights_ft.bin` parse, quantize, and pack it once.
     by_file: HashMap<&'static str, Rc<CompiledNet>>,
@@ -82,6 +87,7 @@ impl StubRuntime {
         StubRuntime {
             batch,
             models: HashMap::new(),
+            tfm_models: HashMap::new(),
             by_file: HashMap::new(),
             kernels: HashSet::new(),
             engine: PimEngine::tt(),
@@ -132,6 +138,75 @@ impl StubRuntime {
         } else {
             CompiledNet::compile_dense(net)
         }
+    }
+
+    /// Load a transformer variant from an in-memory model — the
+    /// transformer counterpart of [`Self::load_variant_params`], at the
+    /// same mode-aware compile depth (prepared banks only for the
+    /// hardware-true variant).
+    pub fn load_transformer_params(
+        &mut self,
+        variant: ModelVariant,
+        t: &Transformer,
+    ) -> Result<()> {
+        let program = if Self::needs_prepared(variant) {
+            t.compile()?
+        } else {
+            CompiledTransformer::compile_dense(t)?
+        };
+        self.tfm_models.insert(variant, Rc::new(program));
+        Ok(())
+    }
+
+    /// Forward one fixed-size batch of token sequences through a loaded
+    /// transformer variant. `tokens` is `batch × seq_len × d_model`
+    /// flattened; returns `batch × n_classes` logits. The variant → mode
+    /// mapping, key/seed handling, and prepared-execution guarantees are
+    /// exactly those of [`Runtime::forward`].
+    pub fn forward_transformer(
+        &self,
+        variant: ModelVariant,
+        tokens: &[f32],
+        key: Option<[u32; 2]>,
+    ) -> Result<Vec<f32>> {
+        let program = self
+            .tfm_models
+            .get(&variant)
+            .ok_or_else(|| Error::Runtime(format!("transformer {variant:?} not loaded")))?;
+        let cfg = program.cfg;
+        if tokens.len() != self.batch * cfg.input_elems() {
+            return Err(Error::Runtime(format!(
+                "batch shape mismatch: {} elements for batch {} × {}×{}",
+                tokens.len(),
+                self.batch,
+                cfg.seq_len,
+                cfg.d_model
+            )));
+        }
+        let mode = match variant {
+            ModelVariant::Baseline => ForwardMode::Baseline,
+            ModelVariant::Pim => ForwardMode::Pim,
+            ModelVariant::PimNoise => {
+                if key.is_none() {
+                    return Err(Error::Runtime("PimNoise requires a key".into()));
+                }
+                ForwardMode::PimNoise(self.noise_sigma)
+            }
+            ModelVariant::PimHw => ForwardMode::PimHw,
+        };
+        let x = Tensor::from_vec(
+            &[self.batch, cfg.seq_len, cfg.d_model],
+            tokens.to_vec(),
+        );
+        Ok(program
+            .forward_par(
+                &x,
+                mode,
+                Self::seed_from_key(key),
+                self.parallelism,
+                &mut self.scratch.borrow_mut(),
+            )
+            .data)
     }
 
     /// Register an emulated kernel without an artifact directory — the
@@ -323,6 +398,23 @@ mod tests {
         let preds = rt.classify(ModelVariant::Baseline, &x, (16, 16, 3), 10, None).unwrap();
         assert_eq!(preds.len(), 2);
         assert!(preds.iter().all(|&p| p < 10));
+    }
+
+    #[test]
+    fn transformer_forward_via_params() {
+        use crate::nn::transformer::{test_tfm_params, TfmConfig};
+        let cfg = TfmConfig { seq_len: 4, d_model: 16, n_heads: 2, d_ff: 32, ..TfmConfig::tiny() };
+        let t = Transformer::new(test_tfm_params(cfg, 11), cfg);
+        let mut rt = StubRuntime::new(2);
+        rt.load_transformer_params(ModelVariant::PimHw, &t).unwrap();
+        let mut rng = Pcg64::seeded(12);
+        let x: Vec<f32> = (0..2 * cfg.input_elems()).map(|_| rng.f64() as f32).collect();
+        let logits = rt.forward_transformer(ModelVariant::PimHw, &x, None).unwrap();
+        assert_eq!(logits.len(), 2 * cfg.n_classes);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // Unloaded variant and wrong shapes error.
+        assert!(rt.forward_transformer(ModelVariant::Baseline, &x, None).is_err());
+        assert!(rt.forward_transformer(ModelVariant::PimHw, &x[1..], None).is_err());
     }
 
     #[test]

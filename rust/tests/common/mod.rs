@@ -1,15 +1,40 @@
 //! Helpers shared by the parity harnesses (`program_parity.rs`,
-//! `simd_parity.rs`): deterministic matrix generation, f32 → bit-pattern
-//! views, and the resurrected PR-4 `ResNet::forward_par` body that serves
-//! as the historical network-choreography reference. (Cargo only builds
-//! files directly under `tests/` as test binaries, so this directory
-//! module is shared, not a test crate of its own.)
+//! `simd_parity.rs`, `shard_parity.rs`, `transformer_parity.rs`):
+//! deterministic matrix/tensor generation, f32 → bit-pattern views, the
+//! standard thread-sweep table, the scalar-kernel RAII guard, and the
+//! resurrected PR-4 `ResNet::forward_par` body that serves as the
+//! historical network-choreography reference. (Cargo only builds files
+//! directly under `tests/` as test binaries, so this directory module is
+//! shared, not a test crate of its own.)
 #![allow(dead_code)] // each test binary uses its own subset
 
 use nvm_in_cache::nn::{ForwardMode, ResNet, Tensor};
+use nvm_in_cache::pim::engine::MacKernel;
 use nvm_in_cache::pim::parallel::Parallelism;
 use nvm_in_cache::pim::PimEngine;
 use nvm_in_cache::util::rng::Pcg64;
+
+/// Thread counts every parity claim is checked at (serial, the smallest
+/// real pool, and an uneven count that exercises remainder tiling).
+pub const THREADS: [usize; 3] = [1, 2, 7];
+
+/// Restores the thread-default kernel on drop, so a failing assertion
+/// inside a scalar-forced section cannot leak `Scalar` into later code
+/// on the same thread.
+pub struct KernelGuard;
+
+impl KernelGuard {
+    pub fn scalar() -> KernelGuard {
+        MacKernel::set_thread_default(MacKernel::Scalar);
+        KernelGuard
+    }
+}
+
+impl Drop for KernelGuard {
+    fn drop(&mut self) {
+        MacKernel::set_thread_default(MacKernel::BitPlane);
+    }
+}
 
 pub fn rand_mat(rng: &mut Pcg64, len: usize, lo: f64, hi: f64) -> Vec<f32> {
     (0..len).map(|_| rng.range(lo, hi) as f32).collect()
@@ -17,6 +42,20 @@ pub fn rand_mat(rng: &mut Pcg64, len: usize, lo: f64, hi: f64) -> Vec<f32> {
 
 pub fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A random `[n, 16, 16, 3]` image batch — the CNN test-input shape.
+pub fn rand_image(rng: &mut Pcg64, n: usize) -> Tensor {
+    Tensor::from_vec(&[n, 16, 16, 3], (0..n * 16 * 16 * 3).map(|_| rng.f64() as f32).collect())
+}
+
+/// A random `[n, seq_len, d_model]` token batch — the transformer
+/// test-input shape.
+pub fn rand_tokens(rng: &mut Pcg64, n: usize, seq_len: usize, d_model: usize) -> Tensor {
+    Tensor::from_vec(
+        &[n, seq_len, d_model],
+        (0..n * seq_len * d_model).map(|_| rng.f64() as f32).collect(),
+    )
 }
 
 /// The pre-refactor (PR 4) `ResNet::forward_par` body, resurrected

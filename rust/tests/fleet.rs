@@ -42,6 +42,19 @@ fn fleet_sim_end_to_end_acceptance() {
     assert!(wide.shards >= 2, "over-capacity tenant must run sharded");
     assert!(wide.served > 0, "the shard chain must serve traffic");
     assert!(wide.transfer_s > 0.0 && wide.transfer_energy_j > 0.0);
+    // PR 9 acceptance: the default fleet is mixed CNN + transformer —
+    // both standard transformer tenants serve with full per-tenant
+    // attribution alongside the CNNs.
+    for name in ["tfm-tiny-d64", "tfm-base-d128"] {
+        let tfm = report
+            .tenants
+            .iter()
+            .find(|t| t.name == name)
+            .unwrap_or_else(|| panic!("default fleet includes {name}"));
+        assert!(tfm.served > 0, "{name} must serve traffic");
+        assert_eq!(tfm.shards, 1, "{name} fits one slice — replica-parallel");
+        assert!(tfm.energy_j > 0.0 && tfm.ops > 0.0, "{name} attribution present");
+    }
 }
 
 /// The whole run — placement, traffic, campaign interleave, wear — is
@@ -132,8 +145,8 @@ fn fleet_live_pass_serves_through_real_servers() {
     };
     let report = FleetSim::run(&cfg).unwrap();
     let live = report.live.expect("live summary present");
-    // 3 synthetic tenants + the default wide tenant.
-    assert_eq!(live.requests, 4 * 40);
+    // 3 synthetic tenants + the wide tenant + the 2 transformer tenants.
+    assert_eq!(live.requests, 6 * 40);
     assert_eq!(live.responses, live.requests, "every live request answered");
     assert!(live.batches > 0 && live.batches <= live.requests);
 }
@@ -144,8 +157,9 @@ fn fleet_live_pass_serves_through_real_servers() {
 /// between segments; compilations stay put).
 #[test]
 fn fleet_live_pass_compiles_once_per_tenant_replica() {
-    // Mirror the default fleet: synthetic tenants + the wide tenant.
-    let reg = ModelRegistry::synthetic_with_wide(3);
+    // Mirror the default fleet: synthetic tenants + the wide tenant +
+    // the two transformer tenants.
+    let reg = ModelRegistry::synthetic_with_wide(3).with_transformers();
     let total_replicas: u64 = reg.tenants.iter().map(|t| t.replicas as u64).sum();
     let cfg = FleetSimConfig {
         requests_per_tenant: 40,
@@ -168,4 +182,106 @@ fn fleet_live_pass_compiles_once_per_tenant_replica() {
         "programs must be reused across rewarm segments, not rebuilt per segment"
     );
     assert_eq!(live.responses, live.requests, "reuse must not drop requests");
+}
+
+/// Mixed-fleet registry round-trip: the standard CNN+transformer fleet
+/// registers both families with stable ids/names, and every tenant's
+/// layer stack survives the registry → placer path.
+#[test]
+fn mixed_registry_round_trips_both_families() {
+    use nvm_in_cache::fleet::ModelFamily;
+    let reg = ModelRegistry::synthetic_with_wide(3).with_transformers();
+    assert_eq!(reg.len(), 6);
+    let families: Vec<ModelFamily> = reg.tenants.iter().map(|t| t.family).collect();
+    assert!(families.contains(&ModelFamily::Resnet18));
+    assert!(families.contains(&ModelFamily::Cnn6));
+    assert_eq!(
+        families.iter().filter(|f| **f == ModelFamily::Transformer).count(),
+        2,
+        "both standard transformer tenants registered"
+    );
+    for t in &reg.tenants {
+        assert!(!t.layers().is_empty(), "tenant {} has a layer stack", t.name);
+        assert!(t.qos.deadline_s > 0.0);
+    }
+    // Transformer tenants carry the tighter 30 ms contract.
+    let tfm = reg.tenants.iter().find(|t| t.name == "tfm-tiny-d64").unwrap();
+    assert_eq!(tfm.qos.deadline_s, 0.03);
+    assert_eq!(tfm.replicas, 2);
+}
+
+/// Placer budgets with both families on the board: transformer tenants
+/// pack replica-parallel next to the CNNs, the wide CNN still shards,
+/// no slice overflows, wear stays inside the endurance window.
+#[test]
+fn mixed_fleet_placer_budgets_hold_for_both_families() {
+    use nvm_in_cache::fleet::EndurancePolicy;
+    let geom = nvm_in_cache::cache::addr::Geometry::default();
+    let reg = ModelRegistry::synthetic_with_wide(3).with_transformers();
+    let placement = EndurancePlacer::new(geom, 8).place(&reg).unwrap();
+    let capacity = geom.banks_per_slice * geom.subarrays_per_bank;
+    for t in &reg.tenants {
+        let shards = placement.tenant_shards(t.id);
+        if t.name == "resnet18-w24" {
+            assert!(shards >= 2, "wide CNN still shards in the mixed fleet");
+        } else {
+            assert_eq!(shards, 1, "{} must stay replica-parallel", t.name);
+        }
+    }
+    for (s, &used) in placement.slots_used.iter().enumerate() {
+        assert!(used <= capacity, "slice {s} overcommitted: {used}/{capacity}");
+    }
+    let policy = EndurancePolicy::default();
+    for (s, w) in placement.wear.iter().enumerate() {
+        assert!(w.within(&policy), "slice {s} outside the endurance window");
+    }
+}
+
+/// Router QoS holds per family: in the default mixed fleet every
+/// admitted request — CNN and transformer alike — meets its tenant's
+/// deadline contract, and the transformer tenants' tighter deadline is
+/// genuinely tighter than the CNNs' (the contract is not vacuous).
+#[test]
+fn mixed_fleet_router_qos_holds_per_family() {
+    let report = FleetSim::run(&config()).unwrap();
+    assert!(report.qos_ok);
+    let tfm_deadline = report
+        .tenants
+        .iter()
+        .find(|t| t.name.starts_with("tfm-"))
+        .expect("transformer tenant present")
+        .deadline_s;
+    let cnn_deadline = report
+        .tenants
+        .iter()
+        .find(|t| t.name == "resnet18-w16")
+        .expect("cnn tenant present")
+        .deadline_s;
+    assert!(tfm_deadline < cnn_deadline, "transformer contract is tighter");
+    for t in &report.tenants {
+        assert!(
+            t.p99_s <= t.deadline_s + 1e-9,
+            "tenant {} p99 {} vs deadline {}",
+            t.name,
+            t.p99_s,
+            t.deadline_s
+        );
+        assert_eq!(t.violations, 0, "tenant {} violated its contract", t.name);
+    }
+}
+
+/// Mixed-fleet determinism: with the transformer tenants on the board
+/// the whole run is still bit-deterministic, and dropping them via
+/// `transformer_tenants: false` reproduces the CNN-only fleet (so the
+/// flag is a clean ablation, not a different simulator).
+#[test]
+fn mixed_fleet_sim_is_deterministic_and_ablatable() {
+    let a = FleetSim::run(&config()).unwrap();
+    let b = FleetSim::run(&config()).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert!(a.tenants.iter().any(|t| t.name.starts_with("tfm-")));
+    let no_tfm = FleetSimConfig { transformer_tenants: false, ..config() };
+    let c = FleetSim::run(&no_tfm).unwrap();
+    assert!(c.tenants.iter().all(|t| !t.name.starts_with("tfm-")));
+    assert_eq!(c.tenants.len() + 2, a.tenants.len());
 }

@@ -20,9 +20,7 @@ use nvm_in_cache::runtime::{ModelVariant, Runtime, StubRuntime};
 use nvm_in_cache::util::rng::Pcg64;
 
 mod common;
-use common::{bits, historical_forward, rand_mat};
-
-const THREADS: [usize; 3] = [1, 2, 7];
+use common::{bits, historical_forward, rand_mat, THREADS};
 
 /// Acceptance: the prepared engine matmul is bit-identical to the
 /// one-shot path for threads ∈ {1, 2, 7}, noiseless and noisy, advances

@@ -24,16 +24,11 @@ use nvm_in_cache::pim::program::{CompiledNet, ScratchPool};
 use nvm_in_cache::pim::{Parallelism, ShardedExecutor};
 use nvm_in_cache::util::rng::Pcg64;
 
-/// Thread counts every parity claim is checked at (serial, the smallest
-/// real pool, and an uneven count that exercises remainder tiling).
-const THREADS: [usize; 3] = [1, 2, 7];
+mod common;
+use common::{rand_image as rand_input, THREADS};
 
 fn tiny_net() -> CompiledNet {
     ResNet::new(test_params(8, 10, 3)).compile().unwrap()
-}
-
-fn rand_input(rng: &mut Pcg64, n: usize) -> Tensor {
-    Tensor::from_vec(&[n, 16, 16, 3], (0..n * 16 * 16 * 3).map(|_| rng.f64() as f32).collect())
 }
 
 /// Assert one pipelined run equals its solo reference, bits and RNG.

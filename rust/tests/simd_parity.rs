@@ -29,27 +29,7 @@ use nvm_in_cache::runtime::{ModelVariant, Runtime, StubRuntime};
 use nvm_in_cache::util::rng::Pcg64;
 
 mod common;
-use common::{bits, historical_forward, rand_mat};
-
-const THREADS: [usize; 3] = [1, 2, 7];
-
-/// Restores the thread-default kernel on drop, so a failing assertion
-/// inside a scalar-forced section cannot leak `Scalar` into later code
-/// on the same thread.
-struct KernelGuard;
-
-impl KernelGuard {
-    fn scalar() -> KernelGuard {
-        MacKernel::set_thread_default(MacKernel::Scalar);
-        KernelGuard
-    }
-}
-
-impl Drop for KernelGuard {
-    fn drop(&mut self) {
-        MacKernel::set_thread_default(MacKernel::BitPlane);
-    }
-}
+use common::{bits, historical_forward, rand_mat, KernelGuard, THREADS};
 
 /// Engine level, noiseless: SIMD vs scalar vs the independent
 /// straight-line spec, over ragged multi-block/multi-tile shapes and a

@@ -1,0 +1,373 @@
+//! Cross-witness differential harness for the quantized transformer
+//! block on prepared banks (ISSUE 9 acceptance; EXPERIMENTS.md E17,
+//! PERFORMANCE.md §11).
+//!
+//! Three independent witnesses pin the compiled attention program:
+//!
+//! * `pim::spec_attn` — the straight-line digital-exact specification of
+//!   the noiseless hardware-true forward (quantized bank matmuls via
+//!   `spec_matmul`, digital attention, shared layernorm/softmax).
+//! * `pim::spec_attn_dense` — the dense fp32 witness the Baseline mode
+//!   must reproduce (no activation clip, no quantization).
+//! * The compiled program raced against **itself** across MAC kernels
+//!   {BitPlane, Scalar} × threads {1, 2, 7} × execution styles (bare
+//!   forward, stepped begin/step with mid-flight merging, StubRuntime
+//!   serving leg), noiseless and noisy, comparing logits *and* trailing
+//!   RNG state bit-for-bit.
+//!
+//! Plus the seeded ragged-shape sweep crossing the 64-bit plane-word and
+//! 128-row block edges in the bank contraction dimensions, the
+//! softmax/quantization edge cases, and the zero-prepare steady-state
+//! gate. `scripts/verify.sh` re-runs this suite with `--release`.
+
+use nvm_in_cache::nn::transformer::test_tfm_params;
+use nvm_in_cache::nn::{ForwardMode, Tensor, TfmConfig, Transformer};
+use nvm_in_cache::pim::engine::MacKernel;
+use nvm_in_cache::pim::program::{prepare_count, ScratchPool};
+use nvm_in_cache::pim::{spec_attn, spec_attn_dense, CompiledTransformer, Parallelism};
+use nvm_in_cache::runtime::{ModelVariant, Runtime, StubRuntime};
+use nvm_in_cache::util::rng::Pcg64;
+
+mod common;
+use common::{bits, rand_tokens, KernelGuard, THREADS};
+
+/// A trimmed geometry (8 tokens, d_model 32, 4 heads, d_ff 64, 2 blocks)
+/// so the full kernel × thread × mode matrix stays fast in debug builds.
+fn small_cfg() -> TfmConfig {
+    TfmConfig { seq_len: 8, d_model: 32, n_heads: 4, d_ff: 64, ..TfmConfig::tiny() }
+}
+
+fn small_transformer(seed: u64) -> Transformer {
+    let cfg = small_cfg();
+    Transformer::new(test_tfm_params(cfg, seed), cfg)
+}
+
+/// Run one compiled forward under a given kernel, returning logit bits
+/// and the trailing RNG fingerprint.
+fn run_with_kernel(
+    prog: &CompiledTransformer,
+    x: &Tensor,
+    mode: ForwardMode,
+    seed: u64,
+    kernel: MacKernel,
+    threads: usize,
+) -> (Vec<u32>, u64) {
+    let _guard = match kernel {
+        MacKernel::Scalar => Some(KernelGuard::scalar()),
+        MacKernel::BitPlane => None,
+    };
+    let mut scratch = ScratchPool::new();
+    let run = prog.forward_run(x, mode, seed, Parallelism::threads(threads), &mut scratch);
+    let fp = run.rng_fingerprint();
+    (bits(&run.into_logits().data), fp)
+}
+
+/// The tentpole matrix: the compiled transformer is bit-identical —
+/// logits and trailing RNG state — across MAC kernels {BitPlane, Scalar}
+/// × threads {1, 2, 7}, noiseless and noisy, and the noiseless
+/// hardware-true result equals the straight-line `spec_attn`
+/// specification bit-for-bit.
+#[test]
+fn compiled_bit_identical_across_kernels_threads_and_matches_spec() {
+    let tfm = small_transformer(42);
+    let prog = tfm.compile().unwrap();
+    assert!(prog.fully_prepared());
+    let mut rng = Pcg64::seeded(1000);
+    let x = rand_tokens(&mut rng, 2, prog.cfg.seq_len, prog.cfg.d_model);
+    let spec = bits(&spec_attn(&tfm, &x).unwrap().data);
+    for mode in [ForwardMode::PimHw, ForwardMode::PimHwNoise(0.4)] {
+        let reference = run_with_kernel(&prog, &x, mode, 7, MacKernel::BitPlane, 1);
+        for kernel in [MacKernel::BitPlane, MacKernel::Scalar] {
+            for t in THREADS {
+                let got = run_with_kernel(&prog, &x, mode, 7, kernel, t);
+                assert_eq!(got.0, reference.0, "{mode:?} {kernel:?} t={t}: logits");
+                assert_eq!(got.1, reference.1, "{mode:?} {kernel:?} t={t}: rng state");
+            }
+        }
+        if mode == ForwardMode::PimHw {
+            assert_eq!(reference.0, spec, "noiseless hardware vs spec_attn");
+        }
+    }
+}
+
+/// The dense fp32 witness: Baseline-mode execution (through the same
+/// prepared program — the dense weights ride along) reproduces
+/// `spec_attn_dense` bit-for-bit at every thread count, and the
+/// emulated-ADC modes are cross-thread deterministic on the dense-only
+/// compilation too.
+#[test]
+fn baseline_matches_dense_fp32_witness() {
+    let tfm = small_transformer(43);
+    let prepared = tfm.compile().unwrap();
+    let dense = CompiledTransformer::compile_dense(&tfm).unwrap();
+    assert!(!dense.fully_prepared());
+    let mut rng = Pcg64::seeded(1100);
+    let x = rand_tokens(&mut rng, 2, dense.cfg.seq_len, dense.cfg.d_model);
+    let witness = bits(&spec_attn_dense(&tfm, &x).unwrap().data);
+    let mut scratch = ScratchPool::new();
+    for t in THREADS {
+        let par = Parallelism::threads(t);
+        for prog in [&prepared, &dense] {
+            let got = prog.forward_par(&x, ForwardMode::Baseline, 3, par, &mut scratch);
+            assert_eq!(bits(&got.data), witness, "Baseline t={t} vs dense witness");
+        }
+    }
+    // Emulated modes (Pim, PimNoise) run the dense digital path + the
+    // §V-E post-ADC step; they must be thread-count invariant.
+    for mode in [ForwardMode::Pim, ForwardMode::PimNoise(0.4)] {
+        let want = dense.forward_par(&x, mode, 3, Parallelism::serial(), &mut scratch);
+        for t in [2usize, 7] {
+            let got = dense.forward_par(&x, mode, 3, Parallelism::threads(t), &mut scratch);
+            assert_eq!(bits(&got.data), bits(&want.data), "{mode:?} t={t}");
+        }
+    }
+}
+
+/// Stepped execution: group A (batch 2) runs two boundaries, group B
+/// (batch 1) merges mid-flight, both interleave to completion — logits
+/// and RNG fingerprints bit-identical to solo drains, noiseless and
+/// noisy, with zero weight prepares across every boundary step.
+#[test]
+fn stepped_begin_step_merging_bit_identical_and_prepare_free() {
+    let tfm = small_transformer(44);
+    let prog = tfm.compile().unwrap();
+    assert_eq!(prog.boundaries(), prog.cfg.n_blocks + 1, "one boundary per block + head");
+    let mut rng = Pcg64::seeded(1200);
+    let xa = rand_tokens(&mut rng, 2, prog.cfg.seq_len, prog.cfg.d_model);
+    let xb = rand_tokens(&mut rng, 1, prog.cfg.seq_len, prog.cfg.d_model);
+    let par = Parallelism::threads(2);
+    for mode in [ForwardMode::PimHw, ForwardMode::PimHwNoise(0.4)] {
+        let mut scratch = ScratchPool::new();
+        let solo_a = prog.forward_run(&xa, mode, 21, par, &mut scratch);
+        let solo_b = prog.forward_run(&xb, mode, 22, par, &mut scratch);
+        let before = prepare_count();
+        let mut run_a = prog.begin(&xa, 21);
+        let mut done_a = prog.step(&mut run_a, mode, par, &mut scratch);
+        // B merges while A is mid-flight.
+        let mut run_b = prog.begin(&xb, 22);
+        let mut done_b = false;
+        while !done_a || !done_b {
+            if !done_a {
+                done_a = prog.step(&mut run_a, mode, par, &mut scratch);
+            }
+            if !done_b {
+                done_b = prog.step(&mut run_b, mode, par, &mut scratch);
+            }
+        }
+        assert_eq!(prepare_count(), before, "{mode:?}: stepped execution prepared");
+        assert_eq!(run_a.rng_fingerprint(), solo_a.rng_fingerprint(), "{mode:?}: A rng");
+        assert_eq!(run_b.rng_fingerprint(), solo_b.rng_fingerprint(), "{mode:?}: B rng");
+        assert_eq!(
+            bits(&run_a.into_logits().data),
+            bits(&solo_a.into_logits().data),
+            "{mode:?}: A logits"
+        );
+        assert_eq!(
+            bits(&run_b.into_logits().data),
+            bits(&solo_b.into_logits().data),
+            "{mode:?}: B logits"
+        );
+    }
+}
+
+/// The StubRuntime serving leg: `load_transformer_params` +
+/// `forward_transformer` returns logits bit-identical to the compiled
+/// program (hardware-true variant) and to the dense fp32 witness
+/// (Baseline variant), on both kernels, at every thread count, with a
+/// prepare-free steady state after load.
+#[test]
+fn stub_runtime_transformer_leg_matches_compiled_across_kernels() {
+    let batch = 2;
+    let tfm = small_transformer(45);
+    let prog = tfm.compile().unwrap();
+    let cfg = prog.cfg;
+    let mut rng = Pcg64::seeded(1300);
+    let x = rand_tokens(&mut rng, batch, cfg.seq_len, cfg.d_model);
+    let mut scratch = ScratchPool::new();
+    let want_base = bits(&spec_attn_dense(&tfm, &x).unwrap().data);
+
+    let run = |kernel: MacKernel, threads: usize| -> (Vec<u32>, Vec<u32>, bool) {
+        let _guard = match kernel {
+            MacKernel::Scalar => Some(KernelGuard::scalar()),
+            MacKernel::BitPlane => None,
+        };
+        let mut rt = StubRuntime::new(batch);
+        rt.load_transformer_params(ModelVariant::PimHw, &tfm).unwrap();
+        rt.load_transformer_params(ModelVariant::Baseline, &tfm).unwrap();
+        rt.set_parallelism(Parallelism::threads(threads));
+        let steady = prepare_count();
+        let hw = rt.forward_transformer(ModelVariant::PimHw, &x.data, None).unwrap();
+        let base = rt.forward_transformer(ModelVariant::Baseline, &x.data, None).unwrap();
+        (bits(&hw), bits(&base), prepare_count() == steady)
+    };
+    for t in THREADS {
+        let par = Parallelism::threads(t);
+        // The stub seeds unkeyed requests with 0 (`seed_from_key(None)`).
+        let want_hw =
+            bits(&prog.forward_par(&x, ForwardMode::PimHw, 0, par, &mut scratch).data);
+        let simd = run(MacKernel::BitPlane, t);
+        let scalar = run(MacKernel::Scalar, t);
+        assert_eq!(simd.0, want_hw, "t={t}: stub PimHw vs compiled");
+        assert_eq!(simd.0, scalar.0, "t={t}: stub PimHw SIMD vs scalar");
+        assert_eq!(simd.1, want_base, "t={t}: stub Baseline vs dense witness");
+        assert_eq!(simd.1, scalar.1, "t={t}: stub Baseline SIMD vs scalar");
+        assert!(simd.2 && scalar.2, "t={t}: stub serving must be prepare-free");
+    }
+}
+
+/// Seeded proptest-style sweep over ragged (seq_len, d_model, n_heads,
+/// d_ff) geometries whose bank contraction dimensions cross the 64-bit
+/// plane-word edge (63/64/65) and the 128-row block edge (127/128/129,
+/// plus a ragged second block at 144), causal and bidirectional,
+/// noiseless-vs-spec and noisy self-consistency at random thread counts.
+/// Every case's index is in the assert message, so a failure replays.
+#[test]
+fn prop_ragged_shapes_cross_word_and_block_edges() {
+    // (seq_len, d_model, n_heads, d_ff, causal)
+    const CASES: [(usize, usize, usize, usize, bool); 8] = [
+        (1, 8, 1, 63, true), // single-token causal sequence
+        (2, 16, 2, 64, false),
+        (3, 24, 3, 65, true),
+        (5, 40, 5, 127, false),
+        (4, 48, 4, 128, true),
+        (6, 64, 4, 129, false),
+        (7, 72, 8, 144, true),
+        (9, 56, 7, 80, false),
+    ];
+    for (i, &(seq_len, d_model, n_heads, d_ff, causal)) in CASES.iter().enumerate() {
+        let mut rng = Pcg64::seeded(5000 + i as u64);
+        let cfg =
+            TfmConfig { seq_len, d_model, n_heads, d_ff, causal, ..TfmConfig::tiny() };
+        let tfm = Transformer::new(test_tfm_params(cfg, 200 + i as u64), cfg);
+        let prog = tfm.compile().unwrap();
+        let n = 1 + i % 2;
+        let x = rand_tokens(&mut rng, n, seq_len, d_model);
+        let threads = 1 + rng.below(7) as usize;
+        let par = Parallelism::threads(threads);
+        let mut scratch = ScratchPool::new();
+        let ctx = format!("case {i}: s={seq_len} d={d_model} h={n_heads} ff={d_ff} t={threads}");
+
+        let spec = spec_attn(&tfm, &x).unwrap();
+        let got = prog.forward_par(&x, ForwardMode::PimHw, 9, par, &mut scratch);
+        assert_eq!(got.shape, vec![n, cfg.n_classes], "{ctx}: logit shape");
+        assert_eq!(bits(&got.data), bits(&spec.data), "{ctx}: PimHw vs spec");
+
+        let dense = bits(&spec_attn_dense(&tfm, &x).unwrap().data);
+        let base = prog.forward_par(&x, ForwardMode::Baseline, 9, par, &mut scratch);
+        assert_eq!(bits(&base.data), dense, "{ctx}: Baseline vs dense witness");
+
+        let noisy = ForwardMode::PimHwNoise(0.5);
+        let a = prog.forward_run(&x, noisy, 9, par, &mut scratch);
+        let b = prog.forward_run(&x, noisy, 9, Parallelism::serial(), &mut scratch);
+        assert_eq!(a.rng_fingerprint(), b.rng_fingerprint(), "{ctx}: noisy rng");
+        assert_eq!(
+            bits(&a.into_logits().data),
+            bits(&b.into_logits().data),
+            "{ctx}: noisy logits threaded vs serial"
+        );
+    }
+}
+
+/// Softmax/quantization edge cases at the whole-pipeline level: an
+/// all-equal token batch (uniform attention), a saturating
+/// large-magnitude batch (activation quantization at full scale), and a
+/// NaN-poisoned batch (the softmax uniform fallback + NaN→0 activation
+/// quantization) must all keep compiled-vs-spec parity bit-for-bit —
+/// the edge handling lives in shared helpers, so the witnesses cannot
+/// drift apart silently.
+#[test]
+fn edge_case_inputs_keep_compiled_and_spec_in_lockstep() {
+    let tfm = small_transformer(46);
+    let prog = tfm.compile().unwrap();
+    let cfg = prog.cfg;
+    let elems = 2 * cfg.input_elems();
+    let mut scratch = ScratchPool::new();
+    let cases: [(&str, Vec<f32>); 3] = [
+        ("all-equal tokens", vec![0.25; elems]),
+        ("saturating magnitudes", (0..elems).map(|j| ((j % 7) as f32 - 3.0) * 1e4).collect()),
+        (
+            "NaN-poisoned batch",
+            (0..elems).map(|j| if j % 97 == 0 { f32::NAN } else { 0.1 }).collect(),
+        ),
+    ];
+    for (name, data) in cases {
+        let x = Tensor::from_vec(&[2, cfg.seq_len, cfg.d_model], data);
+        let spec = spec_attn(&tfm, &x).unwrap();
+        let got = prog.forward_par(&x, ForwardMode::PimHw, 5, Parallelism::threads(2), &mut scratch);
+        assert_eq!(bits(&got.data), bits(&spec.data), "{name}: compiled vs spec");
+        if name != "NaN-poisoned batch" {
+            assert!(got.data.iter().all(|v| v.is_finite()), "{name}: logits must stay finite");
+        }
+    }
+}
+
+/// Saturation vs the 16-bit recombination lanes (PERFORMANCE.md §8):
+/// the bank-resident contraction dimensions of the standard transformer
+/// geometries stay within whole 128-row blocks whose worst-case
+/// bit-plane MAC is `MAC_FULLSCALE` = 15 · 128 = 1920 ≪ 2¹⁶, and a
+/// saturating forward agrees across kernels — the packed accumulator
+/// cannot wrap even when every lane hits its ceiling.
+#[test]
+fn saturating_attention_respects_the_16_bit_lane_ceiling() {
+    use nvm_in_cache::consts::ARRAY_ROWS;
+    use nvm_in_cache::pim::transfer::MAC_FULLSCALE;
+    assert_eq!(MAC_FULLSCALE as usize, 15 * ARRAY_ROWS);
+    assert!(MAC_FULLSCALE as usize <= u16::MAX as usize);
+    // The standard tenants' bank contractions (d_model, d_ff): all split
+    // into ≤128-row blocks by the engine, so the per-block ceiling above
+    // is the binding one for every transformer matmul.
+    for cfg in [TfmConfig::tiny(), TfmConfig::base()] {
+        assert!(cfg.d_model <= 2 * ARRAY_ROWS && cfg.d_ff <= 2 * ARRAY_ROWS);
+    }
+    let tfm = small_transformer(47);
+    let prog = tfm.compile().unwrap();
+    let cfg = prog.cfg;
+    // Alternating ±full-scale tokens: layernorm maps these to ±1-ish
+    // values, so after the positive activation clip and per-tensor
+    // quantization half the lanes sit at code 15 — the densest
+    // popcount population a real activation tensor can produce.
+    let x = Tensor::from_vec(
+        &[1, cfg.seq_len, cfg.d_model],
+        (0..cfg.input_elems()).map(|j| if j % 2 == 0 { 1e3 } else { -1e3 }).collect(),
+    );
+    let simd = run_with_kernel(&prog, &x, ForwardMode::PimHw, 1, MacKernel::BitPlane, 2);
+    let scalar = run_with_kernel(&prog, &x, ForwardMode::PimHw, 1, MacKernel::Scalar, 2);
+    assert_eq!(simd, scalar, "saturated forward must agree across kernels");
+    assert_eq!(simd.0, bits(&spec_attn(&tfm, &x).unwrap().data), "saturated vs spec");
+}
+
+/// The zero-prepare steady state and the untouched-seed fingerprint: a
+/// compiled transformer serves every mode without preparing, a noiseless
+/// hardware run draws nothing from its RNG (fingerprint == the seeded
+/// stream's first word), and a noisy run does draw.
+#[test]
+fn steady_state_prepare_free_and_noiseless_rng_untouched() {
+    let tfm = small_transformer(48);
+    let prog = tfm.compile().unwrap();
+    let mut rng = Pcg64::seeded(1500);
+    let x = rand_tokens(&mut rng, 2, prog.cfg.seq_len, prog.cfg.d_model);
+    let mut scratch = ScratchPool::new();
+    let steady = prepare_count();
+    for mode in [
+        ForwardMode::Baseline,
+        ForwardMode::Pim,
+        ForwardMode::PimNoise(0.3),
+        ForwardMode::PimHw,
+        ForwardMode::PimHwNoise(0.3),
+    ] {
+        for _ in 0..2 {
+            prog.forward_par(&x, mode, 77, Parallelism::threads(2), &mut scratch);
+        }
+    }
+    assert_eq!(prepare_count(), steady, "steady-state serving must never prepare");
+
+    let quiet = prog.forward_run(&x, ForwardMode::PimHw, 77, Parallelism::serial(), &mut scratch);
+    assert_eq!(
+        quiet.rng_fingerprint(),
+        Pcg64::seeded(77).next_u64(),
+        "noiseless hardware run must not consume RNG"
+    );
+    let noisy =
+        prog.forward_run(&x, ForwardMode::PimHwNoise(0.3), 77, Parallelism::serial(), &mut scratch);
+    assert_ne!(quiet.rng_fingerprint(), noisy.rng_fingerprint(), "noisy run must draw");
+}

@@ -49,6 +49,15 @@ if [ -f rust/tests/shard_parity.rs ]; then
   cargo test --release -q --test shard_parity
 fi
 
+# Transformer differential suite in release too: the compiled attention
+# block races the straight-line spec (and the dense fp32 witness)
+# bit-for-bit across kernels/threads/modes, and the ragged-shape sweep
+# over word/block edges is only tolerable with optimizations on.
+if [ -f rust/tests/transformer_parity.rs ]; then
+  echo "== cargo test --release -q --test transformer_parity =="
+  cargo test --release -q --test transformer_parity
+fi
+
 echo "== cargo test --doc =="
 cargo test --doc -q
 
