@@ -4,7 +4,9 @@
 //! std::thread + mpsc (offline build; no tokio). One executor thread — the
 //! testbed has one core, and runtime backends (e.g. PJRT executables) need
 //! not be Sync — with the batcher amortizing per-invocation cost exactly
-//! like the hardware's shared PIM windows do.
+//! like the hardware's shared PIM windows do. The executor's matmuls fan
+//! out on the persistent `pim::parallel` pool, so steady-state serving
+//! spawns zero threads per batch (PERFORMANCE.md §12).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

@@ -673,9 +673,10 @@ impl FleetSim {
     /// replica) per rewarm segment — each running a hardware-true
     /// PimHw-mode [`crate::coordinator::NativeExecutor`] over a synthetic
     /// network, so the wave serves *from the prepared quantized banks*
-    /// on `parallelism` workers (threads + mpsc; wall-clock, so the
-    /// numbers are integration evidence, not part of the deterministic
-    /// report).
+    /// on `parallelism` workers — the persistent `pim::parallel` pool,
+    /// spawned once per width and reused across every batch and segment
+    /// (wall-clock, so the numbers are integration evidence, not part
+    /// of the deterministic report).
     ///
     /// The compile-once / execute-many contract runs end to end here:
     /// each serving (tenant, replica) compiles its weight program

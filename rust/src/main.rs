@@ -9,7 +9,8 @@
 //!   serve     [--artifacts DIR] [--requests N] [--batch B] [--native]
 //!             [--threads T] [--continuous]
 //!             demo serving run with the dynamic batcher + bank scheduler;
-//!             T sizes the executor's pim::parallel worker pool;
+//!             T sizes the executor's persistent pim::parallel worker
+//!             pool (0 = auto-size from available_parallelism);
 //!             --continuous merges requests into in-flight executions at
 //!             layer boundaries instead of drain batching
 //!   serve-sim [--replicas N] [--requests N] [--seed S] [--threads T]
@@ -36,10 +37,10 @@
 //!             scenario (--no-tfm restores the CNN-only fleet). Writes
 //!             DIR/fleet_sim.json; campaigns fire at FRAC of each
 //!             tenant's traffic horizon; T parallelizes the --live
-//!             executors
+//!             executors (0 = auto)
 //!   bench     [--quick] [--threads T] [--json [FILE]]
 //!             hot-path micro-benchmarks, serial vs T-thread tiled execution
-//!             (engine matmul + ResNet-18 stub inference), the
+//!             (engine matmul + ResNet-18 stub inference; T=0 auto-sizes), the
 //!             simd_vs_scalar MAC-kernel race (word-wide bit-plane
 //!             popcount vs the historical scalar kernel, parity + speedup),
 //!             the prepare_vs_execute section (one-time weight-program
@@ -52,8 +53,11 @@
 //!             spec_attn parity across kernels/threads/modes, mixed
 //!             CNN+transformer fleet gate, attention steady-state
 //!             zero-prepare gate),
+//!             the hotpath section (persistent-pool dispatch vs
+//!             spawn-per-call, pool/zero-skip parity, steady-state
+//!             zero-alloc + spawn-once gates),
 //!             + fleet-sim summary; --json writes the machine-readable
-//!             perf-trajectory record (BENCH_PR9.json, or FILE when
+//!             perf-trajectory record (BENCH_PR10.json, or FILE when
 //!             given) — see PERFORMANCE.md
 //!   info      print headline perf model numbers
 
@@ -106,6 +110,14 @@ fn out_dir(args: &Args) -> PathBuf {
 
 fn artifacts(args: &Args) -> nvm_in_cache::Result<ArtifactDir> {
     ArtifactDir::open(args.get_or("artifacts", "artifacts"))
+}
+
+/// Parse `--threads` into a [`Parallelism`]: absent → `default` threads,
+/// an explicit `0` → [`Parallelism::auto()`] (sized from
+/// `std::thread::available_parallelism()`), anything else taken literally.
+fn parallelism_arg(args: &Args, default: usize) -> nvm_in_cache::Result<Parallelism> {
+    let t = args.get_usize("threads", default)?;
+    Ok(if t == 0 { Parallelism::auto() } else { Parallelism::threads(t) })
 }
 
 fn cmd_figures(args: &Args) -> nvm_in_cache::Result<()> {
@@ -215,7 +227,7 @@ fn cmd_e2e(args: &Args) -> nvm_in_cache::Result<()> {
 
 fn cmd_serve(args: &Args) -> nvm_in_cache::Result<()> {
     let n_requests = args.get_usize("requests", 500)?;
-    let par = Parallelism::threads(args.get_usize("threads", 1)?);
+    let par = parallelism_arg(args, 1)?;
     let scheduler = BankScheduler::new(
         BankScheduler::resnet18_layers(16),
         Geometry::default(),
@@ -307,7 +319,7 @@ fn cmd_fleet_sim(args: &Args) -> nvm_in_cache::Result<()> {
         requests_per_tenant: args.get_usize("requests", defaults.requests_per_tenant)?,
         campaign_at_frac: args.get_f64("campaign-at", defaults.campaign_at_frac)?,
         live_serving: args.flag("live"),
-        parallelism: Parallelism::threads(args.get_usize("threads", 1)?),
+        parallelism: parallelism_arg(args, 1)?,
         wide_tenant: !args.flag("no-wide"),
         transformer_tenants: !args.flag("no-tfm"),
     };
@@ -400,7 +412,7 @@ fn cmd_serve_sim(args: &Args) -> nvm_in_cache::Result<()> {
     let replicas = args.get_usize("replicas", 4)?.max(1);
     let requests = args.get_usize("requests", 3000)?.max(1);
     let seed = args.get_u64("seed", 42)?;
-    let threads = args.get_usize("threads", 4)?.max(1);
+    let threads = parallelism_arg(args, 4)?.thread_count();
     let queue_cap = args.get_usize("queue-cap", 64)?.max(1);
     let max_batch = args.get_usize("max-batch", 16)?.max(1);
     let arrival = match args.get_or("arrival", "poisson") {
@@ -495,14 +507,17 @@ fn cmd_serve_sim(args: &Args) -> nvm_in_cache::Result<()> {
 /// microbench, the prepare_vs_execute section (compile-once cost vs
 /// steady-state prepared execution), the shard section (pipelined
 /// shard-executor parity, over-capacity placement, hop-transfer
-/// attribution), and the fleet-sim summary; `--json` additionally writes
-/// the machine-readable perf-trajectory record (BENCH_PR8.json; see
+/// attribution), the hotpath section (persistent-pool dispatch vs
+/// spawn-per-call plus the pool/zero-skip/zero-alloc/spawn-once gates),
+/// and the fleet-sim summary; `--json` additionally writes the
+/// machine-readable perf-trajectory record (BENCH_PR10.json; see
 /// PERFORMANCE.md for the format and trajectory).
 fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::consts::{ARRAY_ROWS, ARRAY_WORDS};
     use nvm_in_cache::fleet::{FleetSim, FleetSimConfig};
     use nvm_in_cache::nn::resnet::test_params;
     use nvm_in_cache::nn::Tensor;
+    use nvm_in_cache::pim::parallel;
     use nvm_in_cache::pim::quant::quantize_acts;
     use nvm_in_cache::pim::{program, MacKernel, PimEngine};
     use nvm_in_cache::runtime::{Runtime, StubRuntime};
@@ -510,8 +525,8 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     use nvm_in_cache::util::json::Json;
     use nvm_in_cache::util::rng::Pcg64;
 
-    let threads = args.get_usize("threads", 4)?.max(1);
-    let par = Parallelism::threads(threads);
+    let par = parallelism_arg(args, 4)?;
+    let threads = par.thread_count();
     let mut b = if args.flag("quick") { Bencher::quick() } else { Bencher::default() };
     let mut rng = Pcg64::seeded(1);
 
@@ -660,7 +675,18 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
     let _ = rt_serial.forward(ModelVariant::PimHw, &images, dims, None)?;
     let steady_state_zero_prepares = program::prepare_count() == prepares_before;
 
-    // Hot path 5: the whole fleet simulation (small config, shared with
+    // Hot path 5: job dispatch through the persistent worker pool vs the
+    // historical spawn-per-call path — the fixed cost the pool amortizes
+    // away (PERFORMANCE.md §12). The per-unit work is trivially cheap on
+    // purpose: this isolates dispatch overhead, not compute.
+    b.bench("pool_dispatch_t4_256u", || {
+        parallel::run_units(4, 256, |u| (u as u64).wrapping_mul(3))
+    });
+    b.bench("unpooled_dispatch_t4_256u", || {
+        parallel::run_units_unpooled(4, 256, |u| (u as u64).wrapping_mul(3))
+    });
+
+    // Hot path 6: the whole fleet simulation (small config, shared with
     // the cargo-bench fleet section). The run is deterministic, so the
     // last bench iteration's report IS the report — no extra run needed.
     let fleet_cfg = FleetSimConfig::bench_quick();
@@ -958,8 +984,134 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
         ])
     };
 
+    // Hotpath section (PERFORMANCE.md §12, EXPERIMENTS.md E18): the
+    // persistent worker pool, zero-word skipping, and allocation-free
+    // steady state, each pinned by a deterministic gate. The exhaustive
+    // differential suite is rust/tests/hotpath_parity.rs; these are the
+    // trajectory-record versions.
+    let (hotpath_json, hotpath_skip_fraction) = {
+        let (hm, hk, hn) = (5usize, 200usize, 133usize);
+        let mut hrng = Pcg64::seeded(14);
+        let ha: Vec<f32> = (0..hm * hk).map(|_| hrng.range(0.0, 1.0) as f32).collect();
+        let hw: Vec<f32> = (0..hk * hn).map(|_| hrng.range(-0.5, 0.5) as f32).collect();
+        let heng = PimEngine::tt();
+        let hprog = heng.prepare(&hw, hk, hn);
+        let bits_eq = |x: &[f32], y: &[f32]| {
+            x.len() == y.len()
+                && x.iter().zip(y.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        };
+
+        // Gate 1: pooled execution is bit-identical (values + trailing
+        // RNG state) to the serial path across widths {1,2,7} with the
+        // same pools reused call after call, and `run_units` matches the
+        // historical spawn-per-call `run_units_unpooled`.
+        let noisy_eng = PimEngine::tt().with_noise(0.4);
+        let want = heng.matmul_prepared(&ha, hm, &hprog, None);
+        let mut wrng = Pcg64::seeded(5);
+        let want_noisy = noisy_eng.matmul_prepared(&ha, hm, &hprog, Some(&mut wrng));
+        let want_tail = wrng.next_u64();
+        let mut pool_parity = true;
+        for t in [1usize, 2, 7] {
+            let par_t = Parallelism::threads(t);
+            for _ in 0..3 {
+                pool_parity &=
+                    bits_eq(&heng.par_matmul_prepared(&ha, hm, &hprog, None, par_t), &want);
+                let mut r = Pcg64::seeded(5);
+                pool_parity &= bits_eq(
+                    &noisy_eng.par_matmul_prepared(&ha, hm, &hprog, Some(&mut r), par_t),
+                    &want_noisy,
+                ) && r.next_u64() == want_tail;
+            }
+        }
+        let mix = |u: usize| (u as u64).wrapping_mul(0x9E37_79B9);
+        pool_parity &= parallel::run_units(4, 37, mix) == parallel::run_units_unpooled(4, 37, mix);
+
+        // Gate 2: zero-word skipping is output-neutral. Alternate
+        // activation rows are entirely zero (ReLU-like), so whole k-word
+        // groups vanish; the bit-plane kernel must still match the scalar
+        // kernel and the straight-line spec bit-for-bit while SkipStats
+        // reports real skips.
+        let sparse_a: Vec<f32> = (0..hm * hk)
+            .map(|i| if (i / hk) % 2 == 0 { 0.0 } else { hrng.range(0.05, 1.0) as f32 })
+            .collect();
+        heng.skip_stats().reset();
+        let skip_out = heng.matmul_prepared(&sparse_a, hm, &hprog, None);
+        let hp_visited = heng.skip_stats().words_visited();
+        let hp_skipped = heng.skip_stats().act_words_skipped();
+        let skip_fraction = heng.skip_stats().act_skip_fraction();
+        let scalar_eng = PimEngine::tt().with_kernel(MacKernel::Scalar);
+        let zero_skip_parity = hp_skipped > 0
+            && hp_visited > hp_skipped
+            && bits_eq(&skip_out, &scalar_eng.matmul_prepared(&sparse_a, hm, &hprog, None))
+            && bits_eq(&skip_out, &program::spec_matmul(&sparse_a, hm, hk, &hw, hn));
+
+        // Gate 3: after one warm-up forward, steady-state CompiledNet
+        // execution performs zero MAC-path heap allocations (counter —
+        // same pattern as the prepare_count gate above).
+        let hnet = ResNet::new(test_params(8, 10, 1));
+        let hprogram = hnet.compile()?;
+        let hx = Tensor::from_vec(
+            &[1, 16, 16, 3],
+            (0..16 * 16 * 3).map(|_| hrng.f64() as f32).collect(),
+        );
+        let mut hscratch = program::ScratchPool::new();
+        let _ = hprogram.forward_par(
+            &hx,
+            ForwardMode::PimHw,
+            0,
+            Parallelism::serial(),
+            &mut hscratch,
+        );
+        let allocs_before = program::mac_alloc_count();
+        for seed in 1..3u64 {
+            let _ = hprogram.forward_par(
+                &hx,
+                ForwardMode::PimHw,
+                seed,
+                Parallelism::serial(),
+                &mut hscratch,
+            );
+        }
+        let steady_state_zero_allocs = program::mac_alloc_count() == allocs_before;
+
+        // Gate 4: each pool width spawns its workers exactly once per
+        // process — gate 1 already drove the width-7 pool nine times, so
+        // after five more dispatches the spawn counter must still be 7.
+        for _ in 0..5 {
+            let _ = parallel::run_units(7, 16, |u| u as u64);
+        }
+        let pool_spawns_once = parallel::pool_spawned_for(7) == 7;
+
+        println!(
+            "hotpath: pool parity t{{1,2,7}}×3 reuses: {pool_parity}; zero-skip parity \
+             ({hp_skipped}/{hp_visited} act words skipped): {zero_skip_parity}; \
+             steady-state zero MAC allocs: {steady_state_zero_allocs}; width-7 pool \
+             spawned exactly once: {pool_spawns_once}"
+        );
+        (
+            Json::obj(vec![
+                ("pool_parity_bit_identical", Json::Bool(pool_parity)),
+                ("zero_skip_parity_bit_identical", Json::Bool(zero_skip_parity)),
+                ("steady_state_zero_allocs", Json::Bool(steady_state_zero_allocs)),
+                ("pool_spawns_once", Json::Bool(pool_spawns_once)),
+            ]),
+            skip_fraction,
+        )
+    };
+    let pool_dispatch_s = mean("pool_dispatch_t4_256u");
+    let unpooled_dispatch_s = mean("unpooled_dispatch_t4_256u");
+    let spawn_amortization = pool_dispatch_s
+        .zip(unpooled_dispatch_s)
+        .and_then(|(p, u)| (p > 0.0).then_some(u / p));
+    if let Some(x) = spawn_amortization {
+        println!(
+            "hotpath dispatch: persistent pool {x:.1}x lower per-call overhead than \
+             spawn-per-call (t4, 256 trivial units)"
+        );
+    }
+
     if args.flag("json") {
-        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR9.json"));
+        let path = std::path::PathBuf::from(args.get_or("json", "BENCH_PR10.json"));
         // Two sections (PERFORMANCE.md): `comparison` holds only
         // deterministic fields (workload descriptors, parity verdicts, the
         // simulated-clock fleet report) so trajectory files diff cleanly
@@ -985,6 +1137,7 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
             ("serve", serve_json),
             ("shard", shard_json),
             ("transformer", transformer_json),
+            ("hotpath", hotpath_json),
         ]);
         let mut measured = vec![("benches", b.to_json())];
         if let Some(s) = speedup_engine {
@@ -1020,8 +1173,20 @@ fn cmd_bench(args: &Args) -> nvm_in_cache::Result<()> {
             }
         }
         measured.push(("simd_vs_scalar", Json::obj(svs)));
+        let mut hp: Vec<(&str, Json)> = Vec::new();
+        for (key, v) in [
+            ("pool_dispatch_s", pool_dispatch_s),
+            ("unpooled_dispatch_s", unpooled_dispatch_s),
+            ("spawn_amortization_x", spawn_amortization),
+        ] {
+            if let Some(v) = v {
+                hp.push((key, Json::Num(v)));
+            }
+        }
+        hp.push(("act_skip_fraction_sparse", Json::Num(hotpath_skip_fraction)));
+        measured.push(("hotpath", Json::obj(hp)));
         let doc = Json::obj(vec![
-            ("pr", Json::Num(9.0)),
+            ("pr", Json::Num(10.0)),
             ("comparison", comparison),
             ("measured", Json::obj(measured)),
         ]);

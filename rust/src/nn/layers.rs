@@ -107,7 +107,8 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     matmul_par(a, b, Parallelism::serial())
 }
 
-/// [`matmul`] with rows fanned over the [`crate::pim::parallel`] pool —
+/// [`matmul`] with rows fanned over the persistent
+/// [`crate::pim::parallel`] pool (no per-call thread spawns) —
 /// bit-identical to the serial result at any thread count.
 pub fn matmul_par(a: &Tensor, b: &Tensor, par: Parallelism) -> Tensor {
     let (m, k) = (a.shape[0], a.shape[1]);

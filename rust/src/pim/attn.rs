@@ -86,7 +86,9 @@ pub struct CompiledTransformer {
     /// as [`CompiledNet::fc_bias`](super::CompiledNet::fc_bias) is.
     pub head_bias: Vec<f32>,
     /// Worker-pool width [`Self::forward`] and [`Self::classify`] run
-    /// on (copied from the source [`Transformer`] at compile).
+    /// on (copied from the source [`Transformer`] at compile) — the
+    /// persistent `pim::parallel` pool for that width, reused across
+    /// every prepared-bank matmul.
     pub parallelism: Parallelism,
 }
 

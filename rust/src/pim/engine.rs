@@ -15,12 +15,20 @@
 //! dimension, so one bitwise AND + popcount covers 64 reduction rows at
 //! once; the historical byte-walking kernel stays alive as
 //! [`MacKernel::Scalar`] and the two are raced bit-for-bit by
-//! `rust/tests/simd_parity.rs`. The work factors into data-independent
-//! *units* — one per (output row × 128-row block × 128-word output tile),
-//! mirroring the sub-array organization — which [`PimEngine::par_matmul`]
-//! schedules over the [`super::parallel`] worker pool; the shift-add
-//! reduce runs in unit order, so parallel output is bit-identical to
-//! serial (PERFORMANCE.md, `rust/tests/parallel_parity.rs`).
+//! `rust/tests/simd_parity.rs`. The word-wide fill **skips zero words**
+//! on both operands — all-zero activation words (ReLU sparsity) and
+//! all-zero weight bit-plane rows ([`PreparedBank::plane_any`]) cost no
+//! AND/popcount work, tallied per engine by [`SkipStats`] and provably
+//! output-neutral (PERFORMANCE.md §12). The work factors into
+//! data-independent *units* — one per (output row × 128-row block ×
+//! 128-word output tile), mirroring the sub-array organization — which
+//! the engine schedules over the [`super::parallel`] **persistent worker
+//! pool** as (row × tile) groups, each folding its row blocks in
+//! ascending order into a disjoint output slice; that is the same
+//! per-slice f32 addition order as the historical unit-order reduce, so
+//! parallel output is bit-identical to serial at any width
+//! (PERFORMANCE.md, `rust/tests/parallel_parity.rs`,
+//! `rust/tests/hotpath_parity.rs`).
 //!
 //! Weight handling follows the compile-once / execute-many split of
 //! [`super::program`]: [`PimEngine::prepare`] quantizes + packs a weight
@@ -31,14 +39,16 @@
 //! (`rust/tests/program_parity.rs`).
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::consts::{ARRAY_ROWS, ARRAY_WORDS};
 use crate::device::Corner;
 use crate::util::rng::Pcg64;
 
 use super::parallel::{self, Parallelism};
-use super::program::{PreparedBank, PreparedWeights};
-use super::quant::{quantize_acts, PackedActPlanes, QuantizedActs};
+use super::program::{self, PreparedBank, PreparedWeights};
+use super::quant::{quantize_acts_into, PackedActPlanes, QuantizedActs};
 use super::transfer::{TransferModel, ADC_CODES, MAC_FULLSCALE};
 
 // Both kernels pack the four bit-plane MACs of one k-block into the four
@@ -157,6 +167,16 @@ fn fill_unit_scalar(
 /// *exactly* the integer `Σ_kk act_bit(ba,kk) · w(kk)` the scalar fill
 /// computes, because `w(kk) = Σ_bw 2^bw · w_bit(bw,kk)`. Identical lane
 /// integers ⇒ identical LUT lookups ⇒ bit-identical f32 output.
+///
+/// Zero-word skipping: an all-zero activation word (ReLU sparsity — all
+/// 64 reduction rows quantized to level 0) skips the whole k-word, and
+/// an all-zero weight bit-plane row ([`PreparedBank::plane_any`], e.g. a
+/// one-sided bank) skips that plane's AND/popcount pass. Both skips add
+/// exactly the 0 the popcounts would have added, so the lane integers —
+/// and therefore outputs and per-unit RNG draws (noise is drawn at the
+/// LUT tail, after the fill) — are unchanged (`zero_skip` parity in
+/// `rust/tests/hotpath_parity.rs`). Returns the (visited, act-skipped,
+/// plane-skipped) word tally for [`SkipStats`].
 fn fill_unit_bitplane(
     pa: &PackedActPlanes,
     bank: &PreparedBank,
@@ -165,12 +185,14 @@ fn fill_unit_bitplane(
     k0: usize,
     k1: usize,
     packed: &mut [u64],
-) {
+) -> (u64, u64, u64) {
     let width = packed.len();
     // ARRAY_ROWS % 64 == 0 ⇒ k0 is word-aligned; the last word's padding
     // bits are zero in both operands.
     let (kw0, kw1) = (k0 / 64, k1.div_ceil(64));
+    let (mut visited, mut act_skipped, mut planes_skipped) = (0u64, 0u64, 0u64);
     for kw in kw0..kw1 {
+        visited += 1;
         let aw = [
             pa.word(i, 0, kw),
             pa.word(i, 1, kw),
@@ -178,9 +200,14 @@ fn fill_unit_bitplane(
             pa.word(i, 3, kw),
         ];
         if aw == [0, 0, 0, 0] {
+            act_skipped += 1;
             continue;
         }
         for bw in 0..4 {
+            if !bank.plane_any(ti, bw, kw) {
+                planes_skipped += 1;
+                continue;
+            }
             let w_row = &bank.plane_row(ti, bw, kw)[..width];
             for (acc, &wv) in packed.iter_mut().zip(w_row) {
                 let lanes = ((aw[0] & wv).count_ones() as u64)
@@ -191,6 +218,7 @@ fn fill_unit_bitplane(
             }
         }
     }
+    (visited, act_skipped, planes_skipped)
 }
 
 /// The tiling grid one bank MAC decomposes into: `m` output rows ×
@@ -233,17 +261,121 @@ impl UnitGrid {
 
 /// Reusable per-unit scratch: packed 4-plane powerline accumulators and
 /// the plane-recombined partial sums, one entry per word column of a
-/// tile. `packed` lives on the stack (a tile never exceeds
-/// `ARRAY_WORDS` columns); only `partial` is heap-allocated, because the
-/// parallel path sends it back over the channel.
+/// tile. Both live entirely on the stack (a tile never exceeds
+/// [`ARRAY_WORDS`] columns, so this is ~2 KiB) — each worker's group
+/// loop owns one and [`PimEngine::mac_unit`] overwrites the live prefix
+/// unconditionally, so no heap traffic and no cross-unit state.
 struct UnitScratch {
     packed: [u64; ARRAY_WORDS],
-    partial: Vec<f32>,
+    partial: [f32; ARRAY_WORDS],
 }
 
 impl UnitScratch {
-    fn new(width: usize) -> UnitScratch {
-        UnitScratch { packed: [0; ARRAY_WORDS], partial: vec![0.0; width] }
+    fn new() -> UnitScratch {
+        UnitScratch { packed: [0; ARRAY_WORDS], partial: [0.0; ARRAY_WORDS] }
+    }
+}
+
+/// Shared base pointer of the output buffer, passed into the pooled
+/// group closure.
+struct SyncPtr(*mut f32);
+
+// SAFETY: only ever used to derive non-overlapping per-group `&mut
+// [f32]` windows (see `bank_mac_core_into`); the buffer outlives the
+// blocking `for_units` call that uses it.
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+/// Inner-loop zero-skip counters for the word-wide bit-plane kernel:
+/// how many k-word groups the fill visited, how many it skipped because
+/// all four activation plane words were zero (ReLU sparsity), and how
+/// many weight bit-plane rows it skipped as all-zero
+/// ([`PreparedBank::plane_any`]).
+///
+/// One instance per engine, shared by its clones (the engine holds an
+/// `Arc`); workers bump it with relaxed atomics — a throughput
+/// observatory, never a synchronization point. Skips are output-neutral
+/// by construction (a popcount against a zero word adds 0 to every lane,
+/// and noise is drawn per unit *after* the fill), so these counters can
+/// only ever measure saved work, not changed results — the differential
+/// contract of `rust/tests/hotpath_parity.rs` and PERFORMANCE.md §12.
+#[derive(Debug, Default)]
+pub struct SkipStats {
+    words: AtomicU64,
+    act_skipped: AtomicU64,
+    planes_skipped: AtomicU64,
+}
+
+impl SkipStats {
+    /// k-word groups the bit-plane fill has examined.
+    pub fn words_visited(&self) -> u64 {
+        self.words.load(Ordering::Relaxed)
+    }
+
+    /// Visited k-words skipped outright (all four activation plane words
+    /// zero).
+    pub fn act_words_skipped(&self) -> u64 {
+        self.act_skipped.load(Ordering::Relaxed)
+    }
+
+    /// Weight bit-plane rows skipped as all-zero within non-skipped
+    /// k-words (up to 4 per visited word).
+    pub fn weight_planes_skipped(&self) -> u64 {
+        self.planes_skipped.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of visited k-words skipped on the activation side
+    /// (0.0 when nothing has run).
+    pub fn act_skip_fraction(&self) -> f64 {
+        let words = self.words_visited();
+        if words == 0 {
+            0.0
+        } else {
+            self.act_words_skipped() as f64 / words as f64
+        }
+    }
+
+    /// Zero all counters (e.g. before measuring one workload).
+    pub fn reset(&self) {
+        self.words.store(0, Ordering::Relaxed);
+        self.act_skipped.store(0, Ordering::Relaxed);
+        self.planes_skipped.store(0, Ordering::Relaxed);
+    }
+
+    fn record(&self, visited: u64, act_skipped: u64, planes_skipped: u64) {
+        if visited != 0 {
+            self.words.fetch_add(visited, Ordering::Relaxed);
+        }
+        if act_skipped != 0 {
+            self.act_skipped.fetch_add(act_skipped, Ordering::Relaxed);
+        }
+        if planes_skipped != 0 {
+            self.planes_skipped.fetch_add(planes_skipped, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Reusable activation-side working set for
+/// [`PimEngine::matmul_prepared_scratch`]: the quantized levels, the
+/// bit-plane transpose, and the pos/neg bank outputs, all retained across
+/// calls — so a warmed-up prepared matmul performs **zero** MAC-path heap
+/// allocations before the subtracted output
+/// ([`crate::pim::program::mac_alloc_count`]). Lives inside
+/// [`crate::pim::program::ScratchPool`] on the compiled-network path; the
+/// one-shot wrappers build a fresh one per call.
+#[derive(Debug, Default)]
+pub struct MacScratch {
+    qa: QuantizedActs,
+    planes: PackedActPlanes,
+    pos: Vec<f32>,
+    neg: Vec<f32>,
+}
+
+impl MacScratch {
+    /// An empty working set (buffers grow to the largest matmul on first
+    /// use, then stay).
+    pub fn new() -> MacScratch {
+        MacScratch::default()
     }
 }
 
@@ -263,6 +395,8 @@ pub struct PimEngine {
     /// default; both choices are bit-identical — see [`MacKernel`]).
     pub kernel: MacKernel,
     lut: Vec<f32>,
+    /// Zero-skip counters, shared with clones (see [`Self::skip_stats`]).
+    skip_stats: Arc<SkipStats>,
 }
 
 impl PimEngine {
@@ -277,7 +411,18 @@ impl PimEngine {
             parallelism: Parallelism::serial(),
             kernel: MacKernel::thread_default(),
             lut: transfer.quantize_lut(true),
+            skip_stats: Arc::new(SkipStats::default()),
         }
+    }
+
+    /// This engine's inner-loop zero-skip counters (bit-plane kernel
+    /// only; the scalar kernel predates word-level skipping and reports
+    /// nothing). Note `Clone`d engines **share** the same counters — the
+    /// clone copies the `Arc`, which is what the compiled-network paths
+    /// want: one observatory per logical engine regardless of internal
+    /// cloning.
+    pub fn skip_stats(&self) -> &SkipStats {
+        &self.skip_stats
     }
 
     /// Typical-corner engine (the common case).
@@ -365,7 +510,10 @@ impl PimEngine {
         let partial = &mut scratch.partial[..width];
         packed.fill(0);
         match pa {
-            Some(planes) => fill_unit_bitplane(planes, bank, i, ti, k0, k1, packed),
+            Some(planes) => {
+                let (v, a_skip, p_skip) = fill_unit_bitplane(planes, bank, i, ti, k0, k1, packed);
+                self.skip_stats.record(v, a_skip, p_skip);
+            }
             None => fill_unit_scalar(&a.data[i * grid.k..(i + 1) * grid.k], bank, ti, k0, k1, packed),
         }
         match rng {
@@ -456,21 +604,34 @@ impl PimEngine {
         par: Parallelism,
     ) -> Vec<f32> {
         let pa = self.kernel.uses_bit_planes().then(|| a.pack_planes());
-        self.bank_mac_core(a, pa.as_ref(), bank, rng, par)
+        let mut out = Vec::new();
+        self.bank_mac_core_into(a, pa.as_ref(), bank, rng, par, &mut out);
+        out
     }
 
     /// The kernel-agnostic execution core: `pa` is `Some` exactly when
     /// [`Self::kernel`] is [`MacKernel::BitPlane`] (callers running both
     /// the pos and neg bank pack the activation planes once and pass them
-    /// to both calls).
-    fn bank_mac_core(
+    /// to both calls). `out` is cleared and refilled in place — the
+    /// scratch-pool path reuses it call-over-call, so a warmed buffer
+    /// costs zero allocations ([`program::mac_alloc_count`]).
+    ///
+    /// Execution fans (output row × output tile) **groups** out over the
+    /// persistent worker pool; each group owns the disjoint output slice
+    /// `out[i·n + c0 .. i·n + c1]` and folds its row blocks in ascending
+    /// `bi` — exactly the per-slice f32 addition order of the historical
+    /// unit-order reduce, with unchanged per-unit RNG indices, so the
+    /// output is bit-identical to serial (and to PR 9) at any width,
+    /// while partials never leave the worker's stack.
+    fn bank_mac_core_into(
         &self,
         a: &QuantizedActs,
         pa: Option<&PackedActPlanes>,
         bank: &PreparedBank,
         rng: Option<&mut Pcg64>,
         par: Parallelism,
-    ) -> Vec<f32> {
+        out: &mut Vec<f32>,
+    ) {
         let (m, k) = (a.m, a.k);
         assert_eq!(bank.k(), k, "prepared bank reduction dim mismatch");
         let n = bank.n();
@@ -479,43 +640,48 @@ impl PimEngine {
             let mut child = r.fork(0x6ba7);
             child.next_u64()
         });
-        let mut out = vec![0.0f32; m * n];
+        program::note_mac_growth(out.capacity(), m * n);
+        out.clear();
+        out.resize(m * n, 0.0);
         if grid.units == 0 {
-            return out;
+            return;
         }
-        let threads = par.thread_count().min(grid.units);
-        if threads <= 1 {
-            let mut scratch = UnitScratch::new(ARRAY_WORDS.min(n));
-            for u in 0..grid.units {
+        let n_groups = m * grid.n_tiles;
+        let run_group = |g: usize, out_slice: &mut [f32]| {
+            let (i, ti) = (g / grid.n_tiles, g % grid.n_tiles);
+            let (c0, c1) = grid.c_range(ti);
+            let width = c1 - c0;
+            let mut scratch = UnitScratch::new();
+            for bi in 0..grid.n_blocks {
+                let u = (i * grid.n_blocks + bi) * grid.n_tiles + ti;
                 let mut unit_rng = noise_seed.map(|s| Pcg64::new(s, u as u64));
                 self.mac_unit(a, pa, bank, &grid, u, unit_rng.as_mut(), &mut scratch);
-                Self::reduce_unit(&grid, u, &scratch.partial, &mut out);
+                for (o, &p) in out_slice.iter_mut().zip(scratch.partial[..width].iter()) {
+                    *o += p;
+                }
             }
-            return out;
+        };
+        if par.thread_count() <= 1 || n_groups <= 1 {
+            for g in 0..n_groups {
+                let (i, ti) = (g / grid.n_tiles, g % grid.n_tiles);
+                let (c0, c1) = grid.c_range(ti);
+                run_group(g, &mut out[i * n + c0..i * n + c1]);
+            }
+            return;
         }
-        let partials = parallel::run_units(threads, grid.units, |u| {
-            let (_, _, ti) = grid.decompose(u);
+        let base = SyncPtr(out.as_mut_ptr());
+        parallel::for_units(par.thread_count(), n_groups, |g| {
+            let (i, ti) = (g / grid.n_tiles, g % grid.n_tiles);
             let (c0, c1) = grid.c_range(ti);
-            let mut scratch = UnitScratch::new(c1 - c0);
-            let mut unit_rng = noise_seed.map(|s| Pcg64::new(s, u as u64));
-            self.mac_unit(a, pa, bank, &grid, u, unit_rng.as_mut(), &mut scratch);
-            scratch.partial
+            // SAFETY: group g's window [i·n + c0, i·n + c1) is disjoint
+            // from every other group's (i selects the row, ti the column
+            // window), and `out` is neither read nor resized while the
+            // pool runs; the pool's completion handshake publishes the
+            // writes before for_units returns.
+            let out_slice =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(i * n + c0), c1 - c0) };
+            run_group(g, out_slice);
         });
-        for (u, partial) in partials.iter().enumerate() {
-            Self::reduce_unit(&grid, u, partial, &mut out);
-        }
-        out
-    }
-
-    /// Digital shift-add reduce of one unit's partial into the output —
-    /// always invoked in unit order, which fixes the f32 summation order.
-    fn reduce_unit(grid: &UnitGrid, u: usize, partial: &[f32], out: &mut [f32]) {
-        let (i, _, ti) = grid.decompose(u);
-        let (c0, c1) = grid.c_range(ti);
-        let out_row = &mut out[i * grid.n + c0..i * grid.n + c1];
-        for (o, &p) in out_row.iter_mut().zip(partial[..c1 - c0].iter()) {
-            *o += p;
-        }
     }
 
     /// Compile a signed `[k,n]` weight matrix for execute-many use:
@@ -556,9 +722,9 @@ impl PimEngine {
         self.par_matmul_prepared(a, m, pw, rng, self.parallelism)
     }
 
-    /// [`Self::matmul_prepared`] on an explicit worker-pool width. On
-    /// the bit-plane kernel the activation planes are transposed once
-    /// here and shared by the pos and neg bank runs.
+    /// [`Self::matmul_prepared`] on an explicit worker-pool width — a
+    /// convenience over [`Self::matmul_prepared_scratch`] with a fresh
+    /// working set (callers without a [`super::program::ScratchPool`]).
     pub fn par_matmul_prepared(
         &self,
         a: &[f32],
@@ -567,15 +733,44 @@ impl PimEngine {
         rng: Option<&mut Pcg64>,
         par: Parallelism,
     ) -> Vec<f32> {
-        let qa = quantize_acts(a, m, pw.k);
-        let pa = self.kernel.uses_bit_planes().then(|| qa.pack_planes());
+        self.matmul_prepared_scratch(a, m, pw, rng, par, &mut MacScratch::new())
+    }
+
+    /// The prepared-matmul core every signed path funnels into:
+    /// quantize the activations into `mac`'s buffers, transpose the
+    /// bit-planes once (shared by both banks), run the pos and neg bank
+    /// MACs into `mac`'s output buffers, subtract and rescale. On a
+    /// warmed `mac` (the [`super::program::ScratchPool`] steady state)
+    /// everything before the subtracted output reuses retained capacity —
+    /// **zero MAC-path heap allocations**
+    /// ([`program::mac_alloc_count`] stays flat; the subtracted output
+    /// itself becomes the layer tensor, which takes the `Vec` by value,
+    /// so it is the one unavoidable — and uncounted — allocation,
+    /// PERFORMANCE.md §12).
+    pub fn matmul_prepared_scratch(
+        &self,
+        a: &[f32],
+        m: usize,
+        pw: &PreparedWeights,
+        rng: Option<&mut Pcg64>,
+        par: Parallelism,
+        mac: &mut MacScratch,
+    ) -> Vec<f32> {
+        quantize_acts_into(a, m, pw.k, &mut mac.qa);
+        let pa = if self.kernel.uses_bit_planes() {
+            mac.qa.pack_planes_into(&mut mac.planes);
+            Some(&mac.planes)
+        } else {
+            None
+        };
         let mut rng = rng;
-        let pos = self.bank_mac_core(&qa, pa.as_ref(), &pw.pos, rng.as_deref_mut(), par);
-        let neg = self.bank_mac_core(&qa, pa.as_ref(), &pw.neg, rng.as_deref_mut(), par);
-        pos.iter()
-            .zip(neg.iter())
+        self.bank_mac_core_into(&mac.qa, pa, &pw.pos, rng.as_deref_mut(), par, &mut mac.pos);
+        self.bank_mac_core_into(&mac.qa, pa, &pw.neg, rng.as_deref_mut(), par, &mut mac.neg);
+        mac.pos
+            .iter()
+            .zip(mac.neg.iter())
             .enumerate()
-            .map(|(i, (p, q))| (p - q) * qa.scale * pw.scale[i % pw.n])
+            .map(|(i, (p, q))| (p - q) * mac.qa.scale * pw.scale[i % pw.n])
             .collect()
     }
 
@@ -906,6 +1101,29 @@ mod tests {
                 assert_eq!(r1.next_u64(), r2.next_u64(), "rng state diverged");
             }
         }
+    }
+
+    #[test]
+    fn skip_stats_shared_across_clones_and_output_neutral() {
+        // All-zero activations: every k-word is act-skipped, output is
+        // exactly zero, and a clone reports into the same counters.
+        let (m, k, n) = (2, 128, 8);
+        let a = vec![0.0f32; m * k];
+        let w = vec![0.3f32; k * n];
+        let eng = PimEngine::tt();
+        let clone = eng.clone();
+        let out = clone.pim_matmul(&a, m, k, &w, n, None);
+        assert!(out.iter().all(|&x| x == 0.0));
+        assert!(eng.skip_stats().act_words_skipped() > 0, "all-zero acts must skip");
+        assert_eq!(eng.skip_stats().words_visited(), eng.skip_stats().act_words_skipped());
+        assert_eq!(
+            eng.skip_stats().act_words_skipped(),
+            clone.skip_stats().act_words_skipped(),
+            "clones share the Arc'd counters"
+        );
+        assert_eq!(eng.skip_stats().act_skip_fraction(), 1.0);
+        eng.skip_stats().reset();
+        assert_eq!(clone.skip_stats().words_visited(), 0);
     }
 
     #[test]

@@ -13,11 +13,16 @@
 //!   bit-plane matmuls + an ADC LUT, with the historical scalar kernel
 //!   kept live behind the [`MacKernel`] selector and raced bit-for-bit by
 //!   `rust/tests/simd_parity.rs`) used by the figures, benches, and the
-//!   coordinator's non-PJRT fallback path. See PERFORMANCE.md §8.
-//! * [`parallel`] — the tiled worker pool (std::thread + mpsc) the engine
-//!   schedules its (row-block × bit-plane × output-tile) units on; results
-//!   are bit-identical to the serial path at any thread count. See
-//!   PERFORMANCE.md.
+//!   coordinator's non-PJRT fallback path. The bit-plane kernel skips
+//!   all-zero activation/weight plane words output-neutrally and tallies
+//!   them in [`SkipStats`]. See PERFORMANCE.md §8 and §12.
+//! * [`parallel`] — the **persistent** worker pool the engine schedules
+//!   its MAC units on: one set of parked workers per requested width,
+//!   spawned lazily on first use and reused for the life of the process,
+//!   with the same atomic-cursor distribution and unit-order collection
+//!   as the historical spawn-per-call path — so results are bit-identical
+//!   to the serial path at any thread count and steady-state dispatch
+//!   spawns zero threads. See PERFORMANCE.md §12.
 //! * [`program`] — the compile-once / execute-many layer: prepared weight
 //!   programs ([`PreparedWeights`]) and whole compiled networks
 //!   ([`CompiledNet`]) mirroring one-time RRAM programming, so the
@@ -47,7 +52,7 @@ pub mod shard_exec;
 pub mod transfer;
 
 pub use attn::{spec_attn, spec_attn_dense, CompiledAttnBlock, CompiledTransformer};
-pub use engine::{MacKernel, PimEngine};
+pub use engine::{MacKernel, MacScratch, PimEngine, SkipStats};
 pub use parallel::Parallelism;
 pub use program::{CompiledNet, PreparedBank, PreparedWeights, ScratchPool, SteppedProgram};
 pub use shard_exec::{PipelineTrace, ShardedExecutor};

@@ -1,6 +1,7 @@
 //! Tiled parallel execution for the PIM hot path: a hand-rolled,
-//! dependency-free worker pool (std::thread + mpsc — the same offline-build
-//! constraint as `coordinator/server.rs`; rayon is unavailable).
+//! dependency-free **persistent worker pool** (std::thread + condvar — the
+//! same offline-build constraint as `coordinator/server.rs`; rayon is
+//! unavailable).
 //!
 //! The engine's bank MAC factors into data-independent *units* — one per
 //! (output row × 128-row block × 128-word output tile); the four activation
@@ -10,16 +11,33 @@
 //! partials back in *deterministic unit order*, and every unit derives its
 //! own [`crate::util::rng::Pcg64`] noise stream from its index, so the
 //! result is bit-identical to the serial engine at any thread count
-//! (pinned by `rust/tests/parallel_parity.rs`).
+//! (pinned by `rust/tests/parallel_parity.rs` and
+//! `rust/tests/hotpath_parity.rs`).
+//!
+//! # Pool lifecycle (PERFORMANCE.md §12)
+//!
+//! Workers are spawned **once per pool width**, lazily, on the first
+//! [`for_units`]/[`run_units`] call at that width, and then parked on a
+//! condvar between jobs — steady-state serving performs **zero** thread
+//! spawns (the `pool_spawns_once` bench gate; [`pool_spawned_for`]).
+//! Jobs from concurrent callers queue FIFO and drain through the same
+//! atomic-cursor unit distribution the per-call-spawn implementation
+//! used, so scheduling is work-stealing-free and results are unchanged.
+//! The historical spawn-per-call path survives as [`run_units_unpooled`]
+//! — the differential baseline the pooled path is raced against, and the
+//! spawn-amortization comparand in `repro bench`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 
 /// Worker-pool width for tiled PIM execution.
 ///
 /// Serial by default, so every existing call path is unchanged until a
 /// caller opts in (`repro bench --threads N`, `StubRuntime`'s
 /// [`crate::runtime::Runtime::set_parallelism`], `fleet-sim --threads`).
+/// The CLI maps `--threads 0` to [`Parallelism::auto`].
 ///
 /// # Examples
 ///
@@ -72,15 +90,216 @@ impl Default for Parallelism {
     }
 }
 
-/// Execute `f(0), f(1), …, f(n_units − 1)` on a pool of `threads` workers
-/// and return the results **in unit order** (so any reduction over them is
-/// deterministic regardless of which worker ran which unit).
+/// Type-erased pointer to a caller's `Fn(usize) + Sync` task closure.
 ///
-/// Work is distributed dynamically through a shared atomic cursor; results
-/// travel back over an mpsc channel. With `threads ≤ 1` (or a single unit)
-/// the closure runs inline on the caller's thread — no pool, no overhead.
+/// A raw pointer (not a reference) because a retired [`Job`] may linger in
+/// the queue briefly after its caller returns; it is never dereferenced
+/// then — workers only call through it for claimed units `u < n_units`,
+/// and the caller blocks until all of them have finished.
+struct RawTask(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared-callable from any thread), and
+// `for_units` guarantees it outlives every dereference (see above).
+unsafe impl Send for RawTask {}
+unsafe impl Sync for RawTask {}
+
+/// One submitted unit batch: the task, the atomic claim cursor, and the
+/// completion rendezvous back to the caller.
+struct Job {
+    task: RawTask,
+    n_units: usize,
+    /// Next unclaimed unit index (the dynamic distribution cursor — the
+    /// same scheme the historical spawn-per-call path used).
+    cursor: AtomicUsize,
+    /// Units fully executed. The release/acquire increment chain is what
+    /// publishes the workers' result writes to the caller.
+    done: AtomicUsize,
+    finished: Mutex<bool>,
+    finished_cv: Condvar,
+    /// First captured worker panic, re-raised on the caller.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+/// State shared by one pool's parked workers: the FIFO job queue and the
+/// wake signal. Lives for the process (workers are detached and never
+/// exit), so an `Arc` held by the registry and every worker suffices.
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work_cv: Condvar,
+    /// Threads ever spawned for this pool — stays equal to the width for
+    /// the life of the process (the spawn-once contract).
+    spawned: AtomicU64,
+}
+
+/// Pool registry: one persistent pool per distinct width ever requested.
+static REGISTRY: OnceLock<Mutex<Vec<(usize, Arc<PoolShared>)>>> = OnceLock::new();
+
+/// The persistent worker body: park on the condvar until a job is queued,
+/// claim units off its atomic cursor, signal the caller when the last
+/// unit completes, retire the job, repeat forever.
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job: Arc<Job> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(front) = q.front() {
+                    break Arc::clone(front);
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        loop {
+            let u = job.cursor.fetch_add(1, Ordering::Relaxed);
+            if u >= job.n_units {
+                // Every unit is claimed: retire the job (first worker to
+                // get here does it) so idle workers park on the condvar
+                // instead of re-claiming a spent job.
+                let mut q = shared.queue.lock().unwrap();
+                if q.front().is_some_and(|f| Arc::ptr_eq(f, &job)) {
+                    q.pop_front();
+                }
+                break;
+            }
+            // SAFETY: `u < n_units`, so the caller is still blocked in
+            // `for_units` and the closure is alive (RawTask contract).
+            let task = unsafe { &*job.task.0 };
+            // A panicking unit must neither kill this pool worker nor
+            // hang the caller: capture it, keep counting completions,
+            // and re-raise it on the caller after the job drains.
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(u))) {
+                *job.panic.lock().unwrap() = Some(p);
+            }
+            if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.n_units {
+                *job.finished.lock().unwrap() = true;
+                job.finished_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// The persistent pool for `width` workers, spawning it on first use.
+/// Subsequent calls at the same width reuse the parked workers — the
+/// steady-state serving path performs zero spawns.
+fn pool_for(width: usize) -> Arc<PoolShared> {
+    let reg = REGISTRY.get_or_init(|| Mutex::new(Vec::new()));
+    let mut pools = reg.lock().unwrap();
+    if let Some((_, shared)) = pools.iter().find(|(w, _)| *w == width) {
+        return Arc::clone(shared);
+    }
+    let shared = Arc::new(PoolShared {
+        queue: Mutex::new(VecDeque::new()),
+        work_cv: Condvar::new(),
+        spawned: AtomicU64::new(0),
+    });
+    for i in 0..width {
+        let s = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name(format!("pim-pool-{width}-{i}"))
+            .spawn(move || worker_loop(s))
+            .expect("spawn pim pool worker");
+        shared.spawned.fetch_add(1, Ordering::Relaxed);
+    }
+    pools.push((width, Arc::clone(&shared)));
+    shared
+}
+
+/// Threads ever spawned for the width-`width` pool (0 if that pool was
+/// never created). Equal to `width` from first use onward — the
+/// spawn-once observable asserted by `rust/tests/hotpath_parity.rs` and
+/// the `pool_spawns_once` bench gate.
+pub fn pool_spawned_for(width: usize) -> u64 {
+    REGISTRY
+        .get()
+        .and_then(|reg| {
+            reg.lock()
+                .unwrap()
+                .iter()
+                .find(|(w, _)| *w == width)
+                .map(|(_, s)| s.spawned.load(Ordering::Relaxed))
+        })
+        .unwrap_or(0)
+}
+
+/// Total pool threads ever spawned, across all widths (Σ of
+/// [`pool_spawned_for`] over the pools that exist).
+pub fn pool_spawn_count() -> u64 {
+    REGISTRY
+        .get()
+        .map(|reg| {
+            reg.lock().unwrap().iter().map(|(_, s)| s.spawned.load(Ordering::Relaxed)).sum()
+        })
+        .unwrap_or(0)
+}
+
+/// Execute `f(0), f(1), …, f(n_units − 1)` on the persistent pool of
+/// `threads` workers, returning when every unit has run. No results are
+/// collected — the callee writes wherever it likes (the engine writes
+/// each unit group's disjoint output slice in place); use [`run_units`]
+/// when per-unit return values are wanted.
 ///
-/// A panic inside `f` propagates to the caller when the scope joins.
+/// Work is distributed dynamically through a shared atomic cursor, so
+/// scheduling is identical to the historical spawn-per-call pool. With
+/// `threads ≤ 1` (or ≤ 1 unit) the closure runs inline on the caller's
+/// thread — no pool, no synchronization. A panic inside `f` propagates
+/// to the caller after the batch drains; the pool survives.
+///
+/// Nested submission (calling `for_units` from inside a pooled unit) is
+/// not supported — the engine's units never re-enter the pool.
+pub fn for_units<F>(threads: usize, n_units: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if threads <= 1 || n_units <= 1 {
+        for u in 0..n_units {
+            f(u);
+        }
+        return;
+    }
+    let shared = pool_for(threads);
+    let obj: &(dyn Fn(usize) + Sync) = &f;
+    // SAFETY: pure lifetime erasure. This frame blocks until
+    // `done == n_units`; a worker increments `done` only after its
+    // `task(u)` call returns and claims stop once the cursor passes
+    // `n_units`, so every dereference happens while `f` is alive. The
+    // raw pointer may linger in a retired job after this returns but is
+    // never dereferenced again (see [`RawTask`]).
+    let task = RawTask(unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(obj)
+    });
+    let job = Arc::new(Job {
+        task,
+        n_units,
+        cursor: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        finished: Mutex::new(false),
+        finished_cv: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    {
+        let mut q = shared.queue.lock().unwrap();
+        q.push_back(Arc::clone(&job));
+    }
+    shared.work_cv.notify_all();
+    let mut fin = job.finished.lock().unwrap();
+    while !*fin {
+        fin = job.finished_cv.wait(fin).unwrap();
+    }
+    drop(fin);
+    if let Some(p) = job.panic.lock().unwrap().take() {
+        resume_unwind(p);
+    }
+}
+
+/// Execute `f(0), f(1), …, f(n_units − 1)` on the persistent pool of
+/// `threads` workers and return the results **in unit order** (so any
+/// reduction over them is deterministic regardless of which worker ran
+/// which unit).
+///
+/// Built on [`for_units`]: each unit writes its own pre-sized slot, so
+/// the only allocation is the result vector itself. With `threads ≤ 1`
+/// (or a single unit) the closure runs inline on the caller's thread.
+///
+/// A panic inside `f` propagates to the caller when the batch drains.
 ///
 /// # Examples
 ///
@@ -91,6 +310,39 @@ impl Default for Parallelism {
 /// assert_eq!(squares, (0..10).map(|u| u * u).collect::<Vec<_>>());
 /// ```
 pub fn run_units<T, F>(threads: usize, n_units: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n_units <= 1 {
+        return (0..n_units).map(f).collect();
+    }
+    struct Slot<T>(std::cell::UnsafeCell<Option<T>>);
+    // SAFETY: each unit index is claimed by exactly one worker (atomic
+    // cursor), so slot `u` is written exactly once, with no concurrent
+    // reader; the `done` release/acquire chain publishes the writes
+    // before `for_units` returns.
+    unsafe impl<T: Send> Sync for Slot<T> {}
+    let mut slots: Vec<Slot<T>> = Vec::with_capacity(n_units);
+    slots.resize_with(n_units, || Slot(std::cell::UnsafeCell::new(None)));
+    for_units(threads, n_units, |u| {
+        // SAFETY: exclusive writer of slot `u` (see Slot).
+        unsafe { *slots[u].0.get() = Some(f(u)) };
+    });
+    slots
+        .into_iter()
+        .map(|s| s.0.into_inner().expect("every unit completed"))
+        .collect()
+}
+
+/// The historical spawn-per-call implementation of [`run_units`]: scoped
+/// threads + an mpsc result channel, joined before returning.
+///
+/// Kept alive as the **differential baseline** for the persistent pool —
+/// `rust/tests/hotpath_parity.rs` races the two on identical inputs, and
+/// `repro bench` measures the spawn/join overhead the pool amortizes away
+/// (PERFORMANCE.md §12). Not used by any production path.
+pub fn run_units_unpooled<T, F>(threads: usize, n_units: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
@@ -141,6 +393,17 @@ mod tests {
     }
 
     #[test]
+    fn pooled_matches_unpooled_baseline() {
+        for t in [2usize, 3, 7] {
+            assert_eq!(
+                run_units(t, 41, |u| (u * u) as u64),
+                run_units_unpooled(t, 41, |u| (u * u) as u64),
+                "t={t}"
+            );
+        }
+    }
+
+    #[test]
     fn results_are_in_unit_order() {
         // Make late units cheap and early units slow so completion order
         // inverts submission order — the output must still be by index.
@@ -162,6 +425,61 @@ mod tests {
     fn zero_units() {
         assert!(run_units(4, 0, |u| u).is_empty());
         assert!(run_units(1, 0, |u| u).is_empty());
+    }
+
+    #[test]
+    fn for_units_covers_every_index_once() {
+        use std::sync::atomic::AtomicU32;
+        let hits: Vec<AtomicU32> = (0..53).map(|_| AtomicU32::new(0)).collect();
+        for_units(4, 53, |u| {
+            hits[u].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_spawns_once_per_width() {
+        // Width 5 is unique to this test within this binary, so the
+        // counter cannot be perturbed by sibling tests.
+        let first = run_units(5, 19, |u| u as u64 + 9);
+        assert_eq!(pool_spawned_for(5), 5);
+        for _ in 0..4 {
+            assert_eq!(run_units(5, 19, |u| u as u64 + 9), first);
+            assert_eq!(pool_spawned_for(5), 5, "reuse must not respawn");
+        }
+        assert!(pool_spawn_count() >= 5);
+    }
+
+    #[test]
+    fn concurrent_callers_share_one_pool() {
+        // Several OS threads submitting to the same width concurrently:
+        // jobs queue FIFO and every caller gets its own correct results.
+        std::thread::scope(|s| {
+            for offset in 0..4usize {
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        let got = run_units(2, 29, move |u| u * 7 + offset);
+                        let want: Vec<usize> = (0..29).map(|u| u * 7 + offset).collect();
+                        assert_eq!(got, want, "offset={offset}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            run_units(6, 16, |u| {
+                if u == 5 {
+                    panic!("unit 5 exploded");
+                }
+                u
+            })
+        });
+        assert!(caught.is_err(), "worker panic must reach the caller");
+        // The pool's workers caught the panic per-unit and kept running.
+        assert_eq!(run_units(6, 8, |u| u + 1), (1..=8).collect::<Vec<_>>());
     }
 
     #[test]

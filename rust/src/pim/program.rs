@@ -19,7 +19,12 @@
 //!
 //! The per-thread [`prepare_count`] counter records every bank-packing
 //! event; the parity and fleet tests assert it stays flat across
-//! steady-state prepared execution.
+//! steady-state prepared execution. Its sibling [`mac_alloc_count`]
+//! records every MAC-path buffer growth (activation quantization,
+//! bit-plane transpose, pos/neg bank outputs) — on the scratch-pool path
+//! those buffers are borrowed from [`ScratchPool`], so a warmed-up
+//! [`CompiledNet::step`] keeps this counter flat too
+//! (PERFORMANCE.md §12, `rust/tests/hotpath_parity.rs`).
 
 use std::cell::Cell;
 
@@ -31,6 +36,7 @@ use crate::nn::{ForwardMode, Tensor};
 use crate::util::rng::Pcg64;
 use crate::Result;
 
+use super::engine::MacScratch;
 use super::parallel::Parallelism;
 use super::quant::{quantize_acts, quantize_weights, QuantizedWeights};
 use super::transfer::MAC_FULLSCALE;
@@ -69,6 +75,41 @@ pub fn prepare_count() -> u64 {
 
 fn note_prepare() {
     PREPARES.with(|c| c.set(c.get() + 1));
+}
+
+thread_local! {
+    static MAC_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of MAC-path buffer growths performed **by the calling thread**
+/// so far. The counted sites are the per-call working buffers of a
+/// prepared matmul: activation quantization
+/// ([`crate::pim::quant::quantize_acts_into`]), the activation bit-plane
+/// transpose ([`crate::pim::quant::QuantizedActs::pack_planes_into`]),
+/// and the pos/neg bank outputs
+/// ([`PimEngine::matmul_prepared_scratch`](crate::pim::engine::PimEngine)).
+/// All of them run on the caller's thread (workers only fill packed lane
+/// accumulators on their own stacks), so the counter is thread-local for
+/// cross-test isolation, exactly like [`prepare_count`].
+///
+/// On the scratch-pool path those buffers live in
+/// [`ScratchPool`]/[`MacScratch`] and are reused call-over-call, so after
+/// a warm-up forward the counter stays **flat** — the allocation-free
+/// steady-state contract (the `steady_state_zero_allocs` bench gate).
+/// The subtracted per-layer output tensor and the per-step engine LUT are
+/// *not* counted: both are documented, bounded allocations outside the
+/// per-bank MAC loop (PERFORMANCE.md §12 audits them).
+pub fn mac_alloc_count() -> u64 {
+    MAC_ALLOCS.with(|c| c.get())
+}
+
+/// Tally a counted MAC-path buffer that is about to grow: `capacity` is
+/// the buffer's retained capacity, `needed` the elements the call
+/// requires. A reserve within capacity is free and uncounted.
+pub(crate) fn note_mac_growth(capacity: usize, needed: usize) {
+    if capacity < needed {
+        MAC_ALLOCS.with(|c| c.set(c.get() + 1));
+    }
 }
 
 /// Straight-line executable **specification** of the noiseless,
@@ -150,6 +191,13 @@ pub struct PreparedBank {
     /// `n_tiles × 4 × ⌈k/64⌉ × ARRAY_WORDS` words: plane-major within a
     /// tile, then reduction word, then output column.
     planes: Vec<u64>,
+    /// One flag per (tile, plane, reduction word) bitmap row of `planes`:
+    /// does that `ARRAY_WORDS`-wide row contain any nonzero word?
+    /// Precomputed at pack time so the word-wide kernel can skip entire
+    /// all-zero weight rows ([`Self::plane_any`]) — e.g. a one-sided
+    /// bank (all weights ≥ 0 leaves the neg bank empty) or a sparse
+    /// plane costs no AND/popcount work at all.
+    plane_nonzero: Vec<bool>,
     k: usize,
     n: usize,
     k_words: usize,
@@ -181,8 +229,12 @@ impl PreparedBank {
                 }
             }
         }
+        let plane_nonzero = planes
+            .chunks_exact(ARRAY_WORDS)
+            .map(|row| row.iter().any(|&w| w != 0))
+            .collect();
         note_prepare();
-        PreparedBank { data, planes, k, n, k_words }
+        PreparedBank { data, planes, plane_nonzero, k, n, k_words }
     }
 
     /// Reduction dimension.
@@ -220,6 +272,16 @@ impl PreparedBank {
         let off = ((ti * 4 + plane) * self.k_words + kw) * ARRAY_WORDS;
         &self.planes[off..off + ARRAY_WORDS]
     }
+
+    /// Does the [`Self::plane_row`] at (`ti`, `plane`, `kw`) contain any
+    /// nonzero word? Precomputed at pack time; `false` means the whole
+    /// AND/popcount row can be skipped — a popcount against zero words
+    /// contributes 0 to every lane, so skipping is output-neutral
+    /// (the zero-skip parity harness pins this bit-for-bit).
+    #[inline]
+    pub fn plane_any(&self, ti: usize, plane: usize, kw: usize) -> bool {
+        self.plane_nonzero[(ti * 4 + plane) * self.k_words + kw]
+    }
 }
 
 /// A weight matrix compiled for execute-many use: pre-quantized into the
@@ -256,13 +318,16 @@ impl PreparedWeights {
 }
 
 /// Reusable per-executor scratch buffers (im2col patch matrix, ReLU
-/// staging) so steady-state prepared execution allocates no fresh
-/// per-layer buffers. One pool per executor/thread; forwards borrow it
-/// mutably for the duration of a batch.
+/// staging, and the MAC working set — quantized activations, bit-plane
+/// transpose, pos/neg bank outputs) so steady-state prepared execution
+/// allocates no fresh per-layer buffers ([`mac_alloc_count`] stays flat
+/// once warm). One pool per executor/thread; forwards borrow it mutably
+/// for the duration of a batch.
 #[derive(Debug, Default)]
 pub struct ScratchPool {
     pub(crate) patches: Vec<f32>,
     pub(crate) relu: Vec<f32>,
+    pub(crate) mac: MacScratch,
 }
 
 impl ScratchPool {
@@ -357,7 +422,7 @@ impl CompiledConv {
                         &oneshot
                     }
                 };
-                eng.par_matmul_prepared(&scratch.patches, rows, pw, rng, par)
+                eng.matmul_prepared_scratch(&scratch.patches, rows, pw, rng, par, &mut scratch.mac)
             }
         };
         Tensor::from_vec(&[n, oh, ow, self.cout], out)
@@ -418,7 +483,10 @@ impl CompiledLinear {
                         &oneshot
                     }
                 };
-                Tensor::from_vec(&[nr, c], eng.par_matmul_prepared(&scratch.relu, nr, pw, rng, par))
+                Tensor::from_vec(
+                    &[nr, c],
+                    eng.matmul_prepared_scratch(&scratch.relu, nr, pw, rng, par, &mut scratch.mac),
+                )
             }
         };
         for ni in 0..nr {
@@ -1032,6 +1100,59 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn plane_any_matches_plane_rows() {
+        // Values in {0, 1} only: planes 1..3 are all-zero everywhere, so
+        // the precomputed flags must report them skippable, and plane 0
+        // flags must track the actual words.
+        let mut rng = Pcg64::seeded(23);
+        let (k, n) = (200, 133); // ragged k-words and tiles
+        let bank: Vec<u8> = (0..k * n).map(|_| rng.below(2) as u8).collect();
+        let pb = PreparedBank::pack(&bank, k, n);
+        let mut seen_zero = false;
+        for ti in 0..n.div_ceil(ARRAY_WORDS) {
+            for b in 0..4usize {
+                for kw in 0..pb.k_words() {
+                    let any = pb.plane_row(ti, b, kw).iter().any(|&w| w != 0);
+                    assert_eq!(pb.plane_any(ti, b, kw), any, "ti={ti} b={b} kw={kw}");
+                    if b > 0 {
+                        assert!(!pb.plane_any(ti, b, kw), "only the LSB plane is populated");
+                    }
+                    seen_zero |= !any;
+                }
+            }
+        }
+        assert!(seen_zero);
+    }
+
+    #[test]
+    fn steady_state_step_is_mac_alloc_free() {
+        // After one warm-up forward the scratch pool's MAC buffers have
+        // their high-water capacity; further steady-state forwards must
+        // not grow a single counted buffer (the full harness, including
+        // noisy modes and width sweeps, is rust/tests/hotpath_parity.rs).
+        let net = ResNet::new(test_params(8, 10, 21));
+        let program = CompiledNet::compile(&net).unwrap();
+        let x = Tensor::from_vec(
+            &[1, 16, 16, 3],
+            (0..16 * 16 * 3).map(|i| (i % 7) as f32 * 0.1).collect(),
+        );
+        let mut scratch = ScratchPool::new();
+        let _ =
+            program.forward_par(&x, ForwardMode::PimHw, 0, Parallelism::serial(), &mut scratch);
+        let before = mac_alloc_count();
+        for seed in 1..3 {
+            let _ = program.forward_par(
+                &x,
+                ForwardMode::PimHw,
+                seed,
+                Parallelism::serial(),
+                &mut scratch,
+            );
+        }
+        assert_eq!(mac_alloc_count(), before, "steady state must not grow MAC buffers");
     }
 
     #[test]

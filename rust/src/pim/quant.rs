@@ -6,7 +6,9 @@
 //! in the digital domain.
 
 /// Quantized activation matrix (row-major [m][k], values 0..=15).
-#[derive(Clone, Debug)]
+/// (`Default` is the empty matrix — the rest state of the reusable
+/// scratch in [`MacScratch`](crate::pim::engine::MacScratch).)
+#[derive(Clone, Debug, Default)]
 pub struct QuantizedActs {
     /// Quantized levels, row-major.
     pub data: Vec<u8>,
@@ -37,15 +39,33 @@ pub struct QuantizedWeights {
 }
 
 /// Quantize activations: `q = clip(round(a / s), 0, 15)`, `s = max(a)/15`.
+///
+/// One-shot convenience over [`quantize_acts_into`]; steady-state callers
+/// ([`PimEngine::matmul_prepared_scratch`](crate::pim::engine::PimEngine::matmul_prepared_scratch))
+/// reuse a scratch `QuantizedActs` instead so a warmed-up matmul
+/// allocates nothing here.
 pub fn quantize_acts(a: &[f32], m: usize, k: usize) -> QuantizedActs {
+    let mut qa = QuantizedActs::default();
+    quantize_acts_into(a, m, k, &mut qa);
+    qa
+}
+
+/// [`quantize_acts`] into a caller-owned buffer: `qa.data` is cleared and
+/// refilled in place, growing only when the shape exceeds its retained
+/// capacity (each growth is tallied by
+/// [`mac_alloc_count`](crate::pim::program::mac_alloc_count) — the
+/// allocation-free-steady-state observable). Same math, same levels, same
+/// scale as the one-shot path.
+pub fn quantize_acts_into(a: &[f32], m: usize, k: usize, qa: &mut QuantizedActs) {
     assert_eq!(a.len(), m * k);
     let max = a.iter().cloned().fold(0.0f32, f32::max).max(1e-6);
     let scale = max / 15.0;
-    let data = a
-        .iter()
-        .map(|&x| (x / scale).round().clamp(0.0, 15.0) as u8)
-        .collect();
-    QuantizedActs { data, m, k, scale }
+    super::program::note_mac_growth(qa.data.capacity(), m * k);
+    qa.data.clear();
+    qa.data.extend(a.iter().map(|&x| (x / scale).round().clamp(0.0, 15.0) as u8));
+    qa.m = m;
+    qa.k = k;
+    qa.scale = scale;
 }
 
 /// Quantize signed weights into positive/negative banks with per-column
@@ -85,8 +105,10 @@ pub fn quantize_weights(w: &[f32], k: usize, n: usize) -> QuantizedWeights {
 /// reduction index `64·kw + r` (padding bits beyond `k` are zero, so
 /// they AND away against any weight bitmap). Built per matmul call by
 /// [`QuantizedActs::pack_planes`] — an O(m·k) transpose amortized
-/// against the O(m·k·n) MAC it feeds.
-#[derive(Clone, Debug)]
+/// against the O(m·k·n) MAC it feeds (and reused across calls via
+/// [`QuantizedActs::pack_planes_into`] on the scratch-pool path).
+/// (`Default` is the empty transpose — the scratch rest state.)
+#[derive(Clone, Debug, Default)]
 pub struct PackedActPlanes {
     bits: Vec<u64>,
     k_words: usize,
@@ -107,9 +129,26 @@ impl PackedActPlanes {
 }
 
 impl QuantizedActs {
-    /// Extract bit-plane `b` (0 = LSB) as 0/1 bytes.
+    /// Write bit-plane `b` (0 = LSB) into `out` as 0/1 bytes. `out` must
+    /// be exactly `m · k` long — the caller owns (and reuses) the buffer,
+    /// so extracting all four planes costs zero allocations.
+    pub fn bit_plane_into(&self, b: u32, out: &mut [u8]) {
+        assert_eq!(out.len(), self.data.len(), "bit-plane buffer must be m·k bytes");
+        for (o, &v) in out.iter_mut().zip(self.data.iter()) {
+            *o = (v >> b) & 1;
+        }
+    }
+
+    /// Extract bit-plane `b` (0 = LSB) as freshly allocated 0/1 bytes — a
+    /// thin wrapper over [`Self::bit_plane_into`], kept for the test
+    /// harnesses (`rust/tests/proptests.rs` round-trips it against
+    /// [`Self::pack_planes`]). No production path calls this: the engine
+    /// consumes packed words, and per-plane byte extraction would
+    /// allocate once per bit.
     pub fn bit_plane(&self, b: u32) -> Vec<u8> {
-        self.data.iter().map(|&v| (v >> b) & 1).collect()
+        let mut out = vec![0u8; self.data.len()];
+        self.bit_plane_into(b, &mut out);
+        out
     }
 
     /// Transpose the four bit-planes of every row into packed `u64`
@@ -117,19 +156,36 @@ impl QuantizedActs {
     /// for the layout). The words carry exactly the bits
     /// [`Self::bit_plane`] reports byte-wise — pinned by the round-trip
     /// property test in `rust/tests/proptests.rs`.
+    ///
+    /// One-shot convenience over [`Self::pack_planes_into`].
     pub fn pack_planes(&self) -> PackedActPlanes {
+        let mut planes = PackedActPlanes::default();
+        self.pack_planes_into(&mut planes);
+        planes
+    }
+
+    /// [`Self::pack_planes`] into a caller-owned transpose: `planes.bits`
+    /// is zeroed and refilled in place, growing only when the shape
+    /// exceeds its retained capacity (growths are tallied by
+    /// [`mac_alloc_count`](crate::pim::program::mac_alloc_count)).
+    /// Clearing + zero-resizing an existing buffer produces exactly the
+    /// all-zero words a fresh `vec![0u64; …]` would, so the packed result
+    /// is identical to the one-shot path.
+    pub fn pack_planes_into(&self, planes: &mut PackedActPlanes) {
         let k_words = self.k.div_ceil(64);
-        let mut bits = vec![0u64; self.m * 4 * k_words];
+        super::program::note_mac_growth(planes.bits.capacity(), self.m * 4 * k_words);
+        planes.bits.clear();
+        planes.bits.resize(self.m * 4 * k_words, 0);
+        planes.k_words = k_words;
         for i in 0..self.m {
             let base = i * 4 * k_words;
             for (kk, &v) in self.data[i * self.k..(i + 1) * self.k].iter().enumerate() {
                 let (kw, r) = (kk / 64, kk % 64);
                 for b in 0..4usize {
-                    bits[base + b * k_words + kw] |= (((v >> b) & 1) as u64) << r;
+                    planes.bits[base + b * k_words + kw] |= (((v >> b) & 1) as u64) << r;
                 }
             }
         }
-        PackedActPlanes { bits, k_words }
     }
 
     /// Level at row `i`, column `j`.
@@ -250,6 +306,40 @@ mod tests {
         assert_eq!((q.pos[0], q.neg[2]), (0, 0), "tiny column collapses to 0");
         assert_eq!((q.pos[1], q.neg[3]), (15, 15), "full column unaffected");
         assert!(q.pos.iter().chain(q.neg.iter()).all(|&v| v <= 15));
+    }
+
+    #[test]
+    fn into_variants_match_oneshot_across_reuse() {
+        // The scratch-borrowing variants must produce the same levels,
+        // scale, and packed words as the one-shot paths even when the
+        // buffers are reused across shape changes (big → small → big).
+        let shapes = [(3usize, 70usize), (1, 130), (2, 64), (3, 70)];
+        let mut qa = QuantizedActs::default();
+        let mut planes = PackedActPlanes::default();
+        let mut buf = Vec::new();
+        for (round, &(m, k)) in shapes.iter().enumerate() {
+            let a: Vec<f32> = (0..m * k).map(|i| ((i * 7 + round) % 16) as f32 * 0.1).collect();
+            let fresh = quantize_acts(&a, m, k);
+            quantize_acts_into(&a, m, k, &mut qa);
+            assert_eq!(qa.data, fresh.data, "round {round}");
+            assert_eq!((qa.m, qa.k, qa.scale), (fresh.m, fresh.k, fresh.scale));
+            let fresh_planes = fresh.pack_planes();
+            qa.pack_planes_into(&mut planes);
+            assert_eq!(planes.k_words(), fresh_planes.k_words(), "round {round}");
+            for i in 0..m {
+                for b in 0..4usize {
+                    for kw in 0..planes.k_words() {
+                        assert_eq!(planes.word(i, b, kw), fresh_planes.word(i, b, kw));
+                    }
+                }
+            }
+            buf.clear();
+            buf.resize(m * k, 0);
+            for b in 0..4u32 {
+                qa.bit_plane_into(b, &mut buf);
+                assert_eq!(buf, fresh.bit_plane(b), "round {round} plane {b}");
+            }
+        }
     }
 
     #[test]

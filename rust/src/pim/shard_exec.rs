@@ -26,7 +26,9 @@
 //! The analytic cost side (what a hop between slices costs, where the
 //! cut should fall, replica- vs shard-parallel placement) lives in
 //! `fleet::shard`; this module is purely the numerics-preserving
-//! executor.
+//! executor. Its segment steps run on the persistent `pim::parallel`
+//! pool like every other execution path, so pipelining adds no per-tick
+//! thread spawns (PERFORMANCE.md §12).
 
 use crate::nn::{ForwardMode, Tensor};
 use crate::{Error, Result};

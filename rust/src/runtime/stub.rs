@@ -68,8 +68,10 @@ pub struct StubRuntime {
     kernels: HashSet<String>,
     engine: PimEngine,
     /// Worker-pool width applied to every forward and MAC tile
-    /// ([`Runtime::set_parallelism`]); outputs are bit-identical at any
-    /// width, so this only changes throughput.
+    /// ([`Runtime::set_parallelism`]); the persistent `pim::parallel`
+    /// pool for that width is spawned on first use and reused across
+    /// batches. Outputs are bit-identical at any width, so this only
+    /// changes throughput.
     parallelism: Parallelism,
     /// Reusable per-layer buffers shared by every compiled forward
     /// (single executor thread; never borrowed reentrantly).

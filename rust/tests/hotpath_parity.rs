@@ -1,0 +1,226 @@
+//! Differential harness for the hot-path runtime overhaul
+//! (PERFORMANCE.md §12, EXPERIMENTS.md E18): the persistent worker pool,
+//! zero-word skipping in the bit-plane MAC, and the allocation-free
+//! steady state are all pure *cost* optimizations — every output must be
+//! **bit-identical** to the historical behavior (spawn-per-call
+//! threading, no skipping, per-call buffers), including the caller's
+//! trailing RNG state, noiseless and noisy, at threads {1, 2, 7}.
+//!
+//! `scripts/verify.sh` additionally runs this suite with `--release`,
+//! where pool memory-ordering and u64 lane bugs actually surface.
+
+use nvm_in_cache::nn::resnet::test_params;
+use nvm_in_cache::nn::{ForwardMode, ResNet};
+use nvm_in_cache::pim::parallel::{self, Parallelism};
+use nvm_in_cache::pim::program::{mac_alloc_count, spec_matmul, ScratchPool};
+use nvm_in_cache::pim::{MacKernel, PimEngine};
+use nvm_in_cache::util::rng::Pcg64;
+
+mod common;
+use common::{bits, rand_image, rand_mat, THREADS};
+
+/// One engine, one prepared program, many sequential calls: every pooled
+/// width must reproduce the serial result (values + trailing RNG state)
+/// on the 1st call and the 3rd — the pool's parked workers are
+/// stateless between jobs.
+#[test]
+fn pool_reuse_parity_sequential() {
+    let mut rng = Pcg64::seeded(500);
+    let (m, k, n) = (5usize, 200usize, 133usize);
+    let a = rand_mat(&mut rng, m * k, 0.0, 1.0);
+    let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+    for sigma in [None, Some(0.4)] {
+        let eng = match sigma {
+            None => PimEngine::tt(),
+            Some(s) => PimEngine::tt().with_noise(s),
+        };
+        let pw = eng.prepare(&w, k, n);
+        let mut srng = sigma.map(|_| Pcg64::seeded(5));
+        let want = eng.par_matmul_prepared(&a, m, &pw, srng.as_mut(), Parallelism::serial());
+        let want_tail = srng.as_mut().map(|r| r.next_u64());
+        for t in THREADS {
+            for round in 0..3 {
+                let mut r = sigma.map(|_| Pcg64::seeded(5));
+                let got =
+                    eng.par_matmul_prepared(&a, m, &pw, r.as_mut(), Parallelism::threads(t));
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "sigma={sigma:?} threads={t} round={round}"
+                );
+                assert_eq!(
+                    want_tail,
+                    r.as_mut().map(|x| x.next_u64()),
+                    "rng diverged: sigma={sigma:?} threads={t} round={round}"
+                );
+            }
+        }
+    }
+}
+
+/// The pooled `run_units` is a drop-in for the historical
+/// spawn-per-call `run_units_unpooled`, including the n_units ≤ 1 inline
+/// path and remainder distribution.
+#[test]
+fn pooled_run_units_matches_unpooled() {
+    let f = |u: usize| (u as u64).wrapping_mul(0x9E37_79B9).rotate_left(7);
+    for (t, units) in [(3usize, 0usize), (3, 1), (3, 5), (4, 37), (2, 100)] {
+        assert_eq!(
+            parallel::run_units(t, units, f),
+            parallel::run_units_unpooled(t, units, f),
+            "threads={t} units={units}"
+        );
+    }
+}
+
+/// Concurrent callers (three OS threads, each sweeping pool widths
+/// {2, 7} against the same compiled network) all see logits
+/// bit-identical to the serial baseline — jobs from different callers
+/// interleave on the same parked workers without cross-talk.
+#[test]
+fn pool_reuse_parity_interleaved_callers() {
+    let net = ResNet::new(test_params(8, 10, 13));
+    let prog = net.compile().unwrap();
+    let mut rng = Pcg64::seeded(510);
+    let x = rand_image(&mut rng, 2);
+    let mode = ForwardMode::PimHwNoise(0.3);
+    let want = prog.forward_par(&x, mode, 4, Parallelism::serial(), &mut ScratchPool::new());
+    std::thread::scope(|s| {
+        for caller in 0..3 {
+            let (prog, x, want) = (&prog, &x, &want);
+            s.spawn(move || {
+                let mut scratch = ScratchPool::new();
+                for t in [2usize, 7] {
+                    let got =
+                        prog.forward_par(x, mode, 4, Parallelism::threads(t), &mut scratch);
+                    assert_eq!(
+                        bits(&want.data),
+                        bits(&got.data),
+                        "caller={caller} threads={t}"
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// Zero-word skipping sweep: activation sparsity p ∈ {0, 0.5, 0.9, 1.0}
+/// with the zero set aligned to 64-element spans (so whole packed act
+/// words vanish) and *nested* across p (same span draws, growing
+/// threshold). At every p the bit-plane kernel must match the scalar
+/// kernel and the straight-line spec bit-for-bit, noiseless and noisy
+/// (trailing RNG state included); `SkipStats` must be exactly zero at
+/// p = 0, monotone nondecreasing in p, and total at p = 1.
+#[test]
+fn zero_skip_parity_and_stats_monotone() {
+    let mut rng = Pcg64::seeded(530);
+    // k = 256 is a multiple of 64, so flat 64-spans coincide with packed
+    // activation words in every row.
+    let (m, k, n) = (4usize, 256usize, 130usize);
+    let base = rand_mat(&mut rng, m * k, 0.05, 1.0); // min 0.05 → quantizes to ≥ 1
+    let w = rand_mat(&mut rng, k * n, -0.5, 0.5);
+    let mut span_rng = Pcg64::seeded(71);
+    let spans: Vec<f64> = (0..m * k / 64).map(|_| span_rng.f64()).collect();
+
+    let eng = PimEngine::tt();
+    let eng_scalar = PimEngine::tt().with_kernel(MacKernel::Scalar);
+    let noisy = PimEngine::tt().with_noise(0.4);
+    let noisy_scalar = noisy.clone().with_kernel(MacKernel::Scalar);
+    let pw = eng.prepare(&w, k, n);
+
+    let mut last_skipped = 0u64;
+    let mut last_fraction = 0.0f64;
+    for (pi, p) in [0.0f64, 0.5, 0.9, 1.0].into_iter().enumerate() {
+        let a: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| if spans[i / 64] < p { 0.0 } else { v })
+            .collect();
+
+        eng.skip_stats().reset();
+        let got = eng.matmul_prepared(&a, m, &pw, None);
+        let visited = eng.skip_stats().words_visited();
+        let skipped = eng.skip_stats().act_words_skipped();
+        let fraction = eng.skip_stats().act_skip_fraction();
+        assert_eq!(bits(&got), bits(&eng_scalar.matmul_prepared(&a, m, &pw, None)), "p={p}");
+        assert_eq!(bits(&got), bits(&spec_matmul(&a, m, k, &w, n)), "p={p}");
+
+        let (mut r1, mut r2) = (Pcg64::seeded(80 + pi as u64), Pcg64::seeded(80 + pi as u64));
+        let noisy_bp = noisy.matmul_prepared(&a, m, &pw, Some(&mut r1));
+        let noisy_sc = noisy_scalar.matmul_prepared(&a, m, &pw, Some(&mut r2));
+        assert_eq!(bits(&noisy_bp), bits(&noisy_sc), "noisy p={p}");
+        assert_eq!(r1.next_u64(), r2.next_u64(), "noisy rng diverged at p={p}");
+
+        assert!(visited > 0, "p={p}");
+        assert!(skipped >= last_skipped, "skips not monotone at p={p}");
+        assert!(fraction >= last_fraction, "fraction not monotone at p={p}");
+        match p {
+            0.0 => assert_eq!(skipped, 0, "dense input must skip nothing"),
+            1.0 => {
+                assert_eq!(skipped, visited, "all-zero input must skip every word");
+                assert!(got.iter().all(|&v| v == 0.0), "all-zero input → zero output");
+            }
+            _ => assert!(skipped > 0, "p={p} should zero whole spans"),
+        }
+        last_skipped = skipped;
+        last_fraction = fraction;
+    }
+}
+
+/// An all-positive weight matrix leaves the negative bank entirely
+/// zero, so its precomputed plane flags mark every (tile, plane,
+/// k-word) row skippable — the weight-plane half of the skip must fire
+/// while the output still matches the straight-line spec.
+#[test]
+fn weight_plane_skip_fires_on_onesided_banks() {
+    let mut rng = Pcg64::seeded(540);
+    let (m, k, n) = (3usize, 130usize, 40usize);
+    let a = rand_mat(&mut rng, m * k, 0.05, 1.0);
+    let w = rand_mat(&mut rng, k * n, 0.05, 0.5);
+    let eng = PimEngine::tt();
+    let pw = eng.prepare(&w, k, n);
+    eng.skip_stats().reset();
+    let got = eng.matmul_prepared(&a, m, &pw, None);
+    assert!(eng.skip_stats().weight_planes_skipped() > 0, "empty neg bank must be skipped");
+    assert_eq!(eng.skip_stats().act_words_skipped(), 0, "dense acts skip nothing");
+    assert_eq!(bits(&got), bits(&spec_matmul(&a, m, k, &w, n)));
+}
+
+/// After one warm-up forward per (mode, width), steady-state
+/// `CompiledNet` execution performs zero MAC-path heap allocations —
+/// the quantize/pack/pos/neg buffers all reuse `ScratchPool` capacity
+/// (`mac_alloc_count`, same pattern as the `prepare_count` gate).
+#[test]
+fn steady_state_zero_mac_allocs() {
+    let net = ResNet::new(test_params(8, 10, 17));
+    let prog = net.compile().unwrap();
+    let mut rng = Pcg64::seeded(520);
+    let x = rand_image(&mut rng, 1);
+    for mode in [ForwardMode::PimHw, ForwardMode::PimHwNoise(0.4)] {
+        for t in [1usize, 2] {
+            let par = Parallelism::threads(t);
+            let mut scratch = ScratchPool::new();
+            let _ = prog.forward_par(&x, mode, 0, par, &mut scratch);
+            let before = mac_alloc_count();
+            for seed in 1..4 {
+                let _ = prog.forward_par(&x, mode, seed, par, &mut scratch);
+            }
+            assert_eq!(mac_alloc_count(), before, "{mode:?} threads={t}");
+        }
+    }
+}
+
+/// Each pool width spawns its workers exactly once per process. Width 11
+/// is unique to this test (nothing else in the binary requests it), so
+/// the per-width spawn counter must go 0 → 11 on first use and stay
+/// there across reuse.
+#[test]
+fn pool_spawns_once_per_width() {
+    assert_eq!(parallel::pool_spawned_for(11), 0, "width 11 must be untouched before this test");
+    let first: Vec<u64> = parallel::run_units(11, 23, |u| (u as u64).wrapping_mul(7));
+    assert_eq!(parallel::pool_spawned_for(11), 11);
+    for _ in 0..5 {
+        assert_eq!(first, parallel::run_units(11, 23, |u| (u as u64).wrapping_mul(7)));
+    }
+    assert_eq!(parallel::pool_spawned_for(11), 11, "reuse must not respawn");
+}

@@ -4,9 +4,11 @@
 # simd_vs_scalar MAC-kernel race), the serve section (front-door knee
 # determinism, M/D/c queueing cross-check, merged-execution parity), the
 # shard section (pipelined shard-executor parity, over-capacity
-# placement, hop-transfer attribution), and the fleet-sim summary, then
-# writes BENCH_PR8.json at the repository root (so BENCH_*.json
-# accumulates across PRs — see PERFORMANCE.md).
+# placement, hop-transfer attribution), the hotpath section (persistent
+# worker-pool dispatch vs spawn-per-call, zero-skip/zero-alloc/
+# spawn-once gates), and the fleet-sim summary, then writes
+# BENCH_PR10.json at the repository root (so BENCH_*.json accumulates
+# across PRs — see PERFORMANCE.md).
 #
 # The record has two sections: `comparison` (deterministic — workload
 # descriptors, bit-exactness parity verdicts including the
@@ -25,7 +27,7 @@ set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-OUT="${1:-BENCH_PR8.json}"
+OUT="${1:-BENCH_PR10.json}"
 THREADS="${2:-4}"
 
 cargo run --release --bin repro -- bench --json "$OUT" --threads "$THREADS"

@@ -58,6 +58,15 @@ if [ -f rust/tests/transformer_parity.rs ]; then
   cargo test --release -q --test transformer_parity
 fi
 
+# Hotpath differential suite in release too: the persistent worker
+# pool's memory-ordering (park/claim/done-chain) and the zero-word skip
+# only get truly exercised with optimizations on, and the pooled vs
+# spawn-per-call parity must hold in both profiles.
+if [ -f rust/tests/hotpath_parity.rs ]; then
+  echo "== cargo test --release -q --test hotpath_parity =="
+  cargo test --release -q --test hotpath_parity
+fi
+
 echo "== cargo test --doc =="
 cargo test --doc -q
 
